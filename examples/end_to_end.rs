@@ -1,0 +1,27 @@
+//! End-to-end validation driver (deliverable (b)/(e2e)): pretrain on the
+//! synthetic corpus with the loss curve logged, 2-bit quantize, compensate
+//! with Weight-SVD vs RILQ, and report the headline recovery — the same
+//! code path as `rilq experiment e2e`, runnable standalone.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use rilq::experiments::e2e;
+use rilq::experiments::pipeline::Lab;
+use rilq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let mut lab = Lab::new(&rt);
+    if std::env::args().any(|a| a == "--fast") {
+        lab.pretrain_steps_override = Some(150);
+        lab.calib.max_steps = 40;
+    }
+    let tables = e2e::run(&mut lab)?;
+    for t in &tables {
+        println!("{}", t.to_markdown());
+        t.save("reports", "e2e_example")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: the RILQ pipeline in ~40 lines of public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Pretrains (or loads the cached) tiny teacher, 2-bit quantizes it,
+//! applies RILQ compensation, and prints before/after quality.
+
+use rilq::experiments::pipeline::Lab;
+use rilq::lqec::AdapterSet;
+use rilq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the runtime loads AOT artifacts (HLO text) onto the CPU PJRT client
+    let rt = Runtime::new("artifacts")?;
+    let mut lab = Lab::new(&rt);
+    lab.pretrain_steps_override = Some(200);
+    lab.calib.max_steps = 60;
+
+    // 2. a pretrained fp teacher (cached under runs/)
+    let (dims, teacher, _) = lab.teacher("tiny")?;
+    println!("teacher: {} (~{:.2}M params)", dims.name, dims.params_count() as f64 / 1e6);
+
+    // 3. quantize every linear to 2-bit RTN
+    let student = lab.quantize(&dims, &teacher, "rtn", 2)?;
+
+    // 4. evaluate the damage
+    let rank = 4;
+    let zeros = AdapterSet::zeros(&dims, rank);
+    let fp = lab.evaluate(&lab.teacher_scorer(&dims, &teacher)?, &dims)?;
+    let q = lab.evaluate(&lab.student_scorer(&dims, &teacher, &student, &zeros)?, &dims)?;
+
+    // 5. RILQ: tune rank-4 adapters against Model-Loss + GT-Loss
+    let init = lab.default_adapters(&dims, rank);
+    let (adapters, res) = lab.compensate(&dims, &teacher, &student, &init, "model_gt", "rtn2")?;
+    let rq = lab.evaluate(&lab.student_scorer(&dims, &teacher, &student, &adapters)?, &dims)?;
+
+    println!("                      CSQA-avg   Wiki2-PPL");
+    println!("fp16 teacher           {:>6.2}%   {:>8.2}", fp.avg_acc * 100.0, fp.ppl_wiki);
+    println!("W2 quantized           {:>6.2}%   {:>8.2}", q.avg_acc * 100.0, q.ppl_wiki);
+    println!("W2 + RILQ (rank {rank})     {:>6.2}%   {:>8.2}", rq.avg_acc * 100.0, rq.ppl_wiki);
+    println!("({} calibration steps, {:.1}s)", res.steps, res.wall_secs);
+    Ok(())
+}

@@ -1,0 +1,312 @@
+"""AOT lowering: every (config, rank, scope) variant of the L2 graphs is
+lowered ONCE here to HLO *text* plus a manifest describing the flat
+argument/result lists. After `make artifacts` the Rust binary is fully
+self-contained — Python never runs on the request path.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the `xla` crate binds) rejects; the text parser reassigns ids.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts \
+            [--configs tiny,small,base] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .configs import CONFIGS, RANKS, SCOPE_SETS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default HLO printing elides large constants as `{...}`,
+    # which the text parser on the Rust side silently zero-fills (we lost a
+    # debugging afternoon to RoPE tables becoming zeros). Print them fully.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ... and new-style metadata (source_end_line etc.) breaks the 0.5.1
+    # parser; the default as_hlo_text() happens to omit both features.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO still contains elided constants"
+    return text
+
+
+# ---------------------------------------------------------------------------
+# flat-signature plumbing
+# ---------------------------------------------------------------------------
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dict_specs(shapes, dtype=jnp.float32):
+    """Ordered [(name, ShapeDtypeStruct)] from an ordered shape dict."""
+    return [(k, spec(v, dtype)) for k, v in shapes.items()]
+
+
+def _entry(name, specs_in, names_out, specs_out, fn, meta):
+    return {
+        "name": name,
+        "fn": fn,
+        "in_names": [n for n, _ in specs_in],
+        "in_specs": [s for _, s in specs_in],
+        "out_names": names_out,
+        "out_specs": specs_out,
+        "meta": meta,
+    }
+
+
+def build_artifacts(cfg: ModelConfig):
+    """Yield artifact build entries for one config."""
+    d, f, v, l = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    b, s = cfg.batch, cfg.seq
+    tshapes = M.teacher_shapes(cfg)
+    qshapes = M.qweight_shapes(cfg)
+    tok = ("tokens", spec((b, s), jnp.int32))
+    scalar_t = ("t", spec((), jnp.float32))
+    scalar_lr = ("lr", spec((), jnp.float32))
+
+    t_in = dict_specs(tshapes)
+    q_in = [(f"q.{k}", sp) for k, sp in dict_specs(qshapes)]
+    # The student forwards never read the fp linear weights; XLA prunes
+    # unused entry parameters during the HLO-text conversion, so the
+    # artifact signature must list only what the graph actually uses.
+    NONQUANT = ("embed", "ln1", "ln2", "fnorm", "head")
+    t5_in = [(k, sp) for k, sp in t_in if k in NONQUANT]
+
+    def unflat_teacher(args):
+        return dict(zip(tshapes.keys(), args))
+
+    def unflat_teacher5(args):
+        return dict(zip(NONQUANT, args))
+
+    def unflat_q(args):
+        return dict(zip(qshapes.keys(), args))
+
+    entries = []
+
+    # ---- pretrain step ----------------------------------------------------
+    nt = len(tshapes)
+    pstep = T.pretrain_step(cfg)
+
+    def pretrain_flat(*args):
+        p = unflat_teacher(args[0:nt])
+        m = unflat_teacher(args[nt:2 * nt])
+        v_ = unflat_teacher(args[2 * nt:3 * nt])
+        t, lr, tokens = args[3 * nt:3 * nt + 3]
+        p2, m2, v2, loss = pstep(p, m, v_, t, lr, tokens)
+        outs = [p2[k] for k in tshapes] + [m2[k] for k in tshapes] \
+            + [v2[k] for k in tshapes] + [loss]
+        return tuple(outs)
+
+    pre_in = (t_in
+              + [(f"m.{k}", sp) for k, sp in dict_specs(tshapes)]
+              + [(f"v.{k}", sp) for k, sp in dict_specs(tshapes)]
+              + [scalar_t, scalar_lr, tok])
+    pre_out_names = ([f"p.{k}" for k in tshapes] + [f"m.{k}" for k in tshapes]
+                     + [f"v.{k}" for k in tshapes] + ["loss"])
+    entries.append(_entry(
+        f"pretrain_step_{cfg.name}", pre_in, pre_out_names, None,
+        pretrain_flat, {"kind": "pretrain_step", "config": cfg.name}))
+
+    # ---- teacher forward --------------------------------------------------
+    def teacher_flat(*args):
+        p = unflat_teacher(args[0:nt])
+        tokens = args[nt]
+        out = M.teacher_forward(cfg, p, tokens)
+        logp = M.token_logp(out["logits"], tokens)
+        return logp, out["logits"], out["hidden"]
+
+    entries.append(_entry(
+        f"teacher_fwd_{cfg.name}", t_in + [tok],
+        ["logp", "logits", "hidden"], None, teacher_flat,
+        {"kind": "teacher_fwd", "config": cfg.name}))
+
+    for rank in RANKS[cfg.name]:
+        ashapes = M.adapter_shapes(cfg, rank)
+        na = len(ashapes)
+        a_in = [(f"ad.{k}", sp) for k, sp in dict_specs(ashapes)]
+
+        def unflat_a(args, _as=ashapes):
+            return dict(zip(_as.keys(), args))
+
+        # ---- student forward (dense Q) ------------------------------------
+        def student_flat(*args, _ua=unflat_a):
+            p = unflat_teacher5(args[0:5])
+            qw = unflat_q(args[5:5 + 7])
+            ad = _ua(args[5 + 7:5 + 7 + na])
+            tokens = args[5 + 7 + na]
+            out = M.student_forward(cfg, p, qw, ad, tokens)
+            logp = M.token_logp(out["logits"], tokens)
+            return logp, out["logits"], out["hidden"]
+
+        entries.append(_entry(
+            f"student_fwd_{cfg.name}_r{rank}",
+            t5_in + q_in + a_in + [tok],
+            ["logp", "logits", "hidden"], None, student_flat,
+            {"kind": "student_fwd", "config": cfg.name, "rank": rank}))
+
+        # ---- probe (Fig 4a/4b metrics) -------------------------------------
+        def probe_flat(*args, _ua=unflat_a):
+            p = unflat_teacher(args[0:nt])
+            qw = unflat_q(args[nt:nt + 7])
+            ad = _ua(args[nt + 7:nt + 7 + na])
+            tokens = args[nt + 7 + na]
+            lr_, hr, nt_, ns = M.probe(cfg, p, qw, ad, tokens)
+            return lr_, hr, nt_, ns
+
+        entries.append(_entry(
+            f"probe_{cfg.name}_r{rank}",
+            t_in + q_in + a_in + [tok],
+            ["layer_rel", "head_rel", "nll_teacher", "nll_student"],
+            None, probe_flat,
+            {"kind": "probe", "config": cfg.name, "rank": rank}))
+
+        # ---- compensation train steps --------------------------------------
+        for scope in SCOPE_SETS[cfg.name]:
+            cstep = T.compensation_step(cfg, scope)
+
+            def train_flat(*args, _ua=unflat_a, _cs=cstep):
+                p = unflat_teacher(args[0:nt])
+                qw = unflat_q(args[nt:nt + 7])
+                base = nt + 7
+                ad = _ua(args[base:base + na])
+                m = _ua(args[base + na:base + 2 * na])
+                v_ = _ua(args[base + 2 * na:base + 3 * na])
+                t, lr, tokens = args[base + 3 * na:base + 3 * na + 3]
+                ad2, m2, v2, loss, ml, gl = _cs(p, qw, ad, m, v_, t, lr, tokens)
+                outs = ([ad2[k] for k in ad] + [m2[k] for k in ad]
+                        + [v2[k] for k in ad] + [loss, ml, gl])
+                return tuple(outs)
+
+            tr_in = (t_in + q_in + a_in
+                     + [(f"m.{k}", sp) for k, sp in dict_specs(ashapes)]
+                     + [(f"v.{k}", sp) for k, sp in dict_specs(ashapes)]
+                     + [scalar_t, scalar_lr, tok])
+            tr_out = ([f"ad.{k}" for k in ashapes]
+                      + [f"m.{k}" for k in ashapes]
+                      + [f"v.{k}" for k in ashapes]
+                      + ["loss", "model_loss", "gt_loss"])
+            entries.append(_entry(
+                f"train_step_{cfg.name}_r{rank}_{scope}",
+                tr_in, tr_out, None, train_flat,
+                {"kind": "train_step", "config": cfg.name, "rank": rank,
+                 "scope": scope}))
+
+    # ---- packed serving forward (W2, smallest "deploy" rank) ---------------
+    for bits in (2, 4):
+        rank = min(RANKS[cfg.name]) if cfg.name != "small" else 16
+        ashapes = M.adapter_shapes(cfg, rank)
+        na = len(ashapes)
+        a_in = [(f"ad.{k}", sp) for k, sp in dict_specs(ashapes)]
+        gs = cfg.group_size
+        pq_in, sc_in, z_in = [], [], []
+        for nme in M.LINEARS:
+            di, do = M.linear_dims(cfg, nme)
+            prows = di * bits // 8
+            pq_in.append((f"pq.{nme}", spec((l, prows, do), jnp.uint8)))
+            sc_in.append((f"sc.{nme}", spec((l, di // gs, do))))
+            z_in.append((f"z.{nme}", spec((l, di // gs, do))))
+        cb_in = [("codebook", spec((2 ** bits,)))]
+
+        def packed_flat(*args, _na=na, _ash=ashapes, _bits=bits):
+            p = unflat_teacher5(args[0:5])
+            i = 5
+            pq = dict(zip(M.LINEARS, args[i:i + 7])); i += 7
+            sc = dict(zip(M.LINEARS, args[i:i + 7])); i += 7
+            z = dict(zip(M.LINEARS, args[i:i + 7])); i += 7
+            cb = args[i]; i += 1
+            ad = dict(zip(_ash.keys(), args[i:i + _na])); i += _na
+            tokens = args[i]
+            out = M.student_forward_packed(cfg, p, pq, sc, z, cb, ad, tokens,
+                                           bits=_bits)
+            logp = M.token_logp(out["logits"], tokens)
+            return logp, out["logits"]
+
+        entries.append(_entry(
+            f"student_fwd_packed_{cfg.name}_r{rank}_w{bits}",
+            t5_in + pq_in + sc_in + z_in + cb_in + a_in + [tok],
+            ["logp", "logits"], None, packed_flat,
+            {"kind": "student_fwd_packed", "config": cfg.name, "rank": rank,
+             "bits": bits}))
+
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(entry, out_dir, force=False):
+    name = entry["name"]
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    fn = jax.jit(entry["fn"])
+    lowered = fn.lower(*entry["in_specs"])
+    out_specs = [jax.ShapeDtypeStruct(o.shape, o.dtype)
+                 for o in jax.tree_util.tree_leaves(lowered.out_info)]
+    if force or not os.path.exists(path):
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fp:
+            fp.write(text)
+    record = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "meta": entry["meta"],
+        "inputs": [{"name": n, **_spec_json(s)}
+                   for n, s in zip(entry["in_names"], entry["in_specs"])],
+        "outputs": [{"name": n, **_spec_json(s)}
+                    for n, s in zip(entry["out_names"], out_specs)],
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,base")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    records = []
+    for cname in args.configs.split(","):
+        cfg = CONFIGS[cname]
+        for entry in build_artifacts(cfg):
+            rec = lower_entry(entry, args.out, force=args.force)
+            records.append(rec)
+            print(f"  lowered {rec['name']}  "
+                  f"({len(rec['inputs'])} in / {len(rec['outputs'])} out)",
+                  flush=True)
+
+    manifest = {
+        "version": 1,
+        "configs": {c: CONFIGS[c].to_dict() for c in args.configs.split(",")},
+        "ranks": {c: list(RANKS[c]) for c in args.configs.split(",")},
+        "scopes": {c: list(SCOPE_SETS[c]) for c in args.configs.split(",")},
+        "artifacts": records,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as fp:
+        json.dump(manifest, fp, indent=1)
+    print(f"wrote {mpath} ({len(records)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

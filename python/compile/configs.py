@@ -1,0 +1,65 @@
+"""Model configurations shared by the JAX model, the AOT lowering, and
+(through artifacts/manifest.json) the Rust coordinator.
+
+HLO shapes are static, so every (config, rank, scope) combination that the
+Rust side wants to run must be lowered here at `make artifacts` time.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq: int
+    batch: int          # batch baked into train/eval artifacts
+    group_size: int     # quantization group size along d_in
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def params_count(self) -> int:
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        return v * d + l * (4 * d * d + 3 * d * f + 2 * d) + d + d * v
+
+    def to_dict(self):
+        return asdict(self)
+
+
+TINY = ModelConfig("tiny", d_model=64, n_layers=2, n_heads=2, d_ff=192,
+                   vocab=256, seq=64, batch=8, group_size=32)
+SMALL = ModelConfig("small", d_model=192, n_layers=4, n_heads=4, d_ff=512,
+                    vocab=512, seq=128, batch=8, group_size=64)
+BASE = ModelConfig("base", d_model=384, n_layers=6, n_heads=6, d_ff=1024,
+                   vocab=1024, seq=192, batch=4, group_size=64)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, BASE)}
+
+# Loss scopes lowered as training artifacts. `model_logit` is the Table 11
+# variant that applies Model-Loss at the logits instead of the final
+# decoder-layer activation.
+SCOPES = ("linear", "layer", "model", "gt", "model_gt", "model_logit")
+
+# Adapter ranks baked per config. The paper sweeps 16..256 on 4096-dim
+# LLaMA; our d_model is 10-20x smaller so the rank grid scales down to keep
+# rank/d_model ratios comparable.
+RANKS = {
+    "tiny": (4, 8),
+    "small": (4, 8, 16, 32, 64),
+    "base": (8, 16),
+}
+
+# Scopes lowered per config (the full grid only for `small`, which carries
+# the main experiments).
+SCOPE_SETS = {
+    "tiny": ("model_gt", "model"),
+    "small": SCOPES,
+    "base": ("model_gt",),
+}

@@ -1,0 +1,185 @@
+"""Layer-1 Pallas kernels: fused (dequant +) matmul + LoRA correction.
+
+Two kernels, both computing   y = x · W_eff,  W_eff = deq(Q) + A·Bᵀ :
+
+* `lora_mm`        — dense-f32 Q. Used inside every L2 forward (teacher-free
+                     student path), wrapped in a custom_vjp so the *training*
+                     graphs can differentiate through it (Pallas has no
+                     autodiff rule; the backward reuses the jnp oracle, which
+                     tests prove numerically identical).
+* `lora_qmm_packed`— bit-packed uint8 Q with group-wise (scale, zero) and a
+                     scalar codebook, dequantized tile-by-tile inside the
+                     kernel. This is the W2A16 serving path: HBM traffic is
+                     the packed footprint (2 bits/weight + group metadata).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid partitions the
+output dimension into `tile_n`-wide stripes; each grid step pulls one packed
+Q stripe + its group metadata into VMEM, dequantizes in-register, feeds the
+MXU with an [t, d_in]×[d_in, tile_n] matmul, and adds the rank-r correction
+as a second tiny MXU matmul — A·Bᵀ is never materialized. On CPU we run
+`interpret=True` (Mosaic custom-calls cannot execute on the CPU PJRT
+plugin), so these lower into the same HLO artifact the Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default output-stripe width. For the simulated model sizes a whole matrix
+# fits comfortably in VMEM-scale blocks, so tiles only kick in for the
+# larger configs; the TPU-perf estimate in DESIGN.md assumes 128-wide
+# stripes at LLaMA-scale d_out.
+DEFAULT_TILE_N = 256
+
+
+def _pick_tile(d_out: int, tile_n: int) -> int:
+    if d_out <= tile_n:
+        return d_out
+    # largest divisor of d_out that is <= tile_n keeps BlockSpecs exact
+    for t in range(tile_n, 0, -1):
+        if d_out % t == 0:
+            return t
+    return d_out
+
+
+# ---------------------------------------------------------------------------
+# dense-Q kernel
+# ---------------------------------------------------------------------------
+
+def _lora_mm_kernel(x_ref, q_ref, a_ref, bt_ref, y_ref):
+    x = x_ref[...]
+    # main matmul on the (future) MXU; fp32 accumulation
+    acc = jnp.dot(x, q_ref[...], preferred_element_type=jnp.float32)
+    # rank-r correction: (x @ A) @ Bᵀ — two skinny matmuls, never A·Bᵀ
+    acc += jnp.dot(jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32),
+                   bt_ref[...], preferred_element_type=jnp.float32)
+    y_ref[...] = acc
+
+
+def lora_mm_pallas(x, q, a, bt, tile_n: int = DEFAULT_TILE_N):
+    """y = x @ q + (x @ a) @ bt via Pallas (interpret mode)."""
+    t, d_in = x.shape
+    d_out = q.shape[1]
+    r = a.shape[1]
+    tn = _pick_tile(d_out, tile_n)
+    grid = (d_out // tn,)
+    return pl.pallas_call(
+        _lora_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d_in), lambda j: (0, 0)),
+            pl.BlockSpec((d_in, tn), lambda j: (0, j)),
+            pl.BlockSpec((d_in, r), lambda j: (0, 0)),
+            pl.BlockSpec((r, tn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((t, tn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((t, d_out), jnp.float32),
+        interpret=True,
+    )(x, q, a, bt)
+
+
+@jax.custom_vjp
+def lora_mm(x, q, a, bt):
+    """Differentiable fused LoRA matmul: Pallas forward, jnp backward."""
+    return lora_mm_pallas(x, q, a, bt)
+
+
+def _lora_mm_fwd(x, q, a, bt):
+    return lora_mm_pallas(x, q, a, bt), (x, q, a, bt)
+
+
+def _lora_mm_bwd(resids, dy):
+    x, q, a, bt = resids
+    # dx = dy @ (q + a bt)ᵀ = dy @ qᵀ + (dy @ btᵀ) @ aᵀ
+    dx = dy @ q.T + (dy @ bt.T) @ a.T
+    # q is frozen in every caller; a zero cotangent lets XLA DCE the node.
+    dq = jnp.zeros_like(q)
+    da = x.T @ (dy @ bt.T)
+    dbt = (x @ a).T @ dy
+    return dx, dq, da, dbt
+
+
+lora_mm.defvjp(_lora_mm_fwd, _lora_mm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# packed-Q kernel (serving path)
+# ---------------------------------------------------------------------------
+
+def _lora_qmm_packed_kernel(x_ref, pq_ref, s_ref, z_ref, cb_ref, a_ref,
+                            bt_ref, y_ref, *, bits: int, group_size: int):
+    x = x_ref[...]
+    packed = pq_ref[...]
+    # in-register unpack: shift/mask lanes then interleave along d_in
+    if bits == 2:
+        parts = [(packed >> s) & 0x3 for s in (0, 2, 4, 6)]
+        codes = jnp.stack(parts, axis=1).reshape(-1, packed.shape[1])
+    elif bits == 4:
+        parts = [(packed >> s) & 0xF for s in (0, 4)]
+        codes = jnp.stack(parts, axis=1).reshape(-1, packed.shape[1])
+    elif bits == 3:
+        codes = packed
+    else:
+        raise ValueError(f"bits={bits}")
+    codes = codes.astype(jnp.int32)
+    vals = cb_ref[...][codes]  # scalar-codebook gather
+    s = jnp.repeat(s_ref[...], group_size, axis=0)
+    z = jnp.repeat(z_ref[...], group_size, axis=0)
+    w = z + s * vals
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc += jnp.dot(jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32),
+                   bt_ref[...], preferred_element_type=jnp.float32)
+    y_ref[...] = acc
+
+
+def lora_qmm_packed(x, packed, scales, zeros, codebook, a, bt, *,
+                    bits: int, group_size: int,
+                    tile_n: int = DEFAULT_TILE_N):
+    """Fused packed-dequant + matmul + LoRA. Inference-only (no vjp)."""
+    t, d_in = x.shape
+    d_out = packed.shape[1]
+    r = a.shape[1]
+    packed_rows = packed.shape[0]
+    n_groups = scales.shape[0]
+    assert n_groups * group_size == d_in, "group metadata mismatch"
+    tn = _pick_tile(d_out, tile_n)
+    grid = (d_out // tn,)
+    ncodes = codebook.shape[0]
+    kern = functools.partial(_lora_qmm_packed_kernel, bits=bits,
+                             group_size=group_size)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d_in), lambda j: (0, 0)),
+            pl.BlockSpec((packed_rows, tn), lambda j: (0, j)),
+            pl.BlockSpec((n_groups, tn), lambda j: (0, j)),
+            pl.BlockSpec((n_groups, tn), lambda j: (0, j)),
+            pl.BlockSpec((ncodes,), lambda j: (0,)),
+            pl.BlockSpec((d_in, r), lambda j: (0, 0)),
+            pl.BlockSpec((r, tn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((t, tn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((t, d_out), jnp.float32),
+        interpret=True,
+    )(x, packed, scales, zeros, codebook, a, bt)
+
+
+def vmem_footprint_bytes(t, d_in, d_out, r, *, bits, group_size,
+                         tile_n=DEFAULT_TILE_N):
+    """Static VMEM-footprint estimate for one grid step of the packed
+    kernel — the quantity the §Perf analysis tracks (interpret-mode
+    wallclock is not a TPU proxy)."""
+    tn = _pick_tile(d_out, tile_n)
+    n_groups = d_in // group_size
+    x_b = t * d_in * 4
+    pq_b = (d_in * bits // 8 if bits in (2, 4) else d_in) * tn
+    meta_b = 2 * n_groups * tn * 4
+    deq_b = d_in * tn * 4  # dequantized stripe held for the MXU
+    ab_b = (d_in * r + r * tn) * 4
+    y_b = t * tn * 4
+    return x_b + pq_b + meta_b + deq_b + ab_b + y_b

@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for the Layer-1 Pallas kernels.
+
+Everything in this file is straight-line jax.numpy with no Pallas, so it
+serves three roles:
+
+1. the correctness reference that `python/tests/test_kernel.py` sweeps the
+   Pallas kernels against (hypothesis-driven shape/dtype sweeps);
+2. the building block for the *training* graphs (Pallas has no autodiff;
+   the custom_vjp backward in lora_qmm.py reuses these functions);
+3. executable documentation of the packing / group-dequant conventions that
+   the Rust side (`rust/src/quant/packing.rs`) must match bit-for-bit.
+
+Packing convention (must stay in sync with Rust):
+  * codes are quantization indices in [0, 2^bits)
+  * 2-bit: 4 codes per byte, code i of a byte at bit position 2*i
+    (little-endian within the byte), packed along the d_in axis
+  * 4-bit: 2 codes per byte, code i at bit position 4*i
+  * groups of `group_size` consecutive d_in rows share one (scale, zero)
+  * dequant:  w[i, j] = zero[g, j] + scale[g, j] * codebook[code[i, j]],
+    where g = i // group_size
+"""
+
+import jax.numpy as jnp
+
+
+def pack_codes(codes, bits: int):
+    """Pack integer codes [d_in, d_out] along axis 0. Returns uint8 array
+    [d_in * bits / 8, d_out] for bits in {2, 4}; 3-bit stays unpacked
+    (one code per byte) because cross-byte straddling isn't worth it at
+    simulation scale."""
+    codes = codes.astype(jnp.uint8)
+    d_in, d_out = codes.shape
+    if bits == 2:
+        assert d_in % 4 == 0
+        c = codes.reshape(d_in // 4, 4, d_out)
+        return (c[:, 0] | (c[:, 1] << 2) | (c[:, 2] << 4) | (c[:, 3] << 6)).astype(jnp.uint8)
+    if bits == 4:
+        assert d_in % 2 == 0
+        c = codes.reshape(d_in // 2, 2, d_out)
+        return (c[:, 0] | (c[:, 1] << 4)).astype(jnp.uint8)
+    if bits == 3:
+        return codes
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def unpack_codes(packed, bits: int):
+    """Inverse of pack_codes; returns int32 codes [d_in, d_out]."""
+    if bits == 2:
+        parts = [(packed >> s) & 0x3 for s in (0, 2, 4, 6)]
+        stacked = jnp.stack(parts, axis=1)  # [d_in//4, 4, d_out]
+        return stacked.reshape(-1, packed.shape[1]).astype(jnp.int32)
+    if bits == 4:
+        parts = [(packed >> s) & 0xF for s in (0, 4)]
+        stacked = jnp.stack(parts, axis=1)
+        return stacked.reshape(-1, packed.shape[1]).astype(jnp.int32)
+    if bits == 3:
+        return packed.astype(jnp.int32)
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def dequant(codes, scales, zeros, codebook, group_size: int):
+    """Group-wise dequantization.
+
+    codes:    [d_in, d_out] int
+    scales:   [d_in / group_size, d_out] f32
+    zeros:    [d_in / group_size, d_out] f32
+    codebook: [2^bits] f32 (e.g. [0,1,2,3] for uniform 2-bit, NF2 values
+              for NormalFloat)
+    returns   [d_in, d_out] f32
+    """
+    vals = codebook[codes]  # gather
+    s = jnp.repeat(scales, group_size, axis=0)
+    z = jnp.repeat(zeros, group_size, axis=0)
+    return z + s * vals
+
+
+def lora_mm_ref(x, q, a, bt):
+    """Dense-Q reference: y = x @ q + (x @ a) @ bt.
+
+    x: [t, d_in], q: [d_in, d_out], a: [d_in, r], bt: [r, d_out].
+    """
+    return x @ q + (x @ a) @ bt
+
+
+def lora_qmm_packed_ref(x, packed, scales, zeros, codebook, a, bt,
+                        bits: int, group_size: int):
+    """Packed-Q reference: dequantize then lora_mm_ref."""
+    codes = unpack_codes(packed, bits)
+    w = dequant(codes, scales, zeros, codebook, group_size)
+    return lora_mm_ref(x, w, a, bt)

@@ -1,0 +1,398 @@
+"""Layer-2: LLaMA-style decoder in JAX — fp teacher + quantized student with
+LoRA adapters — plus every discrepancy-loss scope the paper studies.
+
+Architecture (matches the paper's Fig. 2(a) structure, scaled down):
+  embed -> N x [ RMSNorm -> MHA(RoPE, causal) -> res
+                 RMSNorm -> SwiGLU FFN        -> res ] -> RMSNorm -> LM head
+
+Quantized linears (7 per layer): wq wk wv wo (attention) and wg wu wd
+(SwiGLU gate/up/down — the paper's W_FFN1/W_FFN2 family). Embedding, norms
+and LM head stay full-precision, as in all the paper's quantizer baselines.
+
+Every student linear goes through the Layer-1 Pallas kernel
+(`kernels.lora_qmm.lora_mm`, custom_vjp) so the lowered HLO artifacts
+exercise the fused dequant+matmul+LoRA path end to end.
+
+Parameter layout: per-layer weights are *stacked* along a leading [L, ...]
+axis and the decoder runs as `lax.scan` over layers — this keeps the HLO
+compact and gives the Rust side a fixed, manifest-described argument list.
+Weights use the x @ W convention, i.e. shape [d_in, d_out].
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .configs import ModelConfig
+from .kernels.lora_qmm import lora_mm, lora_qmm_packed
+
+# The seven quantized linear-module families, in canonical order. This order
+# defines artifact argument order; rust/src/runtime/artifact.rs relies on it
+# via manifest.json.
+LINEARS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+TEACHER_KEYS = ("embed", "wq", "wk", "wv", "wo", "wg", "wu", "wd",
+                "ln1", "ln2", "fnorm", "head")
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# shapes / init
+# ---------------------------------------------------------------------------
+
+def linear_dims(cfg: ModelConfig, name: str):
+    """(d_in, d_out) of each linear family."""
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "wg": (d, f), "wu": (d, f), "wd": (f, d),
+    }[name]
+
+
+def teacher_shapes(cfg: ModelConfig):
+    d, f, v, l = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    shapes = {"embed": (v, d)}
+    for name in LINEARS:
+        di, do = linear_dims(cfg, name)
+        shapes[name] = (l, di, do)
+    shapes["ln1"] = (l, d)
+    shapes["ln2"] = (l, d)
+    shapes["fnorm"] = (d,)
+    shapes["head"] = (d, v)
+    return shapes
+
+
+def adapter_shapes(cfg: ModelConfig, rank: int):
+    """Ordered dict of LoRA adapter shapes: for each linear family,
+    `{name}.a` [L, d_in, r] and `{name}.b` [L, d_out, r]."""
+    l = cfg.n_layers
+    shapes = {}
+    for name in LINEARS:
+        di, do = linear_dims(cfg, name)
+        shapes[f"{name}.a"] = (l, di, rank)
+        shapes[f"{name}.b"] = (l, do, rank)
+    return shapes
+
+
+def qweight_shapes(cfg: ModelConfig):
+    l = cfg.n_layers
+    return {name: (l,) + linear_dims(cfg, name) for name in LINEARS}
+
+
+def init_teacher(cfg: ModelConfig, key):
+    """He-style init for the fp teacher (pretrained in-repo by the Rust
+    coordinator running the pretrain_step artifact)."""
+    shapes = teacher_shapes(cfg)
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name in ("ln1", "ln2", "fnorm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            std = (2.0 / fan_in) ** 0.5 * 0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def init_adapters(cfg: ModelConfig, rank: int, key, scale: float = 0.01):
+    """Default LoRA init: A gaussian, B zeros (so A·Bᵀ = 0 at step 0)."""
+    shapes = adapter_shapes(cfg, rank)
+    out = {}
+    for name, shape in shapes.items():
+        if name.endswith(".a"):
+            key, sub = jax.random.split(key)
+            out[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            out[name] = jnp.zeros(shape, jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * lax.rsqrt(ms + EPS) * g
+
+
+def rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    pos = jnp.arange(cfg.seq, dtype=jnp.float32)[:, None]
+    freq = 10000.0 ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)[None, :]
+    ang = pos * freq                      # [S, hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, H, S, hd]; rotate pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x1 * sin + x2 * cos
+    out = jnp.stack([xr1, xr2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def attention(q, k, v, cfg: ModelConfig, cos, sin):
+    """q/k/v: [B, S, d] -> [B, S, d], causal, RoPE."""
+    b, s, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(x):
+        return x.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    qh = apply_rope(qh, cos, sin)
+    kh = apply_rope(kh, cos, sin)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _teacher_layer(cfg, cos, sin, h, wl):
+    """One decoder layer with fp weights; returns (h_out, captures).
+    captures = (x_attn_in, attn_cat, x_ffn_in, ffn_mid, h_out) — the inputs
+    each linear family sees, needed by the Linear-Loss scope."""
+    x1 = rmsnorm(h, wl["ln1"])
+    q = x1 @ wl["wq"]
+    k = x1 @ wl["wk"]
+    v = x1 @ wl["wv"]
+    att = attention(q, k, v, cfg, cos, sin)
+    h = h + att @ wl["wo"]
+    x2 = rmsnorm(h, wl["ln2"])
+    g = jax.nn.silu(x2 @ wl["wg"])
+    u = x2 @ wl["wu"]
+    mid = g * u
+    h = h + mid @ wl["wd"]
+    return h, (x1, att, x2, mid, h)
+
+
+def teacher_forward(cfg: ModelConfig, params, tokens):
+    """Returns dict with per-layer captures, final hidden, logits, nll."""
+    cos, sin = rope_tables(cfg)
+    h = params["embed"][tokens]           # [B, S, d]
+
+    def step(h, per_layer):
+        h, cap = _teacher_layer(cfg, cos, sin, h, per_layer)
+        return h, cap
+
+    per_layer = {k: params[k] for k in LINEARS + ("ln1", "ln2")}
+    h, caps = lax.scan(step, h, per_layer)
+    hidden = rmsnorm(h, params["fnorm"])
+    logits = hidden @ params["head"]
+    return {
+        "x_attn": caps[0],    # [L, B, S, d]  input to wq/wk/wv
+        "att": caps[1],       # [L, B, S, d]  input to wo
+        "x_ffn": caps[2],     # [L, B, S, d]  input to wg/wu
+        "mid": caps[3],       # [L, B, S, f]  input to wd
+        "layer_out": caps[4], # [L, B, S, d]  residual stream after layer
+        "hidden": hidden,
+        "logits": logits,
+    }
+
+
+def _student_linear(x, q, a, b):
+    """x: [B, S, d_in] through the Pallas fused kernel; b is [d_out, r]."""
+    bsz, s, di = x.shape
+    y = lora_mm(x.reshape(bsz * s, di), q, a, b.T)
+    return y.reshape(bsz, s, -1)
+
+
+def _student_layer(cfg, cos, sin, h, wl):
+    x1 = rmsnorm(h, wl["ln1"])
+    q = _student_linear(x1, wl["wq"], wl["wq.a"], wl["wq.b"])
+    k = _student_linear(x1, wl["wk"], wl["wk.a"], wl["wk.b"])
+    v = _student_linear(x1, wl["wv"], wl["wv.a"], wl["wv.b"])
+    att = attention(q, k, v, cfg, cos, sin)
+    h = h + _student_linear(att, wl["wo"], wl["wo.a"], wl["wo.b"])
+    x2 = rmsnorm(h, wl["ln2"])
+    g = jax.nn.silu(_student_linear(x2, wl["wg"], wl["wg.a"], wl["wg.b"]))
+    u = _student_linear(x2, wl["wu"], wl["wu.a"], wl["wu.b"])
+    mid = g * u
+    h = h + _student_linear(mid, wl["wd"], wl["wd.a"], wl["wd.b"])
+    return h, h
+
+
+def student_forward(cfg: ModelConfig, params, qweights, adapters, tokens):
+    """Student = frozen fp embed/norms/head + quantized linears + LoRA.
+    Returns dict(layer_out [L,B,S,d], hidden, logits)."""
+    cos, sin = rope_tables(cfg)
+    h = params["embed"][tokens]
+    per_layer = {k: qweights[k] for k in LINEARS}
+    per_layer.update({k: adapters[k] for k in adapters})
+    per_layer["ln1"] = params["ln1"]
+    per_layer["ln2"] = params["ln2"]
+
+    def step(h, wl):
+        return _student_layer(cfg, cos, sin, h, wl)
+
+    h, layer_out = lax.scan(step, h, per_layer)
+    hidden = rmsnorm(h, params["fnorm"])
+    logits = hidden @ params["head"]
+    return {"layer_out": layer_out, "hidden": hidden, "logits": logits}
+
+
+# ---------------------------------------------------------------------------
+# metrics / losses
+# ---------------------------------------------------------------------------
+
+def token_logp(logits, tokens):
+    """Log-prob of the realized next token: [B, S-1]."""
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nxt = tokens[:, 1:]
+    return jnp.take_along_axis(logp, nxt[..., None], axis=-1)[..., 0]
+
+
+def nll_loss(logits, tokens):
+    return -jnp.mean(token_logp(logits, tokens))
+
+
+def rel_fro2(y, t):
+    """Relative squared Frobenius discrepancy ‖y−t‖²/‖t‖² (scale-stable
+    across scopes; the paper's raw ‖·‖_F objective differs only by a
+    per-scope constant factor for a fixed calibration set)."""
+    return jnp.sum((y - t) ** 2) / (jnp.sum(t ** 2) + EPS)
+
+
+def rel_err(y, t):
+    """Paper's rank-sensitivity metric E = |(Y − Y^q)/Y| (aggregated as
+    mean |Δ| / mean |Y| for numerical stability)."""
+    return jnp.mean(jnp.abs(y - t)) / (jnp.mean(jnp.abs(t)) + EPS)
+
+
+def linear_scope_loss(cfg, params, qweights, adapters, caps):
+    """Eq. 3: per-linear discrepancy with the *teacher's* input X."""
+    inputs = {"wq": caps["x_attn"], "wk": caps["x_attn"], "wv": caps["x_attn"],
+              "wo": caps["att"], "wg": caps["x_ffn"], "wu": caps["x_ffn"],
+              "wd": caps["mid"]}
+
+    def per_family(name):
+        x = inputs[name]                       # [L, B, S, d_in]
+        w = params[name]                       # [L, d_in, d_out]
+        q = qweights[name]
+        a = adapters[f"{name}.a"]
+        b = adapters[f"{name}.b"]
+
+        def one(x_l, w_l, q_l, a_l, b_l):
+            t = x_l @ w_l
+            bsz, s, di = x_l.shape
+            y = lora_mm(x_l.reshape(bsz * s, di), q_l, a_l, b_l.T)
+            return rel_fro2(y.reshape(t.shape), t)
+
+        return jnp.mean(jax.vmap(one)(x, w, q, a, b))
+
+    return sum(per_family(n) for n in LINEARS) / len(LINEARS)
+
+
+def layer_scope_loss(student_out, caps):
+    """Eq. 4: per-decoder-layer discrepancy, student stream propagated."""
+    y = student_out["layer_out"]   # [L, B, S, d]
+    t = caps["layer_out"]
+    per = jax.vmap(rel_fro2)(y, t)
+    return jnp.mean(per)
+
+
+def model_scope_loss(student_out, caps, target: str = "hidden"):
+    """Eq. 5 (RILQ's Model-Loss): discrepancy at the final decoder output
+    (`hidden`) or at the logits (Table 11 variant)."""
+    return rel_fro2(student_out[target], caps[target])
+
+
+def scope_loss(cfg, scope, params, qweights, adapters, tokens):
+    """Build the scalar loss for a scope; returns (loss, aux_dict)."""
+    caps = teacher_forward(cfg, params, tokens)
+    caps = jax.tree_util.tree_map(lax.stop_gradient, caps)
+    out = student_forward(cfg, params, qweights, adapters, tokens)
+    gt = nll_loss(out["logits"], tokens)
+    model_l = model_scope_loss(out, caps, "hidden")
+    if scope == "linear":
+        loss = linear_scope_loss(cfg, params, qweights, adapters, caps)
+    elif scope == "layer":
+        loss = layer_scope_loss(out, caps)
+    elif scope == "model":
+        loss = model_l
+    elif scope == "model_logit":
+        loss = model_scope_loss(out, caps, "logits")
+    elif scope == "gt":
+        loss = gt
+    elif scope == "model_gt":          # RILQ: equal weighting (paper: 0.5/0.5)
+        loss = 0.5 * model_l + 0.5 * gt
+    else:
+        raise ValueError(f"unknown scope {scope}")
+    return loss, {"model_loss": model_l, "gt_loss": gt}
+
+
+# ---------------------------------------------------------------------------
+# probes (Fig. 4a/4b) and packed serving forward
+# ---------------------------------------------------------------------------
+
+def probe(cfg: ModelConfig, params, qweights, adapters, tokens):
+    """Returns (layer_rel [L], head_rel, nll_teacher, nll_student)."""
+    caps = teacher_forward(cfg, params, tokens)
+    out = student_forward(cfg, params, qweights, adapters, tokens)
+    layer_rel = jax.vmap(rel_err)(out["layer_out"], caps["layer_out"])
+    head_rel = rel_err(out["logits"], caps["logits"])
+    return (layer_rel, head_rel,
+            nll_loss(caps["logits"], tokens), nll_loss(out["logits"], tokens))
+
+
+def _student_linear_packed(x, pq, sc, z, cb, a, b, bits, group_size):
+    bsz, s, di = x.shape
+    y = lora_qmm_packed(x.reshape(bsz * s, di), pq, sc, z, cb, a, b.T,
+                        bits=bits, group_size=group_size)
+    return y.reshape(bsz, s, -1)
+
+
+def student_forward_packed(cfg: ModelConfig, params, packed, scales, zeros,
+                           codebook, adapters, tokens, *, bits: int):
+    """Serving-path forward: weights stay bit-packed in 'HBM'; each linear
+    runs the fused Pallas dequant kernel. packed/scales/zeros are dicts over
+    LINEARS with leading [L, ...]."""
+    cos, sin = rope_tables(cfg)
+    gs = cfg.group_size
+    h = params["embed"][tokens]
+    lin = functools.partial(_student_linear_packed, bits=bits, group_size=gs)
+
+    per_layer = {}
+    for n in LINEARS:
+        per_layer[f"{n}.pq"] = packed[n]
+        per_layer[f"{n}.sc"] = scales[n]
+        per_layer[f"{n}.z"] = zeros[n]
+        per_layer[f"{n}.a"] = adapters[f"{n}.a"]
+        per_layer[f"{n}.b"] = adapters[f"{n}.b"]
+    per_layer["ln1"] = params["ln1"]
+    per_layer["ln2"] = params["ln2"]
+
+    def at(wl, n):
+        return (wl[f"{n}.pq"], wl[f"{n}.sc"], wl[f"{n}.z"], codebook,
+                wl[f"{n}.a"], wl[f"{n}.b"])
+
+    def step(h, wl):
+        x1 = rmsnorm(h, wl["ln1"])
+        q = lin(x1, *at(wl, "wq"))
+        k = lin(x1, *at(wl, "wk"))
+        v = lin(x1, *at(wl, "wv"))
+        att = attention(q, k, v, cfg, cos, sin)
+        h = h + lin(att, *at(wl, "wo"))
+        x2 = rmsnorm(h, wl["ln2"])
+        g = jax.nn.silu(lin(x2, *at(wl, "wg")))
+        u = lin(x2, *at(wl, "wu"))
+        h = h + lin(g * u, *at(wl, "wd"))
+        return h, None
+
+    h, _ = lax.scan(step, h, per_layer)
+    hidden = rmsnorm(h, params["fnorm"])
+    logits = hidden @ params["head"]
+    return {"hidden": hidden, "logits": logits}

@@ -1,0 +1,74 @@
+"""Train-step graph builders: Adam fused into the HLO so the Rust
+coordinator's calibration loop is a single PJRT execute per step.
+
+Two step families:
+  * compensation_step — the paper's LQEC optimization: gradients w.r.t. the
+    LoRA adapters only (teacher + quantized weights frozen), loss given by
+    one of the six scopes in model.scope_loss.
+  * pretrain_step — full-parameter causal-LM training of the fp teacher
+    (the repo pretrains its own base models; repro band = 0 means no
+    external checkpoints).
+
+Adam is implemented inline (no optax in the image): step count `t` and
+learning rate `lr` are *inputs*, so the Rust driver owns the schedule and
+early stopping without needing new artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import ModelConfig
+
+B1, B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(params, grads, m, v, t, lr):
+    """One Adam step over arbitrary pytrees. `t` is the 1-based step."""
+    def upd(p, g, m_, v_):
+        m2 = B1 * m_ + (1 - B1) * g
+        v2 = B2 * v_ + (1 - B2) * g * g
+        mhat = m2 / (1 - B1 ** t)
+        vhat = v2 / (1 - B2 ** t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m2, v2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def compensation_step(cfg: ModelConfig, scope: str):
+    """Returns step(params, qweights, adapters, m, v, t, lr, tokens) ->
+    (adapters', m', v', loss, model_loss, gt_loss)."""
+
+    def step(params, qweights, adapters, m, v, t, lr, tokens):
+        def loss_fn(ad):
+            return M.scope_loss(cfg, scope, params, qweights, ad, tokens)
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(adapters)
+        adapters2, m2, v2 = adam_update(adapters, grads, m, v, t, lr)
+        return adapters2, m2, v2, loss, aux["model_loss"], aux["gt_loss"]
+
+    return step
+
+
+def pretrain_step(cfg: ModelConfig):
+    """Returns step(params, m, v, t, lr, tokens) -> (params', m', v', loss)."""
+
+    def step(params, m, v, t, lr, tokens):
+        def loss_fn(p):
+            out = M.teacher_forward(cfg, p, tokens)
+            return M.nll_loss(out["logits"], tokens)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, m2, v2 = adam_update(params, grads, m, v, t, lr)
+        return params2, m2, v2, loss
+
+    return step

@@ -1,0 +1,74 @@
+"""AOT lowering sanity: artifact construction, HLO text hygiene, manifest
+consistency. Uses the tiny config only (fast)."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, RANKS, SCOPE_SETS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def entries():
+    return aot.build_artifacts(CONFIGS["tiny"])
+
+
+def test_expected_artifact_kinds_present():
+    kinds = {e["meta"]["kind"] for e in entries()}
+    assert kinds == {
+        "pretrain_step",
+        "teacher_fwd",
+        "student_fwd",
+        "probe",
+        "train_step",
+        "student_fwd_packed",
+    }
+
+
+def test_train_step_grid_covers_config():
+    names = {e["name"] for e in entries()}
+    for rank in RANKS["tiny"]:
+        for scope in SCOPE_SETS["tiny"]:
+            assert f"train_step_tiny_r{rank}_{scope}" in names
+
+
+def test_lowered_hlo_has_no_elided_constants(tmp_path):
+    # the bug that cost us an afternoon: default printing elides large
+    # constants as `{...}` and the Rust-side parser zero-fills them
+    e = next(x for x in entries() if x["name"] == "teacher_fwd_tiny")
+    rec = aot.lower_entry(e, str(tmp_path), force=True)
+    text = open(tmp_path / rec["file"]).read()
+    assert "{...}" not in text
+    assert "ENTRY" in text
+    # new-style metadata attrs break the xla_extension 0.5.1 parser
+    assert "source_end_line" not in text
+
+
+def test_manifest_records_match_specs(tmp_path):
+    e = next(x for x in entries() if x["meta"]["kind"] == "train_step")
+    rec = aot.lower_entry(e, str(tmp_path), force=True)
+    assert len(rec["inputs"]) == len(e["in_specs"])
+    assert len(rec["outputs"]) == len(e["out_names"])
+    # tokens arg typed int32 with the config's batch geometry
+    tok = next(i for i in rec["inputs"] if i["name"] == "tokens")
+    assert tok["dtype"] == "int32"
+    assert tok["shape"] == [CONFIGS["tiny"].batch, CONFIGS["tiny"].seq]
+
+
+def test_existing_manifest_is_consistent():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    m = json.load(open(path))
+    assert m["version"] == 1
+    names = {a["name"] for a in m["artifacts"]}
+    for cfg_name in m["configs"]:
+        assert f"teacher_fwd_{cfg_name}" in names
+        assert f"pretrain_step_{cfg_name}" in names
+    for a in m["artifacts"]:
+        f = os.path.join(os.path.dirname(path), a["file"])
+        assert os.path.exists(f), a["file"]

@@ -1,0 +1,165 @@
+"""Layer-2 correctness: model shapes, loss scopes, training steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.configs import TINY as cfg
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_teacher(cfg, KEY)
+    qweights = {
+        k: params[k] + 0.05 * jax.random.normal(jax.random.PRNGKey(i), params[k].shape)
+        for i, k in enumerate(M.LINEARS)
+    }
+    adapters = M.init_adapters(cfg, 4, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (cfg.batch, cfg.seq), 0, cfg.vocab)
+    return params, qweights, adapters, tokens
+
+
+def test_teacher_forward_shapes(setup):
+    params, _, _, tokens = setup
+    out = M.teacher_forward(cfg, params, tokens)
+    assert out["logits"].shape == (cfg.batch, cfg.seq, cfg.vocab)
+    assert out["hidden"].shape == (cfg.batch, cfg.seq, cfg.d_model)
+    assert out["layer_out"].shape == (cfg.n_layers, cfg.batch, cfg.seq, cfg.d_model)
+    assert out["mid"].shape == (cfg.n_layers, cfg.batch, cfg.seq, cfg.d_ff)
+
+
+def test_student_zero_adapters_match_qweights_model(setup):
+    params, qweights, adapters, tokens = setup
+    zero_ad = {k: jnp.zeros_like(v) for k, v in adapters.items()}
+    out_s = M.student_forward(cfg, params, qweights, zero_ad, tokens)
+    # manual: teacher_forward with quantized weights substituted
+    params_q = dict(params)
+    params_q.update(qweights)
+    out_t = M.teacher_forward(cfg, params_q, tokens)
+    np.testing.assert_allclose(out_s["logits"], out_t["logits"], rtol=1e-4, atol=1e-4)
+
+
+def test_student_equals_teacher_when_unquantized(setup):
+    params, _, adapters, tokens = setup
+    zero_ad = {k: jnp.zeros_like(v) for k, v in adapters.items()}
+    qweights = {k: params[k] for k in M.LINEARS}
+    out_s = M.student_forward(cfg, params, qweights, zero_ad, tokens)
+    out_t = M.teacher_forward(cfg, params, tokens)
+    np.testing.assert_allclose(out_s["logits"], out_t["logits"], rtol=1e-4, atol=1e-4)
+
+
+def test_token_logp_normalized(setup):
+    params, _, _, tokens = setup
+    out = M.teacher_forward(cfg, params, tokens)
+    lp = M.token_logp(out["logits"], tokens)
+    assert lp.shape == (cfg.batch, cfg.seq - 1)
+    assert bool(jnp.all(lp < 0))
+
+
+def test_causality(setup):
+    params, _, _, tokens = setup
+    out1 = M.teacher_forward(cfg, params, tokens)
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % cfg.vocab)
+    out2 = M.teacher_forward(cfg, params, tokens2)
+    np.testing.assert_allclose(
+        out1["logits"][:, :-1], out2["logits"][:, :-1], rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("scope", ["linear", "layer", "model", "gt", "model_gt", "model_logit"])
+def test_scope_losses_finite_and_positive(setup, scope):
+    params, qweights, adapters, tokens = setup
+    loss, aux = M.scope_loss(cfg, scope, params, qweights, adapters, tokens)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    assert np.isfinite(float(aux["model_loss"]))
+    assert np.isfinite(float(aux["gt_loss"]))
+
+
+def test_scope_loss_zero_for_identical_student(setup):
+    params, _, adapters, tokens = setup
+    zero_ad = {k: jnp.zeros_like(v) for k, v in adapters.items()}
+    qweights = {k: params[k] for k in M.LINEARS}
+    for scope in ["linear", "layer", "model"]:
+        loss, _ = M.scope_loss(cfg, scope, params, qweights, zero_ad, tokens)
+        assert float(loss) < 1e-6, f"{scope}: {float(loss)}"
+
+
+def test_probe_outputs(setup):
+    params, qweights, adapters, tokens = setup
+    layer_rel, head_rel, nll_t, nll_s = M.probe(cfg, params, qweights, adapters, tokens)
+    assert layer_rel.shape == (cfg.n_layers,)
+    assert float(head_rel) > 0
+    assert float(nll_t) > 0 and float(nll_s) > 0
+
+
+def test_compensation_step_reduces_loss(setup):
+    params, qweights, adapters, tokens = setup
+    step = jax.jit(T.compensation_step(cfg, "model"))
+    ad = adapters
+    m = {k: jnp.zeros_like(v) for k, v in ad.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in ad.items()}
+    losses = []
+    for t in range(6):
+        ad, m, v, loss, _, _ = step(params, qweights, ad, m, v, float(t + 1), 3e-3, tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_pretrain_step_reduces_loss():
+    params = M.init_teacher(cfg, jax.random.PRNGKey(5))
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (cfg.batch, cfg.seq), 0, cfg.vocab)
+    step = jax.jit(T.pretrain_step(cfg))
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+    losses = []
+    for t in range(6):
+        params, m, v, loss = step(params, m, v, float(t + 1), 1e-3, tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_adam_update_moves_params_toward_gradient():
+    p = {"w": jnp.array([1.0, -1.0])}
+    g = {"w": jnp.array([1.0, -2.0])}
+    m = {"w": jnp.zeros(2)}
+    v = {"w": jnp.zeros(2)}
+    p2, m2, v2 = T.adam_update(p, g, m, v, 1.0, 0.1)
+    # Adam's first step is approximately -lr * sign(g)
+    assert float(p2["w"][0]) < 1.0
+    assert float(p2["w"][1]) > -1.0
+    assert float(m2["w"][0]) > 0
+    assert float(v2["w"][0]) > 0
+
+
+def test_packed_forward_matches_dense(setup):
+    from compile.kernels import ref as kref
+
+    params, _, adapters, tokens = setup
+    gs = cfg.group_size
+    packed, scales, zeros = {}, {}, {}
+    qdense = {}
+    cb = jnp.array([0.0, 1.0, 2.0, 3.0]) / 3.0 * 2 - 1.0  # arbitrary 2-bit codebook
+    for i, name in enumerate(M.LINEARS):
+        di, do = M.linear_dims(cfg, name)
+        key = jax.random.PRNGKey(100 + i)
+        codes = jax.random.randint(key, (cfg.n_layers, di, do), 0, 4)
+        sc = jnp.abs(jax.random.normal(key, (cfg.n_layers, di // gs, do))) * 0.05 + 0.01
+        z = jnp.zeros((cfg.n_layers, di // gs, do))
+        packed[name] = jnp.stack([kref.pack_codes(codes[l], 2) for l in range(cfg.n_layers)])
+        scales[name] = sc
+        zeros[name] = z
+        qdense[name] = jnp.stack(
+            [kref.dequant(codes[l], sc[l], z[l], cb, gs) for l in range(cfg.n_layers)]
+        )
+    out_p = M.student_forward_packed(
+        cfg, params, packed, scales, zeros, cb, adapters, tokens, bits=2
+    )
+    out_d = M.student_forward(cfg, params, qdense, adapters, tokens)
+    np.testing.assert_allclose(out_p["logits"], out_d["logits"], rtol=1e-3, atol=1e-3)

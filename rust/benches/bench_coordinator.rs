@@ -1,0 +1,86 @@
+//! Coordinator benchmarks: batcher throughput under backpressure, cache
+//! hit latency, grid-scheduler overhead, adapter (de)flattening.
+
+use rilq::coordinator::batcher::BatchStream;
+use rilq::coordinator::RunCache;
+use rilq::data::{Profile, Vocab};
+use rilq::lqec::AdapterSet;
+use rilq::model::weights::TensorFile;
+use rilq::model::ModelDims;
+use rilq::report::Bench;
+use rilq::tensor::Rng;
+
+fn main() {
+    let vocab = Vocab::new(512, 1);
+
+    // batcher throughput (tokens/s through the bounded channel)
+    let b = Bench::new("batcher").iters(1, 5);
+    let tokens = (50 * 8 * 128) as f64;
+    b.run_throughput("stream_50x8x128 tokens/s", tokens, || {
+        let mut s = BatchStream::spawn(vocab.clone(), Profile::C4Sim, 7, 8, 128, 50, 4);
+        let mut n = 0;
+        while let Some(batch) = s.next() {
+            n += batch.len();
+        }
+        n
+    });
+    // tight capacity (max backpressure) for comparison
+    b.run_throughput("stream_capacity1 tokens/s", tokens, || {
+        let mut s = BatchStream::spawn(vocab.clone(), Profile::C4Sim, 7, 8, 128, 50, 1);
+        let mut n = 0;
+        while let Some(batch) = s.next() {
+            n += batch.len();
+        }
+        n
+    });
+
+    // run-cache: cold write vs hot read of a small-model-sized checkpoint
+    let dims = ModelDims {
+        name: "bench".into(),
+        d_model: 192,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 512,
+        vocab: 512,
+        seq: 128,
+        batch: 8,
+        group_size: 64,
+    };
+    let mut rng = Rng::seed(3);
+    let ad = AdapterSet::init_default(&dims, 16, &mut rng, 0.01);
+    let tmp = std::env::temp_dir().join(format!("rilq_bench_cache_{}", std::process::id()));
+    let cache = RunCache::new(&tmp);
+    let cb = Bench::new("run_cache").iters(1, 8);
+    let flat = ad.to_flat();
+    cb.run("cold_write", || {
+        let key = format!("k{}", rng.next_u64());
+        cache
+            .get_or_compute(&key, || {
+                let mut tf = TensorFile::new();
+                for (i, b) in flat.iter().enumerate() {
+                    tf.insert(format!("ad.{i:02}"), vec![b.len()], b.clone());
+                }
+                Ok(tf)
+            })
+            .unwrap()
+    });
+    cache
+        .get_or_compute("hot", || {
+            let mut tf = TensorFile::new();
+            for (i, b) in flat.iter().enumerate() {
+                tf.insert(format!("ad.{i:02}"), vec![b.len()], b.clone());
+            }
+            Ok(tf)
+        })
+        .unwrap();
+    cb.run("hot_read", || cache.get_or_compute("hot", || unreachable!()).unwrap());
+    std::fs::remove_dir_all(&tmp).ok();
+
+    // adapter (de)flattening — per-train-step CPU cost in the loop
+    let fb = Bench::new("adapters").iters(3, 20);
+    fb.run("to_flat_r16_small", || ad.to_flat());
+    let flat2 = ad.to_flat();
+    fb.run("from_flat_r16_small", || {
+        AdapterSet::from_flat(&dims, 16, &flat2).unwrap()
+    });
+}

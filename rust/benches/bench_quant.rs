@@ -1,0 +1,54 @@
+//! Quantizer micro-benchmarks: per-matrix quantization latency at the
+//! `small` config's largest linear (512x192), plus packing throughput and
+//! SVD cost. Criterion-style output via `report::Bench` (criterion itself
+//! is not in the offline crate set).
+
+use rilq::quant::{by_name, pack_codes, CalibCtx};
+use rilq::report::Bench;
+use rilq::tensor::{svd_jacobi, Mat, Rng};
+
+fn main() {
+    let mut rng = Rng::seed(0xbe7c);
+    let w = Mat::randn(512, 192, &mut rng);
+    let x = Mat::randn(256, 512, &mut rng);
+    let ctx_plain = CalibCtx::with_seed(1);
+    let ctx_calib = CalibCtx { x_samples: Some(x), x_sq_mean: None, seed: 1 };
+
+    let b = Bench::new("quantize_512x192_w2").iters(1, 5);
+    for name in ["rtn", "nf", "omniquant", "quarot", "quip"] {
+        let q = by_name(name, 2, 64).unwrap();
+        let ctx = if matches!(name, "omniquant" | "gptq" | "quarot") {
+            &ctx_calib
+        } else {
+            &ctx_plain
+        };
+        b.run(name, || q.quantize(&w, ctx));
+    }
+    // GPTQ separately (heaviest: Hessian inverse)
+    let gptq = by_name("gptq", 2, 64).unwrap();
+    Bench::new("quantize_512x192_w2").iters(0, 3).run("gptq", || gptq.quantize(&w, &ctx_calib));
+
+    // packing throughput
+    let rtn = by_name("rtn", 2, 64).unwrap();
+    let qt = rtn.quantize(&w, &ctx_plain);
+    let scalar = qt.as_scalar().unwrap();
+    let n_codes = (512 * 192) as f64;
+    Bench::new("packing").iters(3, 20).run_throughput("pack_2bit_512x192", n_codes, || {
+        pack_codes(&scalar.codes, 512, 192, 2)
+    });
+    let packed = scalar.pack();
+    Bench::new("packing").iters(3, 20).run_throughput("unpack_2bit_512x192", n_codes, || {
+        rilq::quant::unpack_codes(&packed)
+    });
+    Bench::new("packing").iters(3, 20).run("dequant_512x192", || scalar.dequant());
+
+    // SVD (LoftQ inner loop cost)
+    Bench::new("svd").iters(0, 3).run("jacobi_512x192", || svd_jacobi(&w));
+
+    // dense matmul baseline for roofline context
+    let a = Mat::randn(256, 512, &mut rng);
+    let flops = 2.0 * 256.0 * 512.0 * 192.0;
+    Bench::new("matmul").iters(2, 10).run_throughput("f32_256x512x192_flops", flops, || {
+        a.matmul(&w)
+    });
+}

@@ -1,0 +1,138 @@
+//! Runtime (L3 hot path) benchmarks: PJRT execute latency for the forward
+//! and train-step artifacts, marshalling overhead, and the packed-vs-dense
+//! serving comparison (the W2A16 claim). Requires `make artifacts`.
+
+use rilq::lqec::AdapterSet;
+use rilq::model::{StudentWeights, TeacherParams};
+use rilq::quant::{CalibCtx, Rtn};
+use rilq::report::Bench;
+use rilq::runtime::bindings::Bindings;
+use rilq::runtime::Runtime;
+use rilq::tensor::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").expect("runtime");
+    for config in ["tiny", "small"] {
+        bench_config(&rt, config);
+    }
+    let (secs, count) = rt.exec_stats();
+    println!("total PJRT execute: {count} calls, {secs:.2}s");
+}
+
+fn bench_config(rt: &Runtime, config: &str) {
+    let dims = rt.manifest.dims(config).unwrap().clone();
+    let mut rng = Rng::seed(0xbe9c);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let quant = Rtn::new(2, dims.group_size);
+    let student = StudentWeights::quantize(&dims, &teacher, &quant, &|_, _| CalibCtx::default());
+    let rank = *rt.manifest.ranks[config].iter().min().unwrap();
+    let adapters = AdapterSet::init_default(&dims, rank, &mut rng, 0.01);
+    let batch: Vec<Vec<u32>> = (0..dims.batch)
+        .map(|_| (0..dims.seq).map(|_| rng.below(dims.vocab) as u32).collect())
+        .collect();
+    let tokens_per_exec = (dims.batch * dims.seq) as f64;
+
+    // ---- teacher forward ----------------------------------------------
+    let tname = format!("teacher_fwd_{config}");
+    let tspec = rt.manifest.artifact(&tname).unwrap().clone();
+    let mut base = Bindings::new();
+    base.teacher(&teacher);
+    rt.load(&tname).unwrap();
+    let b = Bench::new(format!("exec_{config}")).iters(2, 10);
+    b.run_throughput("teacher_fwd tokens/s", tokens_per_exec, || {
+        let mut bi = Bindings::new();
+        bi.copy_from(&base).tokens(&batch, &dims);
+        rt.run(&tname, &bi.to_literals(&tspec).unwrap()).unwrap()
+    });
+
+    // marshalling alone (literal creation for the full input list)
+    b.run("teacher_fwd marshalling-only", || {
+        let mut bi = Bindings::new();
+        bi.copy_from(&base).tokens(&batch, &dims);
+        bi.to_literals(&tspec).unwrap()
+    });
+
+    // §Perf A/B: device-cached static inputs (weights uploaded once; only
+    // the token batch transfers per call) vs the literal path above
+    let dev = base.to_device(rt, &tspec, &["tokens"]).unwrap();
+    b.run_throughput("teacher_fwd DEVICE-CACHED tokens/s", tokens_per_exec, || {
+        let mut dynb = Bindings::new();
+        dynb.tokens(&batch, &dims);
+        let asm = dev.assemble(rt, &tspec, &dynb).unwrap();
+        rt.run_b(&tname, &asm.refs()).unwrap()
+    });
+
+    // ---- student forward: dense vs packed (the W2A16 serving claim) ----
+    let sname = format!("student_fwd_{config}_r{rank}");
+    let sspec = rt.manifest.artifact(&sname).unwrap().clone();
+    let mut sbase = Bindings::new();
+    sbase.teacher(&teacher).qweights(&student).adapters("ad.", &adapters.to_flat());
+    rt.load(&sname).unwrap();
+    b.run_throughput("student_fwd_dense tokens/s", tokens_per_exec, || {
+        let mut bi = Bindings::new();
+        bi.copy_from(&sbase).tokens(&batch, &dims);
+        rt.run(&sname, &bi.to_literals(&sspec).unwrap()).unwrap()
+    });
+
+    let pname = format!("student_fwd_packed_{config}_r{rank}_w2");
+    if let Ok(pspec) = rt.manifest.artifact(&pname).map(Clone::clone) {
+        let mut packed = Vec::new();
+        let mut scales = Vec::new();
+        let mut zeros = Vec::new();
+        let mut codebook = Vec::new();
+        for fam in 0..7 {
+            let mut fp = Vec::new();
+            let mut fs = Vec::new();
+            let mut fz = Vec::new();
+            for l in 0..dims.n_layers {
+                let q = student.q[fam][l].as_scalar().unwrap();
+                fp.push(q.pack());
+                fs.extend_from_slice(q.scales.data());
+                fz.extend_from_slice(q.zeros.data());
+                codebook = q.codebook.clone();
+            }
+            packed.push(fp);
+            scales.push(fs);
+            zeros.push(fz);
+        }
+        let mut pbase = Bindings::new();
+        pbase
+            .teacher(&teacher)
+            .packed(&packed, &scales, &zeros, &codebook)
+            .adapters("ad.", &adapters.to_flat());
+        rt.load(&pname).unwrap();
+        b.run_throughput("student_fwd_packed tokens/s", tokens_per_exec, || {
+            let mut bi = Bindings::new();
+            bi.copy_from(&pbase).tokens(&batch, &dims);
+            rt.run(&pname, &bi.to_literals(&pspec).unwrap()).unwrap()
+        });
+    }
+
+    // ---- train step (the calibration loop body) -------------------------
+    let trname = format!(
+        "train_step_{config}_r{rank}_{}",
+        rt.manifest.scopes[config].first().map(String::as_str).unwrap_or("model_gt")
+    );
+    if let Ok(trspec) = rt.manifest.artifact(&trname).map(Clone::clone) {
+        let ad_flat = adapters.to_flat();
+        let m_flat = adapters.zeros_like_flat();
+        let v_flat = adapters.zeros_like_flat();
+        rt.load(&trname).unwrap();
+        let mut tb = Bindings::new();
+        tb.teacher(&teacher).qweights(&student);
+        b.run_throughput("train_step tokens/s", tokens_per_exec, || {
+            let mut bi = Bindings::new();
+            bi.copy_from(&tb)
+                .adapters("ad.", &ad_flat)
+                .adapters("m.", &m_flat)
+                .adapters("v.", &v_flat)
+                .step_lr(1.0, 1e-3)
+                .tokens(&batch, &dims);
+            rt.run(&trname, &bi.to_literals(&trspec).unwrap()).unwrap()
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! End-to-end experiment benchmarks — one timed entry per paper table /
+//! figure (the harness of deliverable (d)). Each case runs the same code
+//! path as `rilq experiment <id>` against the shared run cache, so cold
+//! timings reflect full regeneration cost and warm timings the cached
+//! pipeline. Select a subset: `cargo bench --bench bench_tables -- fig3b`.
+
+use rilq::experiments::catalog;
+use rilq::experiments::pipeline::Lab;
+use rilq::report::bench::fmt_time;
+use rilq::runtime::Runtime;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_tables: run `make artifacts` first");
+        return;
+    }
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let rt = Runtime::new("artifacts").expect("runtime");
+
+    // bench-mode lab settings: small budgets so a full sweep is feasible
+    for exp in catalog() {
+        if !filter.is_empty() && !filter.iter().any(|f| exp.id.contains(f.as_str())) {
+            continue;
+        }
+        // heavy experiments are included only when explicitly filtered
+        if filter.is_empty() && matches!(exp.id, "table9" | "e2e" | "table2" | "table3") {
+            println!("bench tables/{:<8} skipped by default (pass `-- {}` to run)", exp.id, exp.id);
+            continue;
+        }
+        let mut lab = Lab::new(&rt);
+        lab.calib.max_steps = 40;
+        lab.calib.n_samples = 64;
+        let t0 = std::time::Instant::now();
+        match (exp.run)(&mut lab) {
+            Ok(tables) => {
+                println!(
+                    "bench tables/{:<8} {:>12}   ({} table(s), {})",
+                    exp.id,
+                    fmt_time(t0.elapsed().as_secs_f64()),
+                    tables.len(),
+                    exp.paper_ref
+                );
+            }
+            Err(e) => println!("bench tables/{:<8} FAILED: {e:?}", exp.id),
+        }
+    }
+}

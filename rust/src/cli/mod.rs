@@ -1,0 +1,83 @@
+//! Minimal CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Grammar: `rilq <subcommand> [positional...] [--flag[=value]]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        for (i, arg) in argv.enumerate() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                match flag.split_once('=') {
+                    Some((k, v)) => {
+                        out.flags.insert(k.to_string(), v.to_string());
+                    }
+                    None => {
+                        out.flags.insert(flag.to_string(), "true".to_string());
+                    }
+                }
+            } else if i == 0 && out.subcommand.is_empty() {
+                out.subcommand = arg;
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.flags
+            .get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow!("--{name} must be an integer")))
+            .transpose()
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("experiment table1 --fast --steps=20");
+        assert_eq!(a.subcommand, "experiment");
+        assert_eq!(a.pos(0), Some("table1"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_usize("steps").unwrap(), Some(20));
+    }
+
+    #[test]
+    fn empty_ok() {
+        let a = parse("");
+        assert_eq!(a.subcommand, "");
+        assert!(!a.flag("fast"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Content-keyed run cache.
+//!
+//! Expensive stages (teacher pretraining, quantization, calibration) are
+//! cached under `runs/<fnv64(key)>/` so every experiment that shares a
+//! stage reuses it. Keys are explicit human-readable config strings; the
+//! directory keeps both the key (`key.txt`, for auditing) and the stage's
+//! tensors (`data.bin`, [`TensorFile`]) plus optional JSON metadata.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::model::weights::TensorFile;
+use crate::report::Json;
+
+/// FNV-1a 64-bit, stable across runs/platforms (cache-key hash).
+pub fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A run-cache rooted at some directory.
+#[derive(Clone, Debug)]
+pub struct RunCache {
+    root: PathBuf,
+}
+
+impl RunCache {
+    pub fn new(root: impl AsRef<Path>) -> RunCache {
+        RunCache { root: root.as_ref().to_path_buf() }
+    }
+
+    pub fn dir_for(&self, key: &str) -> PathBuf {
+        self.root.join(format!("{:016x}", fnv64(key)))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.dir_for(key).join("data.bin").exists()
+    }
+
+    /// Load the cached tensors for a key, or compute + persist them.
+    pub fn get_or_compute(
+        &self,
+        key: &str,
+        compute: impl FnOnce() -> Result<TensorFile>,
+    ) -> Result<TensorFile> {
+        let dir = self.dir_for(key);
+        let data = dir.join("data.bin");
+        if data.exists() {
+            log::debug!("cache hit: {key}");
+            return TensorFile::load(&data);
+        }
+        let tf = compute()?;
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join("key.txt"), key)?;
+        tf.save(&data)?;
+        Ok(tf)
+    }
+
+    /// Attach JSON metadata to a cached entry.
+    pub fn put_meta(&self, key: &str, meta: &Json) -> Result<()> {
+        let dir = self.dir_for(key);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join("meta.json"), meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn get_meta(&self, key: &str) -> Option<Json> {
+        let text = std::fs::read_to_string(self.dir_for(key).join("meta.json")).ok()?;
+        Json::parse(&text).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_stable() {
+        assert_eq!(fnv64("abc"), fnv64("abc"));
+        assert_ne!(fnv64("abc"), fnv64("abd"));
+        // pinned value so cache layouts survive refactors
+        assert_eq!(fnv64(""), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn compute_once_then_hit() {
+        let root = std::env::temp_dir().join(format!("rilq_cache_{}", std::process::id()));
+        let cache = RunCache::new(&root);
+        let mut calls = 0;
+        for _ in 0..3 {
+            let tf = cache
+                .get_or_compute("stage:test:v1", || {
+                    calls += 1;
+                    let mut tf = TensorFile::new();
+                    tf.insert("x", vec![2], vec![1.0, 2.0]);
+                    Ok(tf)
+                })
+                .unwrap();
+            assert_eq!(tf.get("x").unwrap().1, vec![1.0, 2.0]);
+        }
+        assert_eq!(calls, 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let root = std::env::temp_dir().join(format!("rilq_cache_m_{}", std::process::id()));
+        let cache = RunCache::new(&root);
+        cache
+            .put_meta("k", &Json::obj(vec![("ppl", Json::num(9.5))]))
+            .unwrap();
+        let m = cache.get_meta("k").unwrap();
+        assert_eq!(m.req("ppl").unwrap().as_f64(), Some(9.5));
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

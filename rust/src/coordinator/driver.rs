@@ -1,0 +1,261 @@
+//! Calibration / pretraining loop drivers.
+//!
+//! One PJRT execute per step (the train-step artifacts fuse fwd + bwd +
+//! Adam), with the paper's schedule semantics: fixed learning rate,
+//! early stopping when the loss stops improving (patience on a smoothed
+//! loss), everything seeded.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::Profile;
+use crate::data::Vocab;
+use crate::lqec::AdapterSet;
+use crate::model::{ModelDims, StudentWeights, TeacherParams};
+use crate::runtime::bindings::{
+    output_adapter_flat, output_scalar, output_teacher_flat, Bindings,
+};
+use crate::runtime::Runtime;
+
+use super::batcher::BatchStream;
+
+/// Calibration (LQEC) loop configuration. Defaults mirror the paper's
+/// setup scaled to simulation size: Adam, fixed lr, early stopping.
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    pub max_steps: usize,
+    pub lr: f32,
+    /// stop after `patience` consecutive steps without improving the best
+    /// smoothed loss by `min_delta`
+    pub patience: usize,
+    pub min_delta: f32,
+    /// number of calibration samples (batches = samples / batch)
+    pub n_samples: usize,
+    pub seed: u64,
+    pub profile: Profile,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            max_steps: 400,
+            lr: 1e-3,
+            patience: 60,
+            min_delta: 1e-5,
+            n_samples: 256,
+            seed: 1234,
+            profile: Profile::C4Sim, // the paper calibrates on C4
+        }
+    }
+}
+
+/// Result of a calibration run.
+#[derive(Clone, Debug)]
+pub struct CalibResult {
+    pub adapters_flat: Vec<Vec<f32>>,
+    pub losses: Vec<f32>,
+    pub model_losses: Vec<f32>,
+    pub gt_losses: Vec<f32>,
+    pub steps: usize,
+    pub wall_secs: f64,
+    pub stopped_early: bool,
+}
+
+/// The coordinator-side training driver owning a runtime reference.
+pub struct Driver<'r> {
+    pub rt: &'r Runtime,
+}
+
+impl<'r> Driver<'r> {
+    pub fn new(rt: &'r Runtime) -> Driver<'r> {
+        Driver { rt }
+    }
+
+    /// Run LQEC calibration: tune `adapters` on `train_step_<cfg>_r<r>_<scope>`
+    /// using a corpus-sampled calibration set (the paper's C4 protocol).
+    pub fn calibrate(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        student: &StudentWeights,
+        adapters: &AdapterSet,
+        scope: &str,
+        cfg: &CalibConfig,
+    ) -> Result<CalibResult> {
+        let n_batches = (cfg.n_samples / dims.batch).max(1);
+        let mut stream = BatchStream::spawn(
+            Vocab::new(dims.vocab, cfg.seed),
+            cfg.profile,
+            cfg.seed,
+            dims.batch,
+            dims.seq,
+            n_batches,
+            4,
+        );
+        // materialize the finite calibration set (paper: 256 samples),
+        // then cycle it across steps
+        let calib: Vec<Vec<Vec<u32>>> =
+            (0..n_batches).filter_map(|_| stream.next()).collect();
+        self.calibrate_on(dims, teacher, student, adapters, scope, cfg, &calib)
+    }
+
+    /// Calibration / task-specific fine-tuning over explicit batches
+    /// (cycled when `max_steps` exceeds the epoch).
+    pub fn calibrate_on(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        student: &StudentWeights,
+        adapters: &AdapterSet,
+        scope: &str,
+        cfg: &CalibConfig,
+        calib: &[Vec<Vec<u32>>],
+    ) -> Result<CalibResult> {
+        let artifact = format!("train_step_{}_r{}_{}", dims.name, adapters.rank, scope);
+        let spec = self.rt.manifest.artifact(&artifact)?.clone();
+        let t0 = Instant::now();
+        assert!(!calib.is_empty(), "empty calibration set");
+
+        // static bindings (teacher + frozen quantized weights) go to the
+        // device once; adapters/moments/tokens upload per step (§Perf)
+        let mut base = Bindings::new();
+        base.teacher(teacher).qweights(student);
+        let dev = base.to_device(
+            self.rt,
+            &spec,
+            &["ad.", "m.", "v.", "t", "lr", "tokens"],
+        )?;
+
+        let mut ad_flat = adapters.to_flat();
+        let mut m_flat = adapters.zeros_like_flat();
+        let mut v_flat = adapters.zeros_like_flat();
+
+        let mut losses = Vec::new();
+        let mut model_losses = Vec::new();
+        let mut gt_losses = Vec::new();
+        let mut best = f32::INFINITY;
+        let mut since_best = 0usize;
+        let mut ema = f32::NAN;
+        let mut stopped_early = false;
+
+        for step in 0..cfg.max_steps {
+            let batch = &calib[step % calib.len()];
+            let mut b = Bindings::new();
+            b.adapters("ad.", &ad_flat)
+                .adapters("m.", &m_flat)
+                .adapters("v.", &v_flat)
+                .step_lr((step + 1) as f32, cfg.lr)
+                .tokens(batch, dims);
+            let asm = dev.assemble(self.rt, &spec, &b)?;
+            let outs = self.rt.run_b(&artifact, &asm.refs())?;
+            let loss = output_scalar(&spec, &outs, "loss")?;
+            model_losses.push(output_scalar(&spec, &outs, "model_loss")?);
+            gt_losses.push(output_scalar(&spec, &outs, "gt_loss")?);
+            losses.push(loss);
+            ad_flat = output_adapter_flat(&spec, &outs, "ad.")?;
+            m_flat = output_adapter_flat(&spec, &outs, "m.")?;
+            v_flat = output_adapter_flat(&spec, &outs, "v.")?;
+
+            // smoothed early stopping (the paper stops when loss plateaus)
+            ema = if ema.is_nan() { loss } else { 0.9 * ema + 0.1 * loss };
+            if ema < best - cfg.min_delta {
+                best = ema;
+                since_best = 0;
+            } else {
+                since_best += 1;
+                if since_best >= cfg.patience {
+                    stopped_early = true;
+                    break;
+                }
+            }
+        }
+
+        Ok(CalibResult {
+            adapters_flat: ad_flat,
+            steps: losses.len(),
+            losses,
+            model_losses,
+            gt_losses,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            stopped_early,
+        })
+    }
+
+    /// Pretrain the fp teacher with the causal-LM objective. Returns the
+    /// trained parameters and the loss curve.
+    pub fn pretrain(
+        &self,
+        dims: &ModelDims,
+        init: &TeacherParams,
+        cfg: &PretrainConfig,
+    ) -> Result<(TeacherParams, Vec<f32>)> {
+        let artifact = format!("pretrain_step_{}", dims.name);
+        let spec = self.rt.manifest.artifact(&artifact)?.clone();
+
+        let mut stream = BatchStream::spawn(
+            Vocab::new(dims.vocab, cfg.seed),
+            cfg.profile,
+            cfg.seed,
+            dims.batch,
+            dims.seq,
+            cfg.steps,
+            4,
+        );
+
+        let mut p_flat = init.to_flat();
+        let mut m_flat: Vec<Vec<f32>> = p_flat.iter().map(|b| vec![0.0; b.len()]).collect();
+        let mut v_flat = m_flat.clone();
+        let mut losses = Vec::with_capacity(cfg.steps);
+
+        for step in 0..cfg.steps {
+            let batch = stream.next().expect("stream covers cfg.steps");
+            // warmup then constant lr
+            let lr = if step < cfg.warmup {
+                cfg.lr * (step + 1) as f32 / cfg.warmup as f32
+            } else {
+                cfg.lr
+            };
+            let mut b = Bindings::new();
+            b.teacher_shaped("", &p_flat)
+                .teacher_shaped("m.", &m_flat)
+                .teacher_shaped("v.", &v_flat)
+                .step_lr((step + 1) as f32, lr)
+                .tokens(&batch, dims);
+            let outs = self.rt.run(&artifact, &b.to_literals(&spec)?)?;
+            losses.push(output_scalar(&spec, &outs, "loss")?);
+            p_flat = output_teacher_flat(&spec, &outs, "p.")?;
+            m_flat = output_teacher_flat(&spec, &outs, "m.")?;
+            v_flat = output_teacher_flat(&spec, &outs, "v.")?;
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                log::info!("pretrain[{}] step {step} loss {:.4}", dims.name, losses[step]);
+            }
+        }
+
+        Ok((TeacherParams::from_flat(dims, &p_flat)?, losses))
+    }
+}
+
+/// Pretraining configuration.
+#[derive(Clone, Debug)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub profile: Profile,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig {
+            steps: 600,
+            lr: 3e-3,
+            warmup: 30,
+            seed: 99,
+            profile: Profile::WikiSim,
+            log_every: 50,
+        }
+    }
+}

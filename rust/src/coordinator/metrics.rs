@@ -1,0 +1,100 @@
+//! Lightweight metrics registry: named counters and wall-clock timers,
+//! rendered to JSON for EXPERIMENTS.md §Perf accounting.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::report::Json;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, f64>,
+    timers: BTreeMap<String, (f64, u64)>, // (total secs, count)
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn add(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1.0);
+    }
+
+    /// Time a closure under a named timer.
+    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let mut g = self.inner.lock().unwrap();
+        let e = g.timers.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += dt;
+        e.1 += 1;
+        r
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn timer_total(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().timers.get(name).map(|t| t.0).unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            g.counters.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect(),
+        );
+        let timers = Json::Obj(
+            g.timers
+                .iter()
+                .map(|(k, &(total, n))| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("total_secs", Json::num(total)),
+                            ("count", Json::num(n as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("timers", timers)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("steps");
+        m.add("steps", 2.0);
+        assert_eq!(m.counter("steps"), 3.0);
+    }
+
+    #[test]
+    fn timers_record() {
+        let m = Metrics::new();
+        let out = m.time("work", || 7);
+        assert_eq!(out, 7);
+        assert!(m.timer_total("work") >= 0.0);
+        let j = m.to_json();
+        assert!(j.req("timers").unwrap().get("work").is_some());
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 coordinator: the machinery that turns artifacts + data into
+//! experiments.
+//!
+//! * [`batcher`] — streaming calibration batcher: a producer thread
+//!   tokenizes batches into a bounded channel (backpressure), the train
+//!   loop consumes;
+//! * [`driver`] — the calibration/pretraining loop drivers (Adam schedule,
+//!   early stopping, loss history) over PJRT train-step artifacts;
+//! * [`cache`] — content-keyed run cache (`runs/<key>/`) so expensive
+//!   stages (pretraining, quantization, compensation) are shared across
+//!   experiments;
+//! * [`scheduler`] — multi-threaded experiment-grid runner (one PJRT
+//!   runtime per worker, since `PjRtClient` is not `Send`);
+//! * [`metrics`] — lightweight named counters/timers for §Perf accounting.
+
+pub mod batcher;
+pub mod cache;
+pub mod driver;
+pub mod metrics;
+pub mod scheduler;
+
+pub use batcher::BatchStream;
+pub use cache::RunCache;
+pub use driver::{CalibConfig, CalibResult, Driver, PretrainConfig};
+pub use metrics::Metrics;
+pub use scheduler::run_grid;

@@ -1,0 +1,135 @@
+//! Experiment-grid scheduler.
+//!
+//! Experiments are grids of independent cells (quantizer × rank × scope ×
+//! …). `PjRtClient` is not `Send`, so the scheduler spawns worker threads
+//! that each construct their *own* PJRT runtime and pull cell indices from
+//! a shared atomic work queue; results flow back over a channel and are
+//! re-ordered by cell index. Worker count defaults to a conservative
+//! fraction of the cores because each CPU PJRT client runs its own
+//! intra-op thread pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+/// Run `n_cells` independent cells; `work(runtime, cell_idx)` is executed
+/// exactly once per cell on some worker. Results come back in cell order.
+pub fn run_grid<T: Send + 'static>(
+    artifact_dir: &str,
+    n_cells: usize,
+    n_workers: usize,
+    work: impl Fn(&Runtime, usize) -> Result<T> + Send + Sync + 'static,
+) -> Result<Vec<T>> {
+    if n_cells == 0 {
+        return Ok(Vec::new());
+    }
+    let n_workers = n_workers.max(1).min(n_cells);
+    let work = Arc::new(work);
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = channel::<(usize, Result<T>)>();
+    let dir = artifact_dir.to_string();
+
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let work = work.clone();
+        let next = next.clone();
+        let tx = tx.clone();
+        let dir = dir.clone();
+        handles.push(std::thread::Builder::new()
+            .name(format!("rilq-worker-{w}"))
+            .spawn(move || {
+                let rt = match Runtime::new(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        // poison every remaining cell with the error
+                        loop {
+                            let i = next.fetch_add(1, Ordering::SeqCst);
+                            if i >= n_cells {
+                                return;
+                            }
+                            let _ = tx.send((i, Err(anyhow!("worker runtime: {e:?}"))));
+                        }
+                    }
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= n_cells {
+                        return;
+                    }
+                    let r = work(&rt, i);
+                    if tx.send((i, r)).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn worker"));
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<Result<T>>> = (0..n_cells).map(|_| None).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))?;
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("cell {i} never ran"))?)
+        .collect()
+}
+
+/// Default worker count: half the cores, capped (each worker spins a PJRT
+/// CPU client with its own intra-op pool).
+pub fn default_workers() -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    (cores / 2).clamp(1, 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // run_grid without artifacts requires Runtime::new to succeed; these
+    // tests only run when artifacts exist (like the integration tests).
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn all_cells_run_exactly_once_in_order() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let out = run_grid("artifacts", 9, 3, |_rt, i| Ok(i * 10)).unwrap();
+        assert_eq!(out, (0..9).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cell_error_propagates() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let res = run_grid("artifacts", 3, 2, |_rt, i| {
+            if i == 1 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn empty_grid_ok() {
+        let out: Vec<usize> = run_grid("artifacts", 0, 4, |_rt, i| Ok(i)).unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Data substrate: synthetic corpora and evaluation tasks.
+//!
+//! The paper calibrates on C4 and evaluates perplexity on WikiText-2/C4
+//! plus zero-shot CSQA accuracy and GSM8K. None of those are available in
+//! this environment (repro band 0), so we build controlled analogues
+//! (DESIGN.md substitution table):
+//!
+//! * [`tokenizer`] — a synthetic word-level vocabulary laid out into
+//!   semantic regions (special, digits, operators, noun/verb classes, …);
+//! * [`corpus`] — a seeded probabilistic grammar with subject–verb
+//!   agreement (the learnable structure), in two profiles: `wiki-sim`
+//!   (clean, narrow) and `c4-sim` (noisy, broad);
+//! * [`tasks`] — five CSQA-style multiple-choice cloze-ranking tasks of
+//!   graded difficulty plus `gsm-sim` arithmetic items.
+
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{Corpus, Profile};
+pub use tasks::{GsmItem, McItem, TaskKind};
+pub use tokenizer::Vocab;

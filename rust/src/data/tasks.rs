@@ -1,0 +1,321 @@
+//! Evaluation task generators: five CSQA-style multiple-choice tasks of
+//! graded difficulty (the paper's WinoGrande / PIQA / HellaSwag / ARC-e /
+//! ARC-c suite) and `gsm-sim` arithmetic (the GSM8K analogue).
+//!
+//! All MC tasks are *cloze ranking*: the model scores each candidate
+//! continuation by total log-likelihood, exactly like lm-eval-harness's
+//! CSQA scoring path. Correct answers are grammar-consistent; distractors
+//! violate the agreement rule or plausibility at task-specific strength.
+
+use crate::tensor::Rng;
+
+use super::corpus::{Corpus, Profile};
+use super::tokenizer::{Vocab, BOS, OP_EQ, OP_PLUS, SEP};
+
+/// The five CSQA-sim tasks, in paper column order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// WinoGrande-sim: binary verb-agreement choice.
+    WgSim,
+    /// PIQA-sim: binary object-plausibility choice.
+    PiqaSim,
+    /// HellaSwag-sim: 4-way full-sentence continuation.
+    HsSim,
+    /// ARC-challenge-sim: 4-way, same-class near-miss distractors.
+    ArcCSim,
+    /// ARC-easy-sim: 4-way, random-word distractors.
+    ArcESim,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 5] =
+        [TaskKind::WgSim, TaskKind::PiqaSim, TaskKind::HsSim, TaskKind::ArcCSim, TaskKind::ArcESim];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskKind::WgSim => "WG",
+            TaskKind::PiqaSim => "PIQA",
+            TaskKind::HsSim => "HS",
+            TaskKind::ArcCSim => "Arc-c",
+            TaskKind::ArcESim => "Arc-e",
+        }
+    }
+}
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub prompt: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+/// One gsm-sim item: prompt ends with `=`, answer is a single digit token.
+#[derive(Clone, Debug)]
+pub struct GsmItem {
+    pub prompt: Vec<u32>,
+    pub answer: u32,
+}
+
+/// Context sentences prepended to each MC prompt (few tokens of topical
+/// context make the task depend on more than the last bigram).
+fn context(corpus: &mut Corpus, sentences: usize) -> Vec<u32> {
+    let mut out = vec![BOS];
+    for _ in 0..sentences {
+        corpus.sentence(&mut out);
+    }
+    out
+}
+
+/// Context pinned to topic class `c`: sentences `ADJ_c NOUN_c VERB_c
+/// [NOUN_c] SEP`, so the topical-consistency tasks have an unambiguous
+/// ground-truth topic.
+fn context_topic(corpus: &mut Corpus, sentences: usize, c: usize) -> Vec<u32> {
+    let lay = corpus.vocab.layout;
+    let mut out = vec![BOS];
+    for _ in 0..sentences {
+        let v = corpus.vocab.clone();
+        let rng = corpus.rng();
+        out.push(v.adj(c, rng.below(lay.adjs_per_class)));
+        out.push(v.noun(c, rng.below(lay.nouns_per_class)));
+        out.push(v.verb(c, rng.below(lay.verbs_per_class)));
+        if rng.next_f32() < 0.8 {
+            out.push(v.noun(c, rng.below(lay.nouns_per_class)));
+        }
+        out.push(SEP);
+    }
+    out
+}
+
+/// Generate `n` items of one task kind.
+pub fn gen_mc(kind: TaskKind, vocab: &Vocab, n: usize, seed: u64) -> Vec<McItem> {
+    let mut corpus = Corpus::new(vocab.clone(), Profile::WikiSim, seed ^ 0x7a5c);
+    let mut rng = Rng::seed(seed ^ 0x11c5);
+    let lay = vocab.layout;
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let c = rng.below(lay.n_classes);
+        let other = (c + 1 + rng.below(lay.n_classes - 1)) % lay.n_classes;
+        // Difficulty calibration: direct agreement bigrams (noun -> verb)
+        // are learned so hard that even uncompensated W2 models keep them
+        // at ceiling; the graded tasks below query *topical consistency*
+        // across sentence boundaries — the signal is statistical (the
+        // grammar's topic chain persists w.p. ~0.85), so the optimal
+        // predictor sits below 100% and degradation/recovery is visible.
+        match kind {
+            TaskKind::WgSim => {
+                // binary: after a topic-c sentence, which ADJ opens the
+                // next sentence? (reverse-direction, cross-sentence)
+                let prompt = context_topic(&mut corpus, 2, c);
+                let good = vec![vocab.adj(c, rng.below(lay.adjs_per_class))];
+                let bad = vec![vocab.adj(other, rng.below(lay.adjs_per_class))];
+                push_shuffled(&mut items, prompt, vec![good, bad], &mut rng);
+            }
+            TaskKind::PiqaSim => {
+                // binary: topic-consistent next-sentence SUBJECT noun vs a
+                // far-class noun
+                let prompt = context_topic(&mut corpus, 1, c);
+                let good = vec![vocab.noun(c, rng.below(lay.nouns_per_class))];
+                let bad = vec![vocab.noun(other, rng.below(lay.nouns_per_class))];
+                push_shuffled(&mut items, prompt, vec![good, bad], &mut rng);
+            }
+            TaskKind::HsSim => {
+                // 4-way: full next-sentence continuations; one stays on
+                // topic, three switch topic (all internally grammatical)
+                let prompt = context_topic(&mut corpus, 2, c);
+                let mk = |rng: &mut Rng, sc: usize, vocab: &Vocab| {
+                    vec![
+                        vocab.adj(sc, rng.below(lay.adjs_per_class)),
+                        vocab.noun(sc, rng.below(lay.nouns_per_class)),
+                        vocab.verb(sc, rng.below(lay.verbs_per_class)),
+                        SEP,
+                    ]
+                };
+                let good = mk(&mut rng, c, vocab);
+                let mut choices = vec![good];
+                for k in 0..3 {
+                    let oc = (c + 1 + k) % lay.n_classes;
+                    choices.push(mk(&mut rng, oc % lay.n_classes, vocab));
+                }
+                push_shuffled(&mut items, prompt, choices, &mut rng);
+            }
+            TaskKind::ArcCSim => {
+                // hard 4-way: next-sentence ADJ with three topic-switched
+                // distractors (reverse-direction + 4 candidates)
+                let prompt = context_topic(&mut corpus, 1, c);
+                let good = vec![vocab.adj(c, rng.below(lay.adjs_per_class))];
+                let mut choices = vec![good];
+                for k in 0..3 {
+                    let oc = (c + 1 + k) % lay.n_classes;
+                    choices.push(vec![vocab.adj(oc % lay.n_classes, rng.below(lay.adjs_per_class))]);
+                }
+                push_shuffled(&mut items, prompt, choices, &mut rng);
+            }
+            TaskKind::ArcESim => {
+                // easy 4-way: direct verb agreement with the subject (the
+                // strongly-trained bigram) — near-ceiling for good models,
+                // still collapses under severe quantization
+                let mut prompt = context(&mut corpus, 1);
+                prompt.push(vocab.noun(c, rng.below(lay.nouns_per_class)));
+                let good = vec![vocab.verb(c, rng.below(lay.verbs_per_class))];
+                let mut choices = vec![good];
+                for k in 0..3 {
+                    let oc = (c + 1 + k) % lay.n_classes;
+                    choices.push(vec![vocab.verb(oc % lay.n_classes, rng.below(lay.verbs_per_class))]);
+                }
+                push_shuffled(&mut items, prompt, choices, &mut rng);
+            }
+        }
+    }
+    items
+}
+
+fn push_shuffled(items: &mut Vec<McItem>, prompt: Vec<u32>, mut choices: Vec<Vec<u32>>, rng: &mut Rng) {
+    // choice 0 is correct pre-shuffle
+    let mut order: Vec<usize> = (0..choices.len()).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&i| i == 0).unwrap();
+    let mut shuffled = Vec::with_capacity(choices.len());
+    for &i in &order {
+        shuffled.push(std::mem::take(&mut choices[i]));
+    }
+    items.push(McItem { prompt, choices: shuffled, correct });
+}
+
+/// Generate gsm-sim items. `steps` = number of additions chained (1 or 2).
+pub fn gen_gsm(vocab: &Vocab, n: usize, steps: usize, seed: u64) -> Vec<GsmItem> {
+    let mut rng = Rng::seed(seed ^ 0x65e8);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut total = rng.below(10);
+        let mut prompt = vec![BOS, vocab.digit(total)];
+        for _ in 0..steps {
+            let b = rng.below(10);
+            prompt.push(OP_PLUS);
+            prompt.push(vocab.digit(b));
+            total = (total + b) % 10;
+        }
+        prompt.push(OP_EQ);
+        items.push(GsmItem { prompt, answer: vocab.digit(total) });
+    }
+    items
+}
+
+/// gsm-sim *fine-tuning* sequences: prompt + answer + SEP, padded into
+/// fixed-length training windows by concatenation.
+pub fn gsm_train_seqs(vocab: &Vocab, n_windows: usize, len: usize, steps: usize, seed: u64) -> Vec<Vec<u32>> {
+    let items = gen_gsm(vocab, n_windows * len / 8 + 16, steps, seed);
+    let mut stream = Vec::new();
+    for it in &items {
+        stream.extend(&it.prompt[1..]); // drop per-item BOS
+        stream.push(it.answer);
+        stream.push(SEP);
+    }
+    let mut out = Vec::with_capacity(n_windows);
+    let mut pos = 0;
+    for _ in 0..n_windows {
+        let mut seq = vec![BOS];
+        while seq.len() < len {
+            seq.push(stream[pos % stream.len()]);
+            pos += 1;
+        }
+        out.push(seq);
+    }
+    out
+}
+
+/// CSQA-style fine-tuning sequences: correct-completion text only.
+pub fn csqa_train_seqs(vocab: &Vocab, n_windows: usize, len: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut stream = Vec::new();
+    for kind in TaskKind::ALL {
+        for it in gen_mc(kind, vocab, n_windows.max(8), seed ^ kind as u64) {
+            stream.extend(&it.prompt[1..]);
+            stream.extend(&it.choices[it.correct]);
+            stream.push(SEP);
+        }
+    }
+    let mut out = Vec::with_capacity(n_windows);
+    let mut pos = 0;
+    for _ in 0..n_windows {
+        let mut seq = vec![BOS];
+        while seq.len() < len {
+            seq.push(stream[pos % stream.len()]);
+            pos += 1;
+        }
+        out.push(seq);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mc_items_well_formed() {
+        let v = Vocab::new(256, 1);
+        for kind in TaskKind::ALL {
+            let items = gen_mc(kind, &v, 20, 3);
+            assert_eq!(items.len(), 20);
+            for it in &items {
+                assert!(it.correct < it.choices.len());
+                assert!(!it.prompt.is_empty() && it.prompt[0] == BOS);
+                let expected = match kind {
+                    TaskKind::WgSim | TaskKind::PiqaSim => 2,
+                    _ => 4,
+                };
+                assert_eq!(it.choices.len(), expected, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn wg_correct_choice_is_topic_consistent() {
+        let v = Vocab::new(256, 1);
+        for it in gen_mc(TaskKind::WgSim, &v, 30, 4) {
+            // prompt is a topic-pinned context ending in SEP; the topic is
+            // the class of the first content token after BOS
+            let topic = v.class_of(it.prompt[1]).unwrap();
+            let good = it.choices[it.correct][0];
+            assert_eq!(v.class_of(good), Some(topic));
+            let bad = it.choices[1 - it.correct][0];
+            assert_ne!(v.class_of(bad), Some(topic));
+        }
+    }
+
+    #[test]
+    fn gsm_answers_correct() {
+        let v = Vocab::new(256, 1);
+        for it in gen_gsm(&v, 50, 2, 9) {
+            // prompt: BOS d (+ d)* =
+            let digits: Vec<u32> = it
+                .prompt
+                .iter()
+                .filter(|&&t| (4..14).contains(&t))
+                .map(|&t| t - 4)
+                .collect();
+            let total: u32 = digits.iter().sum::<u32>() % 10;
+            assert_eq!(it.answer, v.digit(total as usize));
+        }
+    }
+
+    #[test]
+    fn train_seqs_exact_length() {
+        let v = Vocab::new(256, 1);
+        for seq in gsm_train_seqs(&v, 4, 64, 1, 5) {
+            assert_eq!(seq.len(), 64);
+        }
+        for seq in csqa_train_seqs(&v, 4, 64, 5) {
+            assert_eq!(seq.len(), 64);
+        }
+    }
+
+    #[test]
+    fn correct_index_uniformish() {
+        // shuffle must not leave the correct answer always at index 0
+        let v = Vocab::new(256, 1);
+        let items = gen_mc(TaskKind::HsSim, &v, 100, 11);
+        let zeros = items.iter().filter(|i| i.correct == 0).count();
+        assert!(zeros > 5 && zeros < 50, "zeros={zeros}");
+    }
+}

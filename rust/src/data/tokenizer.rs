@@ -1,0 +1,223 @@
+//! Synthetic vocabulary with a semantic region layout.
+//!
+//! Region layout (scaled to the model's vocab size):
+//!
+//! ```text
+//! 0..4        special: <pad> <bos> <eos> <sep>
+//! 4..14       digits 0-9
+//! 14..18      operators: + - = ?
+//! classes     C noun classes x (nouns | verbs | adjectives)
+//! tail        noise tokens (c4-sim flavor)
+//! ```
+//!
+//! Word *strings* are generated deterministically (CV syllables) so
+//! examples can print readable text, but the pipeline operates on ids.
+
+use crate::tensor::Rng;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const DIGIT0: u32 = 4;
+pub const OP_PLUS: u32 = 14;
+pub const OP_MINUS: u32 = 15;
+pub const OP_EQ: u32 = 16;
+pub const OP_Q: u32 = 17;
+const FIRST_CLASS_TOKEN: u32 = 18;
+
+/// Per-class region sizes (scaled by vocab).
+#[derive(Clone, Copy, Debug)]
+pub struct ClassLayout {
+    pub n_classes: usize,
+    pub nouns_per_class: usize,
+    pub verbs_per_class: usize,
+    pub adjs_per_class: usize,
+}
+
+/// The vocabulary: region layout + generated word strings.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+    pub layout: ClassLayout,
+    words: Vec<String>,
+    /// first noise token id (noise region runs to `size`)
+    noise_start: u32,
+}
+
+impl Vocab {
+    /// Build a vocabulary for a model vocab size (>= 64).
+    pub fn new(size: usize, seed: u64) -> Vocab {
+        assert!(size >= 64, "vocab too small: {size}");
+        // scale class structure to the vocab budget
+        let budget = size - FIRST_CLASS_TOKEN as usize;
+        let n_classes = if size >= 1024 {
+            8
+        } else if size >= 512 {
+            6
+        } else if size >= 256 {
+            4
+        } else {
+            2
+        };
+        // per class: nouns + verbs + adjs; reserve ~15% of budget as noise
+        let per_class = budget * 85 / 100 / n_classes;
+        let nouns = (per_class * 50 / 100).max(2);
+        let verbs = (per_class * 30 / 100).max(2);
+        let adjs = per_class - nouns - verbs;
+        let layout = ClassLayout {
+            n_classes,
+            nouns_per_class: nouns,
+            verbs_per_class: verbs,
+            adjs_per_class: adjs.max(1),
+        };
+        let noise_start =
+            FIRST_CLASS_TOKEN + (n_classes * (nouns + verbs + adjs.max(1))) as u32;
+        assert!((noise_start as usize) < size, "layout overflow");
+
+        // generate word strings: CV syllable soup, deterministic
+        let mut rng = Rng::seed(seed ^ 0x70ce_ab1e);
+        let consonants = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"];
+        let vowels = ["a", "e", "i", "o", "u"];
+        let mut words = Vec::with_capacity(size);
+        for id in 0..size as u32 {
+            let w = match id {
+                PAD => "<pad>".to_string(),
+                BOS => "<bos>".to_string(),
+                EOS => "<eos>".to_string(),
+                SEP => "<sep>".to_string(),
+                d if (DIGIT0..DIGIT0 + 10).contains(&d) => (d - DIGIT0).to_string(),
+                OP_PLUS => "+".to_string(),
+                OP_MINUS => "-".to_string(),
+                OP_EQ => "=".to_string(),
+                OP_Q => "?".to_string(),
+                _ => {
+                    let syls = 2 + rng.below(2);
+                    let mut w = String::new();
+                    for _ in 0..syls {
+                        w.push_str(consonants[rng.below(consonants.len())]);
+                        w.push_str(vowels[rng.below(vowels.len())]);
+                    }
+                    w
+                }
+            };
+            words.push(w);
+        }
+        Vocab { size, layout, words, noise_start }
+    }
+
+    fn class_block(&self) -> usize {
+        self.layout.nouns_per_class + self.layout.verbs_per_class + self.layout.adjs_per_class
+    }
+
+    /// Noun `k` of class `c`.
+    pub fn noun(&self, c: usize, k: usize) -> u32 {
+        debug_assert!(c < self.layout.n_classes && k < self.layout.nouns_per_class);
+        FIRST_CLASS_TOKEN + (c * self.class_block() + k) as u32
+    }
+
+    /// Verb `k` of class `c` (agreement: verbs only co-occur with their
+    /// class's subjects in grammatical text).
+    pub fn verb(&self, c: usize, k: usize) -> u32 {
+        debug_assert!(c < self.layout.n_classes && k < self.layout.verbs_per_class);
+        FIRST_CLASS_TOKEN
+            + (c * self.class_block() + self.layout.nouns_per_class + k) as u32
+    }
+
+    /// Adjective `k` of class `c`.
+    pub fn adj(&self, c: usize, k: usize) -> u32 {
+        debug_assert!(c < self.layout.n_classes && k < self.layout.adjs_per_class);
+        FIRST_CLASS_TOKEN
+            + (c * self.class_block()
+                + self.layout.nouns_per_class
+                + self.layout.verbs_per_class
+                + k) as u32
+    }
+
+    /// Digit token.
+    pub fn digit(&self, d: usize) -> u32 {
+        debug_assert!(d < 10);
+        DIGIT0 + d as u32
+    }
+
+    /// A random noise token (c4-sim flavor).
+    pub fn noise(&self, rng: &mut Rng) -> u32 {
+        let span = self.size as u32 - self.noise_start;
+        if span == 0 {
+            return self.noun(rng.below(self.layout.n_classes), 0);
+        }
+        self.noise_start + rng.below(span as usize) as u32
+    }
+
+    /// Which class a token belongs to (None for non-class tokens).
+    pub fn class_of(&self, tok: u32) -> Option<usize> {
+        if tok < FIRST_CLASS_TOKEN || tok >= self.noise_start {
+            return None;
+        }
+        Some((tok - FIRST_CLASS_TOKEN) as usize / self.class_block())
+    }
+
+    /// Is this token a verb?
+    pub fn is_verb(&self, tok: u32) -> bool {
+        if tok < FIRST_CLASS_TOKEN || tok >= self.noise_start {
+            return false;
+        }
+        let off = (tok - FIRST_CLASS_TOKEN) as usize % self.class_block();
+        off >= self.layout.nouns_per_class
+            && off < self.layout.nouns_per_class + self.layout.verbs_per_class
+    }
+
+    /// Readable rendering of a token sequence.
+    pub fn render(&self, toks: &[u32]) -> String {
+        toks.iter()
+            .map(|&t| self.words.get(t as usize).map(String::as_str).unwrap_or("<?>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_fit_all_config_vocabs() {
+        for &size in &[256usize, 512, 1024] {
+            let v = Vocab::new(size, 1);
+            assert_eq!(v.words.len(), size);
+            let c = v.layout.n_classes - 1;
+            let last_adj = v.adj(c, v.layout.adjs_per_class - 1);
+            assert!((last_adj as usize) < size);
+            assert!(v.noise_start as usize <= size);
+        }
+    }
+
+    #[test]
+    fn class_of_inverts_constructors() {
+        let v = Vocab::new(512, 2);
+        for c in 0..v.layout.n_classes {
+            assert_eq!(v.class_of(v.noun(c, 0)), Some(c));
+            assert_eq!(v.class_of(v.verb(c, 1)), Some(c));
+            assert_eq!(v.class_of(v.adj(c, 0)), Some(c));
+            assert!(v.is_verb(v.verb(c, 0)));
+            assert!(!v.is_verb(v.noun(c, 0)));
+        }
+        assert_eq!(v.class_of(PAD), None);
+        assert_eq!(v.class_of(DIGIT0), None);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Vocab::new(256, 7);
+        let b = Vocab::new(256, 7);
+        assert_eq!(a.words, b.words);
+        let c = Vocab::new(256, 8);
+        assert_ne!(a.words, c.words);
+    }
+
+    #[test]
+    fn render_specials() {
+        let v = Vocab::new(256, 1);
+        assert_eq!(v.render(&[BOS, DIGIT0 + 3, OP_PLUS, DIGIT0 + 4, OP_EQ]), "<bos> 3 + 4 =");
+    }
+}

@@ -1,0 +1,19 @@
+//! Evaluation harness: perplexity, multiple-choice log-likelihood ranking
+//! (the lm-eval-harness CSQA protocol), and gsm-sim answer accuracy.
+//!
+//! Everything is built over the [`Scorer`] abstraction — "given a batch of
+//! fixed-length token sequences, return per-position log-probs of the
+//! realized next tokens" — with two implementations:
+//!
+//! * [`scorer::HloScorer`] — the production path: a PJRT artifact
+//!   (teacher/student/packed forward) executed by the [`crate::runtime`];
+//! * [`scorer::NativeScorer`] — the pure-Rust reference model (PJRT-free
+//!   studies and tests).
+
+pub mod csqa;
+pub mod ppl;
+pub mod scorer;
+
+pub use csqa::{gsm_accuracy, mc_accuracy};
+pub use ppl::perplexity;
+pub use scorer::{HloScorer, NativeScorer, Scorer};

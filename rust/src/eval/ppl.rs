@@ -1,0 +1,74 @@
+//! Perplexity evaluation (the paper's WikiText-2 / C4 PPL columns).
+
+use anyhow::Result;
+
+use super::scorer::Scorer;
+
+/// Corpus perplexity: `exp( -Σ logp / #tokens )` over all next-token
+/// positions of all sequences (PAD-free sequences are assumed; `score_all`
+/// already trims padding).
+pub fn perplexity(scorer: &dyn Scorer, seqs: &[Vec<u32>]) -> Result<f64> {
+    let scored = scorer.score_all(seqs)?;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for lp in &scored {
+        for &x in lp {
+            total += x as f64;
+            count += 1;
+        }
+    }
+    assert!(count > 0, "no tokens scored");
+    Ok((-total / count as f64).exp())
+}
+
+/// Mean NLL (nats/token) — same data as [`perplexity`], linear scale.
+pub fn mean_nll(scorer: &dyn Scorer, seqs: &[Vec<u32>]) -> Result<f64> {
+    Ok(perplexity(scorer, seqs)?.ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::scorer::NativeScorer;
+    use crate::model::{ModelDims, TeacherParams};
+    use crate::tensor::Rng;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "unit".into(),
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 64,
+            seq: 16,
+            batch: 2,
+            group_size: 8,
+        }
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // an untrained model ≈ uniform over 64 tokens -> PPL ≈ 64
+        let d = dims();
+        let mut rng = Rng::seed(161);
+        let teacher = TeacherParams::init(&d, &mut rng);
+        let sc = NativeScorer { dims: d.clone(), teacher, dense: None };
+        let seqs: Vec<Vec<u32>> = (0..6)
+            .map(|_| (0..16).map(|_| rng.below(64) as u32).collect())
+            .collect();
+        let ppl = perplexity(&sc, &seqs).unwrap();
+        assert!(ppl > 20.0 && ppl < 200.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn ppl_positive_and_finite() {
+        let d = dims();
+        let mut rng = Rng::seed(162);
+        let teacher = TeacherParams::init(&d, &mut rng);
+        let sc = NativeScorer { dims: d.clone(), teacher, dense: None };
+        let seqs = vec![(0..12).map(|_| rng.below(64) as u32).collect::<Vec<_>>()];
+        let ppl = perplexity(&sc, &seqs).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Figure reproductions (Fig. 3 and Fig. 4 of the paper). Rendered as
+//! tables: each column series corresponds to one curve of the figure.
+
+use anyhow::Result;
+
+use crate::lqec::svd_init::min_rank_for_target;
+use crate::lqec::AdapterSet;
+use crate::model::LINEARS;
+use crate::quant::{by_name, CalibCtx};
+use crate::report::table::f;
+use crate::report::Table;
+use crate::tensor::svd_jacobi;
+
+use super::pipeline::Lab;
+
+/// Fig. 3(a): average CSQA accuracy vs adapter rank for the three baseline
+/// LQEC scopes (Weight-SVD / Linear-Loss / Layer-Loss) at W2 (NF2 base).
+/// Shape check: all three degrade as rank shrinks; Layer > Linear > SVD.
+pub fn fig3a(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let ranks: Vec<usize> = vec![4, 16, 64]; // paper 16..256 scaled to d_model
+    // CSQA-sim accuracy saturates for compensated models at this scale
+    // (EXPERIMENTS.md note), so the figure's rank-sensitivity curve is
+    // reported in Wiki2-PPL — the same quality axis, graded.
+    let mut t = Table::new(
+        "Fig 3(a) — Wiki2-PPL vs rank for baseline LQEC scopes (W2/NF2, config=small)",
+        &["rank", "Weight-SVD", "Linear-Loss", "Layer-Loss"],
+    );
+    for &rank in &ranks {
+        // Weight-SVD (LoftQ)
+        let (st_svd, ad_svd) = lab.loftq(&dims, &teacher, "nf", 2, rank, 1)?;
+        let svd_ppl = {
+            let sc = lab.student_scorer(&dims, &teacher, &st_svd, &ad_svd)?;
+            lab.evaluate(&sc, &dims)?.ppl_wiki
+        };
+        // gradient scopes on the plain NF2 student
+        let student = lab.quantize(&dims, &teacher, "nf", 2)?;
+        let mut ppls = Vec::new();
+        for scope in ["linear", "layer"] {
+            let init = lab.default_adapters(&dims, rank);
+            let (ad, _) =
+                lab.compensate(&dims, &teacher, &student, &init, scope, "nf2")?;
+            let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+            ppls.push(lab.evaluate(&sc, &dims)?.ppl_wiki);
+        }
+        t.row(vec![
+            rank.to_string(),
+            f(svd_ppl, 2),
+            f(ppls[0], 2),
+            f(ppls[1], 2),
+        ]);
+    }
+    t.note("Paper shape: quality falls (PPL rises) as rank shrinks for all three baselines at 2-bit.");
+    Ok(vec![t])
+}
+
+/// Fig. 3(b): normalized weight discrepancy ‖W−Q‖F vs bit-width per linear
+/// family, normalized to 1.0 at 4-bit. Shape check: sharp jump at 2-bit,
+/// consistent across families and model sizes.
+pub fn fig3b(lab: &mut Lab) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for config in ["small", "tiny"] {
+        let (dims, teacher, _) = lab.teacher(config)?;
+        let mut t = Table::new(
+            format!("Fig 3(b) — normalized ‖W−Q‖F vs bits (NF, config={config})"),
+            &["module", "4-bit", "3-bit", "2-bit"],
+        );
+        for (fam, name) in LINEARS.iter().enumerate() {
+            let mut per_bit = Vec::new();
+            for bits in [4u8, 3, 2] {
+                let q = by_name("nf", bits, dims.group_size).unwrap();
+                let mut err = 0.0f64;
+                for l in 0..dims.n_layers {
+                    let w = teacher.linear(fam, l);
+                    err += q.weight_discrepancy(w, &CalibCtx::default()) as f64;
+                }
+                per_bit.push(err / dims.n_layers as f64);
+            }
+            let norm = per_bit[0].max(1e-12);
+            t.row(vec![
+                name.to_string(),
+                f(per_bit[0] / norm, 2),
+                f(per_bit[1] / norm, 2),
+                f(per_bit[2] / norm, 2),
+            ]);
+        }
+        t.note("normalized so 4-bit = 1.00; the 2-bit jump is the paper's headline observation");
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Fig. 3(c): minimum SVD rank needed to bring the W2/W3 residual below
+/// the 4-bit discrepancy, per linear family. Shape check: 3-bit needs a
+/// small rank; 2-bit needs a rank far beyond the usual LoRA budget.
+pub fn fig3c(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let mut t = Table::new(
+        "Fig 3(c) — min rank to reach 4-bit discrepancy (NF, config=small)",
+        &["module", "min rank @3-bit", "min rank @2-bit", "dim budget"],
+    );
+    for (fam, name) in LINEARS.iter().enumerate() {
+        let (di, do_) = dims.linear_dims(name);
+        let max_rank = di.min(do_);
+        let mut per_bit = Vec::new();
+        for bits in [3u8, 2] {
+            let q = by_name("nf", bits, dims.group_size).unwrap();
+            let q4 = by_name("nf", 4, dims.group_size).unwrap();
+            let mut rank_sum = 0usize;
+            for l in 0..dims.n_layers {
+                let w = teacher.linear(fam, l);
+                let target = q4.weight_discrepancy(w, &CalibCtx::default());
+                let deq = q.quantize(w, &CalibCtx::default()).dequant();
+                rank_sum += min_rank_for_target(w, &deq, target, max_rank);
+            }
+            per_bit.push(rank_sum / dims.n_layers);
+        }
+        t.row(vec![
+            name.to_string(),
+            per_bit[0].to_string(),
+            per_bit[1].to_string(),
+            max_rank.to_string(),
+        ]);
+    }
+    t.note("2-bit errors are high-rank: typical LoRA ranks cannot absorb them via SVD");
+    Ok(vec![t])
+}
+
+/// Fig. 4(a): rank sensitivity — relative error at the LM head across
+/// scope x rank (OmniQuant-sim W2). Shape check: Model-Loss lowest and
+/// flat across ranks.
+pub fn fig4a(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let student = lab.quantize(&dims, &teacher, "omniquant", 2)?;
+    let ranks: Vec<usize> = vec![4, 16, 64]; // paper 16..256 scaled to d_model
+    let mut t = Table::new(
+        "Fig 4(a) — LM-head relative error vs rank (OmniQuant-sim W2)",
+        &["rank", "Linear-Loss", "Layer-Loss", "Model-Loss"],
+    );
+    for &rank in &ranks {
+        let mut row = vec![rank.to_string()];
+        for scope in ["linear", "layer", "model"] {
+            let init = lab.default_adapters(&dims, rank);
+            let (ad, _) =
+                lab.compensate(&dims, &teacher, &student, &init, scope, "omni2")?;
+            let (_, head_rel) = lab.probe(&dims, &teacher, &student, &ad)?;
+            row.push(f(head_rel as f64, 4));
+        }
+        t.row(row);
+    }
+    t.note("paper shape: error shrinks with scope; Model-Loss stays low even at the smallest rank");
+    Ok(vec![t])
+}
+
+/// Fig. 4(b): per-layer relative error profile at a fixed small rank.
+/// Shape check: Model-Loss drifts in intermediate layers but lands lowest
+/// at the head.
+pub fn fig4b(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let student = lab.quantize(&dims, &teacher, "omniquant", 2)?;
+    let rank = 16;
+    let mut series = Vec::new();
+    for scope in ["linear", "layer", "model"] {
+        let init = lab.default_adapters(&dims, rank);
+        let (ad, _) = lab.compensate(&dims, &teacher, &student, &init, scope, "omni2")?;
+        series.push(lab.probe(&dims, &teacher, &student, &ad)?);
+    }
+    let mut t = Table::new(
+        "Fig 4(b) — per-layer relative error (OmniQuant-sim W2, rank=16)",
+        &["layer", "Linear-Loss", "Layer-Loss", "Model-Loss"],
+    );
+    for l in 0..dims.n_layers {
+        t.row(vec![
+            l.to_string(),
+            f(series[0].0[l] as f64, 4),
+            f(series[1].0[l] as f64, 4),
+            f(series[2].0[l] as f64, 4),
+        ]);
+    }
+    t.row(vec![
+        "LM-head".into(),
+        f(series[0].1 as f64, 4),
+        f(series[1].1 as f64, 4),
+        f(series[2].1 as f64, 4),
+    ]);
+    t.note("Model-Loss tolerates internal drift to align the final output (paper Fig. 4(b))");
+    Ok(vec![t])
+}
+
+/// Fig. 4(c): singular-value mass of the learned adapters — Q-proj vs FFN1
+/// (gate) under Linear-Loss vs Model-Loss. Shape check: Model-Loss boosts
+/// the FFN1 adapter's singular mass relative to Q-proj's.
+pub fn fig4c(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let student = lab.quantize(&dims, &teacher, "omniquant", 2)?;
+    let rank = 16;
+    let mut per_scope: Vec<AdapterSet> = Vec::new();
+    for scope in ["linear", "model"] {
+        let init = lab.default_adapters(&dims, rank);
+        let (ad, _) = lab.compensate(&dims, &teacher, &student, &init, scope, "omni2")?;
+        per_scope.push(ad);
+    }
+    let layer = dims.n_layers / 2;
+    let fam_q = LINEARS.iter().position(|&n| n == "wq").unwrap();
+    let fam_f = LINEARS.iter().position(|&n| n == "wg").unwrap();
+    let sv = |ad: &AdapterSet, fam: usize| -> Vec<f32> {
+        let delta = ad.delta(fam, layer);
+        let svd = svd_jacobi(&delta);
+        svd.s.iter().take(rank).copied().collect()
+    };
+    let mut t = Table::new(
+        format!("Fig 4(c) — adapter singular values (layer {layer}, rank=16)"),
+        &["k", "Q-proj/Linear", "Q-proj/Model", "FFN1/Linear", "FFN1/Model"],
+    );
+    let cols = [
+        sv(&per_scope[0], fam_q),
+        sv(&per_scope[1], fam_q),
+        sv(&per_scope[0], fam_f),
+        sv(&per_scope[1], fam_f),
+    ];
+    for k in 0..rank {
+        t.row(vec![
+            k.to_string(),
+            f(cols[0].get(k).copied().unwrap_or(0.0) as f64, 4),
+            f(cols[1].get(k).copied().unwrap_or(0.0) as f64, 4),
+            f(cols[2].get(k).copied().unwrap_or(0.0) as f64, 4),
+            f(cols[3].get(k).copied().unwrap_or(0.0) as f64, 4),
+        ]);
+    }
+    let mass = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>();
+    t.note(format!(
+        "singular mass — Q-proj: Linear {:.3} vs Model {:.3}; FFN1: Linear {:.3} vs Model {:.3} \
+         (paper shape: Model-Loss amplifies the rank-critical FFN side)",
+        mass(&cols[0]),
+        mass(&cols[1]),
+        mass(&cols[2]),
+        mass(&cols[3]),
+    ));
+    Ok(vec![t])
+}

@@ -1,0 +1,93 @@
+//! Experiment catalog: every table and figure of the paper's evaluation,
+//! regenerated end-to-end over the simulated stack (DESIGN.md §5 maps each
+//! id to paper table/figure and modules).
+//!
+//! Run via `rilq experiment <id>` (or `all`); each writes
+//! `reports/<id>.md` + `.csv`.
+
+pub mod e2e;
+pub mod figures;
+pub mod pipeline;
+pub mod tables_ablation;
+pub mod tables_main;
+pub mod tables_scale;
+
+use anyhow::{anyhow, Result};
+
+use crate::report::Table;
+use crate::runtime::Runtime;
+
+use pipeline::Lab;
+
+/// One experiment: id, paper reference, runner.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub run: fn(&mut Lab) -> Result<Vec<Table>>,
+}
+
+/// The full catalog, in DESIGN.md §5 order.
+pub fn catalog() -> Vec<Experiment> {
+    // ordered cheap->expensive so partial runs still produce reports
+    vec![
+        Experiment { id: "fig3b", paper_ref: "Fig. 3(b)", run: figures::fig3b },
+        Experiment { id: "fig3c", paper_ref: "Fig. 3(c)", run: figures::fig3c },
+        Experiment { id: "table12", paper_ref: "Table 12", run: tables_scale::table12 },
+        Experiment { id: "table7", paper_ref: "Table 7", run: tables_ablation::table7 },
+        Experiment { id: "table11", paper_ref: "Table 11", run: tables_scale::table11 },
+        Experiment { id: "fig4a", paper_ref: "Fig. 4(a)", run: figures::fig4a },
+        Experiment { id: "fig4b", paper_ref: "Fig. 4(b)", run: figures::fig4b },
+        Experiment { id: "fig4c", paper_ref: "Fig. 4(c)", run: figures::fig4c },
+        Experiment { id: "fig3a", paper_ref: "Fig. 3(a)", run: figures::fig3a },
+        Experiment { id: "table4", paper_ref: "Table 4", run: tables_ablation::table4 },
+        Experiment { id: "table5", paper_ref: "Table 5", run: tables_ablation::table5 },
+        Experiment { id: "table6", paper_ref: "Table 6", run: tables_ablation::table6 },
+        Experiment { id: "table10", paper_ref: "Table 10", run: tables_scale::table10 },
+        Experiment { id: "table1", paper_ref: "Table 1", run: tables_main::table1 },
+        Experiment { id: "table8", paper_ref: "Table 8", run: tables_ablation::table8 },
+        Experiment { id: "table2", paper_ref: "Table 2", run: tables_main::table2 },
+        Experiment { id: "table3", paper_ref: "Table 3", run: tables_main::table3 },
+        Experiment { id: "table9", paper_ref: "Table 9", run: tables_scale::table9 },
+        Experiment { id: "e2e", paper_ref: "end-to-end driver", run: e2e::run },
+    ]
+}
+
+/// Run one experiment id (or `all`), saving reports under `reports/`.
+pub fn run_experiment(rt: &Runtime, id: &str, fast: bool) -> Result<()> {
+    let cat = catalog();
+    let targets: Vec<&Experiment> = if id == "all" {
+        cat.iter().collect()
+    } else {
+        vec![cat
+            .iter()
+            .find(|e| e.id == id)
+            .ok_or_else(|| anyhow!("unknown experiment '{id}' (see `rilq list`)"))?]
+    };
+    for exp in targets {
+        let mut lab = Lab::new(rt);
+        if fast {
+            lab.calib.max_steps = 25;
+            lab.calib.n_samples = 32;
+        }
+        let t0 = std::time::Instant::now();
+        log::info!("running {} ({})", exp.id, exp.paper_ref);
+        let tables = (exp.run)(&mut lab)?;
+        for (i, t) in tables.iter().enumerate() {
+            let stem = if tables.len() == 1 {
+                exp.id.to_string()
+            } else {
+                format!("{}_{}", exp.id, i)
+            };
+            t.save("reports", &stem)?;
+            println!("{}", t.to_markdown());
+        }
+        println!(
+            "[{}] done in {:.1}s -> reports/{}*.md",
+            exp.id,
+            t0.elapsed().as_secs_f64(),
+            exp.id
+        );
+    }
+    Ok(())
+}
+

@@ -1,0 +1,410 @@
+//! The shared experiment pipeline ("Lab"): pretrained teachers, quantized
+//! students, compensated adapters, and evaluation bundles — all cached
+//! under `runs/` so the dozens of table/figure reproductions share work.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::driver::{CalibConfig, CalibResult, Driver, PretrainConfig};
+use crate::coordinator::RunCache;
+use crate::data::tasks::{gen_gsm, gen_mc, GsmItem, McItem, TaskKind};
+use crate::data::{Corpus, Profile, Vocab};
+use crate::eval::{gsm_accuracy, mc_accuracy, perplexity, HloScorer, Scorer};
+use crate::lqec::svd_init::{adapters_from_presvd, loftq_model, loftq_presvd};
+use crate::lqec::AdapterSet;
+use crate::model::forward::CalibStats;
+use crate::model::weights::TensorFile;
+use crate::model::{ModelDims, StudentWeights, TeacherParams, LINEARS};
+use crate::quant::{by_name, CalibCtx};
+use crate::runtime::Runtime;
+use crate::tensor::Rng;
+
+/// Evaluation bundle sizes (scaled-down analogues of the paper's setup).
+pub const EVAL_SEQS: usize = 12;
+pub const MC_ITEMS: usize = 40;
+pub const GSM_ITEMS: usize = 40;
+
+/// Result row every experiment shares: per-task accuracy + PPLs.
+#[derive(Clone, Debug)]
+pub struct EvalBundle {
+    pub task_accs: Vec<(&'static str, f64)>,
+    pub avg_acc: f64,
+    pub ppl_wiki: f64,
+    pub ppl_c4: f64,
+}
+
+pub struct Lab<'r> {
+    pub rt: &'r Runtime,
+    pub cache: RunCache,
+    pub seed: u64,
+    /// override for calibration budget (None = default)
+    pub calib: CalibConfig,
+    pub pretrain_steps_override: Option<usize>,
+    /// in-memory cache of single-iteration LoftQ residual SVDs, shared by
+    /// the rank sweeps (Fig. 3(a), Tables 4/5/9)
+    svd_cache: std::cell::RefCell<
+        std::collections::HashMap<
+            (String, String, u8),
+            std::rc::Rc<(StudentWeights, Vec<Vec<crate::tensor::Svd>>)>,
+        >,
+    >,
+}
+
+impl<'r> Lab<'r> {
+    pub fn new(rt: &'r Runtime) -> Lab<'r> {
+        let mut calib = CalibConfig::default();
+        calib.max_steps = 40;
+        calib.n_samples = 64;
+        calib.patience = 20;
+        calib.lr = 2e-3;
+        Lab {
+            rt,
+            cache: RunCache::new("runs"),
+            seed: 20250710,
+            calib,
+            pretrain_steps_override: None,
+            svd_cache: Default::default(),
+        }
+    }
+
+    pub fn dims(&self, config: &str) -> Result<ModelDims> {
+        Ok(self.rt.manifest.dims(config)?.clone())
+    }
+
+    // ---------------------------------------------------------------------
+    // stage: pretrained teacher (cached)
+    // ---------------------------------------------------------------------
+
+    pub fn pretrain_config(&self, dims: &ModelDims) -> PretrainConfig {
+        let steps = self.pretrain_steps_override.unwrap_or(match dims.name.as_str() {
+            "tiny" => 300,
+            "small" => 700,
+            _ => 250,
+        });
+        PretrainConfig { steps, seed: self.seed ^ 0x11, ..Default::default() }
+    }
+
+    /// Pretrained teacher for a config (runs once, cached on disk).
+    /// Returns (params, loss curve).
+    pub fn teacher(&self, config: &str) -> Result<(ModelDims, TeacherParams, Vec<f32>)> {
+        let dims = self.dims(config)?;
+        let pcfg = self.pretrain_config(&dims);
+        let key = format!(
+            "teacher:{config}:steps={}:lr={}:seed={}:v2",
+            pcfg.steps, pcfg.lr, pcfg.seed
+        );
+        let tf = self.cache.get_or_compute(&key, || {
+            log::info!("pretraining {config} teacher ({} steps)…", pcfg.steps);
+            let mut rng = Rng::seed(self.seed ^ 0xbeef);
+            let init = TeacherParams::init(&dims, &mut rng);
+            let (trained, losses) = Driver::new(self.rt).pretrain(&dims, &init, &pcfg)?;
+            let mut tf = TensorFile::new();
+            for (name, buf) in crate::runtime::bindings::teacher_names()
+                .iter()
+                .zip(trained.to_flat())
+            {
+                tf.insert(format!("p.{name}"), vec![buf.len()], buf);
+            }
+            tf.insert("losses", vec![losses.len()], losses);
+            Ok(tf)
+        })?;
+        let flat: Vec<Vec<f32>> = crate::runtime::bindings::teacher_names()
+            .iter()
+            .map(|n| tf.get(&format!("p.{n}")).map(|t| t.1.clone()))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("corrupt teacher cache"))?;
+        let losses = tf.get("losses").map(|t| t.1.clone()).unwrap_or_default();
+        Ok((dims.clone(), TeacherParams::from_flat(&dims, &flat)?, losses))
+    }
+
+    // ---------------------------------------------------------------------
+    // stage: quantized student
+    // ---------------------------------------------------------------------
+
+    /// Calibration activation statistics (for OmniQuant/GPTQ/QuaRot).
+    pub fn calib_stats(&self, dims: &ModelDims, teacher: &TeacherParams) -> CalibStats {
+        let mut corpus = Corpus::new(
+            Vocab::new(dims.vocab, self.seed ^ 0x11),
+            Profile::C4Sim,
+            self.seed ^ 0xca11b,
+        );
+        let seqs: Vec<Vec<u32>> = (0..8).map(|_| corpus.sample_seq(dims.seq)).collect();
+        CalibStats::collect(dims, teacher, &seqs, 128)
+    }
+
+    /// Quantize the teacher with a named quantizer.
+    pub fn quantize(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        quantizer: &str,
+        bits: u8,
+    ) -> Result<StudentWeights> {
+        let q = by_name(quantizer, bits, dims.group_size)
+            .ok_or_else(|| anyhow!("unknown quantizer {quantizer}"))?;
+        let needs_calib = matches!(quantizer, "omniquant" | "gptq" | "quarot");
+        let stats = if needs_calib {
+            Some(self.calib_stats(dims, teacher))
+        } else {
+            None
+        };
+        let seed = self.seed;
+        Ok(StudentWeights::quantize(dims, teacher, q.as_ref(), &|f, l| match &stats {
+            Some(s) => CalibCtx {
+                x_sq_mean: Some(s.x_sq_mean[f][l].clone()),
+                x_samples: Some(s.samples[f][l].clone()),
+                seed,
+            },
+            None => CalibCtx::with_seed(seed),
+        }))
+    }
+
+    /// LoftQ (iterative Weight-SVD) student + adapters. `iters == 1` uses
+    /// a rank-independent residual SVD cached in memory, so rank sweeps
+    /// cost one SVD pass per (quantizer, bits); `iters > 1` runs the full
+    /// alternating refinement.
+    pub fn loftq(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        quantizer: &str,
+        bits: u8,
+        rank: usize,
+        iters: usize,
+    ) -> Result<(StudentWeights, AdapterSet)> {
+        let q = by_name(quantizer, bits, dims.group_size)
+            .ok_or_else(|| anyhow!("unknown quantizer {quantizer}"))?;
+        let seed = self.seed;
+        if iters > 1 {
+            return Ok(loftq_model(
+                dims,
+                teacher,
+                q.as_ref(),
+                &|_, _| CalibCtx::with_seed(seed),
+                rank,
+                iters,
+            ));
+        }
+        let key = (dims.name.clone(), quantizer.to_string(), bits);
+        let entry = {
+            let cached = self.svd_cache.borrow().get(&key).cloned();
+            match cached {
+                Some(e) => e,
+                None => {
+                    let e = std::rc::Rc::new(loftq_presvd(
+                        dims,
+                        teacher,
+                        q.as_ref(),
+                        &|_, _| CalibCtx::with_seed(seed),
+                    ));
+                    self.svd_cache.borrow_mut().insert(key, e.clone());
+                    e
+                }
+            }
+        };
+        let adapters = adapters_from_presvd(dims, &entry.1, rank);
+        Ok((entry.0.clone(), adapters))
+    }
+
+    // ---------------------------------------------------------------------
+    // stage: LQEC calibration (cached)
+    // ---------------------------------------------------------------------
+
+    /// Gradient-based compensation with a given loss scope (RILQ =
+    /// "model_gt"). Adapters start from `init` (default-init or SVD-init).
+    pub fn compensate(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        student: &StudentWeights,
+        init: &AdapterSet,
+        scope: &str,
+        cache_tag: &str,
+    ) -> Result<(AdapterSet, CalibResult)> {
+        let cfg = &self.calib;
+        let key = format!(
+            "calib:{}:{cache_tag}:scope={scope}:r={}:steps={}:lr={}:n={}:seed={}:v2",
+            dims.name, init.rank, cfg.max_steps, cfg.lr, cfg.n_samples, cfg.seed
+        );
+        let mut meta_losses: Option<(Vec<f32>, Vec<f32>, Vec<f32>, f64, usize)> = None;
+        let tf = self.cache.get_or_compute(&key, || {
+            log::info!("calibrating {} scope={scope} r={} ({})", dims.name, init.rank, cache_tag);
+            let res = Driver::new(self.rt).calibrate(dims, teacher, student, init, scope, cfg)?;
+            let mut tf = TensorFile::new();
+            for (i, buf) in res.adapters_flat.iter().enumerate() {
+                tf.insert(format!("ad.{i:02}"), vec![buf.len()], buf.clone());
+            }
+            tf.insert("losses", vec![res.losses.len()], res.losses.clone());
+            tf.insert("model_losses", vec![res.model_losses.len()], res.model_losses.clone());
+            tf.insert("gt_losses", vec![res.gt_losses.len()], res.gt_losses.clone());
+            tf.insert("wall", vec![1], vec![res.wall_secs as f32]);
+            meta_losses = Some((
+                res.losses.clone(),
+                res.model_losses.clone(),
+                res.gt_losses.clone(),
+                res.wall_secs,
+                res.steps,
+            ));
+            Ok(tf)
+        })?;
+        let flat: Vec<Vec<f32>> = (0..14)
+            .map(|i| tf.get(&format!("ad.{i:02}")).map(|t| t.1.clone()))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("corrupt calib cache"))?;
+        let adapters = AdapterSet::from_flat(dims, init.rank, &flat)?;
+        let losses = tf.get("losses").map(|t| t.1.clone()).unwrap_or_default();
+        let (model_losses, gt_losses) = (
+            tf.get("model_losses").map(|t| t.1.clone()).unwrap_or_default(),
+            tf.get("gt_losses").map(|t| t.1.clone()).unwrap_or_default(),
+        );
+        let wall = tf.get("wall").map(|t| t.1[0] as f64).unwrap_or(0.0);
+        let steps = losses.len();
+        let _ = meta_losses;
+        Ok((
+            adapters,
+            CalibResult {
+                adapters_flat: flat,
+                losses,
+                model_losses,
+                gt_losses,
+                steps,
+                wall_secs: wall,
+                stopped_early: false,
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------------
+    // stage: evaluation
+    // ---------------------------------------------------------------------
+
+    /// Held-out evaluation sequences (seed disjoint from calibration).
+    pub fn eval_seqs(&self, dims: &ModelDims, profile: Profile, n: usize) -> Vec<Vec<u32>> {
+        let mut corpus = Corpus::new(
+            Vocab::new(dims.vocab, self.seed ^ 0x11),
+            profile,
+            self.seed ^ 0xe7a1,
+        );
+        (0..n).map(|_| corpus.sample_seq(dims.seq)).collect()
+    }
+
+    pub fn mc_suite(&self, dims: &ModelDims) -> Vec<(&'static str, Vec<McItem>)> {
+        let vocab = Vocab::new(dims.vocab, self.seed ^ 0x11);
+        TaskKind::ALL
+            .iter()
+            .map(|&k| (k.label(), gen_mc(k, &vocab, MC_ITEMS, self.seed ^ 0x7a57 ^ k as u64)))
+            .collect()
+    }
+
+    pub fn gsm_items(&self, dims: &ModelDims) -> Vec<GsmItem> {
+        let vocab = Vocab::new(dims.vocab, self.seed ^ 0x11);
+        gen_gsm(&vocab, GSM_ITEMS, 1, self.seed ^ 0x65e8)
+    }
+
+    /// Scorer for the fp teacher.
+    pub fn teacher_scorer(&self, dims: &ModelDims, teacher: &TeacherParams) -> Result<HloScorer<'r>> {
+        let name = format!("teacher_fwd_{}", dims.name);
+        HloScorer::new(self.rt, &name, |b| {
+            b.teacher(teacher);
+        })
+    }
+
+    /// Scorer for a (student, adapters) pair via the dense student artifact.
+    pub fn student_scorer(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        student: &StudentWeights,
+        adapters: &AdapterSet,
+    ) -> Result<HloScorer<'r>> {
+        let name = format!("student_fwd_{}_r{}", dims.name, adapters.rank);
+        let flat = adapters.to_flat();
+        HloScorer::new(self.rt, &name, |b| {
+            b.teacher(teacher).qweights(student).adapters("ad.", &flat);
+        })
+    }
+
+    /// Full evaluation bundle: 5-task CSQA accuracy + two perplexities.
+    pub fn evaluate(&self, scorer: &dyn Scorer, dims: &ModelDims) -> Result<EvalBundle> {
+        let suite = self.mc_suite(dims);
+        let mut task_accs = Vec::new();
+        for (label, items) in &suite {
+            task_accs.push((*label, mc_accuracy(scorer, items, false)?));
+        }
+        let avg_acc = task_accs.iter().map(|(_, a)| a).sum::<f64>() / task_accs.len() as f64;
+        let wiki = self.eval_seqs(dims, Profile::WikiSim, EVAL_SEQS);
+        let c4 = self.eval_seqs(dims, Profile::C4Sim, EVAL_SEQS);
+        Ok(EvalBundle {
+            task_accs,
+            avg_acc,
+            ppl_wiki: perplexity(scorer, &wiki)?,
+            ppl_c4: perplexity(scorer, &c4)?,
+        })
+    }
+
+    /// gsm-sim accuracy for a scorer.
+    pub fn evaluate_gsm(&self, scorer: &dyn Scorer, dims: &ModelDims) -> Result<f64> {
+        gsm_accuracy(scorer, &self.gsm_items(dims))
+    }
+
+    /// Probe artifact metrics (Fig. 4): per-layer relative error + head
+    /// relative error for a (student, adapters) pair.
+    pub fn probe(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        student: &StudentWeights,
+        adapters: &AdapterSet,
+    ) -> Result<(Vec<f32>, f32)> {
+        let name = format!("probe_{}_r{}", dims.name, adapters.rank);
+        let spec = self.rt.manifest.artifact(&name)?.clone();
+        let batch: Vec<Vec<u32>> = self
+            .eval_seqs(dims, Profile::WikiSim, dims.batch)
+            .into_iter()
+            .collect();
+        let mut b = crate::runtime::Bindings::new();
+        b.teacher(teacher)
+            .qweights(student)
+            .adapters("ad.", &adapters.to_flat())
+            .tokens(&batch, dims);
+        let outs = self.rt.run(&name, &b.to_literals(&spec)?)?;
+        let layer_rel =
+            crate::runtime::bindings::output_f32(&spec, &outs, "layer_rel")?;
+        let head_rel =
+            crate::runtime::bindings::output_scalar(&spec, &outs, "head_rel")?;
+        Ok((layer_rel, head_rel))
+    }
+
+    /// Default zero-shot adapter init (A gaussian, B zero) — the paper's
+    /// "LoRA without RILQ" baseline init.
+    pub fn default_adapters(&self, dims: &ModelDims, rank: usize) -> AdapterSet {
+        let mut rng = Rng::seed(self.seed ^ 0xada9);
+        AdapterSet::init_default(dims, rank, &mut rng, 0.01)
+    }
+
+    /// Task-specific fine-tuning data (CSQA-sim / gsm-sim windows).
+    pub fn ft_seqs(&self, dims: &ModelDims, task: &str, n_windows: usize) -> Vec<Vec<u32>> {
+        let vocab = Vocab::new(dims.vocab, self.seed ^ 0x11);
+        match task {
+            "gsm" => crate::data::tasks::gsm_train_seqs(&vocab, n_windows, dims.seq, 1, self.seed ^ 3),
+            _ => crate::data::tasks::csqa_train_seqs(&vocab, n_windows, dims.seq, self.seed ^ 4),
+        }
+    }
+}
+
+/// Storage accounting helper shared by Table 12 and README claims.
+pub fn fp16_bytes(dims: &ModelDims) -> usize {
+    dims.params_count() * 2
+}
+
+/// Quantized linear storage + fp embed/norm/head at fp16.
+pub fn quantized_model_bytes(dims: &ModelDims, student: &StudentWeights) -> usize {
+    let fp_part = dims.params_count()
+        - LINEARS
+            .iter()
+            .map(|n| {
+                let (di, do_) = dims.linear_dims(n);
+                di * do_ * dims.n_layers
+            })
+            .sum::<usize>();
+    fp_part * 2 + student.storage_bytes()
+}

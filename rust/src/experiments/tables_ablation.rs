@@ -1,0 +1,287 @@
+//! Ablations: Tables 4–8.
+
+use anyhow::Result;
+
+use crate::coordinator::driver::Driver;
+use crate::lqec::ralora;
+use crate::lqec::{AdapterSet, GroupedAdapterSet};
+use crate::report::table::f;
+use crate::report::Table;
+use crate::tensor::std_dev;
+
+use super::pipeline::Lab;
+
+/// Table 4: rank sensitivity — SVD (LoftQ) vs RILQ across ranks, for the
+/// NormalFloat and OmniQuant-sim base quantizers.
+pub fn table4(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let ranks: Vec<usize> = vec![4, 16, 64]; // paper 16..256 scaled to d_model
+    let mut t = Table::new(
+        "Table 4 — SVD vs RILQ across ranks (W2, config=small)",
+        &["quantizer", "rank", "LQEC", "CSQA avg", "Wiki2-PPL", "C4-PPL"],
+    );
+    for qname in ["nf", "omniquant"] {
+        let student = lab.quantize(&dims, &teacher, qname, 2)?;
+        for &rank in &ranks {
+            // SVD
+            let (st_svd, ad_svd) = lab.loftq(&dims, &teacher, qname, 2, rank, 1)?;
+            let ev = {
+                let sc = lab.student_scorer(&dims, &teacher, &st_svd, &ad_svd)?;
+                lab.evaluate(&sc, &dims)?
+            };
+            t.row(vec![
+                qname.into(),
+                rank.to_string(),
+                "SVD".into(),
+                f(ev.avg_acc * 100.0, 2),
+                f(ev.ppl_wiki, 2),
+                f(ev.ppl_c4, 2),
+            ]);
+            // RILQ
+            let init = lab.default_adapters(&dims, rank);
+            let (ad, _) = lab.compensate(
+                &dims,
+                &teacher,
+                &student,
+                &init,
+                "model_gt",
+                &format!("{qname}2"),
+            )?;
+            let ev = {
+                let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+                lab.evaluate(&sc, &dims)?
+            };
+            t.row(vec![
+                qname.into(),
+                rank.to_string(),
+                "RILQ".into(),
+                f(ev.avg_acc * 100.0, 2),
+                f(ev.ppl_wiki, 2),
+                f(ev.ppl_c4, 2),
+            ]);
+        }
+    }
+    t.note("paper shape: RILQ at the lowest rank beats SVD at the highest rank at 2-bit");
+    Ok(vec![t])
+}
+
+/// Table 5: C4 PPL σ across ranks, W2 vs W3 — the rank-insensitivity
+/// headline. RILQ's σ collapses at W2 while SVD's stays large.
+pub fn table5(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let ranks: Vec<usize> = vec![4, 16, 64]; // paper 16..256 scaled to d_model
+    let mut t = Table::new(
+        "Table 5 — C4 PPL across ranks and bit-widths (OmniQuant-sim, config=small)",
+        &{
+            let mut h = vec!["LQEC", "bits"];
+            let rank_hdrs: Vec<String> = ranks.iter().map(|r| format!("r={r}")).collect();
+            h.extend(rank_hdrs.iter().map(|s| Box::leak(s.clone().into_boxed_str()) as &str));
+            h.push("sigma");
+            h
+        },
+    );
+    for method in ["SVD", "RILQ"] {
+        for bits in [3u8, 2] {
+            let mut ppls = Vec::new();
+            for &rank in &ranks {
+                let ppl = if method == "SVD" {
+                    let (st, ad) = lab.loftq(&dims, &teacher, "omniquant", bits, rank, 1)?;
+                    let sc = lab.student_scorer(&dims, &teacher, &st, &ad)?;
+                    lab.evaluate(&sc, &dims)?.ppl_c4
+                } else {
+                    let student = lab.quantize(&dims, &teacher, "omniquant", bits)?;
+                    let init = lab.default_adapters(&dims, rank);
+                    let (ad, _) = lab.compensate(
+                        &dims,
+                        &teacher,
+                        &student,
+                        &init,
+                        "model_gt",
+                        &format!("omniquant{bits}"),
+                    )?;
+                    let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+                    lab.evaluate(&sc, &dims)?.ppl_c4
+                };
+                ppls.push(ppl);
+            }
+            let sigma = std_dev(&ppls);
+            let mut row = vec![method.to_string(), format!("W{bits}A16")];
+            row.extend(ppls.iter().map(|&p| f(p, 2)));
+            row.push(f(sigma, 3));
+            t.row(row);
+        }
+    }
+    t.note("paper shape: σ(SVD, W2) >> σ(RILQ, W2); both tiny at W3");
+    Ok(vec![t])
+}
+
+/// Table 6: QA-LoRA vs RA-LoRA vs RILQ under the group-merge setting at
+/// the minimum rank (RTN W2).
+pub fn table6(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let rank = 4; // the paper's rank=16 scaled by d_model ratio
+    let student = lab.quantize(&dims, &teacher, "rtn", 2)?;
+    let mut t = Table::new(
+        "Table 6 — QA-LoRA vs RA-LoRA vs RILQ (RTN W2, rank-min, config=small)",
+        &["method", "PIQA", "Arc-c", "Arc-e", "Avg(3)"],
+    );
+
+    let eval3 = |lab: &Lab, ad: &AdapterSet| -> Result<[f64; 3]> {
+        let sc = lab.student_scorer(&dims, &teacher, &student, ad)?;
+        let ev = lab.evaluate(&sc, &dims)?;
+        let get = |l: &str| {
+            ev.task_accs
+                .iter()
+                .find(|(n, _)| *n == l)
+                .map(|(_, a)| *a)
+                .unwrap_or(0.0)
+        };
+        Ok([get("PIQA"), get("Arc-c"), get("Arc-e")])
+    };
+
+    // QA-LoRA baseline: GT-loss tuning with the group constraint (project
+    // each step is approximated by projecting the final adapters)
+    {
+        let init = lab.default_adapters(&dims, rank);
+        let (ad, _) = lab.compensate(&dims, &teacher, &student, &init, "gt", "rtn2")?;
+        let grouped = GroupedAdapterSet::project(&dims, &ad).expand(&dims);
+        let a = eval3(lab, &grouped)?;
+        t.row(vec![
+            "QA-LoRA (baseline)".into(),
+            f(a[0] * 100.0, 2),
+            f(a[1] * 100.0, 2),
+            f(a[2] * 100.0, 2),
+            f((a[0] + a[1] + a[2]) / 3.0 * 100.0, 2),
+        ]);
+    }
+    // RA-LoRA: sensitivity-allocated SVD ranks under the same budget
+    {
+        let plan = ralora::allocate(&dims, &teacher, &student, rank, 0.5);
+        let mut ad = AdapterSet::zeros(&dims, rank);
+        for fam in 0..7 {
+            for l in 0..dims.n_layers {
+                let resid = teacher.linear(fam, l).sub(&student.q[fam][l].dequant());
+                let svd = crate::tensor::svd_jacobi(&resid);
+                let (a, b) = svd.lora_factors(plan.ranks[fam][l]);
+                ad.pairs[fam][l] = (a, b);
+            }
+        }
+        // evaluate natively: per-pair ranks differ, so merge into dense
+        let dense = crate::model::forward::effective_weights(&student, Some(&ad));
+        let sc = crate::eval::NativeScorer {
+            dims: dims.clone(),
+            teacher: teacher.clone(),
+            dense: Some(dense),
+        };
+        let ev = lab.evaluate(&sc, &dims)?;
+        let get = |l: &str| {
+            ev.task_accs
+                .iter()
+                .find(|(n, _)| *n == l)
+                .map(|(_, a)| *a)
+                .unwrap_or(0.0)
+        };
+        let a = [get("PIQA"), get("Arc-c"), get("Arc-e")];
+        t.row(vec![
+            "RA-LoRA".into(),
+            f(a[0] * 100.0, 2),
+            f(a[1] * 100.0, 2),
+            f(a[2] * 100.0, 2),
+            f((a[0] + a[1] + a[2]) / 3.0 * 100.0, 2),
+        ]);
+    }
+    // RILQ (uniform rank, model+gt loss, group-projected for parity)
+    {
+        let init = lab.default_adapters(&dims, rank);
+        let (ad, _) = lab.compensate(&dims, &teacher, &student, &init, "model_gt", "rtn2")?;
+        let grouped = GroupedAdapterSet::project(&dims, &ad).expand(&dims);
+        let a = eval3(lab, &grouped)?;
+        t.row(vec![
+            "RILQ".into(),
+            f(a[0] * 100.0, 2),
+            f(a[1] * 100.0, 2),
+            f(a[2] * 100.0, 2),
+            f((a[0] + a[1] + a[2]) / 3.0 * 100.0, 2),
+        ]);
+    }
+    t.note("paper shape: RILQ > RA-LoRA > QA-LoRA at the lowest rank");
+    Ok(vec![t])
+}
+
+/// Table 7: loss-scope ablation (Linear/Layer/Model × Act/GT).
+pub fn table7(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let rank = 16;
+    let student = lab.quantize(&dims, &teacher, "rtn", 2)?;
+    let mut t = Table::new(
+        "Table 7 — discrepancy-loss scope ablation (RTN W2, rank=16)",
+        &["scope", "Act", "GT", "WG", "PIQA", "HS", "Arc-c", "Arc-e", "Avg"],
+    );
+    let rows: [(&str, &str, &str, &str); 5] = [
+        ("Linear", "yes", "-", "linear"),
+        ("Layer", "yes", "-", "layer"),
+        ("Model", "yes", "-", "model"),
+        ("Model", "-", "yes", "gt"),
+        ("Model", "yes", "yes", "model_gt"),
+    ];
+    for (scope_label, act, gt, scope) in rows {
+        let init = lab.default_adapters(&dims, rank);
+        let (ad, _) = lab.compensate(&dims, &teacher, &student, &init, scope, "rtn2")?;
+        let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+        let ev = lab.evaluate(&sc, &dims)?;
+        let mut row = vec![scope_label.to_string(), act.into(), gt.into()];
+        row.extend(ev.task_accs.iter().map(|(_, a)| f(a * 100.0, 2)));
+        row.push(f(ev.avg_acc * 100.0, 2));
+        t.row(row);
+    }
+    t.note("paper shape: accuracy grows with scope; Model+GT (=RILQ) best overall");
+    Ok(vec![t])
+}
+
+/// Table 8: QuIP#-sim end-to-end FT × RILQ cross effects.
+/// "FT" (LayerNorm/head end-to-end fine-tuning in the paper) is simulated
+/// by GT-scope adapter tuning — the same non-discrepancy e2e objective.
+pub fn table8(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let rank = 16;
+    let student = lab.quantize(&dims, &teacher, "quip", 2)?;
+    let mut t = Table::new(
+        "Table 8 — QuIP#-sim FT x RILQ (W2, config=small)",
+        &["FT", "RILQ", "CSQA avg", "Wiki2-PPL", "C4-PPL"],
+    );
+    for (ft, rilq) in [(false, false), (false, true), (true, false), (true, true)] {
+        let ad = match (ft, rilq) {
+            (false, false) => AdapterSet::zeros(&dims, rank),
+            (false, true) => {
+                let init = lab.default_adapters(&dims, rank);
+                lab.compensate(&dims, &teacher, &student, &init, "model_gt", "quip2")?.0
+            }
+            (true, false) => {
+                let init = lab.default_adapters(&dims, rank);
+                lab.compensate(&dims, &teacher, &student, &init, "gt", "quip2")?.0
+            }
+            (true, true) => {
+                // FT then RILQ: continue model_gt from the gt-tuned state
+                let init = lab.default_adapters(&dims, rank);
+                let (ft_ad, _) =
+                    lab.compensate(&dims, &teacher, &student, &init, "gt", "quip2")?;
+                let cfg = lab.calib.clone();
+                let res = Driver::new(lab.rt).calibrate(
+                    &dims, &teacher, &student, &ft_ad, "model_gt", &cfg,
+                )?;
+                AdapterSet::from_flat(&dims, rank, &res.adapters_flat)?
+            }
+        };
+        let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+        let ev = lab.evaluate(&sc, &dims)?;
+        t.row(vec![
+            if ft { "yes".into() } else { "-".into() },
+            if rilq { "yes".into() } else { "-".into() },
+            f(ev.avg_acc * 100.0, 2),
+            f(ev.ppl_wiki, 2),
+            f(ev.ppl_c4, 2),
+        ]);
+    }
+    t.note("paper shape: RILQ helps with and without e2e FT; the combination is best");
+    Ok(vec![t])
+}

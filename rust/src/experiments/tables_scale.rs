@@ -1,0 +1,238 @@
+//! Scaling / budget / analysis tables: Tables 9–12.
+
+use anyhow::Result;
+
+use crate::coordinator::driver::Driver;
+use crate::lqec::AdapterSet;
+use crate::model::ModelDims;
+use crate::report::table::f;
+use crate::report::Table;
+
+use super::pipeline::{fp16_bytes, quantized_model_bytes, Lab};
+
+/// Table 9: error compensation across model sizes (LLaMA-2 7B/13B/70B →
+/// tiny/small/base), LoftQ-style NF2 base.
+pub fn table9(lab: &mut Lab) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 9 — RILQ across model scales (NF2; LoftQ-style base)",
+        &["config", "params", "RILQ", "Wiki2-PPL", "C4-PPL"],
+    );
+    // `base` is omitted from the recorded run: a memory-growth issue in the
+    // per-step literal path at base scale (~250 MB/step transient) exhausts
+    // the runner during its pretrain. tiny/small cover a 13x param span.
+    let configs: Vec<&str> = match std::env::var("RILQ_TABLE9_CONFIGS") {
+        Ok(c) => c.split(',').map(|s| Box::leak(s.to_string().into_boxed_str()) as &str).collect(),
+        Err(_) => vec!["tiny", "small"],
+    };
+    for config in configs {
+        if !lab.rt.manifest.configs.contains_key(config) {
+            continue;
+        }
+        let (dims, teacher, _) = lab.teacher(config)?;
+        let rank = *lab.rt.manifest.ranks[config].iter().min().unwrap();
+        let (st, ad_svd) = lab.loftq(&dims, &teacher, "nf", 2, rank, 1)?;
+        let minus = {
+            let sc = lab.student_scorer(&dims, &teacher, &st, &ad_svd)?;
+            lab.evaluate(&sc, &dims)?
+        };
+        t.row(vec![
+            config.into(),
+            format!("{:.1}M", dims.params_count() as f64 / 1e6),
+            "-".into(),
+            f(minus.ppl_wiki, 2),
+            f(minus.ppl_c4, 2),
+        ]);
+        let (ad, _) = lab.compensate(&dims, &teacher, &st, &ad_svd, "model_gt", "nf2-svdinit")?;
+        let plus = {
+            let sc = lab.student_scorer(&dims, &teacher, &st, &ad)?;
+            lab.evaluate(&sc, &dims)?
+        };
+        t.row(vec![
+            config.into(),
+            format!("{:.1}M", dims.params_count() as f64 / 1e6),
+            "yes".into(),
+            f(plus.ppl_wiki, 2),
+            f(plus.ppl_c4, 2),
+        ]);
+    }
+    t.note("paper shape: RILQ recovers PPL at every scale");
+    Ok(vec![t])
+}
+
+/// Table 10: calibration budget (samples × optimization steps) vs PPL and
+/// wall time. The paper sweeps samples × sequence length; sequence length
+/// is baked into the static HLO shapes here, so the token-budget axis is
+/// swept via samples × steps (documented in DESIGN.md).
+pub fn table10(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let rank = 16;
+    let student = lab.quantize(&dims, &teacher, "rtn", 2)?;
+    let mut t = Table::new(
+        "Table 10 — calibration budget vs PPL and wall time (RTN W2, rank=16)",
+        &["samples", "steps", "Wiki2-PPL", "C4-PPL", "wall (s)"],
+    );
+
+    // no compensation baseline
+    {
+        let zeros = AdapterSet::zeros(&dims, rank);
+        let sc = lab.student_scorer(&dims, &teacher, &student, &zeros)?;
+        let ev = lab.evaluate(&sc, &dims)?;
+        t.row(vec![
+            "-".into(),
+            "0".into(),
+            f(ev.ppl_wiki, 2),
+            f(ev.ppl_c4, 2),
+            "0.0".into(),
+        ]);
+    }
+    // SVD reference
+    {
+        let t0 = std::time::Instant::now();
+        let (st, ad) = lab.loftq(&dims, &teacher, "rtn", 2, rank, 1)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let sc = lab.student_scorer(&dims, &teacher, &st, &ad)?;
+        let ev = lab.evaluate(&sc, &dims)?;
+        t.row(vec![
+            "SVD".into(),
+            "-".into(),
+            f(ev.ppl_wiki, 2),
+            f(ev.ppl_c4, 2),
+            f(wall, 1),
+        ]);
+    }
+
+    let base_steps = lab.calib.max_steps;
+    for (samples, steps) in [
+        (16usize, base_steps / 2),
+        (32, base_steps),
+        (64, base_steps),
+        (64, base_steps * 2),
+    ] {
+        let mut cfg = lab.calib.clone();
+        cfg.n_samples = samples;
+        cfg.max_steps = steps;
+        cfg.patience = steps; // fixed budget, no early stop
+        let init = lab.default_adapters(&dims, rank);
+        let res = Driver::new(lab.rt).calibrate(&dims, &teacher, &student, &init, "model_gt", &cfg)?;
+        let ad = AdapterSet::from_flat(&dims, rank, &res.adapters_flat)?;
+        let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+        let ev = lab.evaluate(&sc, &dims)?;
+        t.row(vec![
+            samples.to_string(),
+            steps.to_string(),
+            f(ev.ppl_wiki, 2),
+            f(ev.ppl_c4, 2),
+            f(res.wall_secs, 1),
+        ]);
+    }
+    t.note("paper shape: PPL improves with budget with diminishing returns; default budget suffices");
+    Ok(vec![t])
+}
+
+/// Table 11: Model-Loss optimization target — final decoder activation vs
+/// logits.
+pub fn table11(lab: &mut Lab) -> Result<Vec<Table>> {
+    let (dims, teacher, _) = lab.teacher("small")?;
+    let rank = 16;
+    let student = lab.quantize(&dims, &teacher, "omniquant", 2)?;
+    let mut t = Table::new(
+        "Table 11 — Model-Loss target: final activation vs logits (OmniQuant-sim W2)",
+        &["target", "Wiki2-PPL", "C4-PPL"],
+    );
+    for (label, scope) in [("final decoder activation", "model"), ("logits", "model_logit")] {
+        let init = lab.default_adapters(&dims, rank);
+        let (ad, _) = lab.compensate(&dims, &teacher, &student, &init, scope, "omni2")?;
+        let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+        let ev = lab.evaluate(&sc, &dims)?;
+        t.row(vec![label.into(), f(ev.ppl_wiki, 2), f(ev.ppl_c4, 2)]);
+    }
+    t.note("paper shape: near-tie; the cheaper final-activation target is the default");
+    Ok(vec![t])
+}
+
+/// Table 12: fine-tuning memory analysis — measured on the simulated
+/// configs and extrapolated analytically to LLaMA-2-7B geometry.
+pub fn table12(lab: &mut Lab) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 12 — fine-tuning memory (weights + adapter grads + Adam + activations)",
+        &["model", "method", "weights", "ad grads", "optim", "act", "total"],
+    );
+
+    let gib = |b: f64| format!("{:.3} GiB", b / (1u64 << 30) as f64);
+    let mib = |b: f64| format!("{:.2} MiB", b / (1 << 20) as f64);
+
+    // measured on `small`
+    {
+        let (dims, teacher, _) = lab.teacher("small")?;
+        let student = lab.quantize(&dims, &teacher, "rtn", 2)?;
+        let rank = 16;
+        let ad = AdapterSet::zeros(&dims, rank);
+        let ad_bytes = (ad.params_count() * 4) as f64;
+        let act_bytes = (dims.batch * dims.seq * dims.d_model * dims.n_layers * 4) as f64;
+        for (method, weights) in [
+            ("FP16 LoRA", fp16_bytes(&dims) as f64),
+            ("W2A16 QLoRA", quantized_model_bytes(&dims, &student) as f64),
+            ("W2A16 RILQ", quantized_model_bytes(&dims, &student) as f64),
+        ] {
+            t.row(vec![
+                "small (measured)".into(),
+                method.into(),
+                mib(weights),
+                mib(ad_bytes),
+                mib(2.0 * ad_bytes),
+                mib(act_bytes),
+                mib(weights + 3.0 * ad_bytes + act_bytes),
+            ]);
+        }
+    }
+
+    // analytic LLaMA-2-7B geometry (paper's Table 12 setting, rank 64)
+    {
+        let dims = ModelDims {
+            name: "llama2-7b".into(),
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 11008,
+            vocab: 32000,
+            seq: 384,
+            batch: 16,
+            group_size: 64,
+        };
+        let rank = 64;
+        let lin_params: usize = crate::model::LINEARS
+            .iter()
+            .map(|n| {
+                let (di, do_) = dims.linear_dims(n);
+                di * do_ * dims.n_layers
+            })
+            .sum();
+        let other = dims.params_count() - lin_params;
+        let ad_params: usize = crate::model::LINEARS
+            .iter()
+            .map(|n| {
+                let (di, do_) = dims.linear_dims(n);
+                (di + do_) * rank * dims.n_layers
+            })
+            .sum();
+        let ad_bytes = (ad_params * 4) as f64;
+        let act = (dims.batch * dims.seq * dims.d_model * dims.n_layers) as f64; // fp8-ish ckpt
+        for (method, weights) in [
+            ("FP16 LoRA", ((lin_params + other) * 2) as f64),
+            ("W2A16 QLoRA", lin_params as f64 * 0.25 * 1.25 + (other * 2) as f64),
+            ("W2A16 RILQ", lin_params as f64 * 0.25 * 1.25 + (other * 2) as f64),
+        ] {
+            t.row(vec![
+                "LLaMA-2-7B (analytic)".into(),
+                method.into(),
+                gib(weights),
+                gib(ad_bytes),
+                gib(2.0 * ad_bytes),
+                gib(act),
+                gib(weights + 3.0 * ad_bytes + act),
+            ]);
+        }
+    }
+    t.note("paper shape: W2 fine-tuning (QLoRA = RILQ) needs ~1/4 of FP16 LoRA's memory; RILQ adds nothing over QLoRA");
+    Ok(vec![t])
+}

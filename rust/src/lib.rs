@@ -1,0 +1,33 @@
+//! # RILQ — Rank-Insensitive LoRA-based Quantization Error Compensation
+//!
+//! Full-system reproduction of "RILQ: Rank-Insensitive LoRA-Based Quantization
+//! Error Compensation for Boosting 2-Bit Large Language Model Accuracy"
+//! (AAAI 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the calibration/evaluation coordinator:
+//!   experiment scheduling, streaming calibration batcher with backpressure,
+//!   early stopping, adapter state management, metrics, and report emission.
+//! * **Layer 2 (python/compile/model.py)** — a LLaMA-style transformer in JAX
+//!   (fp teacher + quantized student with LoRA adapters) plus the five
+//!   discrepancy-loss scopes (Linear/Layer/Model/GT/Model+GT = RILQ),
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — a Pallas kernel fusing int-code
+//!   dequantization, matmul, and the low-rank LoRA correction.
+//!
+//! Python never runs on the request path: `make artifacts` lowers every model
+//! variant once; this crate loads the HLO via PJRT (`xla` crate) and drives
+//! calibration/eval loops natively.
+
+pub mod tensor;
+pub mod quant;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod lqec;
+pub mod model;
+pub mod report;
+pub mod runtime;
+
+pub use tensor::{Mat, Rng};

@@ -1,0 +1,190 @@
+//! LoRA adapter containers.
+//!
+//! One `(A: [d_in, r], B: [d_out, r])` pair per quantized linear, with the
+//! `Y = X(Q + A·Bᵀ)` convention of the paper. Flattening matches the
+//! artifact layout from `python/compile/model.py::adapter_shapes`: for each
+//! linear family, `<name>.a` is the stacked `[L, d_in, r]` buffer and
+//! `<name>.b` the stacked `[L, d_out, r]` buffer.
+
+use anyhow::{bail, Result};
+
+use crate::model::{ModelDims, LINEARS};
+use crate::tensor::{Mat, Rng};
+
+/// All adapters of a model, indexed `[family][layer]`.
+#[derive(Clone, Debug)]
+pub struct AdapterSet {
+    /// `(A, B)` per (family, layer); ranks may vary per pair (RA-LoRA).
+    pub pairs: Vec<Vec<(Mat, Mat)>>,
+    /// nominal rank (uniform case; per-pair ranks may differ)
+    pub rank: usize,
+}
+
+impl AdapterSet {
+    /// Default LoRA init: A ~ N(0, scale²), B = 0 — so A·Bᵀ = 0 initially.
+    pub fn init_default(dims: &ModelDims, rank: usize, rng: &mut Rng, scale: f32) -> AdapterSet {
+        let mut pairs = Vec::new();
+        for name in LINEARS {
+            let (di, do_) = dims.linear_dims(name);
+            let per: Vec<(Mat, Mat)> = (0..dims.n_layers)
+                .map(|_| (Mat::randn(di, rank, rng).scale(scale), Mat::zeros(do_, rank)))
+                .collect();
+            pairs.push(per);
+        }
+        AdapterSet { pairs, rank }
+    }
+
+    /// All-zero adapters (A = B = 0).
+    pub fn zeros(dims: &ModelDims, rank: usize) -> AdapterSet {
+        let mut pairs = Vec::new();
+        for name in LINEARS {
+            let (di, do_) = dims.linear_dims(name);
+            let per: Vec<(Mat, Mat)> = (0..dims.n_layers)
+                .map(|_| (Mat::zeros(di, rank), Mat::zeros(do_, rank)))
+                .collect();
+            pairs.push(per);
+        }
+        AdapterSet { pairs, rank }
+    }
+
+    pub fn get(&self, family: usize, layer: usize) -> (&Mat, &Mat) {
+        let (a, b) = &self.pairs[family][layer];
+        (a, b)
+    }
+
+    pub fn set(&mut self, family: usize, layer: usize, a: Mat, b: Mat) {
+        assert_eq!(a.cols(), b.cols(), "A/B rank mismatch");
+        self.pairs[family][layer] = (a, b);
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.pairs[0].len()
+    }
+
+    /// Dense correction `A·Bᵀ` for one linear.
+    pub fn delta(&self, family: usize, layer: usize) -> Mat {
+        let (a, b) = self.get(family, layer);
+        a.matmul(&b.t())
+    }
+
+    /// Number of adapter parameters.
+    pub fn params_count(&self) -> usize {
+        self.pairs
+            .iter()
+            .flatten()
+            .map(|(a, b)| a.len() + b.len())
+            .sum()
+    }
+
+    /// Flatten to artifact layout: 14 buffers in the order
+    /// `wq.a, wq.b, wk.a, ..., wd.b` with `[L, ., r]` stacking.
+    /// Requires uniform rank.
+    pub fn to_flat(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(14);
+        for f in 0..LINEARS.len() {
+            let mut a_buf = Vec::new();
+            let mut b_buf = Vec::new();
+            for (a, b) in &self.pairs[f] {
+                assert_eq!(a.cols(), self.rank, "to_flat needs uniform rank");
+                a_buf.extend_from_slice(a.data());
+                b_buf.extend_from_slice(b.data());
+            }
+            out.push(a_buf);
+            out.push(b_buf);
+        }
+        out
+    }
+
+    /// Inverse of [`to_flat`].
+    pub fn from_flat(dims: &ModelDims, rank: usize, flat: &[Vec<f32>]) -> Result<AdapterSet> {
+        if flat.len() != 14 {
+            bail!("expected 14 adapter buffers, got {}", flat.len());
+        }
+        let l = dims.n_layers;
+        let mut pairs = Vec::new();
+        for (f, name) in LINEARS.iter().enumerate() {
+            let (di, do_) = dims.linear_dims(name);
+            let a_buf = &flat[2 * f];
+            let b_buf = &flat[2 * f + 1];
+            let pa = di * rank;
+            let pb = do_ * rank;
+            let per: Vec<(Mat, Mat)> = (0..l)
+                .map(|i| {
+                    (
+                        Mat::from_vec(di, rank, a_buf[i * pa..(i + 1) * pa].to_vec()),
+                        Mat::from_vec(do_, rank, b_buf[i * pb..(i + 1) * pb].to_vec()),
+                    )
+                })
+                .collect();
+            pairs.push(per);
+        }
+        Ok(AdapterSet { pairs, rank })
+    }
+
+    /// Adam moment buffers with the same geometry, zero-initialized
+    /// (flattened alongside adapters in train-step artifacts).
+    pub fn zeros_like_flat(&self) -> Vec<Vec<f32>> {
+        self.to_flat().into_iter().map(|b| vec![0.0; b.len()]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "unit".into(),
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 32,
+            seq: 12,
+            batch: 2,
+            group_size: 8,
+        }
+    }
+
+    #[test]
+    fn default_init_is_identity_correction() {
+        let d = dims();
+        let mut rng = Rng::seed(111);
+        let ad = AdapterSet::init_default(&d, 4, &mut rng, 0.01);
+        // B = 0 -> delta = 0
+        for f in 0..7 {
+            for l in 0..2 {
+                assert!(ad.delta(f, l).fro_norm() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let d = dims();
+        let mut rng = Rng::seed(112);
+        let mut ad = AdapterSet::init_default(&d, 4, &mut rng, 0.01);
+        // make B nonzero so the roundtrip is non-trivial
+        ad.set(3, 1, Mat::randn(16, 4, &mut rng), Mat::randn(16, 4, &mut rng));
+        let flat = ad.to_flat();
+        assert_eq!(flat.len(), 14);
+        let ad2 = AdapterSet::from_flat(&d, 4, &flat).unwrap();
+        for f in 0..7 {
+            for l in 0..2 {
+                let (a1, b1) = ad.get(f, l);
+                let (a2, b2) = ad2.get(f, l);
+                assert!(a1.fro_dist(a2) < 1e-7);
+                assert!(b1.fro_dist(b2) < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn params_count() {
+        let d = dims();
+        let ad = AdapterSet::zeros(&d, 4);
+        // per layer: 4x(16+16)*4 attn + (16+32)*4 g + (16+32)*4 u + (32+16)*4 d
+        let per_layer = 4 * (16 + 16) * 4 + 2 * (16 + 32) * 4 + (32 + 16) * 4;
+        assert_eq!(ad.params_count(), 2 * per_layer);
+    }
+}

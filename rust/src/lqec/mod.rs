@@ -1,0 +1,21 @@
+//! LoRA-based Quantization Error Compensation (LQEC) substrates:
+//!
+//! * [`adapters`] — the adapter container (one (A, B) pair per quantized
+//!   linear), init schemes, flattening to artifact layout, merging;
+//! * [`svd_init`] — LoftQ-style iterative Weight-SVD compensation (the
+//!   paper's main baseline, Fig. 2(b) / Eq. 2);
+//! * [`qalora`] — QA-LoRA's group-pooled adapters that merge exactly into
+//!   quantized zero-points (Table 3);
+//! * [`ralora`] — RA-LoRA's sensitivity-based rank allocator (Table 6);
+//! * [`scopes`] — the discrepancy-loss scope taxonomy shared with the L2
+//!   training artifacts (Linear/Layer/Model/GT/Model+GT = RILQ).
+
+pub mod adapters;
+pub mod qalora;
+pub mod ralora;
+pub mod scopes;
+pub mod svd_init;
+
+pub use adapters::AdapterSet;
+pub use qalora::GroupedAdapterSet;
+pub use scopes::Scope;

@@ -1,0 +1,179 @@
+//! QA-LoRA-style group-pooled adapters (Table 3 / Table 6 baseline).
+//!
+//! QA-LoRA constrains the adapter input side to be constant within each
+//! quantization group (it pools the input activations group-wise), which
+//! makes the learned correction `A·Bᵀ` *exactly absorbable* into the
+//! per-group zero-points of the quantized weights — adapter-free inference.
+//!
+//! Representation: `a_group: [d_in/gs, r]` per linear; the effective dense
+//! A expands each group row by `1/gs` so that `X·A_eff = pool(X)·A_group`.
+
+use crate::model::{ModelDims, LINEARS};
+use crate::quant::QuantizedTensor;
+use crate::tensor::{Mat, Rng};
+
+use super::AdapterSet;
+
+/// Group-constrained adapter set.
+#[derive(Clone, Debug)]
+pub struct GroupedAdapterSet {
+    /// `(A_group: [d_in/gs, r], B: [d_out, r])` per `[family][layer]`
+    pub pairs: Vec<Vec<(Mat, Mat)>>,
+    pub rank: usize,
+    pub group_size: usize,
+}
+
+impl GroupedAdapterSet {
+    pub fn init_default(dims: &ModelDims, rank: usize, rng: &mut Rng, scale: f32) -> Self {
+        let gs = dims.group_size;
+        let mut pairs = Vec::new();
+        for name in LINEARS {
+            let (di, do_) = dims.linear_dims(name);
+            assert!(di % gs == 0);
+            let per: Vec<(Mat, Mat)> = (0..dims.n_layers)
+                .map(|_| (Mat::randn(di / gs, rank, rng).scale(scale), Mat::zeros(do_, rank)))
+                .collect();
+            pairs.push(per);
+        }
+        GroupedAdapterSet { pairs, rank, group_size: gs }
+    }
+
+    /// Expand to an unconstrained [`AdapterSet`] (each group row repeated,
+    /// scaled by 1/gs so the correction equals pooled-input semantics).
+    pub fn expand(&self, dims: &ModelDims) -> AdapterSet {
+        let gs = self.group_size;
+        let mut out = AdapterSet::zeros(dims, self.rank);
+        for (f, name) in LINEARS.iter().enumerate() {
+            let (di, _) = dims.linear_dims(name);
+            for l in 0..dims.n_layers {
+                let (ag, b) = &self.pairs[f][l];
+                let a = Mat::from_fn(di, self.rank, |i, r| ag[(i / gs, r)] / gs as f32);
+                out.set(f, l, a, b.clone());
+            }
+        }
+        out
+    }
+
+    /// Project an unconstrained adapter pair onto the group constraint
+    /// (mean over each group of input rows, times gs) — used to convert
+    /// RILQ-tuned adapters into mergeable form.
+    pub fn project(dims: &ModelDims, ad: &AdapterSet) -> GroupedAdapterSet {
+        let gs = dims.group_size;
+        let rank = ad.rank;
+        let mut pairs = Vec::new();
+        for (f, name) in LINEARS.iter().enumerate() {
+            let (di, _) = dims.linear_dims(name);
+            let per: Vec<(Mat, Mat)> = (0..dims.n_layers)
+                .map(|l| {
+                    let (a, b) = ad.get(f, l);
+                    let ag = Mat::from_fn(di / gs, rank, |g, r| {
+                        let mut s = 0.0;
+                        for i in g * gs..(g + 1) * gs {
+                            s += a[(i, r)];
+                        }
+                        s // sum = mean * gs; expand divides by gs again
+                    });
+                    (ag, b.clone())
+                })
+                .collect();
+            pairs.push(per);
+        }
+        GroupedAdapterSet { pairs, rank, group_size: gs }
+    }
+
+    /// Merge one linear's grouped correction exactly into the quantized
+    /// tensor's zero-points: `z'[g, j] = z[g, j] + (1/gs)·A_group[g]·B[j]`.
+    /// After this, adapter-free dequantization reproduces
+    /// `deq(Q) + A_eff·Bᵀ` exactly.
+    pub fn merge_into(&self, family: usize, layer: usize, q: &mut QuantizedTensor) {
+        let (ag, b) = &self.pairs[family][layer];
+        assert_eq!(q.group_size, self.group_size, "merge needs matching groups");
+        let n_groups = q.d_in / q.group_size;
+        assert_eq!(ag.rows(), n_groups);
+        for g in 0..n_groups {
+            let arow = ag.row(g);
+            for j in 0..q.d_out {
+                let brow = b.row(j);
+                let dot: f32 = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
+                q.zeros[(g, j)] += dot / self.group_size as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{CalibCtx, Quantizer, Rtn};
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "unit".into(),
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 32,
+            seq: 12,
+            batch: 2,
+            group_size: 8,
+        }
+    }
+
+    #[test]
+    fn expand_is_group_constant() {
+        let d = dims();
+        let mut rng = Rng::seed(131);
+        let mut g = GroupedAdapterSet::init_default(&d, 4, &mut rng, 0.1);
+        g.pairs[0][0].1 = Mat::randn(16, 4, &mut rng); // nonzero B
+        let ad = g.expand(&d);
+        let (a, _) = ad.get(0, 0);
+        // rows within a group are identical
+        for grp in 0..2 {
+            for i in 1..8 {
+                for r in 0..4 {
+                    assert!((a[(grp * 8, r)] - a[(grp * 8 + i, r)]).abs() < 1e-7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let d = dims();
+        let mut rng = Rng::seed(132);
+        let w = Mat::randn(16, 16, &mut rng);
+        let quant = Rtn::new(2, 8);
+        let qr = quant.quantize(&w, &CalibCtx::default());
+        let mut q = qr.as_scalar().unwrap().clone();
+
+        let mut g = GroupedAdapterSet::init_default(&d, 4, &mut rng, 0.1);
+        g.pairs[0][0].1 = Mat::randn(16, 4, &mut rng);
+        let ad = g.expand(&d);
+        let expected = q.dequant().add(&ad.delta(0, 0));
+
+        g.merge_into(0, 0, &mut q);
+        let merged = q.dequant();
+        assert!(merged.fro_dist(&expected) < 1e-4, "dist={}", merged.fro_dist(&expected));
+    }
+
+    #[test]
+    fn project_expand_identity_on_constrained() {
+        let d = dims();
+        let mut rng = Rng::seed(133);
+        let mut g = GroupedAdapterSet::init_default(&d, 4, &mut rng, 0.1);
+        for f in 0..7 {
+            let (_, ref mut b) = g.pairs[f][0];
+            *b = Mat::randn(b.rows(), 4, &mut rng);
+        }
+        let ad = g.expand(&d);
+        let g2 = GroupedAdapterSet::project(&d, &ad);
+        let ad2 = g2.expand(&d);
+        for f in 0..7 {
+            let (a1, b1) = ad.get(f, 0);
+            let (a2, b2) = ad2.get(f, 0);
+            assert!(a1.fro_dist(a2) < 1e-5);
+            assert!(b1.fro_dist(b2) < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Discrepancy-loss scopes (Fig. 2(b–e) of the paper). The Rust side uses
+//! these to select train-step artifacts and to label experiments; the
+//! actual losses live in `python/compile/model.py::scope_loss` and are
+//! baked into the lowered HLO.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Optimization scope for LQEC adapter tuning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scope {
+    /// Eq. 3 — per-linear output discrepancy (ApiQ-style).
+    Linear,
+    /// Eq. 4 — per-Transformer-layer discrepancy (QLLM-style).
+    Layer,
+    /// Eq. 5 — model-level discrepancy at the final decoder output.
+    Model,
+    /// Eq. 6 — causal-LM ground-truth loss only.
+    Gt,
+    /// RILQ: 0.5·Model + 0.5·GT.
+    ModelGt,
+    /// Table 11 variant: Model-Loss applied at the logits.
+    ModelLogit,
+}
+
+impl Scope {
+    /// All scopes in paper order (Table 7 rows).
+    pub const ALL: [Scope; 6] = [
+        Scope::Linear,
+        Scope::Layer,
+        Scope::Model,
+        Scope::Gt,
+        Scope::ModelGt,
+        Scope::ModelLogit,
+    ];
+
+    /// The artifact-name fragment (`train_step_<cfg>_r<r>_<this>`).
+    pub fn artifact_key(&self) -> &'static str {
+        match self {
+            Scope::Linear => "linear",
+            Scope::Layer => "layer",
+            Scope::Model => "model",
+            Scope::Gt => "gt",
+            Scope::ModelGt => "model_gt",
+            Scope::ModelLogit => "model_logit",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Scope> {
+        Ok(match s {
+            "linear" => Scope::Linear,
+            "layer" => Scope::Layer,
+            "model" => Scope::Model,
+            "gt" => Scope::Gt,
+            "model_gt" | "rilq" => Scope::ModelGt,
+            "model_logit" => Scope::ModelLogit,
+            other => bail!("unknown scope '{other}'"),
+        })
+    }
+
+    /// Human-readable name used in report tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scope::Linear => "Linear-Loss",
+            Scope::Layer => "Layer-Loss",
+            Scope::Model => "Model-Loss",
+            Scope::Gt => "GT-Loss",
+            Scope::ModelGt => "RILQ (Model+GT)",
+            Scope::ModelLogit => "Model-Loss@logits",
+        }
+    }
+}
+
+impl fmt::Display for Scope {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.artifact_key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Scope::ALL {
+            assert_eq!(Scope::parse(s.artifact_key()).unwrap(), s);
+        }
+        assert_eq!(Scope::parse("rilq").unwrap(), Scope::ModelGt);
+        assert!(Scope::parse("bogus").is_err());
+    }
+}

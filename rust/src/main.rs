@@ -1,0 +1,163 @@
+//! `rilq` — Layer-3 coordinator binary.
+//!
+//! ```text
+//! rilq list                         list experiments (paper table/figure map)
+//! rilq experiment <id>|all [--fast] reproduce a paper table/figure -> reports/
+//! rilq pretrain <config> [--steps=N]   pretrain + cache a teacher
+//! rilq eval <config> [--quant=rtn --bits=2 --rank=16 --scope=model_gt]
+//!                                   quantize+compensate+evaluate one cell
+//! rilq inspect                      print manifest / artifact inventory
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use rilq::cli::Args;
+use rilq::experiments::pipeline::Lab;
+use rilq::experiments::{catalog, run_experiment};
+use rilq::lqec::AdapterSet;
+use rilq::runtime::Runtime;
+
+fn main() {
+    init_logger();
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:?}");
+        std::process::exit(1);
+    }
+}
+
+fn artifact_dir(args: &Args) -> String {
+    args.opt("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "list" => {
+            println!("{:<10} {:<22} paper reference", "id", "report");
+            for e in catalog() {
+                println!("{:<10} reports/{:<14} {}", e.id, format!("{}.md", e.id), e.paper_ref);
+            }
+            Ok(())
+        }
+        "inspect" => {
+            let rt = Runtime::new(artifact_dir(args))?;
+            println!("configs:");
+            for (name, d) in &rt.manifest.configs {
+                println!(
+                    "  {name:<6} d={} L={} H={} ff={} V={} seq={} batch={} (~{:.1}M params)",
+                    d.d_model,
+                    d.n_layers,
+                    d.n_heads,
+                    d.d_ff,
+                    d.vocab,
+                    d.seq,
+                    d.batch,
+                    d.params_count() as f64 / 1e6
+                );
+            }
+            println!("artifacts: {}", rt.manifest.artifacts.len());
+            for (name, a) in &rt.manifest.artifacts {
+                println!("  {:<42} {} in / {} out", name, a.inputs.len(), a.outputs.len());
+            }
+            Ok(())
+        }
+        "experiment" => {
+            let id = args.pos(0).ok_or_else(|| anyhow!("usage: rilq experiment <id>|all"))?;
+            let rt = Runtime::new(artifact_dir(args))?;
+            run_experiment(&rt, id, args.flag("fast"))
+        }
+        "pretrain" => {
+            let config = args.pos(0).unwrap_or("small");
+            let rt = Runtime::new(artifact_dir(args))?;
+            let mut lab = Lab::new(&rt);
+            if let Some(steps) = args.opt_usize("steps")? {
+                lab.pretrain_steps_override = Some(steps);
+            }
+            let (dims, _teacher, losses) = lab.teacher(config)?;
+            println!(
+                "pretrained {config} ({:.1}M params): loss {:.3} -> {:.3} over {} steps",
+                dims.params_count() as f64 / 1e6,
+                losses.first().copied().unwrap_or(f32::NAN),
+                losses.last().copied().unwrap_or(f32::NAN),
+                losses.len()
+            );
+            Ok(())
+        }
+        "eval" => {
+            let config = args.pos(0).unwrap_or("small");
+            let quant = args.opt("quant").unwrap_or("rtn");
+            let bits = args.opt_usize("bits")?.unwrap_or(2) as u8;
+            let rank = args.opt_usize("rank")?.unwrap_or(16);
+            let scope = args.opt("scope").unwrap_or("model_gt");
+            let rt = Runtime::new(artifact_dir(args))?;
+            let mut lab = Lab::new(&rt);
+            if args.flag("fast") {
+                lab.calib.max_steps = 60;
+                lab.calib.n_samples = 64;
+                lab.pretrain_steps_override = Some(200);
+            }
+            let (dims, teacher, _) = lab.teacher(config)?;
+            let student = lab.quantize(&dims, &teacher, quant, bits)?;
+
+            let zeros = AdapterSet::zeros(&dims, rank);
+            let sc = lab.student_scorer(&dims, &teacher, &student, &zeros)?;
+            let before = lab.evaluate(&sc, &dims)?;
+            println!(
+                "{quant} W{bits} (no LQEC):  CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
+                before.avg_acc * 100.0,
+                before.ppl_wiki,
+                before.ppl_c4
+            );
+
+            let init = lab.default_adapters(&dims, rank);
+            let (ad, res) =
+                lab.compensate(&dims, &teacher, &student, &init, scope, &format!("{quant}{bits}"))?;
+            let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
+            let after = lab.evaluate(&sc, &dims)?;
+            println!(
+                "{quant} W{bits} + {scope} (r={rank}, {} steps, {:.1}s): CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
+                res.steps,
+                res.wall_secs,
+                after.avg_acc * 100.0,
+                after.ppl_wiki,
+                after.ppl_c4
+            );
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}'\n{HELP}")),
+    }
+}
+
+const HELP: &str = "\
+rilq — RILQ (AAAI 2025) reproduction: rank-insensitive LoRA-based
+quantization error compensation for 2-bit LLMs, on a Rust + JAX + Pallas
+(AOT via PJRT) stack.
+
+USAGE:
+  rilq list                           list all paper-table experiments
+  rilq experiment <id>|all [--fast]   regenerate a table/figure -> reports/
+  rilq pretrain <config> [--steps=N]  pretrain + cache a teacher model
+  rilq eval <config> [--quant=rtn --bits=2 --rank=16 --scope=model_gt] [--fast]
+  rilq inspect                        artifact / config inventory
+  (global) --artifacts=DIR            artifact directory [default: artifacts]
+";
+
+fn init_logger() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::Level::Info
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level().as_str().to_lowercase(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let _ = log::set_logger(&L).map(|_| log::set_max_level(log::LevelFilter::Info));
+}

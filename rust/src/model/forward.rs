@@ -1,0 +1,427 @@
+//! Pure-Rust reference forward pass.
+//!
+//! Mirrors `python/compile/model.py` op-for-op (RMSNorm → RoPE attention →
+//! SwiGLU, residual stream, final norm, LM head) so it can serve as the
+//! numerical oracle for the AOT artifacts (integration tests compare the
+//! two to ~1e-3) and as a PJRT-free evaluation path for quantizer studies.
+
+use crate::tensor::Mat;
+
+use super::{ModelDims, StudentWeights, TeacherParams, LINEARS};
+
+const EPS: f32 = 1e-6;
+
+/// Per-layer activation captures (the teacher-side inputs each linear
+/// family sees; used for Linear-Loss studies and GPTQ calibration).
+#[derive(Clone, Debug)]
+pub struct LayerTrace {
+    /// input to wq/wk/wv: `[S, d]`
+    pub x_attn: Mat,
+    /// input to wo: `[S, d]`
+    pub att: Mat,
+    /// input to wg/wu: `[S, d]`
+    pub x_ffn: Mat,
+    /// input to wd: `[S, f]`
+    pub mid: Mat,
+    /// residual stream after the layer: `[S, d]`
+    pub layer_out: Mat,
+}
+
+/// Full forward trace of one sequence.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub layers: Vec<LayerTrace>,
+    /// post-final-RMSNorm hidden states `[S, d]`
+    pub hidden: Mat,
+    /// `[S, V]`
+    pub logits: Mat,
+}
+
+/// Weight view used by the forward pass, so teacher and (dense-dequantized)
+/// student share one implementation.
+pub struct WeightView<'a> {
+    pub linears: Vec<Vec<&'a Mat>>, // [family][layer]
+    pub embed: &'a Mat,
+    pub ln1: &'a [Vec<f32>],
+    pub ln2: &'a [Vec<f32>],
+    pub fnorm: &'a [f32],
+    pub head: &'a Mat,
+}
+
+impl TeacherParams {
+    pub fn view(&self) -> WeightView<'_> {
+        WeightView {
+            linears: self.linears.iter().map(|ls| ls.iter().collect()).collect(),
+            embed: &self.embed,
+            ln1: &self.ln1,
+            ln2: &self.ln2,
+            fnorm: &self.fnorm,
+            head: &self.head,
+        }
+    }
+
+    /// View with linears replaced by dense student weights
+    /// (`Q_l + L1 L2ᵀ` must be materialized by the caller if adapters are
+    /// in play — see `lqec::adapters::merge_into`).
+    pub fn view_with<'a>(&'a self, dense: &'a [Vec<Mat>]) -> WeightView<'a> {
+        WeightView {
+            linears: dense.iter().map(|ls| ls.iter().collect()).collect(),
+            embed: &self.embed,
+            ln1: &self.ln1,
+            ln2: &self.ln2,
+            fnorm: &self.fnorm,
+            head: &self.head,
+        }
+    }
+}
+
+fn rmsnorm(x: &Mat, g: &[f32]) -> Mat {
+    let mut out = Mat::zeros(x.rows(), x.cols());
+    for r in 0..x.rows() {
+        let row = x.row(r);
+        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        let orow = out.row_mut(r);
+        for c in 0..row.len() {
+            orow[c] = row[c] * inv * g[c];
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RoPE rotation applied in place on a `[S, hd]` head slice.
+/// Pair layout matches python: (even, odd) channel pairs.
+fn apply_rope(x: &mut Mat, hd: usize) {
+    let half = hd / 2;
+    for s in 0..x.rows() {
+        let row = x.row_mut(s);
+        for k in 0..half {
+            let freq = 10000f32.powf(-(2.0 * k as f32) / hd as f32);
+            let ang = s as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let a = row[2 * k];
+            let b = row[2 * k + 1];
+            row[2 * k] = a * cos - b * sin;
+            row[2 * k + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Causal multi-head attention over `[S, d]` projections.
+fn attention(dims: &ModelDims, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let s = q.rows();
+    let (h, hd) = (dims.n_heads, dims.head_dim());
+    let mut out = Mat::zeros(s, dims.d_model);
+    for head in 0..h {
+        // slice head channels
+        let slice = |m: &Mat| -> Mat {
+            Mat::from_fn(s, hd, |r, c| m[(r, head * hd + c)])
+        };
+        let mut qh = slice(q);
+        let mut kh = slice(k);
+        let vh = slice(v);
+        apply_rope(&mut qh, hd);
+        apply_rope(&mut kh, hd);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for i in 0..s {
+            // causal row i attends to 0..=i
+            let qrow = qh.row(i);
+            let mut scores = vec![0.0f32; i + 1];
+            let mut maxs = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let krow = kh.row(j);
+                let dot: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                scores[j] = dot * scale;
+                maxs = maxs.max(scores[j]);
+            }
+            let mut denom = 0.0f32;
+            for sc in &mut scores {
+                *sc = (*sc - maxs).exp();
+                denom += *sc;
+            }
+            let orow = out.row_mut(i);
+            for j in 0..=i {
+                let w = scores[j] / denom;
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow = vh.row(j);
+                for c in 0..hd {
+                    orow[head * hd + c] += w * vrow[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Forward one token sequence through a weight view, capturing activations.
+pub fn forward_trace(dims: &ModelDims, w: &WeightView<'_>, tokens: &[u32]) -> Trace {
+    let s = tokens.len();
+    assert!(s <= dims.seq, "sequence longer than model seq");
+    let fam = |name: &str| LINEARS.iter().position(|&n| n == name).unwrap();
+    let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
+    let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
+
+    let mut h = Mat::from_fn(s, dims.d_model, |r, c| w.embed[(tokens[r] as usize, c)]);
+    let mut layers = Vec::with_capacity(dims.n_layers);
+
+    for l in 0..dims.n_layers {
+        let x1 = rmsnorm(&h, &w.ln1[l]);
+        let q = x1.matmul(w.linears[iq][l]);
+        let k = x1.matmul(w.linears[ik][l]);
+        let v = x1.matmul(w.linears[iv][l]);
+        let att = attention(dims, &q, &k, &v);
+        h = h.add(&att.matmul(w.linears[io][l]));
+        let x2 = rmsnorm(&h, &w.ln2[l]);
+        let mut g = x2.matmul(w.linears[ig][l]);
+        g.map_inplace(silu);
+        let u = x2.matmul(w.linears[iu][l]);
+        let mid = g.zip(&u, |a, b| a * b);
+        h = h.add(&mid.matmul(w.linears[id][l]));
+        layers.push(LayerTrace {
+            x_attn: x1,
+            att,
+            x_ffn: x2,
+            mid,
+            layer_out: h.clone(),
+        });
+    }
+
+    let hidden = rmsnorm(&h, w.fnorm);
+    let logits = hidden.matmul(w.head);
+    Trace { layers, hidden, logits }
+}
+
+/// Log-prob of the realized next token at each position: `[S-1]`.
+pub fn token_logp(logits: &Mat, tokens: &[u32]) -> Vec<f32> {
+    let s = tokens.len();
+    let mut out = Vec::with_capacity(s - 1);
+    for pos in 0..s - 1 {
+        let row = logits.row(pos);
+        let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|&v| (v - maxv).exp()).sum::<f32>().ln() + maxv;
+        out.push(row[tokens[pos + 1] as usize] - lse);
+    }
+    out
+}
+
+/// Mean negative log-likelihood over a sequence.
+pub fn nll(logits: &Mat, tokens: &[u32]) -> f32 {
+    let lp = token_logp(logits, tokens);
+    -lp.iter().sum::<f32>() / lp.len() as f32
+}
+
+/// Calibration statistics collected from teacher traces: per-(family,
+/// layer) `E[x_i²]` and optional raw sample rows for GPTQ Hessians.
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    /// `[family][layer]` -> length-d_in vector
+    pub x_sq_mean: Vec<Vec<Vec<f32>>>,
+    /// `[family][layer]` -> `[n_kept, d_in]` subsampled input rows
+    pub samples: Vec<Vec<Mat>>,
+}
+
+impl CalibStats {
+    /// Run the teacher over calibration sequences, accumulating per-linear
+    /// input statistics. `keep_rows` bounds the stored sample rows per
+    /// linear (Hessian cost is O(d_in²) regardless).
+    pub fn collect(
+        dims: &ModelDims,
+        params: &TeacherParams,
+        seqs: &[Vec<u32>],
+        keep_rows: usize,
+    ) -> CalibStats {
+        let view = params.view();
+        let nfam = LINEARS.len();
+        let mut sums: Vec<Vec<Vec<f64>>> = (0..nfam)
+            .map(|f| {
+                let (di, _) = dims.linear_dims(LINEARS[f]);
+                vec![vec![0.0; di]; dims.n_layers]
+            })
+            .collect();
+        let mut counts = vec![vec![0usize; dims.n_layers]; nfam];
+        let mut kept: Vec<Vec<Vec<f32>>> = (0..nfam)
+            .map(|_| vec![Vec::new(); dims.n_layers])
+            .collect();
+        let mut kept_rows = vec![vec![0usize; dims.n_layers]; nfam];
+
+        for seq in seqs {
+            let trace = forward_trace(dims, &view, seq);
+            for (l, lt) in trace.layers.iter().enumerate() {
+                let inputs: [(usize, &Mat); 7] = [
+                    (0, &lt.x_attn),
+                    (1, &lt.x_attn),
+                    (2, &lt.x_attn),
+                    (3, &lt.att),
+                    (4, &lt.x_ffn),
+                    (5, &lt.x_ffn),
+                    (6, &lt.mid),
+                ];
+                for (f, x) in inputs {
+                    for r in 0..x.rows() {
+                        let row = x.row(r);
+                        for (i, &v) in row.iter().enumerate() {
+                            sums[f][l][i] += (v * v) as f64;
+                        }
+                        counts[f][l] += 1;
+                        if kept_rows[f][l] < keep_rows {
+                            kept[f][l].extend_from_slice(row);
+                            kept_rows[f][l] += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        let x_sq_mean = sums
+            .iter()
+            .enumerate()
+            .map(|(f, per_layer)| {
+                per_layer
+                    .iter()
+                    .enumerate()
+                    .map(|(l, s)| {
+                        let n = counts[f][l].max(1) as f64;
+                        s.iter().map(|&v| (v / n) as f32).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let samples = kept
+            .into_iter()
+            .enumerate()
+            .map(|(f, per_layer)| {
+                let (di, _) = dims.linear_dims(LINEARS[f]);
+                per_layer
+                    .into_iter()
+                    .enumerate()
+                    .map(|(l, buf)| Mat::from_vec(kept_rows[f][l], di, buf))
+                    .collect()
+            })
+            .collect();
+        CalibStats { x_sq_mean, samples }
+    }
+}
+
+/// Materialize dense student weights with merged adapters:
+/// `W_eff[f][l] = Q[f][l] + A[f][l] · B[f][l]ᵀ` (adapters optional).
+pub fn effective_weights(
+    student: &StudentWeights,
+    adapters: Option<&crate::lqec::AdapterSet>,
+) -> Vec<Vec<Mat>> {
+    let mut dense = student.dense();
+    if let Some(ad) = adapters {
+        for f in 0..dense.len() {
+            for l in 0..dense[f].len() {
+                let (a, b) = ad.get(f, l);
+                let delta = a.matmul(&b.t());
+                dense[f][l] = dense[f][l].add(&delta);
+            }
+        }
+    }
+    dense
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "unit".into(),
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 32,
+            seq: 12,
+            batch: 2,
+            group_size: 8,
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let d = dims();
+        let mut rng = Rng::seed(101);
+        let p = TeacherParams::init(&d, &mut rng);
+        let tokens: Vec<u32> = (0..10).map(|_| rng.below(32) as u32).collect();
+        let t = forward_trace(&d, &p.view(), &tokens);
+        assert_eq!(t.layers.len(), 2);
+        assert_eq!(t.hidden.shape(), (10, 16));
+        assert_eq!(t.logits.shape(), (10, 32));
+        assert_eq!(t.layers[0].mid.shape(), (10, 32));
+    }
+
+    #[test]
+    fn logp_is_normalized() {
+        let d = dims();
+        let mut rng = Rng::seed(102);
+        let p = TeacherParams::init(&d, &mut rng);
+        let tokens: Vec<u32> = (0..8).map(|_| rng.below(32) as u32).collect();
+        let t = forward_trace(&d, &p.view(), &tokens);
+        // sum over vocab of exp(logp) at each position == 1
+        for pos in 0..7 {
+            let row = t.logits.row(pos);
+            let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = row.iter().map(|&v| (v - maxv).exp()).sum();
+            assert!(z.is_finite() && z > 0.0);
+        }
+        let lp = token_logp(&t.logits, &tokens);
+        assert_eq!(lp.len(), 7);
+        assert!(lp.iter().all(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position i must not depend on tokens after i
+        let d = dims();
+        let mut rng = Rng::seed(103);
+        let p = TeacherParams::init(&d, &mut rng);
+        let t1: Vec<u32> = (0..10).map(|_| rng.below(32) as u32).collect();
+        let mut t2 = t1.clone();
+        t2[9] = (t2[9] + 1) % 32;
+        let a = forward_trace(&d, &p.view(), &t1);
+        let b = forward_trace(&d, &p.view(), &t2);
+        for pos in 0..9 {
+            let ra = a.logits.row(pos);
+            let rb = b.logits.row(pos);
+            for c in 0..32 {
+                assert!((ra[c] - rb[c]).abs() < 1e-5, "pos {pos} leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::seed(104);
+        let mut x = Mat::randn(6, 8, &mut rng);
+        let before: Vec<f32> = (0..6).map(|r| x.row(r).iter().map(|v| v * v).sum()).collect();
+        apply_rope(&mut x, 8);
+        for r in 0..6 {
+            let after: f32 = x.row(r).iter().map(|v| v * v).sum();
+            assert!((after - before[r]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn calib_stats_shapes() {
+        let d = dims();
+        let mut rng = Rng::seed(105);
+        let p = TeacherParams::init(&d, &mut rng);
+        let seqs: Vec<Vec<u32>> =
+            (0..3).map(|_| (0..8).map(|_| rng.below(32) as u32).collect()).collect();
+        let cs = CalibStats::collect(&d, &p, &seqs, 16);
+        assert_eq!(cs.x_sq_mean.len(), 7);
+        assert_eq!(cs.x_sq_mean[6][0].len(), 32); // wd has d_in = d_ff
+        assert_eq!(cs.samples[0][0].cols(), 16);
+        assert!(cs.samples[0][0].rows() <= 16);
+        assert!(cs.x_sq_mean[0][0].iter().all(|&v| v >= 0.0));
+    }
+}

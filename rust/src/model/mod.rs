@@ -1,0 +1,306 @@
+//! The simulated LLaMA-style model substrate on the Rust side:
+//!
+//! * [`ModelDims`] — static geometry, parsed from `artifacts/manifest.json`
+//!   so Rust and the AOT-lowered HLO can never disagree;
+//! * [`TeacherParams`] / [`StudentWeights`] — parameter containers whose
+//!   flattening order matches the artifact argument lists;
+//! * [`forward`] — a pure-Rust reference forward pass (test oracle for the
+//!   HLO artifacts + native evaluation path for quantizer studies that
+//!   don't need PJRT);
+//! * [`weights`] — binary checkpoint IO for run caching.
+
+pub mod forward;
+pub mod weights;
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::{CalibCtx, QuantResult, Quantizer};
+use crate::report::Json;
+use crate::tensor::{Mat, Rng};
+
+/// The seven quantized linear families, in canonical (artifact) order.
+/// Matches `python/compile/model.py::LINEARS`.
+pub const LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+/// Static model geometry (mirrors `python/compile/configs.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub group_size: usize,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// `(d_in, d_out)` of a linear family.
+    pub fn linear_dims(&self, name: &str) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.d_ff);
+        match name {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "wg" | "wu" => (d, f),
+            "wd" => (f, d),
+            other => panic!("unknown linear family {other}"),
+        }
+    }
+
+    pub fn params_count(&self) -> usize {
+        let (d, f, v, l) = (self.d_model, self.d_ff, self.vocab, self.n_layers);
+        v * d + l * (4 * d * d + 3 * d * f + 2 * d) + d + d * v
+    }
+
+    /// Parse from a manifest `configs.<name>` object.
+    pub fn from_json(j: &Json) -> Result<ModelDims> {
+        Ok(ModelDims {
+            name: j.str_of("name")?.to_string(),
+            d_model: j.usize_of("d_model")?,
+            n_layers: j.usize_of("n_layers")?,
+            n_heads: j.usize_of("n_heads")?,
+            d_ff: j.usize_of("d_ff")?,
+            vocab: j.usize_of("vocab")?,
+            seq: j.usize_of("seq")?,
+            batch: j.usize_of("batch")?,
+            group_size: j.usize_of("group_size")?,
+        })
+    }
+}
+
+/// Full-precision teacher parameters. Per-layer weights are kept as one
+/// `Mat` per layer; `stacked()` produces the `[L, ...]` flat buffers the
+/// artifacts take.
+#[derive(Clone, Debug)]
+pub struct TeacherParams {
+    pub embed: Mat,            // [V, d]
+    /// indexed `[linear_family][layer]`, each `[d_in, d_out]`
+    pub linears: Vec<Vec<Mat>>,
+    pub ln1: Vec<Vec<f32>>,    // [L][d]
+    pub ln2: Vec<Vec<f32>>,    // [L][d]
+    pub fnorm: Vec<f32>,       // [d]
+    pub head: Mat,             // [d, V]
+}
+
+impl TeacherParams {
+    /// He-style random init (the coordinator pretrains from this).
+    pub fn init(dims: &ModelDims, rng: &mut Rng) -> TeacherParams {
+        let scaled = |r: usize, c: usize, rng: &mut Rng| {
+            let std = (2.0 / r as f32).sqrt() * 0.5;
+            Mat::randn(r, c, rng).scale(std)
+        };
+        let mut linears = Vec::new();
+        for name in LINEARS {
+            let (di, do_) = dims.linear_dims(name);
+            linears.push((0..dims.n_layers).map(|_| scaled(di, do_, rng)).collect());
+        }
+        TeacherParams {
+            embed: scaled(dims.vocab, dims.d_model, rng),
+            linears,
+            ln1: vec![vec![1.0; dims.d_model]; dims.n_layers],
+            ln2: vec![vec![1.0; dims.d_model]; dims.n_layers],
+            fnorm: vec![1.0; dims.d_model],
+            head: scaled(dims.d_model, dims.vocab, rng),
+        }
+    }
+
+    pub fn linear(&self, family: usize, layer: usize) -> &Mat {
+        &self.linears[family][layer]
+    }
+
+    pub fn linear_by_name(&self, name: &str, layer: usize) -> &Mat {
+        let idx = LINEARS.iter().position(|&n| n == name).expect("family");
+        &self.linears[idx][layer]
+    }
+
+    /// Flat `[L, d_in, d_out]` buffer for one family (artifact layout).
+    pub fn stacked_linear(&self, family: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.linears[family] {
+            out.extend_from_slice(l.data());
+        }
+        out
+    }
+
+    /// Flat `[L, d]` buffer for ln1/ln2.
+    pub fn stacked_norm(norms: &[Vec<f32>]) -> Vec<f32> {
+        norms.iter().flat_map(|v| v.iter().copied()).collect()
+    }
+
+    /// All teacher tensors in artifact order:
+    /// embed, wq..wd, ln1, ln2, fnorm, head (shapes implied by dims).
+    pub fn to_flat(&self) -> Vec<Vec<f32>> {
+        let mut out = vec![self.embed.data().to_vec()];
+        for f in 0..LINEARS.len() {
+            out.push(self.stacked_linear(f));
+        }
+        out.push(Self::stacked_norm(&self.ln1));
+        out.push(Self::stacked_norm(&self.ln2));
+        out.push(self.fnorm.clone());
+        out.push(self.head.data().to_vec());
+        out
+    }
+
+    /// Inverse of [`to_flat`].
+    pub fn from_flat(dims: &ModelDims, flat: &[Vec<f32>]) -> Result<TeacherParams> {
+        if flat.len() != 12 {
+            return Err(anyhow!("expected 12 teacher tensors, got {}", flat.len()));
+        }
+        let l = dims.n_layers;
+        let d = dims.d_model;
+        let embed = Mat::from_vec(dims.vocab, d, flat[0].clone());
+        let mut linears = Vec::new();
+        for (f, name) in LINEARS.iter().enumerate() {
+            let (di, do_) = dims.linear_dims(name);
+            let buf = &flat[1 + f];
+            let per = di * do_;
+            let mats = (0..l)
+                .map(|i| Mat::from_vec(di, do_, buf[i * per..(i + 1) * per].to_vec()))
+                .collect();
+            linears.push(mats);
+        }
+        let unstack = |buf: &[f32]| -> Vec<Vec<f32>> {
+            (0..l).map(|i| buf[i * d..(i + 1) * d].to_vec()).collect()
+        };
+        Ok(TeacherParams {
+            embed,
+            linears,
+            ln1: unstack(&flat[8]),
+            ln2: unstack(&flat[9]),
+            fnorm: flat[10].clone(),
+            head: Mat::from_vec(d, dims.vocab, flat[11].clone()),
+        })
+    }
+}
+
+/// Quantized student weights: one [`QuantResult`] per (family, layer).
+#[derive(Clone, Debug)]
+pub struct StudentWeights {
+    /// indexed `[family][layer]`
+    pub q: Vec<Vec<QuantResult>>,
+    pub quantizer: String,
+    pub bits: u8,
+}
+
+impl StudentWeights {
+    /// Quantize every linear of the teacher. `calib` optionally supplies a
+    /// per-(family, layer) calibration context builder.
+    pub fn quantize(
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        quantizer: &dyn Quantizer,
+        calib: &(dyn Fn(usize, usize) -> CalibCtx + Sync),
+    ) -> StudentWeights {
+        // each (family, layer) quantizes independently — parallel map
+        let l = dims.n_layers;
+        let cells = LINEARS.len() * l;
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let flat = crate::tensor::parallel_map(cells, workers, |i| {
+            let (f, li) = (i / l, i % l);
+            quantizer.quantize(teacher.linear(f, li), &calib(f, li))
+        });
+        let mut q: Vec<Vec<QuantResult>> = (0..LINEARS.len()).map(|_| Vec::new()).collect();
+        for (i, r) in flat.into_iter().enumerate() {
+            q[i / l].push(r);
+        }
+        StudentWeights { q, quantizer: quantizer.name().to_string(), bits: quantizer.bits() }
+    }
+
+    /// Dense dequantized weights as flat stacked buffers (artifact layout,
+    /// one `[L, d_in, d_out]` buffer per family).
+    pub fn to_flat_dense(&self) -> Vec<Vec<f32>> {
+        self.q
+            .iter()
+            .map(|layers| {
+                let mut buf = Vec::new();
+                for qr in layers {
+                    buf.extend_from_slice(qr.dequant().data());
+                }
+                buf
+            })
+            .collect()
+    }
+
+    /// Dense per-layer matrices for the reference forward.
+    pub fn dense(&self) -> Vec<Vec<Mat>> {
+        self.q.iter().map(|ls| ls.iter().map(|q| q.dequant()).collect()).collect()
+    }
+
+    /// Total packed storage in bytes (memory-cost analysis).
+    pub fn storage_bytes(&self) -> usize {
+        self.q.iter().flatten().map(|q| q.storage_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Rtn;
+
+    pub fn tiny_dims() -> ModelDims {
+        ModelDims {
+            name: "unit".into(),
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 32,
+            seq: 12,
+            batch: 2,
+            group_size: 8,
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let dims = tiny_dims();
+        let mut rng = Rng::seed(91);
+        let p = TeacherParams::init(&dims, &mut rng);
+        let flat = p.to_flat();
+        assert_eq!(flat.len(), 12);
+        let p2 = TeacherParams::from_flat(&dims, &flat).unwrap();
+        assert!(p.embed.fro_dist(&p2.embed) < 1e-7);
+        assert!(p.linear(6, 1).fro_dist(p2.linear(6, 1)) < 1e-7);
+        assert_eq!(p.ln2, p2.ln2);
+    }
+
+    #[test]
+    fn params_count_matches() {
+        let dims = tiny_dims();
+        let mut rng = Rng::seed(92);
+        let p = TeacherParams::init(&dims, &mut rng);
+        let total: usize = p.to_flat().iter().map(|b| b.len()).sum();
+        assert_eq!(total, dims.params_count());
+    }
+
+    #[test]
+    fn quantize_all_linears() {
+        let dims = tiny_dims();
+        let mut rng = Rng::seed(93);
+        let p = TeacherParams::init(&dims, &mut rng);
+        let q = Rtn::new(2, 8);
+        let sw = StudentWeights::quantize(&dims, &p, &q, &|_, _| CalibCtx::default());
+        assert_eq!(sw.q.len(), 7);
+        assert_eq!(sw.q[0].len(), 2);
+        let flat = sw.to_flat_dense();
+        assert_eq!(flat[0].len(), 2 * 16 * 16);
+        assert_eq!(flat[6].len(), 2 * 32 * 16);
+    }
+
+    #[test]
+    fn dims_from_json() {
+        let j = Json::parse(
+            r#"{"name":"x","d_model":8,"n_layers":1,"n_heads":2,"d_ff":16,
+                "vocab":32,"seq":8,"batch":2,"group_size":4}"#,
+        )
+        .unwrap();
+        let d = ModelDims::from_json(&j).unwrap();
+        assert_eq!(d.head_dim(), 4);
+        assert_eq!(d.linear_dims("wd"), (16, 8));
+    }
+}

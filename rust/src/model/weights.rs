@@ -1,0 +1,132 @@
+//! Binary checkpoint IO: a tiny named-tensor container used to cache
+//! pretrained teachers, quantized students and tuned adapters under
+//! `runs/<key>/`. Format (little-endian):
+//!
+//! ```text
+//! magic "RILQWT01" | u32 count | count x { u32 name_len | name bytes |
+//!                                          u32 ndims | u64 dims[ndims] |
+//!                                          f32 data[prod(dims)] }
+//! ```
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+const MAGIC: &[u8; 8] = b"RILQWT01";
+
+/// An ordered named-tensor container.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl TensorFile {
+    pub fn new() -> TensorFile {
+        TensorFile::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) {
+        let n: usize = dims.iter().product();
+        assert_eq!(n, data.len(), "dims/data mismatch");
+        self.tensors.insert(name.into(), (dims, data));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&(Vec<usize>, Vec<f32>)> {
+        self.tensors.get(name)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, (dims, data)) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(dims.len() as u32).to_le_bytes())?;
+            for &d in dims {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // bulk write of the f32 payload
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TensorFile> {
+        let mut r = BufReader::new(File::open(path.as_ref())?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic in {:?}", path.as_ref());
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut tf = TensorFile::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let ndims = read_u32(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                dims.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tf.insert(String::from_utf8(name)?, dims, data);
+        }
+        Ok(tf)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("rilq_test_weights");
+        let path = dir.join("t.bin");
+        let mut tf = TensorFile::new();
+        tf.insert("a", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        tf.insert("b.c", vec![4], vec![0.5; 4]);
+        tf.save(&path).unwrap();
+        let tf2 = TensorFile::load(&path).unwrap();
+        assert_eq!(tf2.tensors.len(), 2);
+        let (dims, data) = tf2.get("a").unwrap();
+        assert_eq!(dims, &vec![2, 3]);
+        assert_eq!(data[5], 6.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("rilq_test_weights2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTAFILE").unwrap();
+        assert!(TensorFile::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,219 @@
+//! Weight quantizers — every quantization substrate the paper evaluates
+//! RILQ on top of, reimplemented from scratch:
+//!
+//! * [`rtn`] — round-to-nearest uniform quantization (Eq. 1 with γ=β=1)
+//! * [`normalfloat`] — QLoRA/LoftQ NormalFloat NF2/NF3/NF4 codebooks
+//! * [`omniquant`] — OmniQuant-style learnable clipping (γ, β searched per
+//!   group against an activation-weighted reconstruction objective)
+//! * [`gptq`] — GPTQ Hessian-aware column-sequential rounding
+//! * [`quarot`] — QuaRot-style randomized (block-)Hadamard rotation
+//!   wrapping GPTQ
+//! * [`vq`] — QuIP#-style codebook vector quantizer (incoherence rotation +
+//!   k-means-learned 4-d codebook)
+//!
+//! All quantizers consume a weight matrix in the `[d_in, d_out]` (x @ W)
+//! convention and produce a [`QuantResult`]: either a scalar-codebook
+//! [`QuantizedTensor`] (packable for the W2A16 serving path and expressible
+//! in the shared `zero + scale * codebook[code]` dequant form that the
+//! Pallas kernel implements) or an effective dense matrix (rotation / VQ
+//! methods whose dequant is not per-scalar).
+
+pub mod gptq;
+pub mod normalfloat;
+pub mod omniquant;
+pub mod packing;
+pub mod quarot;
+pub mod rtn;
+pub mod vq;
+
+use crate::tensor::Mat;
+
+pub use gptq::Gptq;
+pub use normalfloat::NormalFloat;
+pub use omniquant::OmniQuant;
+pub use packing::{pack_codes, unpack_codes, PackedTensor};
+pub use quarot::QuaRot;
+pub use rtn::Rtn;
+pub use vq::VectorQuant;
+
+/// Scalar-codebook quantized tensor in the shared dequant form
+/// `w[i,j] = zeros[g,j] + scales[g,j] * codebook[codes[i,j]]`,
+/// `g = i / group_size`. Matches `python/compile/kernels/ref.py`.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    /// one code per weight, row-major `[d_in, d_out]`, values `< 2^bits`
+    pub codes: Vec<u8>,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub bits: u8,
+    pub group_size: usize,
+    /// `[d_in/group_size, d_out]`
+    pub scales: Mat,
+    /// `[d_in/group_size, d_out]`
+    pub zeros: Mat,
+    /// `[2^bits]`
+    pub codebook: Vec<f32>,
+}
+
+impl QuantizedTensor {
+    /// Dense dequantization.
+    pub fn dequant(&self) -> Mat {
+        let g = self.group_size;
+        let mut w = Mat::zeros(self.d_in, self.d_out);
+        for i in 0..self.d_in {
+            let gi = i / g;
+            let srow = self.scales.row(gi);
+            let zrow = self.zeros.row(gi);
+            let wrow = w.row_mut(i);
+            let crow = &self.codes[i * self.d_out..(i + 1) * self.d_out];
+            for j in 0..self.d_out {
+                wrow[j] = zrow[j] + srow[j] * self.codebook[crow[j] as usize];
+            }
+        }
+        w
+    }
+
+    /// Bit-pack the codes along `d_in` (see [`packing`]).
+    pub fn pack(&self) -> PackedTensor {
+        pack_codes(&self.codes, self.d_in, self.d_out, self.bits)
+    }
+
+    /// Serialized size in bytes of the quantized representation
+    /// (packed codes + group metadata), for the memory-cost analysis.
+    pub fn storage_bytes(&self) -> usize {
+        let code_bits = self.d_in * self.d_out * self.bits as usize;
+        let meta = 2 * (self.d_in / self.group_size) * self.d_out * 4;
+        code_bits / 8 + meta + self.codebook.len() * 4
+    }
+}
+
+/// Output of a quantizer.
+#[derive(Clone, Debug)]
+pub enum QuantResult {
+    /// Scalar-codebook form (RTN, NF, OmniQuant, GPTQ): packable.
+    Scalar(QuantizedTensor),
+    /// Only an effective dense matrix is available (QuaRot, VQ): the
+    /// rotation / vector codebook has been folded in.
+    Dense { w: Mat, bits: u8, storage_bytes: usize },
+}
+
+impl QuantResult {
+    pub fn dequant(&self) -> Mat {
+        match self {
+            QuantResult::Scalar(q) => q.dequant(),
+            QuantResult::Dense { w, .. } => w.clone(),
+        }
+    }
+
+    pub fn bits(&self) -> u8 {
+        match self {
+            QuantResult::Scalar(q) => q.bits,
+            QuantResult::Dense { bits, .. } => *bits,
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            QuantResult::Scalar(q) => q.storage_bytes(),
+            QuantResult::Dense { storage_bytes, .. } => *storage_bytes,
+        }
+    }
+
+    pub fn as_scalar(&self) -> Option<&QuantizedTensor> {
+        match self {
+            QuantResult::Scalar(q) => Some(q),
+            _ => None,
+        }
+    }
+}
+
+/// Calibration context handed to quantizers that are activation-aware.
+#[derive(Clone, Debug, Default)]
+pub struct CalibCtx {
+    /// `E[x_i^2]` per input dim (diagonal Hessian proxy), length `d_in`.
+    pub x_sq_mean: Option<Vec<f32>>,
+    /// Raw calibration activations `[n_samples, d_in]` (GPTQ Hessian).
+    pub x_samples: Option<Mat>,
+    /// Seed for stochastic quantizers (rotations, k-means init).
+    pub seed: u64,
+}
+
+impl CalibCtx {
+    pub fn with_seed(seed: u64) -> CalibCtx {
+        CalibCtx { seed, ..Default::default() }
+    }
+
+    /// Diagonal Hessian proxy, defaulting to all-ones when no calibration
+    /// data is attached.
+    pub fn diag_h(&self, d_in: usize) -> Vec<f32> {
+        if let Some(d) = &self.x_sq_mean {
+            assert_eq!(d.len(), d_in);
+            return d.clone();
+        }
+        if let Some(x) = &self.x_samples {
+            assert_eq!(x.cols(), d_in);
+            let n = x.rows().max(1) as f32;
+            let mut d = vec![0.0f32; d_in];
+            for r in 0..x.rows() {
+                let row = x.row(r);
+                for (j, &v) in row.iter().enumerate() {
+                    d[j] += v * v / n;
+                }
+            }
+            return d;
+        }
+        vec![1.0; d_in]
+    }
+}
+
+/// The quantizer interface every method implements.
+pub trait Quantizer: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn bits(&self) -> u8;
+    fn quantize(&self, w: &Mat, ctx: &CalibCtx) -> QuantResult;
+
+    /// Quantization error `‖W − Q‖_F` (Fig. 3(b) metric).
+    fn weight_discrepancy(&self, w: &Mat, ctx: &CalibCtx) -> f32 {
+        self.quantize(w, ctx).dequant().fro_dist(w)
+    }
+}
+
+/// Registry used by the CLI / experiment runner.
+pub fn by_name(name: &str, bits: u8, group_size: usize) -> Option<Box<dyn Quantizer>> {
+    match name {
+        "rtn" => Some(Box::new(Rtn::new(bits, group_size))),
+        "nf" | "normalfloat" | "loftq-base" => {
+            Some(Box::new(NormalFloat::new(bits, group_size)))
+        }
+        "omniquant" => Some(Box::new(OmniQuant::new(bits, group_size))),
+        "gptq" => Some(Box::new(Gptq::new(bits, group_size))),
+        "quarot" => Some(Box::new(QuaRot::new(bits, group_size))),
+        "quip" | "vq" => Some(Box::new(VectorQuant::new(bits))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn registry_resolves_all() {
+        for name in ["rtn", "nf", "omniquant", "gptq", "quarot", "vq"] {
+            assert!(by_name(name, 2, 32).is_some(), "{name}");
+        }
+        assert!(by_name("nope", 2, 32).is_none());
+    }
+
+    #[test]
+    fn storage_bytes_scale_with_bits() {
+        let mut rng = Rng::seed(5);
+        let w = Mat::randn(64, 32, &mut rng);
+        let q2 = Rtn::new(2, 32).quantize(&w, &CalibCtx::default());
+        let q4 = Rtn::new(4, 32).quantize(&w, &CalibCtx::default());
+        assert!(q4.storage_bytes() > q2.storage_bytes());
+        // packed codes dominate: 2-bit ≈ d_in*d_out/4 bytes
+        assert!(q2.storage_bytes() >= 64 * 32 / 4);
+    }
+}

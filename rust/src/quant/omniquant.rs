@@ -1,0 +1,153 @@
+//! OmniQuant-style quantizer: uniform grid with *learnable weight clipping*
+//! (the γ/β of Eq. 1). The original learns clip strengths by SGD on a
+//! block-wise reconstruction loss; at simulation scale an exhaustive
+//! coordinate search over a (γ, β) grid against an activation-weighted
+//! reconstruction objective reaches the same optimum class (the search
+//! space per (group, column) is tiny and the objective is piecewise
+//! smooth). The activation weighting uses the diagonal Hessian proxy
+//! `E[x_i²]` from the calibration context — the same signal OmniQuant's
+//! block loss provides.
+
+use super::rtn::quantize_uniform;
+use super::{CalibCtx, QuantResult, QuantizedTensor, Quantizer};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct OmniQuant {
+    pub bits: u8,
+    pub group_size: usize,
+    /// candidate clip strengths searched for both γ and β
+    pub grid: Vec<f32>,
+}
+
+impl OmniQuant {
+    pub fn new(bits: u8, group_size: usize) -> OmniQuant {
+        OmniQuant {
+            bits,
+            group_size,
+            grid: vec![0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.00],
+        }
+    }
+}
+
+impl Quantizer for OmniQuant {
+    fn name(&self) -> &'static str {
+        "omniquant"
+    }
+
+    fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn quantize(&self, w: &Mat, ctx: &CalibCtx) -> QuantResult {
+        let (d_in, d_out) = w.shape();
+        assert!(d_in % self.group_size == 0);
+        let n_groups = d_in / self.group_size;
+        let diag_h = ctx.diag_h(d_in);
+        let levels = ((1u32 << self.bits) - 1) as f32;
+
+        // Per-(group, column) best clip pair.
+        let mut best_gamma = Mat::full(n_groups, d_out, 1.0);
+        let mut best_beta = Mat::full(n_groups, d_out, 1.0);
+
+        for g in 0..n_groups {
+            let r0 = g * self.group_size;
+            for j in 0..d_out {
+                let mut wmin = f32::INFINITY;
+                let mut wmax = f32::NEG_INFINITY;
+                for i in r0..r0 + self.group_size {
+                    let v = w[(i, j)];
+                    wmin = wmin.min(v);
+                    wmax = wmax.max(v);
+                }
+                let mut best = f32::INFINITY;
+                for &gam in &self.grid {
+                    for &bet in &self.grid {
+                        let hi = gam * wmax;
+                        let lo = bet * wmin;
+                        let s = ((hi - lo) / levels).max(1e-9);
+                        // weighted reconstruction error of this clip pair
+                        let mut err = 0.0f32;
+                        for i in r0..r0 + self.group_size {
+                            let v = w[(i, j)];
+                            let c = ((v - lo) / s).round().clamp(0.0, levels);
+                            let d = v - (lo + c * s);
+                            err += diag_h[i] * d * d;
+                        }
+                        if err < best {
+                            best = err;
+                            best_gamma[(g, j)] = gam;
+                            best_beta[(g, j)] = bet;
+                        }
+                    }
+                }
+            }
+        }
+
+        let gb = |g: usize, j: usize| (best_gamma[(g, j)], best_beta[(g, j)]);
+        let q: QuantizedTensor = quantize_uniform(w, self.bits, self.group_size, Some(&gb));
+        QuantResult::Scalar(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Rtn;
+    use crate::tensor::Rng;
+
+    /// OmniQuant's whole point: with outliers present, learned clipping
+    /// beats γ=β=1 RTN.
+    #[test]
+    fn clipping_beats_rtn_with_outliers() {
+        let mut rng = Rng::seed(51);
+        let mut w = Mat::randn(128, 32, &mut rng);
+        // inject sparse outliers (3% of entries, 8x scale)
+        for _ in 0..(128 * 32) / 32 {
+            let i = rng.below(128);
+            let j = rng.below(32);
+            w[(i, j)] *= 8.0;
+        }
+        let ctx = CalibCtx::default();
+        let e_omni = OmniQuant::new(2, 64).quantize(&w, &ctx).dequant().fro_dist(&w);
+        let e_rtn = Rtn::new(2, 64).quantize(&w, &ctx).dequant().fro_dist(&w);
+        assert!(e_omni < e_rtn, "omni={e_omni} rtn={e_rtn}");
+    }
+
+    #[test]
+    fn activation_weighting_prefers_hot_dims() {
+        // With a hot input dim, the weighted objective should sacrifice
+        // accuracy on cold dims: weighted error must be <= the error of the
+        // unweighted search evaluated under the same weighting.
+        let mut rng = Rng::seed(52);
+        let mut w = Mat::randn(64, 8, &mut rng);
+        for j in 0..8 {
+            w[(0, j)] *= 6.0; // outlier in the hot dim
+        }
+        let mut hot = vec![1.0f32; 64];
+        hot[0] = 100.0;
+        let ctx_hot = CalibCtx { x_sq_mean: Some(hot.clone()), ..Default::default() };
+        let ctx_flat = CalibCtx::default();
+        let q_hot = OmniQuant::new(2, 64).quantize(&w, &ctx_hot).dequant();
+        let q_flat = OmniQuant::new(2, 64).quantize(&w, &ctx_flat).dequant();
+        let weighted = |q: &Mat| -> f32 {
+            let mut e = 0.0;
+            for i in 0..64 {
+                for j in 0..8 {
+                    let d = q[(i, j)] - w[(i, j)];
+                    e += hot[i] * d * d;
+                }
+            }
+            e
+        };
+        assert!(weighted(&q_hot) <= weighted(&q_flat) + 1e-4);
+    }
+
+    #[test]
+    fn produces_scalar_form() {
+        let mut rng = Rng::seed(53);
+        let w = Mat::randn(64, 8, &mut rng);
+        let q = OmniQuant::new(2, 32).quantize(&w, &CalibCtx::default());
+        assert!(q.as_scalar().is_some());
+    }
+}

@@ -1,0 +1,172 @@
+//! Bit-packing of quantization codes.
+//!
+//! Must stay bit-for-bit compatible with `python/compile/kernels/ref.py`:
+//! codes are packed along the `d_in` axis, little-endian within each byte
+//! (code *i* of a byte sits at bit position `i * bits`). 2-bit packs 4
+//! codes/byte, 4-bit packs 2 codes/byte; 3-bit stays one code per byte
+//! (cross-byte straddling isn't worth it at simulation scale — documented
+//! in DESIGN.md).
+
+/// A packed code matrix plus its logical geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    /// row-major `[packed_rows, d_out]`
+    pub data: Vec<u8>,
+    pub packed_rows: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub bits: u8,
+}
+
+/// Number of packed rows for a given `d_in` and bit width.
+pub fn packed_rows(d_in: usize, bits: u8) -> usize {
+    match bits {
+        2 => {
+            assert!(d_in % 4 == 0, "2-bit packing needs d_in % 4 == 0");
+            d_in / 4
+        }
+        4 => {
+            assert!(d_in % 2 == 0, "4-bit packing needs d_in % 2 == 0");
+            d_in / 2
+        }
+        3 => d_in,
+        b => panic!("unsupported bits={b}"),
+    }
+}
+
+/// Pack codes (`[d_in, d_out]` row-major, one code per byte) along `d_in`.
+pub fn pack_codes(codes: &[u8], d_in: usize, d_out: usize, bits: u8) -> PackedTensor {
+    assert_eq!(codes.len(), d_in * d_out);
+    let rows = packed_rows(d_in, bits);
+    let mut data = vec![0u8; rows * d_out];
+    match bits {
+        2 => {
+            for pr in 0..rows {
+                for j in 0..d_out {
+                    let mut byte = 0u8;
+                    for k in 0..4 {
+                        let c = codes[(pr * 4 + k) * d_out + j];
+                        debug_assert!(c < 4);
+                        byte |= c << (2 * k);
+                    }
+                    data[pr * d_out + j] = byte;
+                }
+            }
+        }
+        4 => {
+            for pr in 0..rows {
+                for j in 0..d_out {
+                    let lo = codes[(pr * 2) * d_out + j];
+                    let hi = codes[(pr * 2 + 1) * d_out + j];
+                    debug_assert!(lo < 16 && hi < 16);
+                    data[pr * d_out + j] = lo | (hi << 4);
+                }
+            }
+        }
+        3 => data.copy_from_slice(codes),
+        _ => unreachable!(),
+    }
+    PackedTensor { data, packed_rows: rows, d_in, d_out, bits }
+}
+
+/// Unpack back to one code per byte, `[d_in, d_out]` row-major.
+pub fn unpack_codes(p: &PackedTensor) -> Vec<u8> {
+    let mut codes = vec![0u8; p.d_in * p.d_out];
+    match p.bits {
+        2 => {
+            for pr in 0..p.packed_rows {
+                for j in 0..p.d_out {
+                    let byte = p.data[pr * p.d_out + j];
+                    for k in 0..4 {
+                        codes[(pr * 4 + k) * p.d_out + j] = (byte >> (2 * k)) & 0x3;
+                    }
+                }
+            }
+        }
+        4 => {
+            for pr in 0..p.packed_rows {
+                for j in 0..p.d_out {
+                    let byte = p.data[pr * p.d_out + j];
+                    codes[(pr * 2) * p.d_out + j] = byte & 0xF;
+                    codes[(pr * 2 + 1) * p.d_out + j] = byte >> 4;
+                }
+            }
+        }
+        3 => codes.copy_from_slice(&p.data),
+        _ => unreachable!(),
+    }
+    codes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn random_codes(d_in: usize, d_out: usize, bits: u8, rng: &mut Rng) -> Vec<u8> {
+        (0..d_in * d_out).map(|_| rng.below(1 << bits) as u8).collect()
+    }
+
+    #[test]
+    fn roundtrip_2bit() {
+        let mut rng = Rng::seed(21);
+        let codes = random_codes(16, 5, 2, &mut rng);
+        let p = pack_codes(&codes, 16, 5, 2);
+        assert_eq!(p.packed_rows, 4);
+        assert_eq!(unpack_codes(&p), codes);
+    }
+
+    #[test]
+    fn roundtrip_4bit() {
+        let mut rng = Rng::seed(22);
+        let codes = random_codes(10, 7, 4, &mut rng);
+        let p = pack_codes(&codes, 10, 7, 4);
+        assert_eq!(p.packed_rows, 5);
+        assert_eq!(unpack_codes(&p), codes);
+    }
+
+    #[test]
+    fn roundtrip_3bit_identity() {
+        let mut rng = Rng::seed(23);
+        let codes = random_codes(6, 3, 3, &mut rng);
+        let p = pack_codes(&codes, 6, 3, 3);
+        assert_eq!(p.data, codes);
+        assert_eq!(unpack_codes(&p), codes);
+    }
+
+    /// property: roundtrip over 100 random geometries
+    #[test]
+    fn prop_roundtrip() {
+        let mut rng = Rng::seed(24);
+        for case in 0..100 {
+            let bits = [2u8, 3, 4][case % 3];
+            let mult = match bits {
+                2 => 4,
+                4 => 2,
+                _ => 1,
+            };
+            let d_in = mult * (1 + rng.below(16));
+            let d_out = 1 + rng.below(24);
+            let codes = random_codes(d_in, d_out, bits, &mut rng);
+            let p = pack_codes(&codes, d_in, d_out, bits);
+            assert_eq!(unpack_codes(&p), codes, "bits={bits} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    /// the documented bit layout, pinned so Python/Rust stay in sync
+    #[test]
+    fn bit_layout_pinned() {
+        // d_in=4, d_out=1, codes [1,2,3,0] -> byte 0b00_11_10_01
+        let p = pack_codes(&[1, 2, 3, 0], 4, 1, 2);
+        assert_eq!(p.data, vec![0b0011_1001]);
+        // 4-bit: [0xA, 0x5] -> 0x5A
+        let p = pack_codes(&[0xA, 0x5], 2, 1, 4);
+        assert_eq!(p.data, vec![0x5A]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn misaligned_2bit_rejected() {
+        pack_codes(&[0; 6], 6, 1, 2);
+    }
+}

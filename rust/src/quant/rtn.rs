@@ -1,0 +1,154 @@
+//! Round-to-nearest (RTN) uniform asymmetric quantization — Eq. 1 of the
+//! paper with γ = β = 1: per-group min/max determine scale and zero-point.
+//! This is the weakest baseline and the quantizer under Table 6/10.
+
+use super::{CalibCtx, QuantResult, QuantizedTensor, Quantizer};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct Rtn {
+    pub bits: u8,
+    pub group_size: usize,
+}
+
+impl Rtn {
+    pub fn new(bits: u8, group_size: usize) -> Rtn {
+        assert!((2..=8).contains(&bits));
+        Rtn { bits, group_size }
+    }
+}
+
+/// Core uniform-grid quantization of one `[d_in, d_out]` matrix with
+/// per-(group, column) clipping strengths γ (max side) and β (min side).
+/// Shared with the OmniQuant-style quantizer which searches γ/β.
+pub fn quantize_uniform(
+    w: &Mat,
+    bits: u8,
+    group_size: usize,
+    gamma_beta: Option<&dyn Fn(usize, usize) -> (f32, f32)>,
+) -> QuantizedTensor {
+    let (d_in, d_out) = w.shape();
+    assert!(d_in % group_size == 0, "d_in {d_in} % group {group_size} != 0");
+    let n_groups = d_in / group_size;
+    let levels = (1u32 << bits) - 1;
+    let mut codes = vec![0u8; d_in * d_out];
+    let mut scales = Mat::zeros(n_groups, d_out);
+    let mut zeros = Mat::zeros(n_groups, d_out);
+
+    for g in 0..n_groups {
+        let r0 = g * group_size;
+        for j in 0..d_out {
+            let mut wmin = f32::INFINITY;
+            let mut wmax = f32::NEG_INFINITY;
+            for i in r0..r0 + group_size {
+                let v = w[(i, j)];
+                wmin = wmin.min(v);
+                wmax = wmax.max(v);
+            }
+            let (gamma, beta) = gamma_beta.map(|f| f(g, j)).unwrap_or((1.0, 1.0));
+            let hi = gamma * wmax;
+            let lo = beta * wmin;
+            let range = (hi - lo).max(1e-8);
+            let s = range / levels as f32;
+            scales[(g, j)] = s;
+            zeros[(g, j)] = lo;
+            for i in r0..r0 + group_size {
+                let v = w[(i, j)];
+                let c = ((v - lo) / s).round().clamp(0.0, levels as f32) as u8;
+                codes[i * d_out + j] = c;
+            }
+        }
+    }
+
+    QuantizedTensor {
+        codes,
+        d_in,
+        d_out,
+        bits,
+        group_size,
+        scales,
+        zeros,
+        codebook: (0..=levels).map(|c| c as f32).collect(),
+    }
+}
+
+impl Quantizer for Rtn {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn quantize(&self, w: &Mat, _ctx: &CalibCtx) -> QuantResult {
+        QuantResult::Scalar(quantize_uniform(w, self.bits, self.group_size, None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rtn_8bit_nearly_lossless() {
+        let mut rng = Rng::seed(31);
+        let w = Mat::randn(64, 16, &mut rng);
+        let q = Rtn::new(8, 32).quantize(&w, &CalibCtx::default());
+        let rel = q.dequant().fro_dist(&w) / w.fro_norm();
+        assert!(rel < 0.01, "rel={rel}");
+    }
+
+    #[test]
+    fn error_grows_as_bits_shrink() {
+        let mut rng = Rng::seed(32);
+        let w = Mat::randn(128, 32, &mut rng);
+        let ctx = CalibCtx::default();
+        let errs: Vec<f32> = [2u8, 3, 4, 8]
+            .iter()
+            .map(|&b| Rtn::new(b, 32).quantize(&w, &ctx).dequant().fro_dist(&w))
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn per_element_error_bounded_by_half_step() {
+        let mut rng = Rng::seed(33);
+        let w = Mat::randn(32, 8, &mut rng);
+        let qr = Rtn::new(4, 16).quantize(&w, &CalibCtx::default());
+        let q = qr.as_scalar().unwrap();
+        let deq = q.dequant();
+        for i in 0..32 {
+            let g = i / 16;
+            for j in 0..8 {
+                let step = q.scales[(g, j)];
+                let err = (deq[(i, j)] - w[(i, j)]).abs();
+                assert!(err <= 0.5 * step + 1e-5, "err {err} > step/2 {}", step / 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        let w = Mat::full(16, 4, 0.7);
+        let q = Rtn::new(2, 16).quantize(&w, &CalibCtx::default());
+        assert!(q.dequant().fro_dist(&w) < 1e-5);
+    }
+
+    /// property: codes stay within the bit budget
+    #[test]
+    fn prop_codes_in_range() {
+        let mut rng = Rng::seed(34);
+        for _ in 0..50 {
+            let bits = 2 + (rng.below(3) as u8);
+            let g = [8usize, 16, 32][rng.below(3)];
+            let d_in = g * (1 + rng.below(4));
+            let d_out = 1 + rng.below(16);
+            let w = Mat::randn(d_in, d_out, &mut rng);
+            let qr = Rtn::new(bits, g).quantize(&w, &CalibCtx::default());
+            let q = qr.as_scalar().unwrap();
+            assert!(q.codes.iter().all(|&c| (c as u32) < (1 << bits)));
+        }
+    }
+}

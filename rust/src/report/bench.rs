@@ -1,0 +1,141 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not in the
+//! offline crate set). Warmup + timed iterations + summary statistics, with
+//! a stable text output format that `cargo bench` targets print.
+
+use std::time::Instant;
+
+use crate::tensor::Summary;
+
+/// A named benchmark group collecting timing samples.
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    sample_iters: usize,
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub group: String,
+    pub case: String,
+    pub summary: Summary,
+    /// optional throughput denominator (elements/bytes per iteration)
+    pub throughput: Option<f64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench { name: name.into(), warmup_iters: 3, sample_iters: 10 }
+    }
+
+    pub fn iters(mut self, warmup: usize, samples: usize) -> Bench {
+        self.warmup_iters = warmup;
+        self.sample_iters = samples;
+        self
+    }
+
+    /// Run `f` and record per-iteration wall time in seconds.
+    pub fn run<R>(&self, case: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            group: self.name.clone(),
+            case: case.to_string(),
+            summary: Summary::of(&samples),
+            throughput: None,
+        };
+        print_result(&res);
+        res
+    }
+
+    /// Like `run`, with a throughput denominator (ops per iteration);
+    /// reported as ops/s based on the median.
+    pub fn run_throughput<R>(
+        &self,
+        case: &str,
+        ops_per_iter: f64,
+        f: impl FnMut() -> R,
+    ) -> BenchResult {
+        let mut res = self.run_quiet(case, f);
+        res.throughput = Some(ops_per_iter);
+        print_result(&res);
+        res
+    }
+
+    fn run_quiet<R>(&self, case: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            group: self.name.clone(),
+            case: case.to_string(),
+            summary: Summary::of(&samples),
+            throughput: None,
+        }
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let s = &r.summary;
+    let mut line = format!(
+        "bench {:<40} p50 {:>12}  mean {:>12}  p95 {:>12}  (n={})",
+        format!("{}/{}", r.group, r.case),
+        fmt_time(s.p50),
+        fmt_time(s.mean),
+        fmt_time(s.p95),
+        s.n
+    );
+    if let Some(ops) = r.throughput {
+        if s.p50 > 0.0 {
+            line.push_str(&format!("  {:>12.0} ops/s", ops / s.p50));
+        }
+    }
+    println!("{line}");
+}
+
+/// Human-readable duration.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let b = Bench::new("t").iters(1, 5);
+        let r = b.run("noop", || 1 + 1);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.min >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,11 @@
+//! Reporting substrate: a minimal JSON parser/writer (the offline crate set
+//! has no `serde`), markdown/CSV table emission, and a criterion-style
+//! micro-benchmark harness used by `cargo bench`.
+
+pub mod bench;
+pub mod json;
+pub mod table;
+
+pub use bench::Bench;
+pub use json::Json;
+pub use table::Table;

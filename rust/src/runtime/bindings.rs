@@ -1,0 +1,319 @@
+//! Bindings between the crate's model containers and artifact signatures.
+//!
+//! Artifacts take flat positional argument lists; the manifest gives each
+//! position a name (`embed`, `q.wq`, `ad.wq.a`, `m.ad.wq.b`, `tokens`, …).
+//! This module builds the input literal vector for any artifact from a
+//! name→buffer map, and parses structured results back out of the output
+//! tuple — the only place where argument-order knowledge lives on the Rust
+//! side.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::lqec::AdapterSet;
+use crate::model::{ModelDims, StudentWeights, TeacherParams, LINEARS};
+use crate::quant::PackedTensor;
+
+use super::literal::{lit_f32, lit_i32, lit_u8, to_vec_f32};
+use super::manifest::{ArtifactSpec, DType};
+
+/// A typed input buffer.
+pub enum BufVal {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+/// Name→buffer map for one artifact invocation. Buffers are `Rc`-shared
+/// so a scorer can keep a base binding set (weights, adapters) and cheaply
+/// derive per-call bindings that only swap the token batch.
+#[derive(Default)]
+pub struct Bindings {
+    map: HashMap<String, Rc<BufVal>>,
+}
+
+impl Bindings {
+    pub fn new() -> Bindings {
+        Bindings::default()
+    }
+
+    pub fn set_f32(&mut self, name: impl Into<String>, data: Vec<f32>) -> &mut Self {
+        self.map.insert(name.into(), Rc::new(BufVal::F32(data)));
+        self
+    }
+
+    pub fn set_i32(&mut self, name: impl Into<String>, data: Vec<i32>) -> &mut Self {
+        self.map.insert(name.into(), Rc::new(BufVal::I32(data)));
+        self
+    }
+
+    pub fn set_u8(&mut self, name: impl Into<String>, data: Vec<u8>) -> &mut Self {
+        self.map.insert(name.into(), Rc::new(BufVal::U8(data)));
+        self
+    }
+
+    /// Cheap (Rc) copy of all bindings from another set.
+    pub fn copy_from(&mut self, other: &Bindings) -> &mut Self {
+        for (k, v) in &other.map {
+            self.map.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    /// Teacher tensors under their canonical names
+    /// (`embed`, `wq`…`wd`, `ln1`, `ln2`, `fnorm`, `head`).
+    pub fn teacher(&mut self, teacher: &TeacherParams) -> &mut Self {
+        let flat = teacher.to_flat();
+        for (name, buf) in teacher_names().iter().zip(flat) {
+            self.set_f32(*name, buf);
+        }
+        self
+    }
+
+    /// Teacher-shaped buffers under a prefix (Adam moments of pretrain).
+    pub fn teacher_shaped(&mut self, prefix: &str, flat: &[Vec<f32>]) -> &mut Self {
+        assert_eq!(flat.len(), 12);
+        for (name, buf) in teacher_names().iter().zip(flat) {
+            self.set_f32(format!("{prefix}{name}"), buf.clone());
+        }
+        self
+    }
+
+    /// Dense dequantized student weights (`q.wq` … `q.wd`).
+    pub fn qweights(&mut self, student: &StudentWeights) -> &mut Self {
+        for (name, buf) in LINEARS.iter().zip(student.to_flat_dense()) {
+            self.set_f32(format!("q.{name}"), buf);
+        }
+        self
+    }
+
+    /// Dense student weights from raw per-family buffers.
+    pub fn qweights_flat(&mut self, flat: &[Vec<f32>]) -> &mut Self {
+        assert_eq!(flat.len(), 7);
+        for (name, buf) in LINEARS.iter().zip(flat) {
+            self.set_f32(format!("q.{name}"), buf.clone());
+        }
+        self
+    }
+
+    /// Adapters under a prefix (`ad.` / `m.` / `v.` with `.a`/`.b` leaves).
+    pub fn adapters(&mut self, prefix: &str, flat: &[Vec<f32>]) -> &mut Self {
+        assert_eq!(flat.len(), 14);
+        for (i, name) in LINEARS.iter().enumerate() {
+            self.set_f32(format!("{prefix}{name}.a"), flat[2 * i].clone());
+            self.set_f32(format!("{prefix}{name}.b"), flat[2 * i + 1].clone());
+        }
+        self
+    }
+
+    /// Packed student weights for the serving artifact
+    /// (`pq.*` u8 codes, `sc.*`/`z.*` group metadata, `codebook`).
+    pub fn packed(
+        &mut self,
+        packed: &[Vec<PackedTensor>],   // [family][layer]
+        scales: &[Vec<f32>],            // stacked [L, G, d_out] per family
+        zeros: &[Vec<f32>],
+        codebook: &[f32],
+    ) -> &mut Self {
+        for (f, name) in LINEARS.iter().enumerate() {
+            let mut codes = Vec::new();
+            for p in &packed[f] {
+                codes.extend_from_slice(&p.data);
+            }
+            self.set_u8(format!("pq.{name}"), codes);
+            self.set_f32(format!("sc.{name}"), scales[f].clone());
+            self.set_f32(format!("z.{name}"), zeros[f].clone());
+        }
+        self.set_f32("codebook", codebook.to_vec());
+        self
+    }
+
+    /// Token batch `[batch, seq]`.
+    pub fn tokens(&mut self, batch: &[Vec<u32>], dims: &ModelDims) -> &mut Self {
+        assert_eq!(batch.len(), dims.batch, "batch size mismatch");
+        let mut buf = Vec::with_capacity(dims.batch * dims.seq);
+        for seq in batch {
+            assert_eq!(seq.len(), dims.seq, "sequence length mismatch");
+            buf.extend(seq.iter().map(|&t| t as i32));
+        }
+        self.set_i32("tokens", buf)
+    }
+
+    /// Adam step + learning rate scalars.
+    pub fn step_lr(&mut self, t: f32, lr: f32) -> &mut Self {
+        self.set_f32("t", vec![t]);
+        self.set_f32("lr", vec![lr])
+    }
+
+    /// Assemble the positional literal list for an artifact.
+    pub fn to_literals(&self, spec: &ArtifactSpec) -> Result<Vec<Literal>> {
+        let mut out = Vec::with_capacity(spec.inputs.len());
+        for ts in &spec.inputs {
+            let val = self
+                .map
+                .get(&ts.name)
+                .ok_or_else(|| anyhow!("artifact {}: missing binding '{}'", spec.name, ts.name))?;
+            let lit = match (val.as_ref(), ts.dtype) {
+                (BufVal::F32(d), DType::F32) => lit_f32(&ts.shape, d)?,
+                (BufVal::I32(d), DType::I32) => lit_i32(&ts.shape, d)?,
+                (BufVal::U8(d), DType::U8) => lit_u8(&ts.shape, d)?,
+                _ => bail!("artifact {}: dtype mismatch for '{}'", spec.name, ts.name),
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+}
+
+/// Device-resident bindings: static inputs are uploaded to PJRT buffers
+/// once; dynamic inputs (matched by name prefix) are marshalled per call.
+/// This removes the dominant per-step cost of re-uploading frozen weights
+/// (see EXPERIMENTS.md §Perf).
+pub struct DeviceBindings {
+    slots: Vec<DeviceSlot>,
+}
+
+enum DeviceSlot {
+    /// PJRT host->device transfers are asynchronous: the source literal
+    /// must stay alive until the buffer's definition event completes, so
+    /// it is kept alongside the buffer for the bindings' lifetime.
+    Static(std::rc::Rc<xla::PjRtBuffer>, std::rc::Rc<Literal>),
+    Dynamic(String),
+}
+
+/// Per-call assembled inputs; holds the dynamic literals alive for the
+/// duration of the execute (same async-transfer hazard as above).
+pub struct AssembledInputs {
+    bufs: Vec<std::rc::Rc<xla::PjRtBuffer>>,
+    _keepalive: Vec<Literal>,
+}
+
+impl AssembledInputs {
+    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
+        self.bufs.iter().map(|b| b.as_ref()).collect()
+    }
+}
+
+impl Bindings {
+    /// Split this binding set into device-cached statics and named
+    /// dynamics. A spec input is dynamic iff its name starts with one of
+    /// `dynamic_prefixes`.
+    pub fn to_device(
+        &self,
+        rt: &crate::runtime::Runtime,
+        spec: &ArtifactSpec,
+        dynamic_prefixes: &[&str],
+    ) -> Result<DeviceBindings> {
+        let mut slots = Vec::with_capacity(spec.inputs.len());
+        for ts in &spec.inputs {
+            if dynamic_prefixes.iter().any(|p| ts.name.starts_with(p)) {
+                slots.push(DeviceSlot::Dynamic(ts.name.clone()));
+                continue;
+            }
+            let val = self
+                .map
+                .get(&ts.name)
+                .ok_or_else(|| anyhow!("artifact {}: missing static binding '{}'", spec.name, ts.name))?;
+            let lit = match (val.as_ref(), ts.dtype) {
+                (BufVal::F32(d), DType::F32) => lit_f32(&ts.shape, d)?,
+                (BufVal::I32(d), DType::I32) => lit_i32(&ts.shape, d)?,
+                (BufVal::U8(d), DType::U8) => lit_u8(&ts.shape, d)?,
+                _ => bail!("artifact {}: dtype mismatch for '{}'", spec.name, ts.name),
+            };
+            let buf = rt.buffer_from_literal(&lit)?;
+            slots.push(DeviceSlot::Static(std::rc::Rc::new(buf), std::rc::Rc::new(lit)));
+        }
+        Ok(DeviceBindings { slots })
+    }
+}
+
+impl DeviceBindings {
+    /// Assemble the per-call buffer list: dynamic slots are marshalled and
+    /// uploaded from `dyn_vals`, static slots reuse the cached buffers.
+    pub fn assemble(
+        &self,
+        rt: &crate::runtime::Runtime,
+        spec: &ArtifactSpec,
+        dyn_vals: &Bindings,
+    ) -> Result<AssembledInputs> {
+        let mut bufs = Vec::with_capacity(self.slots.len());
+        let mut keepalive = Vec::new();
+        for (slot, ts) in self.slots.iter().zip(&spec.inputs) {
+            match slot {
+                DeviceSlot::Static(b, _lit) => bufs.push(b.clone()),
+                DeviceSlot::Dynamic(name) => {
+                    let val = dyn_vals
+                        .map
+                        .get(name)
+                        .ok_or_else(|| anyhow!("missing dynamic binding '{name}'"))?;
+                    let lit = match (val.as_ref(), ts.dtype) {
+                        (BufVal::F32(d), DType::F32) => lit_f32(&ts.shape, d)?,
+                        (BufVal::I32(d), DType::I32) => lit_i32(&ts.shape, d)?,
+                        (BufVal::U8(d), DType::U8) => lit_u8(&ts.shape, d)?,
+                        _ => bail!("dtype mismatch for dynamic '{name}'"),
+                    };
+                    bufs.push(std::rc::Rc::new(rt.buffer_from_literal(&lit)?));
+                    keepalive.push(lit);
+                }
+            }
+        }
+        Ok(AssembledInputs { bufs, _keepalive: keepalive })
+    }
+}
+
+pub fn teacher_names() -> [&'static str; 12] {
+    ["embed", "wq", "wk", "wv", "wo", "wg", "wu", "wd", "ln1", "ln2", "fnorm", "head"]
+}
+
+/// Parse a named f32 output from an artifact result tuple.
+pub fn output_f32(spec: &ArtifactSpec, outs: &[Literal], name: &str) -> Result<Vec<f32>> {
+    let idx = spec.output_index(name)?;
+    to_vec_f32(&outs[idx])
+}
+
+/// Parse a scalar f32 output.
+pub fn output_scalar(spec: &ArtifactSpec, outs: &[Literal], name: &str) -> Result<f32> {
+    let v = output_f32(spec, outs, name)?;
+    v.first().copied().ok_or_else(|| anyhow!("output '{name}' empty"))
+}
+
+/// Parse the 14 adapter buffers (prefix `ad.` / `m.` / `v.`) out of a
+/// train-step result.
+pub fn output_adapter_flat(
+    spec: &ArtifactSpec,
+    outs: &[Literal],
+    prefix: &str,
+) -> Result<Vec<Vec<f32>>> {
+    let mut flat = Vec::with_capacity(14);
+    for name in LINEARS {
+        flat.push(output_f32(spec, outs, &format!("{prefix}{name}.a"))?);
+        flat.push(output_f32(spec, outs, &format!("{prefix}{name}.b"))?);
+    }
+    Ok(flat)
+}
+
+/// Parse the 12 teacher-shaped buffers (prefix `p.` / `m.` / `v.`) out of a
+/// pretrain-step result.
+pub fn output_teacher_flat(
+    spec: &ArtifactSpec,
+    outs: &[Literal],
+    prefix: &str,
+) -> Result<Vec<Vec<f32>>> {
+    let mut flat = Vec::with_capacity(12);
+    for name in teacher_names() {
+        flat.push(output_f32(spec, outs, &format!("{prefix}{name}"))?);
+    }
+    Ok(flat)
+}
+
+/// Convenience: AdapterSet <-> flat for train-loop plumbing.
+pub fn adapters_from_flat(
+    dims: &ModelDims,
+    rank: usize,
+    flat: &[Vec<f32>],
+) -> Result<AdapterSet> {
+    AdapterSet::from_flat(dims, rank, flat)
+}

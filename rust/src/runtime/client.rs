@@ -1,0 +1,182 @@
+//! The [`Runtime`]: PJRT CPU client + compiled-executable cache.
+//!
+//! HLO **text** (see `aot.py` for why not serialized protos) is parsed with
+//! `HloModuleProto::from_text_file`, wrapped into an `XlaComputation`,
+//! compiled once per artifact, and cached for the lifetime of the runtime.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// Thread-local PJRT runtime over one artifact directory.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// cumulative PJRT execute wall time (perf accounting)
+    exec_secs: RefCell<f64>,
+    exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over `artifacts/`.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_secs: RefCell::new(0.0),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with validated inputs; returns the decomposed
+    /// output tuple (one literal per manifest output).
+    pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.validate_inputs(&spec, inputs)?;
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        *self.exec_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        *self.exec_count.borrow_mut() += 1;
+        // artifacts are lowered with return_tuple=True
+        let outs = lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    fn validate_inputs(&self, spec: &ArtifactSpec, inputs: &[Literal]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, manifest says {}",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (i, (lit, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let want = ts.elements();
+            let got = lit.element_count();
+            if want != got {
+                bail!(
+                    "artifact {} input #{i} '{}': {} elements, manifest says {} ({:?})",
+                    spec.name,
+                    ts.name,
+                    got,
+                    want,
+                    ts.shape
+                );
+            }
+            let ty = lit.ty().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let ok = matches!(
+                (ts.dtype, ty),
+                (DType::F32, xla::ElementType::F32)
+                    | (DType::I32, xla::ElementType::S32)
+                    | (DType::U8, xla::ElementType::U8)
+            );
+            if !ok {
+                bail!(
+                    "artifact {} input '{}': dtype mismatch ({:?} vs manifest {:?})",
+                    spec.name,
+                    ts.name,
+                    ty,
+                    ts.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload a literal to a device-resident buffer (stays valid for the
+    /// lifetime of the client; used to cache static inputs across calls).
+    pub fn buffer_from_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+
+    /// Execute with device-resident input buffers (the fast path: static
+    /// inputs are uploaded once, only per-call tensors transfer per call).
+    pub fn run_b(&self, name: &str, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: got {} buffers, manifest says {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let n_outputs = spec.outputs.len();
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b::<&PjRtBuffer>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        *self.exec_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        *self.exec_count.borrow_mut() += 1;
+        let outs = lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        if outs.len() != n_outputs {
+            bail!("artifact {name}: {} outputs, manifest says {}", outs.len(), n_outputs);
+        }
+        Ok(outs)
+    }
+
+    /// (total execute seconds, execute count) since construction.
+    pub fn exec_stats(&self) -> (f64, u64) {
+        (*self.exec_secs.borrow(), *self.exec_count.borrow())
+    }
+
+    /// Number of compiled executables held in cache.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Drop a compiled executable (memory control for big sweeps).
+    pub fn evict(&self, name: &str) {
+        self.cache.borrow_mut().remove(name);
+    }
+}

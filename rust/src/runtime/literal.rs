@@ -1,0 +1,91 @@
+//! Marshalling between Rust buffers and `xla::Literal`s.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+use super::manifest::{DType, TensorSpec};
+
+/// f32 literal with an explicit shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: shape {:?} ({} elems) vs buffer {}", shape, n, data.len());
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// i32 literal with an explicit shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: shape {:?} vs buffer {}", shape, data.len());
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// u8 literal with an explicit shape.
+pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_u8: shape {:?} vs buffer {}", shape, data.len());
+    }
+    Literal::create_from_shape_and_untyped_data(ElementType::U8, shape, data)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Copy a literal back to a `Vec<f32>`.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Build a literal for a manifest tensor spec from an untyped f32 buffer
+/// (f32 specs) — used for the bulk of artifact inputs.
+pub fn lit_for_spec_f32(spec: &TensorSpec, data: &[f32]) -> Result<Literal> {
+    match spec.dtype {
+        DType::F32 => lit_f32(&spec.shape, data),
+        other => bail!("spec {} is {:?}, not f32", spec.name, other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&[2, 3], &data).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3];
+        let lit = lit_i32(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let data = vec![0u8, 127, 255];
+        let lit = lit_u8(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0, 2.0]).is_err());
+    }
+}

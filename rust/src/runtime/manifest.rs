@@ -1,0 +1,235 @@
+//! `artifacts/manifest.json` parsing. The manifest is the single source of
+//! truth for artifact argument order, tensor shapes/dtypes, and model
+//! geometry; it is written by `python/compile/aot.py` at `make artifacts`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::ModelDims;
+use crate::report::Json;
+
+/// Tensor element type (the subset the artifacts use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint8" => DType::U8,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .arr_of("shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.str_of("name")?.to_string(),
+            shape,
+            dtype: DType::parse(j.str_of("dtype")?)?,
+        })
+    }
+}
+
+/// One AOT artifact: an HLO file plus its flat signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub config: String,
+    pub rank: Option<usize>,
+    pub scope: Option<String>,
+    pub bits: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input '{name}'", self.name))
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output '{name}'", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelDims>,
+    pub ranks: BTreeMap<String, Vec<usize>>,
+    pub scopes: BTreeMap<String, Vec<String>>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+
+        let mut configs = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("configs") {
+            for (k, v) in map {
+                configs.insert(k.clone(), ModelDims::from_json(v)?);
+            }
+        }
+        let mut ranks = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("ranks") {
+            for (k, v) in map {
+                let rs = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("ranks not an array"))?
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect();
+                ranks.insert(k.clone(), rs);
+            }
+        }
+        let mut scopes = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("scopes") {
+            for (k, v) in map {
+                let ss = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("scopes not an array"))?
+                    .iter()
+                    .filter_map(|x| x.as_str().map(String::from))
+                    .collect();
+                scopes.insert(k.clone(), ss);
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.arr_of("artifacts")? {
+            let meta = a.req("meta")?;
+            let spec = ArtifactSpec {
+                name: a.str_of("name")?.to_string(),
+                file: a.str_of("file")?.to_string(),
+                kind: meta.str_of("kind")?.to_string(),
+                config: meta.str_of("config")?.to_string(),
+                rank: meta.get("rank").and_then(|v| v.as_usize()),
+                scope: meta.get("scope").and_then(|v| v.as_str().map(String::from)),
+                bits: meta.get("bits").and_then(|v| v.as_usize()),
+                inputs: a
+                    .arr_of("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .arr_of("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        Ok(Manifest { dir, configs, ranks, scopes, artifacts })
+    }
+
+    pub fn dims(&self, config: &str) -> Result<&ModelDims> {
+        self.configs
+            .get(config)
+            .ok_or_else(|| anyhow!("config '{config}' not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Train-step artifact name for (config, rank, scope).
+    pub fn train_step_name(config: &str, rank: usize, scope: &str) -> String {
+        format!("train_step_{config}_r{rank}_{scope}")
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Parses the real manifest when artifacts exist (CI runs after
+    /// `make artifacts`); skips otherwise.
+    #[test]
+    fn parses_real_manifest() {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.configs.contains_key("tiny"));
+        assert!(m.configs.contains_key("small"));
+        let tiny = m.dims("tiny").unwrap();
+        assert_eq!(tiny.d_model, 64);
+        let ts = m
+            .artifact(&Manifest::train_step_name("tiny", 4, "model_gt"))
+            .unwrap();
+        assert_eq!(ts.kind, "train_step");
+        assert_eq!(ts.rank, Some(4));
+        // teacher params (12) + qweights (7) + 3*adapters (42) + t + lr + tokens
+        assert_eq!(ts.inputs.len(), 12 + 7 + 42 + 3);
+        assert!(ts.outputs.len() == 42 + 3);
+        // tokens input is int32 [batch, seq]
+        let tok = &ts.inputs[ts.input_index("tokens").unwrap()];
+        assert_eq!(tok.dtype, DType::I32);
+        assert_eq!(tok.shape, vec![tiny.batch, tiny.seq]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

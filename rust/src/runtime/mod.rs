@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT-lowered HLO artifacts and executes them on
+//! the CPU PJRT client from the request path (Python is never involved).
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (argument order,
+//!   shapes, dtypes, config geometry);
+//! * [`client`] — the [`Runtime`]: HLO-text → `XlaComputation` → compile →
+//!   execute, with a compiled-executable cache keyed by artifact name;
+//! * [`literal`] — marshalling between Rust buffers and `xla::Literal`s.
+//!
+//! Note on threading: the `xla` crate's `PjRtClient` is `Rc`-based (not
+//! `Send`), so a [`Runtime`] is thread-local; the coordinator's worker pool
+//! instantiates one runtime per worker thread.
+
+pub mod bindings;
+pub mod client;
+pub mod literal;
+pub mod manifest;
+
+pub use bindings::Bindings;
+pub use client::Runtime;
+pub use literal::{lit_f32, lit_i32, lit_scalar_f32, lit_u8, to_vec_f32};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};

@@ -1,0 +1,256 @@
+//! Numerical linear algebra: one-sided Jacobi SVD and Hadamard transforms.
+//!
+//! The SVD drives the Weight-SVD (LoftQ-style) LQEC baseline and the
+//! singular-vector-magnitude analysis of Fig. 4(c); the Hadamard matrix
+//! drives the QuaRot-style rotation quantizer.
+
+use super::Mat;
+
+/// Thin SVD result: `a ≈ u * diag(s) * vt` with `u: m×k`, `s: k`, `vt: k×n`,
+/// `k = min(m, n)`, singular values sorted descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+impl Svd {
+    /// Rank-`r` truncated reconstruction `u[:, :r] * diag(s[:r]) * vt[:r, :]`.
+    pub fn truncate(&self, r: usize) -> Mat {
+        let r = r.min(self.s.len());
+        let m = self.u.rows();
+        let n = self.vt.cols();
+        let mut out = Mat::zeros(m, n);
+        for k in 0..r {
+            let sk = self.s[k];
+            if sk == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                let uik = self.u[(i, k)] * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                let vrow = self.vt.row(k);
+                for j in 0..n {
+                    orow[j] += uik * vrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Split a rank-`r` truncation into LoRA factors `(L1: m×r, L2: n×r)`
+    /// such that `L1 * L2^T` equals [`Svd::truncate`]`(r)`. Singular values
+    /// are split symmetrically (`sqrt(s)` on each side), the LoRA convention
+    /// used by LoftQ.
+    pub fn lora_factors(&self, r: usize) -> (Mat, Mat) {
+        let r = r.min(self.s.len());
+        let m = self.u.rows();
+        let n = self.vt.cols();
+        let mut l1 = Mat::zeros(m, r);
+        let mut l2 = Mat::zeros(n, r);
+        for k in 0..r {
+            let sq = self.s[k].max(0.0).sqrt();
+            for i in 0..m {
+                l1[(i, k)] = self.u[(i, k)] * sq;
+            }
+            for j in 0..n {
+                l2[(j, k)] = self.vt[(k, j)] * sq;
+            }
+        }
+        (l1, l2)
+    }
+
+    /// Effective numerical rank at relative tolerance `rtol`.
+    pub fn effective_rank(&self, rtol: f32) -> usize {
+        let smax = self.s.first().copied().unwrap_or(0.0);
+        if smax <= 0.0 {
+            return 0;
+        }
+        self.s.iter().filter(|&&s| s > rtol * smax).count()
+    }
+}
+
+/// One-sided Jacobi SVD (Hestenes). Robust and dependency-free; `O(n^3)` per
+/// sweep which is fine at the matrix sizes used by the simulated models
+/// (≤ ~2048 per side).
+pub fn svd_jacobi(a: &Mat) -> Svd {
+    // Work on the tall orientation; transpose back at the end.
+    if a.rows() < a.cols() {
+        let svd = svd_jacobi(&a.t());
+        return Svd { u: svd.vt.t(), s: svd.s, vt: svd.u.t() };
+    }
+    let m = a.rows();
+    let n = a.cols();
+    let mut u = a.clone(); // columns will be rotated into u * diag(s)
+    let mut v = Mat::eye(n);
+
+    let eps = 1e-9f64;
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram entries for columns p, q.
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    let up = u[(i, p)] as f64;
+                    let uq = u[(i, q)] as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)] as f64;
+                    let uq = u[(i, q)] as f64;
+                    u[(i, p)] = (c * up - s * uq) as f32;
+                    u[(i, q)] = (s * up + c * uq) as f32;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)] as f64;
+                    let vq = v[(i, q)] as f64;
+                    v[(i, p)] = (c * vp - s * vq) as f32;
+                    v[(i, q)] = (s * vp + c * vq) as f32;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // Column norms are the singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigma = vec![0.0f32; n];
+    for j in 0..n {
+        let norm: f64 = (0..m).map(|i| (u[(i, j)] as f64).powi(2)).sum::<f64>().sqrt();
+        sigma[j] = norm as f32;
+    }
+    order.sort_by(|&a, &b| sigma[b].partial_cmp(&sigma[a]).unwrap());
+
+    let mut us = Mat::zeros(m, n);
+    let mut vt = Mat::zeros(n, n);
+    let mut s = vec![0.0f32; n];
+    for (k, &j) in order.iter().enumerate() {
+        s[k] = sigma[j];
+        let inv = if sigma[j] > 1e-12 { 1.0 / sigma[j] } else { 0.0 };
+        for i in 0..m {
+            us[(i, k)] = u[(i, j)] * inv;
+        }
+        for i in 0..n {
+            vt[(k, i)] = v[(i, j)];
+        }
+    }
+    Svd { u: us, s, vt }
+}
+
+/// Normalized Walsh–Hadamard matrix of size `n` (power of two), `H H^T = I`.
+pub fn hadamard_matrix(n: usize) -> Mat {
+    assert!(n.is_power_of_two(), "hadamard size must be a power of two, got {n}");
+    let mut h = Mat::from_vec(1, 1, vec![1.0]);
+    let mut size = 1;
+    while size < n {
+        let mut next = Mat::zeros(size * 2, size * 2);
+        for r in 0..size {
+            for c in 0..size {
+                let v = h[(r, c)];
+                next[(r, c)] = v;
+                next[(r, c + size)] = v;
+                next[(r + size, c)] = v;
+                next[(r + size, c + size)] = -v;
+            }
+        }
+        h = next;
+        size *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    h.scale(scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn reconstruct(svd: &Svd) -> Mat {
+        svd.truncate(svd.s.len())
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Rng::seed(11);
+        for &(m, n) in &[(8usize, 8usize), (12, 5), (5, 12), (16, 16)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let svd = svd_jacobi(&a);
+            let r = reconstruct(&svd);
+            let rel = a.fro_dist(&r) / a.fro_norm();
+            assert!(rel < 1e-4, "{m}x{n} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn svd_singular_values_sorted() {
+        let mut rng = Rng::seed(12);
+        let a = Mat::randn(10, 7, &mut rng);
+        let svd = svd_jacobi(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn svd_orthonormal_u() {
+        let mut rng = Rng::seed(13);
+        let a = Mat::randn(9, 6, &mut rng);
+        let svd = svd_jacobi(&a);
+        let gram = svd.u.t().matmul(&svd.u);
+        let eye = Mat::eye(6);
+        assert!(gram.fro_dist(&eye) < 1e-3);
+    }
+
+    #[test]
+    fn svd_rank_one() {
+        let u = Mat::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let v = Mat::from_vec(1, 3, vec![1.0, 0.5, -1.0]);
+        let a = u.matmul(&v);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s[0] > 1e-3);
+        assert!(svd.s[1] < 1e-4, "rank-1 matrix should have one singular value, s={:?}", svd.s);
+        let r1 = svd.truncate(1);
+        assert!(a.fro_dist(&r1) / a.fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn lora_factors_match_truncation() {
+        let mut rng = Rng::seed(14);
+        let a = Mat::randn(10, 8, &mut rng);
+        let svd = svd_jacobi(&a);
+        let r = 3;
+        let (l1, l2) = svd.lora_factors(r);
+        let rec = l1.matmul(&l2.t());
+        assert!(rec.fro_dist(&svd.truncate(r)) < 1e-4);
+    }
+
+    #[test]
+    fn hadamard_orthonormal() {
+        for &n in &[1usize, 2, 4, 8, 16, 64] {
+            let h = hadamard_matrix(n);
+            let gram = h.matmul(&h.t());
+            assert!(gram.fro_dist(&Mat::eye(n)) < 1e-4, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! Row-major dense `f32` matrix.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use super::Rng;
+
+/// A dense, row-major `f32` matrix. Most algorithms in this crate operate on
+/// weight matrices shaped `[rows = d_out, cols = d_in]` (PyTorch linear
+/// convention) or activations shaped `[tokens, features]`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: f32) -> Self {
+        Mat { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Standard-normal entries (Box–Muller over the PCG stream).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.next_gaussian());
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Uniform entries in `[lo, hi)`.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(lo + (hi - lo) * rng.next_f32());
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy column `c` out.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Matrix transpose.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other` with a blocked, transposed-RHS inner loop.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let m = self.rows;
+        let k = self.cols;
+        let n = other.cols;
+        let mut out = Mat::zeros(m, n);
+        // Blocked i-k-j loop: streams `other` rows, vectorizes over j.
+        const BK: usize = 64;
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in 0..m {
+                let arow = self.row(i);
+                let orow = out.row_mut(i);
+                for kk in k0..k1 {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * other^T` (handy when the RHS is stored row-major already
+    /// transposed, e.g. LoRA's `X A B^T`).
+    pub fn matmul_t(&self, other_t: &Mat) -> Mat {
+        assert_eq!(self.cols, other_t.cols, "matmul_t inner-dim mismatch");
+        let m = self.rows;
+        let k = self.cols;
+        let n = other_t.rows;
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                let brow = other_t.row(j);
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                orow[j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise binary op into a new matrix.
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "zip shape mismatch");
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Frobenius norm of `self - other`, without materializing the difference.
+    pub fn fro_dist(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape(), "fro_dist shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    /// Largest absolute entry.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Sub-block copy `[r0..r0+nr, c0..c0+nc]`.
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Mat {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
+        Mat::from_fn(nr, nc, |r, c| self[(r0 + r, c0 + c)])
+    }
+
+    /// Overwrite a sub-block starting at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Mat) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols, "set_block out of range");
+        for r in 0..block.rows {
+            for c in 0..block.cols {
+                self[(r0 + r, c0 + c)] = block[(r, c)];
+            }
+        }
+    }
+
+    /// Stack two matrices vertically.
+    pub fn vstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vstack col mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for r in 0..show_r {
+            write!(f, "  ")?;
+            for c in 0..show_c {
+                write!(f, "{:>9.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seed(1);
+        let a = Mat::randn(5, 7, &mut rng);
+        let i = Mat::eye(7);
+        let b = a.matmul(&i);
+        assert!(a.fro_dist(&b) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul() {
+        let mut rng = Rng::seed(2);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(6, 3, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_t(&b.t());
+        assert!(c1.fro_dist(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed(3);
+        let a = Mat::randn(3, 9, &mut rng);
+        assert_eq!(a, a.t().t());
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let a = Mat::from_vec(1, 3, vec![3.0, 4.0, 0.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let mut rng = Rng::seed(4);
+        let a = Mat::randn(6, 6, &mut rng);
+        let b = a.block(2, 1, 3, 4);
+        let mut c = Mat::zeros(6, 6);
+        c.set_block(2, 1, &b);
+        assert_eq!(c[(2, 1)], a[(2, 1)]);
+        assert_eq!(c[(4, 4)], a[(4, 4)]);
+        assert_eq!(c[(0, 0)], 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Minimal dense linear-algebra substrate.
+//!
+//! The repo is built offline against a fixed crate set (no `ndarray`,
+//! `nalgebra`, or `rand`), so this module provides everything the
+//! quantizers, LQEC methods, and the pure-Rust reference model need:
+//! a row-major `f32` matrix type, a PCG-based RNG, Jacobi SVD,
+//! Hadamard transforms, and summary statistics.
+
+mod mat;
+mod rng;
+mod linalg;
+mod stats;
+
+pub use linalg::{hadamard_matrix, svd_jacobi, Svd};
+
+/// Parallel map over an indexed domain using scoped std threads (the
+/// offline crate set has no rayon). Results come back in input order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, workers: usize, f: F) -> Vec<T> {
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots_ptr = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if i >= n {
+                    return;
+                }
+                let v = f(i);
+                slots_ptr.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("parallel_map slot")).collect()
+}
+pub use mat::Mat;
+pub use rng::Rng;
+pub use stats::{mean, quantile, std_dev, Summary};

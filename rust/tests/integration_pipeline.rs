@@ -1,0 +1,160 @@
+//! Full-pipeline integration tests over the tiny config: pretrain a few
+//! steps, quantize, compensate, evaluate — the end-to-end path every
+//! experiment uses. Skips when artifacts are missing.
+
+use rilq::coordinator::driver::{CalibConfig, Driver, PretrainConfig};
+use rilq::data::Profile;
+use rilq::eval::Scorer;
+use rilq::experiments::pipeline::Lab;
+use rilq::model::TeacherParams;
+use rilq::runtime::Runtime;
+use rilq::tensor::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+#[test]
+fn pretrain_reduces_loss_tiny() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.dims("tiny").unwrap().clone();
+    let mut rng = Rng::seed(3001);
+    let init = TeacherParams::init(&dims, &mut rng);
+    let cfg = PretrainConfig {
+        steps: 40,
+        lr: 3e-3,
+        warmup: 5,
+        seed: 7,
+        profile: Profile::WikiSim,
+        log_every: 0,
+    };
+    let (_trained, losses) = Driver::new(&rt).pretrain(&dims, &init, &cfg).unwrap();
+    assert_eq!(losses.len(), 40);
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[35..].iter().sum::<f32>() / 5.0;
+    assert!(
+        tail < head * 0.8,
+        "pretraining did not learn: head={head} tail={tail}"
+    );
+}
+
+#[test]
+fn full_compensation_pipeline_tiny() {
+    let Some(rt) = runtime() else { return };
+    let mut lab = Lab::new(&rt);
+    lab.pretrain_steps_override = Some(80);
+    lab.calib = CalibConfig {
+        max_steps: 30,
+        lr: 2e-3,
+        patience: 50,
+        min_delta: 1e-6,
+        n_samples: 32,
+        seed: 5,
+        profile: Profile::C4Sim,
+    };
+    // fresh cache dir per run to keep the test hermetic
+    let tmp = std::env::temp_dir().join(format!("rilq_lab_{}", std::process::id()));
+    lab.cache = rilq::coordinator::RunCache::new(&tmp);
+
+    let (dims, teacher, pre_losses) = lab.teacher("tiny").unwrap();
+    assert!(!pre_losses.is_empty());
+
+    // quantize at 2-bit: quality craters
+    let student = lab.quantize(&dims, &teacher, "rtn", 2).unwrap();
+    let t_scorer = lab.teacher_scorer(&dims, &teacher).unwrap();
+    let base_eval = lab.evaluate(&t_scorer, &dims).unwrap();
+
+    let zeros = rilq::lqec::AdapterSet::zeros(&dims, 4);
+    let q_scorer = lab.student_scorer(&dims, &teacher, &student, &zeros).unwrap();
+    let q_eval = lab.evaluate(&q_scorer, &dims).unwrap();
+    assert!(
+        q_eval.ppl_wiki > base_eval.ppl_wiki * 1.05,
+        "2-bit should hurt ppl: fp={} q={}",
+        base_eval.ppl_wiki,
+        q_eval.ppl_wiki
+    );
+
+    // RILQ compensation recovers part of the gap
+    let init = lab.default_adapters(&dims, 4);
+    let (adapters, res) = lab
+        .compensate(&dims, &teacher, &student, &init, "model_gt", "rtn2")
+        .unwrap();
+    // compare epoch-averaged loss (per-step losses are noisy across the
+    // cycling calibration batches)
+    let n = res.losses.len();
+    let head: f32 = res.losses[..4].iter().sum::<f32>() / 4.0;
+    let tail: f32 = res.losses[n - 4..].iter().sum::<f32>() / 4.0;
+    assert!(tail < head, "calibration loss did not improve: {head} -> {tail}");
+    let r_scorer = lab.student_scorer(&dims, &teacher, &student, &adapters).unwrap();
+    let r_eval = lab.evaluate(&r_scorer, &dims).unwrap();
+    assert!(
+        r_eval.ppl_wiki < q_eval.ppl_wiki,
+        "RILQ should improve ppl: q={} rilq={}",
+        q_eval.ppl_wiki,
+        r_eval.ppl_wiki
+    );
+
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn scorer_consistency_hlo_vs_native() {
+    let Some(rt) = runtime() else { return };
+    let lab = Lab::new(&rt);
+    let dims = lab.dims("tiny").unwrap();
+    let mut rng = Rng::seed(3003);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let hlo = lab.teacher_scorer(&dims, &teacher).unwrap();
+    let native = rilq::eval::NativeScorer {
+        dims: dims.clone(),
+        teacher: teacher.clone(),
+        dense: None,
+    };
+    let seqs: Vec<Vec<u32>> = (0..3)
+        .map(|_| (0..dims.seq).map(|_| rng.below(dims.vocab) as u32).collect())
+        .collect();
+    let a = hlo.score_all(&seqs).unwrap();
+    let b = native.score_all(&seqs).unwrap();
+    for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+        assert!((x - y).abs() < 2e-2 * (1.0 + x.abs()), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn dbg_execute_b_minimal() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.dims("tiny").unwrap().clone();
+    let mut rng = Rng::seed(4001);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let spec = rt.manifest.artifact("teacher_fwd_tiny").unwrap().clone();
+    let mut b = rilq::runtime::Bindings::new();
+    let batch: Vec<Vec<u32>> = (0..dims.batch)
+        .map(|_| (0..dims.seq).map(|_| rng.below(dims.vocab) as u32).collect())
+        .collect();
+    b.teacher(&teacher).tokens(&batch, &dims);
+    // literal path (known good)
+    let lits = b.to_literals(&spec).unwrap();
+    let outs1 = rt.run("teacher_fwd_tiny", &lits).unwrap();
+    let lp1 = rilq::runtime::bindings::output_f32(&spec, &outs1, "logp").unwrap();
+    eprintln!("literal path ok, lp1[0]={}", lp1[0]);
+    // buffer path: upload each literal
+    let bufs: Vec<xla::PjRtBuffer> = lits
+        .iter()
+        .map(|l| rt.buffer_from_literal(l).unwrap())
+        .collect();
+    eprintln!("uploaded {} buffers", bufs.len());
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let outs2 = rt.run_b("teacher_fwd_tiny", &refs).unwrap();
+    let lp2 = rilq::runtime::bindings::output_f32(&spec, &outs2, "logp").unwrap();
+    eprintln!("buffer path ok, lp2[0]={}", lp2[0]);
+    assert!((lp1[0] - lp2[0]).abs() < 1e-5);
+    // REUSE the same buffers for a second execute — donation check
+    let outs3 = rt.run_b("teacher_fwd_tiny", &refs).unwrap();
+    let lp3 = rilq::runtime::bindings::output_f32(&spec, &outs3, "logp").unwrap();
+    eprintln!("buffer REUSE ok, lp3[0]={}", lp3[0]);
+    assert!((lp1[0] - lp3[0]).abs() < 1e-5);
+}

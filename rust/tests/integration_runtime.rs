@@ -1,0 +1,286 @@
+//! Integration tests over the real AOT artifacts: the PJRT-executed HLO
+//! must agree with the pure-Rust reference model, and the train-step
+//! artifacts must actually optimize their losses.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a note)
+//! when `artifacts/manifest.json` is absent so `cargo test` stays green on
+//! a fresh checkout.
+
+use rilq::lqec::AdapterSet;
+use rilq::model::forward::{forward_trace, token_logp};
+use rilq::model::{ModelDims, StudentWeights, TeacherParams};
+use rilq::quant::{CalibCtx, Quantizer, Rtn};
+use rilq::runtime::bindings::{output_f32, output_scalar, Bindings};
+use rilq::runtime::Runtime;
+use rilq::tensor::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+fn random_batch(dims: &ModelDims, rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..dims.batch)
+        .map(|_| (0..dims.seq).map(|_| rng.below(dims.vocab) as u32).collect())
+        .collect()
+}
+
+#[test]
+fn teacher_fwd_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.dims("tiny").unwrap().clone();
+    let mut rng = Rng::seed(2001);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let batch = random_batch(&dims, &mut rng);
+
+    let spec = rt.manifest.artifact("teacher_fwd_tiny").unwrap().clone();
+    let mut b = Bindings::new();
+    b.teacher(&teacher).tokens(&batch, &dims);
+    let outs = rt.run("teacher_fwd_tiny", &b.to_literals(&spec).unwrap()).unwrap();
+    let logp = output_f32(&spec, &outs, "logp").unwrap();
+    assert_eq!(logp.len(), dims.batch * (dims.seq - 1));
+
+    // cross-check every sequence against the pure-Rust reference
+    let view = teacher.view();
+    for (i, seq) in batch.iter().enumerate() {
+        let trace = forward_trace(&dims, &view, seq);
+        let ref_logp = token_logp(&trace.logits, seq);
+        let hlo_logp = &logp[i * (dims.seq - 1)..(i + 1) * (dims.seq - 1)];
+        for (pos, (&a, &b)) in ref_logp.iter().zip(hlo_logp).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-2 * (1.0 + a.abs()),
+                "seq {i} pos {pos}: rust {a} vs hlo {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn student_fwd_matches_rust_reference_with_adapters() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.dims("tiny").unwrap().clone();
+    let mut rng = Rng::seed(2002);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let quant = Rtn::new(2, dims.group_size);
+    let student =
+        StudentWeights::quantize(&dims, &teacher, &quant, &|_, _| CalibCtx::default());
+    // non-trivial adapters on both sides
+    let mut adapters = AdapterSet::init_default(&dims, 4, &mut rng, 0.02);
+    for f in 0..7 {
+        for l in 0..dims.n_layers {
+            let (a, _) = adapters.get(f, l);
+            let a = a.clone();
+            let (_, dout) = dims.linear_dims(rilq::model::LINEARS[f]);
+            let b = rilq::tensor::Mat::randn(dout, 4, &mut rng).scale(0.02);
+            adapters.set(f, l, a, b);
+        }
+    }
+    let batch = random_batch(&dims, &mut rng);
+
+    let name = "student_fwd_tiny_r4";
+    let spec = rt.manifest.artifact(name).unwrap().clone();
+    let mut b = Bindings::new();
+    b.teacher(&teacher)
+        .qweights(&student)
+        .adapters("ad.", &adapters.to_flat())
+        .tokens(&batch, &dims);
+    let outs = rt.run(name, &b.to_literals(&spec).unwrap()).unwrap();
+    let logp = output_f32(&spec, &outs, "logp").unwrap();
+
+    // rust reference with merged effective weights
+    let dense = rilq::model::forward::effective_weights(&student, Some(&adapters));
+    let view = teacher.view_with(&dense);
+    for (i, seq) in batch.iter().enumerate() {
+        let trace = forward_trace(&dims, &view, seq);
+        let ref_logp = token_logp(&trace.logits, seq);
+        let hlo_logp = &logp[i * (dims.seq - 1)..(i + 1) * (dims.seq - 1)];
+        for (pos, (&a, &bb)) in ref_logp.iter().zip(hlo_logp).enumerate() {
+            assert!(
+                (a - bb).abs() < 2e-2 * (1.0 + a.abs()),
+                "seq {i} pos {pos}: rust {a} vs hlo {bb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_student_fwd_matches_dense_student_fwd() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.dims("tiny").unwrap().clone();
+    let mut rng = Rng::seed(2003);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let quant = Rtn::new(2, dims.group_size);
+    let student =
+        StudentWeights::quantize(&dims, &teacher, &quant, &|_, _| CalibCtx::default());
+    let adapters = AdapterSet::init_default(&dims, 4, &mut rng, 0.02);
+    let batch = random_batch(&dims, &mut rng);
+
+    // dense path
+    let dname = "student_fwd_tiny_r4";
+    let dspec = rt.manifest.artifact(dname).unwrap().clone();
+    let mut b = Bindings::new();
+    b.teacher(&teacher)
+        .qweights(&student)
+        .adapters("ad.", &adapters.to_flat())
+        .tokens(&batch, &dims);
+    let douts = rt.run(dname, &b.to_literals(&dspec).unwrap()).unwrap();
+    let dense_logp = output_f32(&dspec, &douts, "logp").unwrap();
+
+    // packed path: RTN is a scalar-codebook quantizer, so codes/scales/zeros
+    // feed the fused Pallas dequant kernel directly
+    let pname = "student_fwd_packed_tiny_r4_w2";
+    let pspec = rt.manifest.artifact(pname).unwrap().clone();
+    let mut packed = Vec::new();
+    let mut scales = Vec::new();
+    let mut zeros = Vec::new();
+    let mut codebook = Vec::new();
+    for f in 0..7 {
+        let mut fam_packed = Vec::new();
+        let mut fam_scales = Vec::new();
+        let mut fam_zeros = Vec::new();
+        for l in 0..dims.n_layers {
+            let q = student.q[f][l].as_scalar().expect("rtn is scalar");
+            fam_packed.push(q.pack());
+            fam_scales.extend_from_slice(q.scales.data());
+            fam_zeros.extend_from_slice(q.zeros.data());
+            codebook = q.codebook.clone();
+        }
+        packed.push(fam_packed);
+        scales.push(fam_scales);
+        zeros.push(fam_zeros);
+    }
+    let mut b = Bindings::new();
+    b.teacher(&teacher)
+        .packed(&packed, &scales, &zeros, &codebook)
+        .adapters("ad.", &adapters.to_flat())
+        .tokens(&batch, &dims);
+    let pouts = rt.run(pname, &b.to_literals(&pspec).unwrap()).unwrap();
+    let packed_logp = output_f32(&pspec, &pouts, "logp").unwrap();
+
+    assert_eq!(dense_logp.len(), packed_logp.len());
+    for (i, (&a, &b)) in dense_logp.iter().zip(&packed_logp).enumerate() {
+        assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "pos {i}: dense {a} vs packed {b}");
+    }
+}
+
+#[test]
+fn train_step_decreases_model_loss() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.dims("tiny").unwrap().clone();
+    let mut rng = Rng::seed(2004);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let quant = Rtn::new(2, dims.group_size);
+    let student =
+        StudentWeights::quantize(&dims, &teacher, &quant, &|_, _| CalibCtx::default());
+    let adapters = AdapterSet::init_default(&dims, 4, &mut rng, 0.01);
+    let batch = random_batch(&dims, &mut rng);
+
+    let name = "train_step_tiny_r4_model";
+    let spec = rt.manifest.artifact(name).unwrap().clone();
+    let mut ad_flat = adapters.to_flat();
+    let mut m_flat = adapters.zeros_like_flat();
+    let mut v_flat = adapters.zeros_like_flat();
+
+    let mut losses = Vec::new();
+    for step in 0..8 {
+        let mut b = Bindings::new();
+        b.teacher(&teacher)
+            .qweights(&student)
+            .adapters("ad.", &ad_flat)
+            .adapters("m.", &m_flat)
+            .adapters("v.", &v_flat)
+            .step_lr((step + 1) as f32, 3e-3)
+            .tokens(&batch, &dims);
+        let outs = rt.run(name, &b.to_literals(&spec).unwrap()).unwrap();
+        losses.push(output_scalar(&spec, &outs, "loss").unwrap());
+        ad_flat = rilq::runtime::bindings::output_adapter_flat(&spec, &outs, "ad.").unwrap();
+        m_flat = rilq::runtime::bindings::output_adapter_flat(&spec, &outs, "m.").unwrap();
+        v_flat = rilq::runtime::bindings::output_adapter_flat(&spec, &outs, "v.").unwrap();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    // Model-Loss on a quantized model starts well above zero
+    assert!(losses[0] > 1e-3, "suspiciously small initial loss {losses:?}");
+}
+
+#[test]
+fn probe_artifact_reports_relative_errors() {
+    let Some(rt) = runtime() else { return };
+    let dims = rt.manifest.dims("tiny").unwrap().clone();
+    let mut rng = Rng::seed(2005);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let quant = Rtn::new(2, dims.group_size);
+    let student =
+        StudentWeights::quantize(&dims, &teacher, &quant, &|_, _| CalibCtx::default());
+    let adapters = AdapterSet::zeros(&dims, 4);
+    let batch = random_batch(&dims, &mut rng);
+
+    let name = "probe_tiny_r4";
+    let spec = rt.manifest.artifact(name).unwrap().clone();
+    let mut b = Bindings::new();
+    b.teacher(&teacher)
+        .qweights(&student)
+        .adapters("ad.", &adapters.to_flat())
+        .tokens(&batch, &dims);
+    let outs = rt.run(name, &b.to_literals(&spec).unwrap()).unwrap();
+    let layer_rel = output_f32(&spec, &outs, "layer_rel").unwrap();
+    let head_rel = output_scalar(&spec, &outs, "head_rel").unwrap();
+    assert_eq!(layer_rel.len(), dims.n_layers);
+    assert!(layer_rel.iter().all(|&x| x > 0.0 && x.is_finite()));
+    assert!(head_rel > 0.0 && head_rel.is_finite());
+    // 2-bit quantization without compensation: visible degradation
+    assert!(head_rel > 0.01, "head_rel={head_rel}");
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.artifact("teacher_fwd_tiny").unwrap().clone();
+    // wrong number of inputs
+    let err = rt.run("teacher_fwd_tiny", &[]);
+    assert!(err.is_err());
+    let _ = spec;
+}
+
+#[test]
+fn rust_forward_matches_jax_golden_vector() {
+    let path = std::path::Path::new("artifacts/testvec_tiny.bin");
+    if !path.exists() {
+        eprintln!("skipping: golden vector not built");
+        return;
+    }
+    use rilq::model::weights::TensorFile;
+    use rilq::tensor::Mat;
+    let tf = TensorFile::load(path).unwrap();
+    let dims = ModelDims {
+        name: "tiny".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        vocab: 256,
+        seq: 64,
+        batch: 8,
+        group_size: 32,
+    };
+    let get = |n: &str| tf.get(n).unwrap().1.clone();
+    let flat = vec![
+        get("embed"), get("wq"), get("wk"), get("wv"), get("wo"),
+        get("wg"), get("wu"), get("wd"), get("ln1"), get("ln2"),
+        get("fnorm"), get("head"),
+    ];
+    let teacher = TeacherParams::from_flat(&dims, &flat).unwrap();
+    let tokens: Vec<u32> = get("tokens").iter().map(|&x| x as u32).collect();
+    let trace = forward_trace(&dims, &teacher.view(), &tokens);
+    let golden = get("logits");
+    let golden = Mat::from_vec(dims.seq, dims.vocab, golden);
+    let dist = trace.logits.fro_dist(&golden);
+    let rel = dist / golden.fro_norm();
+    assert!(rel < 1e-3, "rel={rel}; logits[3][0] rust={} jax={}",
+        trace.logits[(3, 0)], golden[(3, 0)]);
+}

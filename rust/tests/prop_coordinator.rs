@@ -1,0 +1,240 @@
+//! Property tests on coordinator + substrate invariants (hand-rolled,
+//! PCG-driven — the offline crate set has no proptest). Each property runs
+//! 50–200 randomized cases.
+
+use rilq::coordinator::batcher::BatchStream;
+use rilq::coordinator::cache::fnv64;
+use rilq::data::tasks::{gen_gsm, gen_mc, TaskKind};
+use rilq::data::{Corpus, Profile, Vocab};
+use rilq::lqec::{AdapterSet, GroupedAdapterSet};
+use rilq::model::{ModelDims, TeacherParams};
+use rilq::quant::{by_name, pack_codes, unpack_codes, CalibCtx};
+use rilq::report::Json;
+use rilq::tensor::{Mat, Rng};
+
+fn dims_for(rng: &mut Rng) -> ModelDims {
+    let heads = [1usize, 2, 4][rng.below(3)];
+    let d_model = heads * 8 * (1 + rng.below(2));
+    ModelDims {
+        name: "prop".into(),
+        d_model,
+        n_layers: 1 + rng.below(3),
+        n_heads: heads,
+        d_ff: 16 * (1 + rng.below(3)),
+        vocab: 64,
+        seq: 16,
+        batch: 2,
+        group_size: 8,
+    }
+}
+
+/// Batcher: deterministic, exact geometry, produces exactly `limit`
+/// batches, never loses or duplicates tokens relative to a direct corpus
+/// stream with the same seed.
+#[test]
+fn prop_batcher_conservation() {
+    let mut meta = Rng::seed(0xba7c);
+    for _ in 0..20 {
+        let seed = meta.next_u64();
+        let batch = 1 + meta.below(4);
+        let seq = 8 + meta.below(24);
+        let limit = 1 + meta.below(6);
+        let vocab = Vocab::new(256, 1);
+        let mut s = BatchStream::spawn(
+            vocab.clone(),
+            Profile::C4Sim,
+            seed,
+            batch,
+            seq,
+            limit,
+            2,
+        );
+        let mut corpus = Corpus::new(vocab, Profile::C4Sim, seed);
+        let mut n = 0;
+        while let Some(b) = s.next() {
+            let want = corpus.sample_batch(batch, seq);
+            assert_eq!(b, want, "stream diverged from direct corpus");
+            n += 1;
+        }
+        assert_eq!(n, limit);
+    }
+}
+
+/// Packing: roundtrip over random geometries and bit widths.
+#[test]
+fn prop_packing_roundtrip() {
+    let mut rng = Rng::seed(0x9ac);
+    for _ in 0..200 {
+        let bits = [2u8, 3, 4][rng.below(3)];
+        let mult = match bits {
+            2 => 4,
+            4 => 2,
+            _ => 1,
+        };
+        let d_in = mult * (1 + rng.below(20));
+        let d_out = 1 + rng.below(20);
+        let codes: Vec<u8> =
+            (0..d_in * d_out).map(|_| rng.below(1 << bits) as u8).collect();
+        let p = pack_codes(&codes, d_in, d_out, bits);
+        assert_eq!(unpack_codes(&p), codes);
+    }
+}
+
+/// Quantizers: dequantized output has the same shape, finite values, and
+/// error decreases (weakly) with more bits.
+#[test]
+fn prop_quantizer_error_monotone_in_bits() {
+    let mut rng = Rng::seed(0x4b17);
+    for _ in 0..30 {
+        let d_in = 16 * (1 + rng.below(3));
+        let d_out = 8 * (1 + rng.below(3));
+        let w = Mat::randn(d_in, d_out, &mut rng);
+        let ctx = CalibCtx::with_seed(rng.next_u64());
+        let mut last = f32::INFINITY;
+        for bits in [2u8, 3, 4] {
+            let q = by_name("rtn", bits, 8).unwrap();
+            let deq = q.quantize(&w, &ctx).dequant();
+            assert_eq!(deq.shape(), w.shape());
+            assert!(deq.data().iter().all(|x| x.is_finite()));
+            let err = deq.fro_dist(&w);
+            assert!(err <= last + 1e-4, "bits={bits}: {err} > {last}");
+            last = err;
+        }
+    }
+}
+
+/// Adapter flattening: to_flat/from_flat roundtrip over random dims/ranks.
+#[test]
+fn prop_adapterset_flat_roundtrip() {
+    let mut rng = Rng::seed(0xada);
+    for _ in 0..30 {
+        let dims = dims_for(&mut rng);
+        let rank = 1 + rng.below(8);
+        let mut ad = AdapterSet::init_default(&dims, rank, &mut rng, 0.1);
+        // randomize B too
+        for f in 0..7 {
+            for l in 0..dims.n_layers {
+                let (a, b) = ad.get(f, l);
+                let (a, mut b) = (a.clone(), b.clone());
+                b = Mat::randn(b.rows(), rank, &mut rng);
+                ad.set(f, l, a, b);
+            }
+        }
+        let ad2 = AdapterSet::from_flat(&dims, rank, &ad.to_flat()).unwrap();
+        for f in 0..7 {
+            for l in 0..dims.n_layers {
+                let (a1, b1) = ad.get(f, l);
+                let (a2, b2) = ad2.get(f, l);
+                assert!(a1.fro_dist(a2) < 1e-7 && b1.fro_dist(b2) < 1e-7);
+            }
+        }
+    }
+}
+
+/// QA-LoRA merge: merging grouped adapters into zero-points reproduces the
+/// expanded-adapter dense weights exactly, over random geometry.
+#[test]
+fn prop_qalora_merge_exact() {
+    let mut rng = Rng::seed(0x9a10);
+    for _ in 0..30 {
+        let dims = dims_for(&mut rng);
+        let rank = 1 + rng.below(4);
+        let mut g = GroupedAdapterSet::init_default(&dims, rank, &mut rng, 0.2);
+        for f in 0..7 {
+            for l in 0..dims.n_layers {
+                let rows = g.pairs[f][l].1.rows();
+                g.pairs[f][l].1 = Mat::randn(rows, rank, &mut rng);
+            }
+        }
+        let teacher = TeacherParams::init(&dims, &mut rng);
+        let quant = by_name("rtn", 2, dims.group_size).unwrap();
+        let fam = rng.below(7);
+        let layer = rng.below(dims.n_layers);
+        let w = teacher.linear(fam, layer);
+        let qr = quant.quantize(w, &CalibCtx::default());
+        let mut q = qr.as_scalar().unwrap().clone();
+        let expanded = g.expand(&dims);
+        let expected = q.dequant().add(&expanded.delta(fam, layer));
+        g.merge_into(fam, layer, &mut q);
+        assert!(
+            q.dequant().fro_dist(&expected) < 1e-3,
+            "merge mismatch: {}",
+            q.dequant().fro_dist(&expected)
+        );
+    }
+}
+
+/// Cache keys: fnv64 has no collisions across distinct structured keys of
+/// the kind the pipeline generates.
+#[test]
+fn prop_cache_keys_distinct() {
+    let mut keys = std::collections::HashSet::new();
+    for cfg in ["tiny", "small", "base"] {
+        for q in ["rtn", "nf", "omniquant", "gptq", "quarot", "quip"] {
+            for bits in [2, 3, 4] {
+                for rank in [4, 8, 16, 32, 64] {
+                    for scope in ["linear", "layer", "model", "gt", "model_gt"] {
+                        let k = format!("calib:{cfg}:{q}{bits}:scope={scope}:r={rank}");
+                        assert!(keys.insert(fnv64(&k)), "collision at {k}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Task generators: every generated item is well-formed and fits the model
+/// window, over random seeds.
+#[test]
+fn prop_tasks_well_formed() {
+    let mut rng = Rng::seed(0x7a5c);
+    let vocab = Vocab::new(512, 1);
+    for _ in 0..10 {
+        let seed = rng.next_u64();
+        for kind in TaskKind::ALL {
+            for it in gen_mc(kind, &vocab, 10, seed) {
+                assert!(it.correct < it.choices.len());
+                let longest = it.choices.iter().map(Vec::len).max().unwrap();
+                assert!(it.prompt.len() + longest <= 128, "item overflows window");
+                assert!(it
+                    .choices
+                    .iter()
+                    .all(|c| c.iter().all(|&t| (t as usize) < 512)));
+            }
+        }
+        for it in gen_gsm(&vocab, 10, 2, seed) {
+            assert!((4..14).contains(&it.answer));
+            assert!(*it.prompt.last().unwrap() == 16); // OP_EQ
+        }
+    }
+}
+
+/// JSON writer/parser: roundtrip over randomly generated JSON values.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::num((rng.next_f64() * 1e6).round() / 4.0),
+            3 => Json::str(format!("s{}-\"q\"\n", rng.below(1000))),
+            4 => Json::arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.below(4))
+                    .map(|i| {
+                        let v = gen(rng, depth - 1);
+                        (Box::leak(format!("k{i}").into_boxed_str()) as &str, v)
+                    })
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::seed(0x150f);
+    for _ in 0..100 {
+        let j = gen(&mut rng, 3);
+        let round = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(j, round);
+        let compact = Json::parse(&j.to_compact()).unwrap();
+        assert_eq!(j, compact);
+    }
+}
