@@ -1,18 +1,30 @@
-//! Runtime (L3 hot path) benchmarks: PJRT execute latency for the forward
-//! and train-step artifacts, marshalling overhead, and the packed-vs-dense
-//! serving comparison (the W2A16 claim). Requires `make artifacts`.
+//! Runtime (L3 hot path) benchmarks.
+//!
+//! Section 1 (always runs, PJRT-free): the native `LinearBackend`
+//! execution engines — dense vs fused packed-2-bit + LoRA vs
+//! adapter-merged — with tokens/s throughput, the resident weight-memory
+//! comparison (the W2A16 claim: packed < 1/4 of dense f32), and the
+//! threaded-vs-single-threaded tiled matmul.
+//!
+//! Section 2 (requires `make artifacts`): PJRT execute latency for the
+//! forward and train-step artifacts and marshalling overhead.
 
+use rilq::eval::{BackendScorer, Scorer};
 use rilq::lqec::AdapterSet;
-use rilq::model::{StudentWeights, TeacherParams};
+use rilq::model::backend::BackendKind;
+use rilq::model::{ModelDims, StudentWeights, TeacherParams};
 use rilq::quant::{CalibCtx, Rtn};
 use rilq::report::Bench;
 use rilq::runtime::bindings::Bindings;
 use rilq::runtime::Runtime;
-use rilq::tensor::Rng;
+use rilq::tensor::{Mat, Rng};
 
 fn main() {
+    bench_native_backends();
+    bench_threaded_matmul();
+
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        eprintln!("skipping PJRT section of bench_runtime: run `make artifacts` first");
         return;
     }
     let rt = Runtime::new("artifacts").expect("runtime");
@@ -21,6 +33,100 @@ fn main() {
     }
     let (secs, count) = rt.exec_stats();
     println!("total PJRT execute: {count} calls, {secs:.2}s");
+}
+
+/// Geometry for the native-engine section: big enough that weight
+/// streaming dominates, grouped like the paper's W2 g64/g128 setups.
+fn native_dims() -> ModelDims {
+    ModelDims {
+        name: "bench".into(),
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        d_ff: 512,
+        vocab: 512,
+        seq: 64,
+        batch: 4,
+        group_size: 64,
+    }
+}
+
+fn bench_native_backends() {
+    let dims = native_dims();
+    let mut rng = Rng::seed(0xba9e);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let quant = Rtn::new(2, dims.group_size);
+    let student = StudentWeights::quantize(&dims, &teacher, &quant, &|_, _| CalibCtx::default());
+    // nonzero adapters so the rank-r correction is actually exercised
+    let rank = 8;
+    let mut adapters = AdapterSet::zeros(&dims, rank);
+    for f in 0..7 {
+        for l in 0..dims.n_layers {
+            let (di, do_) = dims.linear_dims(rilq::model::LINEARS[f]);
+            adapters.set(
+                f,
+                l,
+                Mat::randn(di, rank, &mut rng).scale(0.01),
+                Mat::randn(do_, rank, &mut rng).scale(0.01),
+            );
+        }
+    }
+    let batch: Vec<Vec<u32>> = (0..dims.batch)
+        .map(|_| (0..dims.seq).map(|_| rng.below(dims.vocab) as u32).collect())
+        .collect();
+    let tokens_per_exec = (dims.batch * dims.seq) as f64;
+
+    let b = Bench::new("native_backend").iters(2, 8);
+    let mut weight_bytes = Vec::new();
+    for kind in BackendKind::ALL {
+        let scorer = BackendScorer::new(&dims, &teacher, &student, Some(&adapters), kind)
+            .expect("backend build");
+        weight_bytes.push((kind, scorer.weight_bytes()));
+        b.run_throughput(&format!("student_fwd_{kind} tokens/s"), tokens_per_exec, || {
+            scorer.score_batch(&batch).unwrap()
+        });
+    }
+
+    // the W2A16 memory claim: packed resident weights < 1/4 of dense f32
+    let dense = weight_bytes
+        .iter()
+        .find(|(k, _)| *k == BackendKind::Dense)
+        .map(|(_, n)| *n)
+        .unwrap();
+    for (kind, bytes) in &weight_bytes {
+        println!(
+            "weight-memory {kind:<7} {:>10} bytes  ({:.2}x vs dense f32)",
+            bytes,
+            *bytes as f64 / dense as f64
+        );
+    }
+    let packed = weight_bytes
+        .iter()
+        .find(|(k, _)| *k == BackendKind::Packed)
+        .map(|(_, n)| *n)
+        .unwrap();
+    assert!(
+        packed * 4 < dense,
+        "packed weight memory ({packed}) must be < 1/4 of dense ({dense})"
+    );
+}
+
+fn bench_threaded_matmul() {
+    let mut rng = Rng::seed(0x7ead);
+    let x = Mat::randn(256, 1024, &mut rng);
+    let w = Mat::randn(1024, 1024, &mut rng);
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let b = Bench::new("tiled_matmul").iters(2, 8);
+    let single = b.run("single-thread 256x1024x1024", || x.matmul(&w));
+    let threaded = b.run(&format!("threaded({workers}) 256x1024x1024"), || {
+        x.matmul_threaded(&w, workers)
+    });
+    let bt = w.t();
+    b.run("matmul_t blocked 256x1024x1024", || x.matmul_t(&bt));
+    println!(
+        "threaded speedup: {:.2}x over single-threaded (p50)",
+        single.summary.p50 / threaded.summary.p50.max(1e-12)
+    );
 }
 
 fn bench_config(rt: &Runtime, config: &str) {

@@ -6,6 +6,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::model::backend::BackendKind;
+
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -55,6 +57,15 @@ impl Args {
     pub fn pos(&self, i: usize) -> Option<&str> {
         self.positional.get(i).map(String::as_str)
     }
+
+    /// `--backend {dense,packed,merged}` — the execution engine for
+    /// quantized linears (defaults to `dense`, the historical behavior).
+    pub fn backend(&self) -> Result<BackendKind> {
+        match self.opt("backend") {
+            Some(s) => BackendKind::parse(s),
+            None => Ok(BackendKind::Dense),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -79,5 +90,14 @@ mod tests {
         let a = parse("");
         assert_eq!(a.subcommand, "");
         assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn backend_flag() {
+        use crate::model::backend::BackendKind;
+        assert_eq!(parse("eval").backend().unwrap(), BackendKind::Dense);
+        assert_eq!(parse("eval --backend=packed").backend().unwrap(), BackendKind::Packed);
+        assert_eq!(parse("eval --backend=merged").backend().unwrap(), BackendKind::Merged);
+        assert!(parse("eval --backend=gpu").backend().is_err());
     }
 }

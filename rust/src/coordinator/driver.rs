@@ -11,7 +11,9 @@ use anyhow::Result;
 
 use crate::data::Profile;
 use crate::data::Vocab;
+use crate::eval::{BackendScorer, HloScorer, Scorer};
 use crate::lqec::AdapterSet;
+use crate::model::backend::BackendKind;
 use crate::model::{ModelDims, StudentWeights, TeacherParams};
 use crate::runtime::bindings::{
     output_adapter_flat, output_scalar, output_teacher_flat, Bindings,
@@ -62,14 +64,60 @@ pub struct CalibResult {
     pub stopped_early: bool,
 }
 
-/// The coordinator-side training driver owning a runtime reference.
+/// The coordinator-side training driver owning a runtime reference plus
+/// the execution-backend choice used for any scorer it builds.
 pub struct Driver<'r> {
     pub rt: &'r Runtime,
+    /// Execution engine for student evaluation (see
+    /// [`crate::model::backend`]). Calibration itself always runs the
+    /// train-step artifacts; the backend selects how the resulting
+    /// (student, adapters) pair *executes* at eval/serving time.
+    pub backend: BackendKind,
 }
 
 impl<'r> Driver<'r> {
     pub fn new(rt: &'r Runtime) -> Driver<'r> {
-        Driver { rt }
+        Driver { rt, backend: BackendKind::Dense }
+    }
+
+    /// Select the execution backend for scorers built by this driver.
+    pub fn with_backend(mut self, backend: BackendKind) -> Driver<'r> {
+        self.backend = backend;
+        self
+    }
+
+    /// Build the evaluation scorer for a (student, adapters) pair under
+    /// this driver's backend — the single place execution selection
+    /// lives:
+    ///
+    /// * `dense` prefers the lowered HLO artifact (PJRT) when present,
+    ///   falling back to the native dense engine;
+    /// * `packed` / `merged` always run the native execution engine
+    ///   (`packed` is the fused streaming-dequant W2A16 serving form).
+    pub fn student_scorer(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        student: &StudentWeights,
+        adapters: &AdapterSet,
+    ) -> Result<Box<dyn Scorer + 'r>> {
+        if self.backend == BackendKind::Dense {
+            let name = format!("student_fwd_{}_r{}", dims.name, adapters.rank);
+            if self.rt.manifest.artifact(&name).is_ok() {
+                let flat = adapters.to_flat();
+                let sc = HloScorer::new(self.rt, &name, |b| {
+                    b.teacher(teacher).qweights(student).adapters("ad.", &flat);
+                })?;
+                return Ok(Box::new(sc));
+            }
+            log::debug!(
+                "artifact student_fwd_{}_r{} not lowered; using the native dense engine",
+                dims.name,
+                adapters.rank
+            );
+        }
+        let sc = BackendScorer::new(dims, teacher, student, Some(adapters), self.backend)?;
+        Ok(Box::new(sc))
     }
 
     /// Run LQEC calibration: tune `adapters` on `train_step_<cfg>_r<r>_<scope>`

@@ -5,10 +5,13 @@
 //! fixed-length token sequences, return per-position log-probs of the
 //! realized next tokens" — with two implementations:
 //!
-//! * [`scorer::HloScorer`] — the production path: a PJRT artifact
+//! * [`scorer::HloScorer`] — the PJRT artifact path: a lowered HLO
 //!   (teacher/student/packed forward) executed by the [`crate::runtime`];
-//! * [`scorer::NativeScorer`] — the pure-Rust reference model (PJRT-free
-//!   studies and tests).
+//! * [`scorer::BackendScorer`] — the native execution engine: quantized
+//!   linears run through a [`crate::model::backend::LinearBackend`]
+//!   (dense / fused packed+LoRA / adapter-merged);
+//! * [`scorer::NativeScorer`] — the pure-Rust reference model (teacher or
+//!   pre-materialized dense weights; PJRT-free studies and tests).
 
 pub mod csqa;
 pub mod ppl;
@@ -16,4 +19,4 @@ pub mod scorer;
 
 pub use csqa::{gsm_accuracy, mc_accuracy};
 pub use ppl::perplexity;
-pub use scorer::{HloScorer, NativeScorer, Scorer};
+pub use scorer::{BackendScorer, HloScorer, NativeScorer, Scorer};

@@ -3,8 +3,10 @@
 use anyhow::Result;
 
 use crate::data::tokenizer::PAD;
+use crate::lqec::AdapterSet;
+use crate::model::backend::{model_weight_bytes, student_backends, BackendKind, LinearBackend};
 use crate::model::forward::{forward_trace, token_logp};
-use crate::model::{ModelDims, TeacherParams};
+use crate::model::{ModelDims, StudentWeights, TeacherParams};
 use crate::runtime::bindings::{output_f32, Bindings, DeviceBindings};
 use crate::runtime::{ArtifactSpec, Runtime};
 use crate::tensor::Mat;
@@ -122,6 +124,64 @@ impl Scorer for NativeScorer {
                 Some(d) => forward_trace(&self.dims, &self.teacher.view_with(d), seq),
                 None => forward_trace(&self.dims, &self.teacher.view(), seq),
             };
+            out.push(token_logp(&trace.logits, seq));
+        }
+        Ok(out)
+    }
+}
+
+/// Scorer over the native [`LinearBackend`] execution engine: the seven
+/// quantized linear families run through the selected form (dense /
+/// packed / merged) while embed, norms, and the LM head stay fp (the
+/// paper quantizes only the linears). This is the PJRT-free serving
+/// path — the packed form never materializes dense f32 weights, and the
+/// retained teacher slice holds only embed/norms/head (the dense fp32
+/// linears are dropped from the clone, so they don't silently re-enter
+/// resident memory alongside the packed codes).
+pub struct BackendScorer {
+    pub dims: ModelDims,
+    pub kind: BackendKind,
+    /// embed/norms/head only — linears are empty (see
+    /// [`TeacherParams::without_linears`])
+    teacher: TeacherParams,
+    linears: Vec<Vec<Box<dyn LinearBackend>>>,
+}
+
+impl BackendScorer {
+    /// Build the execution engine for a (student, adapters) pair.
+    /// Fails for `BackendKind::Packed` when the quantizer produced no
+    /// scalar codes (rotation/VQ methods).
+    pub fn new(
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+        student: &StudentWeights,
+        adapters: Option<&AdapterSet>,
+        kind: BackendKind,
+    ) -> Result<BackendScorer> {
+        Ok(BackendScorer {
+            dims: dims.clone(),
+            kind,
+            teacher: teacher.without_linears(),
+            linears: student_backends(student, adapters, kind)?,
+        })
+    }
+
+    /// Resident weight memory of the quantized linears (bytes).
+    pub fn weight_bytes(&self) -> usize {
+        model_weight_bytes(&self.linears)
+    }
+}
+
+impl Scorer for BackendScorer {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let view = self.teacher.view_backends(&self.linears);
+        let mut out = Vec::with_capacity(batch.len());
+        for seq in batch {
+            let trace = forward_trace(&self.dims, &view, seq);
             out.push(token_logp(&trace.logits, seq));
         }
         Ok(out)

@@ -11,6 +11,7 @@ use crate::data::{Corpus, Profile, Vocab};
 use crate::eval::{gsm_accuracy, mc_accuracy, perplexity, HloScorer, Scorer};
 use crate::lqec::svd_init::{adapters_from_presvd, loftq_model, loftq_presvd};
 use crate::lqec::AdapterSet;
+use crate::model::backend::BackendKind;
 use crate::model::forward::CalibStats;
 use crate::model::weights::TensorFile;
 use crate::model::{ModelDims, StudentWeights, TeacherParams, LINEARS};
@@ -39,6 +40,9 @@ pub struct Lab<'r> {
     /// override for calibration budget (None = default)
     pub calib: CalibConfig,
     pub pretrain_steps_override: Option<usize>,
+    /// execution engine for student evaluation (CLI `--backend`); see
+    /// [`crate::model::backend`]
+    pub backend: BackendKind,
     /// in-memory cache of single-iteration LoftQ residual SVDs, shared by
     /// the rank sweeps (Fig. 3(a), Tables 4/5/9)
     svd_cache: std::cell::RefCell<
@@ -62,6 +66,7 @@ impl<'r> Lab<'r> {
             seed: 20250710,
             calib,
             pretrain_steps_override: None,
+            backend: BackendKind::Dense,
             svd_cache: Default::default(),
         }
     }
@@ -308,19 +313,21 @@ impl<'r> Lab<'r> {
         })
     }
 
-    /// Scorer for a (student, adapters) pair via the dense student artifact.
+    /// Scorer for a (student, adapters) pair under the lab's execution
+    /// backend: `dense` runs the HLO student artifact when lowered (the
+    /// historical path), `packed`/`merged` run the native
+    /// [`crate::model::backend`] engine. Selection lives in
+    /// [`Driver::student_scorer`].
     pub fn student_scorer(
         &self,
         dims: &ModelDims,
         teacher: &TeacherParams,
         student: &StudentWeights,
         adapters: &AdapterSet,
-    ) -> Result<HloScorer<'r>> {
-        let name = format!("student_fwd_{}_r{}", dims.name, adapters.rank);
-        let flat = adapters.to_flat();
-        HloScorer::new(self.rt, &name, |b| {
-            b.teacher(teacher).qweights(student).adapters("ad.", &flat);
-        })
+    ) -> Result<Box<dyn Scorer + 'r>> {
+        Driver::new(self.rt)
+            .with_backend(self.backend)
+            .student_scorer(dims, teacher, student, adapters)
     }
 
     /// Full evaluation bundle: 5-task CSQA accuracy + two perplexities.

@@ -17,6 +17,43 @@
 //! Python never runs on the request path: `make artifacts` lowers every model
 //! variant once; this crate loads the HLO via PJRT (`xla` crate) and drives
 //! calibration/eval loops natively.
+//!
+//! ## Execution backends (the serving architecture)
+//!
+//! Quantized linears execute through the [`model::backend::LinearBackend`]
+//! trait — the seam every scaling direction (batching, sharding,
+//! multi-backend PJRT) plugs into. Three engines implement it:
+//!
+//! ```text
+//!                    ┌──────────────────────────────────────────────┐
+//!   teacher fp  ───▶ │ Mat (plain dense matmul, threaded when big)  │
+//!                    ├──────────────────────────────────────────────┤
+//!   --backend dense  │ DenseLinear:   y = x·deq(Q) + (x·A)·Bᵀ       │
+//!     (default)      │   f32 dequant held resident; LoRA unmerged   │
+//!                    │   (HLO student artifact used when lowered)   │
+//!                    ├──────────────────────────────────────────────┤
+//!   --backend packed │ PackedLoraLinear:                            │
+//!     (serving form) │   y = Σ_g [ s_g·Σ_{i∈g} x_i·cb[code_ij]      │
+//!                    │          + z_g·Σ_{i∈g} x_i ]  + (x·A)·Bᵀ     │
+//!                    │   2/3/4-bit codes dequantized inside the     │
+//!                    │   blocked matmul loop; resident weights are  │
+//!                    │   the packed footprint (<1/4 of f32 at 2-bit)│
+//!                    ├──────────────────────────────────────────────┤
+//!   --backend merged │ MergedDenseLinear: W = Q + A·Bᵀ materialized │
+//!     (oracle)       │   once — the parity/testing reference        │
+//!                    └──────────────────────────────────────────────┘
+//! ```
+//!
+//! Selection is threaded end-to-end: CLI `--backend` →
+//! [`experiments::pipeline::Lab::backend`] →
+//! [`coordinator::driver::Driver::student_scorer`] (the single dispatch
+//! point, which also prefers the HLO artifact for `dense` when lowered) →
+//! [`eval::BackendScorer`] → `TeacherParams::view_backends` → the shared
+//! [`model::forward::forward_trace`]. `packed` mirrors the
+//! `python/compile/kernels/lora_qmm.py` Pallas kernel natively; parity
+//! tests (`tests/backend_parity.rs`) pin all three engines to each other
+//! and to the dequant oracle. Rotation/VQ quantizers (QuaRot, QuIP#)
+//! carry no scalar codes and therefore only run `dense`/`merged`.
 
 pub mod tensor;
 pub mod quant;

@@ -64,7 +64,32 @@ impl AdapterSet {
     /// Dense correction `A·Bᵀ` for one linear.
     pub fn delta(&self, family: usize, layer: usize) -> Mat {
         let (a, b) = self.get(family, layer);
-        a.matmul(&b.t())
+        a.matmul_t(b)
+    }
+
+    /// Owned `(A, B)` clone for one linear, or `None` when the pair is
+    /// all-zero (the "no compensation" baseline) — the form the
+    /// [`crate::model::backend`] execution engines consume.
+    pub fn lora_pair(&self, family: usize, layer: usize) -> Option<(Mat, Mat)> {
+        let (a, b) = self.get(family, layer);
+        let nonzero = |m: &Mat| m.data().iter().any(|&v| v != 0.0);
+        if nonzero(a) && nonzero(b) {
+            Some((a.clone(), b.clone()))
+        } else {
+            None
+        }
+    }
+
+    /// Merge every correction into dense weights in place:
+    /// `dense[f][l] += A[f][l]·B[f][l]ᵀ` (the `MergedDenseLinear` /
+    /// QA-LoRA-style deployment form).
+    pub fn merge_into(&self, dense: &mut [Vec<Mat>]) {
+        for (f, layers) in dense.iter_mut().enumerate() {
+            for (l, w) in layers.iter_mut().enumerate() {
+                let (a, b) = self.get(f, l);
+                *w = w.add(&a.matmul_t(b));
+            }
+        }
     }
 
     /// Number of adapter parameters.
@@ -177,6 +202,26 @@ mod tests {
                 assert!(b1.fro_dist(b2) < 1e-7);
             }
         }
+    }
+
+    #[test]
+    fn merge_into_matches_delta() {
+        let d = dims();
+        let mut rng = Rng::seed(113);
+        let mut ad = AdapterSet::zeros(&d, 3);
+        ad.set(2, 0, Mat::randn(16, 3, &mut rng), Mat::randn(16, 3, &mut rng));
+        let mut dense: Vec<Vec<Mat>> = (0..7)
+            .map(|f| {
+                let (di, do_) = d.linear_dims(crate::model::LINEARS[f]);
+                (0..2).map(|_| Mat::zeros(di, do_)).collect()
+            })
+            .collect();
+        ad.merge_into(&mut dense);
+        assert!(dense[2][0].fro_dist(&ad.delta(2, 0)) < 1e-6);
+        assert!(dense[3][1].fro_norm() < 1e-9);
+        // zero pairs yield no lora_pair; the touched one does
+        assert!(ad.lora_pair(0, 0).is_none());
+        assert!(ad.lora_pair(2, 0).is_some());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! rilq experiment <id>|all [--fast] reproduce a paper table/figure -> reports/
 //! rilq pretrain <config> [--steps=N]   pretrain + cache a teacher
 //! rilq eval <config> [--quant=rtn --bits=2 --rank=16 --scope=model_gt]
+//!                    [--backend={dense|packed|merged}]
 //!                                   quantize+compensate+evaluate one cell
 //! rilq inspect                      print manifest / artifact inventory
 //! ```
@@ -93,8 +94,10 @@ fn dispatch(args: &Args) -> Result<()> {
             let bits = args.opt_usize("bits")?.unwrap_or(2) as u8;
             let rank = args.opt_usize("rank")?.unwrap_or(16);
             let scope = args.opt("scope").unwrap_or("model_gt");
+            let backend = args.backend()?;
             let rt = Runtime::new(artifact_dir(args))?;
             let mut lab = Lab::new(&rt);
+            lab.backend = backend;
             if args.flag("fast") {
                 lab.calib.max_steps = 60;
                 lab.calib.n_samples = 64;
@@ -107,7 +110,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let sc = lab.student_scorer(&dims, &teacher, &student, &zeros)?;
             let before = lab.evaluate(&sc, &dims)?;
             println!(
-                "{quant} W{bits} (no LQEC):  CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
+                "{quant} W{bits} [{backend}] (no LQEC):  CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
                 before.avg_acc * 100.0,
                 before.ppl_wiki,
                 before.ppl_c4
@@ -119,7 +122,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
             let after = lab.evaluate(&sc, &dims)?;
             println!(
-                "{quant} W{bits} + {scope} (r={rank}, {} steps, {:.1}s): CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
+                "{quant} W{bits} + {scope} [{backend}] (r={rank}, {} steps, {:.1}s): CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
                 res.steps,
                 res.wall_secs,
                 after.avg_acc * 100.0,
@@ -142,6 +145,10 @@ USAGE:
   rilq experiment <id>|all [--fast]   regenerate a table/figure -> reports/
   rilq pretrain <config> [--steps=N]  pretrain + cache a teacher model
   rilq eval <config> [--quant=rtn --bits=2 --rank=16 --scope=model_gt] [--fast]
+                     [--backend={dense|packed|merged}]
+                                      dense  = f32 dequant (HLO artifact when lowered)
+                                      packed = fused packed-2-bit + LoRA serving engine
+                                      merged = adapter-merged dense (parity oracle)
   rilq inspect                        artifact / config inventory
   (global) --artifacts=DIR            artifact directory [default: artifacts]
 ";

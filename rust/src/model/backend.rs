@@ -1,0 +1,535 @@
+//! The linear execution engine: how `y = x · W_eff` actually runs.
+//!
+//! RILQ's deployable artifact is an adapter-merged *quantized* model
+//! (`W_eff = deq(Q) + A·Bᵀ`), but historically the Rust evaluation path
+//! always materialized dense f32 weights first. This module makes the
+//! execution form a first-class choice behind one trait:
+//!
+//! * [`DenseLinear`] — dense f32 `Q` plus an *unmerged* rank-r correction
+//!   `(x·A)·Bᵀ`; the native mirror of the `lora_mm` Pallas kernel. This is
+//!   the only form available to rotation/VQ quantizers (QuaRot, QuIP#),
+//!   whose dequant is not per-scalar, and to the fp teacher (a plain
+//!   [`Mat`] also implements the trait).
+//! * [`PackedLoraLinear`] — the W2A16 serving form and the native mirror of
+//!   the `lora_qmm_packed` Pallas kernel: bit-packed codes are dequantized
+//!   *group-by-group inside the matmul inner loop* (never materializing
+//!   the f32 weight matrix), followed by the same rank-r correction.
+//!   Resident weight memory is the packed footprint: `bits`/8 bytes per
+//!   weight + group (scale, zero) metadata + the scalar codebook.
+//! * [`MergedDenseLinear`] — `Q + A·Bᵀ` materialized once; the parity
+//!   oracle the other two backends are tested against, and the fastest
+//!   form when memory is not a constraint.
+//!
+//! [`student_backends`] builds the per-(family, layer) engine for a
+//! quantized student, and `TeacherParams::view_backends` (see
+//! [`super::forward`]) plugs it into the shared forward pass. Everything
+//! downstream — `Lab`, the coordinator driver, the CLI `--backend` flag,
+//! and the runtime benches — selects an execution form via [`BackendKind`].
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::lqec::AdapterSet;
+use crate::quant::{PackedTensor, QuantResult, QuantizedTensor};
+use crate::tensor::{suggested_workers, Mat};
+
+use super::StudentWeights;
+
+/// Which execution engine to run quantized linears through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Dense f32 dequantized weights + unmerged LoRA (current/default).
+    Dense,
+    /// Fused packed-code streaming dequant + LoRA (the serving form).
+    Packed,
+    /// Adapter-merged dense weights (parity oracle / fastest).
+    Merged,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::Dense, BackendKind::Packed, BackendKind::Merged];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Dense => "dense",
+            BackendKind::Packed => "packed",
+            BackendKind::Merged => "merged",
+        }
+    }
+
+    /// Parse a `--backend` flag value.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "dense" => Ok(BackendKind::Dense),
+            "packed" => Ok(BackendKind::Packed),
+            "merged" => Ok(BackendKind::Merged),
+            other => Err(anyhow!("unknown backend '{other}' (expected dense|packed|merged)")),
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One linear layer's execution engine: `y = x · W_eff` for activations
+/// `x: [tokens, d_in]`.
+pub trait LinearBackend: Send + Sync {
+    fn d_in(&self) -> usize;
+    fn d_out(&self) -> usize;
+
+    /// `y = x · W_eff`, `x: [T, d_in]` → `[T, d_out]`.
+    fn forward(&self, x: &Mat) -> Mat;
+
+    /// Resident weight-memory footprint in bytes (codes + metadata +
+    /// adapters for packed; f32 matrices for dense forms).
+    fn weight_bytes(&self) -> usize;
+
+    /// Short engine label for reports/benches.
+    fn label(&self) -> &'static str;
+}
+
+/// Dense matmul with a size-aware threading heuristic — shared by the
+/// teacher path (`Mat` as a backend) and [`DenseLinear`].
+fn dense_matmul(x: &Mat, w: &Mat) -> Mat {
+    let workers = suggested_workers(x.rows() * w.rows() * w.cols());
+    if workers > 1 {
+        x.matmul_threaded(w, workers)
+    } else {
+        x.matmul(w)
+    }
+}
+
+/// Add the rank-r correction `(x·A)·Bᵀ` into `y` — two skinny matmuls,
+/// `A·Bᵀ` is never materialized (the `lora_mm` contraction order).
+fn add_lora_correction(y: &mut Mat, x: &Mat, a: &Mat, b: &Mat) {
+    let xa = dense_matmul(x, a); // [T, r]
+    let r = a.cols();
+    let workers = suggested_workers(x.rows() * r * b.rows());
+    let corr = if workers > 1 {
+        xa.matmul_t_threaded(b, workers)
+    } else {
+        xa.matmul_t(b)
+    };
+    y.axpy(1.0, &corr);
+}
+
+fn lora_bytes(lora: &Option<(Mat, Mat)>) -> usize {
+    lora.as_ref().map(|(a, b)| 4 * (a.len() + b.len())).unwrap_or(0)
+}
+
+/// The fp teacher's linears execute as plain dense matmuls.
+impl LinearBackend for Mat {
+    fn d_in(&self) -> usize {
+        self.rows()
+    }
+
+    fn d_out(&self) -> usize {
+        self.cols()
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        dense_matmul(x, self)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        4 * self.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "fp32"
+    }
+}
+
+/// Dense f32 quantized weights with an optional *unmerged* LoRA pair:
+/// `y = x·Q + (x·A)·Bᵀ`. `A: [d_in, r]`, `B: [d_out, r]`.
+pub struct DenseLinear {
+    pub w: Mat,
+    pub lora: Option<(Mat, Mat)>,
+}
+
+impl DenseLinear {
+    pub fn new(w: Mat, lora: Option<(Mat, Mat)>) -> DenseLinear {
+        if let Some((a, b)) = &lora {
+            assert_eq!(a.rows(), w.rows(), "A rows must match d_in");
+            assert_eq!(b.rows(), w.cols(), "B rows must match d_out");
+            assert_eq!(a.cols(), b.cols(), "A/B rank mismatch");
+        }
+        DenseLinear { w, lora }
+    }
+}
+
+impl LinearBackend for DenseLinear {
+    fn d_in(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn d_out(&self) -> usize {
+        self.w.cols()
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        let mut y = dense_matmul(x, &self.w);
+        if let Some((a, b)) = &self.lora {
+            add_lora_correction(&mut y, x, a, b);
+        }
+        y
+    }
+
+    fn weight_bytes(&self) -> usize {
+        4 * self.w.len() + lora_bytes(&self.lora)
+    }
+
+    fn label(&self) -> &'static str {
+        "dense"
+    }
+}
+
+/// Adapter-merged dense weights: `W_eff = Q + A·Bᵀ` materialized once.
+pub struct MergedDenseLinear {
+    pub w: Mat,
+}
+
+impl MergedDenseLinear {
+    /// Merge `q + a·bᵀ` (either side optional for the no-adapter case).
+    pub fn merge(q: Mat, lora: Option<(&Mat, &Mat)>) -> MergedDenseLinear {
+        let w = match lora {
+            Some((a, b)) => q.add(&a.matmul_t(b)),
+            None => q,
+        };
+        MergedDenseLinear { w }
+    }
+}
+
+impl LinearBackend for MergedDenseLinear {
+    fn d_in(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn d_out(&self) -> usize {
+        self.w.cols()
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        dense_matmul(x, &self.w)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        4 * self.w.len()
+    }
+
+    fn label(&self) -> &'static str {
+        "merged"
+    }
+}
+
+/// The W2A16 serving engine: bit-packed codes with group-wise (scale,
+/// zero) and a scalar codebook, dequantized *inside* the blocked matmul
+/// inner loop, plus the rank-r LoRA correction.
+///
+/// Per output row the contraction is factored by group `g`:
+///
+/// ```text
+/// y[t,j] = Σ_g ( scale[g,j] · Σ_{i∈g} x[t,i]·cb[code[i,j]]
+///              + zero[g,j]  · Σ_{i∈g} x[t,i] )            + (x·A)·Bᵀ
+/// ```
+///
+/// so the zero-point term costs one group-sum of `x` instead of a full
+/// rank-1 pass, and scales/zeros are applied once per group rather than
+/// per weight — the same factorization the Pallas kernel exploits with
+/// `jnp.repeat`-free group metadata.
+pub struct PackedLoraLinear {
+    packed: PackedTensor,
+    /// `[n_groups, d_out]`
+    scales: Mat,
+    /// `[n_groups, d_out]`
+    zeros: Mat,
+    /// `[2^bits]`
+    codebook: Vec<f32>,
+    group_size: usize,
+    bits: u8,
+    d_in: usize,
+    d_out: usize,
+    /// optional `(A: [d_in, r], B: [d_out, r])`
+    pub lora: Option<(Mat, Mat)>,
+}
+
+impl PackedLoraLinear {
+    /// Pack a scalar-codebook quantized tensor into the serving form.
+    pub fn from_quantized(q: &QuantizedTensor, lora: Option<(Mat, Mat)>) -> PackedLoraLinear {
+        if let Some((a, b)) = &lora {
+            assert_eq!(a.rows(), q.d_in, "A rows must match d_in");
+            assert_eq!(b.rows(), q.d_out, "B rows must match d_out");
+            assert_eq!(a.cols(), b.cols(), "A/B rank mismatch");
+        }
+        assert_eq!(q.scales.rows(), q.n_groups(), "scales/groups mismatch");
+        PackedLoraLinear {
+            packed: q.pack(),
+            scales: q.scales.clone(),
+            zeros: q.zeros.clone(),
+            codebook: q.codebook.clone(),
+            group_size: q.group_size,
+            bits: q.bits,
+            d_in: q.d_in,
+            d_out: q.d_out,
+            lora,
+        }
+    }
+
+    /// The fused kernel over token rows `[t0, t1)`, accumulating into
+    /// `out` (`(t1-t0) * d_out` zeroed floats).
+    fn forward_rows(&self, x: &Mat, t0: usize, t1: usize, out: &mut [f32]) {
+        let d_out = self.d_out;
+        let gs = self.group_size;
+        let n_groups = self.scales.rows();
+        let cb = &self.codebook;
+        let data = &self.packed.data;
+        // per-group partial sums Σ x_i·cb[code_ij], reused across groups
+        let mut tmp = vec![0.0f32; d_out];
+        for t in t0..t1 {
+            let xrow = x.row(t);
+            let orow = &mut out[(t - t0) * d_out..(t - t0) * d_out + d_out];
+            for g in 0..n_groups {
+                let r0 = g * gs;
+                let r1 = (r0 + gs).min(self.d_in);
+                for v in tmp.iter_mut() {
+                    *v = 0.0;
+                }
+                let mut xsum = 0.0f32;
+                match self.bits {
+                    2 => {
+                        // byte-coalesced: one packed byte holds 4
+                        // consecutive input dims for a fixed output column
+                        let mut i = r0;
+                        while i < r1 {
+                            if i % 4 == 0 && i + 4 <= r1 {
+                                let (x0, x1, x2, x3) =
+                                    (xrow[i], xrow[i + 1], xrow[i + 2], xrow[i + 3]);
+                                xsum += x0 + x1 + x2 + x3;
+                                if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+                                    let pr = i / 4;
+                                    let prow = &data[pr * d_out..pr * d_out + d_out];
+                                    for (acc, &byte) in tmp.iter_mut().zip(prow) {
+                                        let b = byte as usize;
+                                        *acc += x0 * cb[b & 3]
+                                            + x1 * cb[(b >> 2) & 3]
+                                            + x2 * cb[(b >> 4) & 3]
+                                            + x3 * cb[(b >> 6) & 3];
+                                    }
+                                }
+                                i += 4;
+                            } else {
+                                // ragged group edge: single-lane decode
+                                let xi = xrow[i];
+                                xsum += xi;
+                                if xi != 0.0 {
+                                    let pr = i / 4;
+                                    let sh = 2 * (i % 4);
+                                    let prow = &data[pr * d_out..pr * d_out + d_out];
+                                    for (acc, &byte) in tmp.iter_mut().zip(prow) {
+                                        *acc += xi * cb[((byte >> sh) & 3) as usize];
+                                    }
+                                }
+                                i += 1;
+                            }
+                        }
+                    }
+                    4 => {
+                        for i in r0..r1 {
+                            let xi = xrow[i];
+                            xsum += xi;
+                            if xi == 0.0 {
+                                continue;
+                            }
+                            let pr = i / 2;
+                            let sh = 4 * (i % 2);
+                            let prow = &data[pr * d_out..pr * d_out + d_out];
+                            for (acc, &byte) in tmp.iter_mut().zip(prow) {
+                                *acc += xi * cb[((byte >> sh) & 0xF) as usize];
+                            }
+                        }
+                    }
+                    3 => {
+                        // 3-bit codes stay one per byte
+                        for i in r0..r1 {
+                            let xi = xrow[i];
+                            xsum += xi;
+                            if xi == 0.0 {
+                                continue;
+                            }
+                            let prow = &data[i * d_out..i * d_out + d_out];
+                            for (acc, &code) in tmp.iter_mut().zip(prow) {
+                                *acc += xi * cb[code as usize];
+                            }
+                        }
+                    }
+                    b => panic!("unsupported packed bits={b}"),
+                }
+                let srow = self.scales.row(g);
+                let zrow = self.zeros.row(g);
+                for j in 0..d_out {
+                    orow[j] += srow[j] * tmp[j] + xsum * zrow[j];
+                }
+            }
+        }
+    }
+}
+
+impl LinearBackend for PackedLoraLinear {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.d_in, "packed forward shape mismatch");
+        let t = x.rows();
+        let workers = suggested_workers(t * self.d_in * self.d_out);
+        let data = crate::tensor::parallel_rows(t, self.d_out, workers, |r0, r1, out| {
+            self.forward_rows(x, r0, r1, out)
+        });
+        let mut y = Mat::from_vec(t, self.d_out, data);
+        if let Some((a, b)) = &self.lora {
+            add_lora_correction(&mut y, x, a, b);
+        }
+        y
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.packed.bytes()
+            + 4 * (self.scales.len() + self.zeros.len() + self.codebook.len())
+            + lora_bytes(&self.lora)
+    }
+
+    fn label(&self) -> &'static str {
+        "packed"
+    }
+}
+
+/// Build the per-(family, layer) execution engines for a quantized
+/// student under the chosen backend. Adapters are optional; an all-zero
+/// pair (the "no LQEC" baseline) skips the correction entirely.
+///
+/// `Packed` requires every linear to be in scalar-codebook form —
+/// rotation/VQ quantizers (QuaRot, QuIP#) only produce effective dense
+/// matrices and must run `dense`/`merged`.
+pub fn student_backends(
+    student: &StudentWeights,
+    adapters: Option<&AdapterSet>,
+    kind: BackendKind,
+) -> Result<Vec<Vec<Box<dyn LinearBackend>>>> {
+    let mut out: Vec<Vec<Box<dyn LinearBackend>>> = Vec::with_capacity(student.q.len());
+    for (f, layers) in student.q.iter().enumerate() {
+        let mut per: Vec<Box<dyn LinearBackend>> = Vec::with_capacity(layers.len());
+        for (l, qr) in layers.iter().enumerate() {
+            let lora = adapters.and_then(|ad| ad.lora_pair(f, l));
+            let backend: Box<dyn LinearBackend> = match kind {
+                BackendKind::Dense => Box::new(DenseLinear::new(qr.dequant(), lora)),
+                BackendKind::Merged => Box::new(MergedDenseLinear::merge(
+                    qr.dequant(),
+                    lora.as_ref().map(|(a, b)| (a, b)),
+                )),
+                BackendKind::Packed => match qr {
+                    QuantResult::Scalar(q) => Box::new(PackedLoraLinear::from_quantized(q, lora)),
+                    QuantResult::Dense { .. } => bail!(
+                        "quantizer '{}' produces no scalar codes (family {f}, layer {l}); \
+                         the packed backend needs a scalar-codebook quantizer — \
+                         use --backend dense or merged",
+                        student.quantizer
+                    ),
+                },
+            };
+            per.push(backend);
+        }
+        out.push(per);
+    }
+    Ok(out)
+}
+
+/// Total resident weight memory of a built execution engine.
+pub fn model_weight_bytes(linears: &[Vec<Box<dyn LinearBackend>>]) -> usize {
+    linears.iter().flatten().map(|b| b.weight_bytes()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{CalibCtx, Quantizer, Rtn};
+    use crate::tensor::Rng;
+
+    fn quantized(d_in: usize, d_out: usize, bits: u8, gs: usize, seed: u64) -> (Mat, QuantizedTensor) {
+        let mut rng = Rng::seed(seed);
+        let w = Mat::randn(d_in, d_out, &mut rng);
+        let q = match Rtn::new(bits, gs).quantize(&w, &CalibCtx::default()) {
+            QuantResult::Scalar(q) => q,
+            _ => unreachable!(),
+        };
+        (w, q)
+    }
+
+    #[test]
+    fn packed_matches_dequant_dense() {
+        let mut rng = Rng::seed(201);
+        for (d_in, gs, bits) in [(32, 8, 2), (24, 8, 3), (16, 16, 4), (40, 16, 2), (37, 16, 2)] {
+            let (_, q) = quantized(d_in, 6, bits, gs, 300 + d_in as u64 + bits as u64);
+            let x = Mat::randn(5, d_in, &mut rng);
+            let dense = x.matmul(&q.dequant());
+            let packed = PackedLoraLinear::from_quantized(&q, None).forward(&x);
+            let rel = dense.fro_dist(&packed) / dense.fro_norm().max(1e-6);
+            assert!(rel < 1e-5, "d_in={d_in} gs={gs} bits={bits} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn packed_lora_matches_merged() {
+        let mut rng = Rng::seed(202);
+        let (_, q) = quantized(32, 10, 2, 8, 77);
+        let a = Mat::randn(32, 4, &mut rng);
+        let b = Mat::randn(10, 4, &mut rng);
+        let x = Mat::randn(7, 32, &mut rng);
+        let merged = MergedDenseLinear::merge(q.dequant(), Some((&a, &b))).forward(&x);
+        let packed = PackedLoraLinear::from_quantized(&q, Some((a.clone(), b.clone()))).forward(&x);
+        let dense = DenseLinear::new(q.dequant(), Some((a, b))).forward(&x);
+        assert!(merged.fro_dist(&packed) / merged.fro_norm() < 1e-5);
+        assert!(merged.fro_dist(&dense) / merged.fro_norm() < 1e-5);
+    }
+
+    #[test]
+    fn packed_memory_is_fraction_of_dense_at_2bit() {
+        let (_, q) = quantized(256, 64, 2, 64, 88);
+        let packed = PackedLoraLinear::from_quantized(&q, None);
+        let dense = DenseLinear::new(q.dequant(), None);
+        assert!(
+            packed.weight_bytes() * 4 < dense.weight_bytes(),
+            "packed={} dense={}",
+            packed.weight_bytes(),
+            dense.weight_bytes()
+        );
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("packed").unwrap(), BackendKind::Packed);
+        assert_eq!(BackendKind::parse("dense").unwrap(), BackendKind::Dense);
+        assert_eq!(BackendKind::parse("merged").unwrap(), BackendKind::Merged);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Packed.to_string(), "packed");
+    }
+
+    #[test]
+    fn mat_is_a_backend() {
+        let mut rng = Rng::seed(203);
+        let w = Mat::randn(12, 5, &mut rng);
+        let x = Mat::randn(3, 12, &mut rng);
+        let via_trait = LinearBackend::forward(&w, &x);
+        assert!(via_trait.fro_dist(&x.matmul(&w)) < 1e-6);
+        assert_eq!(w.weight_bytes(), 4 * 12 * 5);
+    }
+}

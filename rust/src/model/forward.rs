@@ -7,6 +7,7 @@
 
 use crate::tensor::Mat;
 
+use super::backend::LinearBackend;
 use super::{ModelDims, StudentWeights, TeacherParams, LINEARS};
 
 const EPS: f32 = 1e-6;
@@ -37,10 +38,13 @@ pub struct Trace {
     pub logits: Mat,
 }
 
-/// Weight view used by the forward pass, so teacher and (dense-dequantized)
-/// student share one implementation.
+/// Weight view used by the forward pass. Linears are [`LinearBackend`]
+/// trait objects, so the fp teacher (plain `Mat`s), dense-dequantized
+/// students, and the fused packed+LoRA serving engine all share one
+/// forward implementation — the execution form is chosen where the view
+/// is built, not inside the model code.
 pub struct WeightView<'a> {
-    pub linears: Vec<Vec<&'a Mat>>, // [family][layer]
+    pub linears: Vec<Vec<&'a dyn LinearBackend>>, // [family][layer]
     pub embed: &'a Mat,
     pub ln1: &'a [Vec<f32>],
     pub ln2: &'a [Vec<f32>],
@@ -51,7 +55,11 @@ pub struct WeightView<'a> {
 impl TeacherParams {
     pub fn view(&self) -> WeightView<'_> {
         WeightView {
-            linears: self.linears.iter().map(|ls| ls.iter().collect()).collect(),
+            linears: self
+                .linears
+                .iter()
+                .map(|ls| ls.iter().map(|m| m as &dyn LinearBackend).collect())
+                .collect(),
             embed: &self.embed,
             ln1: &self.ln1,
             ln2: &self.ln2,
@@ -61,11 +69,34 @@ impl TeacherParams {
     }
 
     /// View with linears replaced by dense student weights
-    /// (`Q_l + L1 L2ᵀ` must be materialized by the caller if adapters are
-    /// in play — see `lqec::adapters::merge_into`).
+    /// (`Q_l + A Bᵀ` must be materialized by the caller if adapters are
+    /// in play — see [`crate::lqec::AdapterSet::merge_into`]).
     pub fn view_with<'a>(&'a self, dense: &'a [Vec<Mat>]) -> WeightView<'a> {
         WeightView {
-            linears: dense.iter().map(|ls| ls.iter().collect()).collect(),
+            linears: dense
+                .iter()
+                .map(|ls| ls.iter().map(|m| m as &dyn LinearBackend).collect())
+                .collect(),
+            embed: &self.embed,
+            ln1: &self.ln1,
+            ln2: &self.ln2,
+            fnorm: &self.fnorm,
+            head: &self.head,
+        }
+    }
+
+    /// View with linears replaced by an execution engine built with
+    /// [`super::backend::student_backends`] (embed/norms/head stay fp —
+    /// the paper quantizes only the seven linear families).
+    pub fn view_backends<'a>(
+        &'a self,
+        linears: &'a [Vec<Box<dyn LinearBackend>>],
+    ) -> WeightView<'a> {
+        WeightView {
+            linears: linears
+                .iter()
+                .map(|ls| ls.iter().map(|b| b.as_ref()).collect())
+                .collect(),
             embed: &self.embed,
             ln1: &self.ln1,
             ln2: &self.ln2,
@@ -172,17 +203,17 @@ pub fn forward_trace(dims: &ModelDims, w: &WeightView<'_>, tokens: &[u32]) -> Tr
 
     for l in 0..dims.n_layers {
         let x1 = rmsnorm(&h, &w.ln1[l]);
-        let q = x1.matmul(w.linears[iq][l]);
-        let k = x1.matmul(w.linears[ik][l]);
-        let v = x1.matmul(w.linears[iv][l]);
+        let q = w.linears[iq][l].forward(&x1);
+        let k = w.linears[ik][l].forward(&x1);
+        let v = w.linears[iv][l].forward(&x1);
         let att = attention(dims, &q, &k, &v);
-        h = h.add(&att.matmul(w.linears[io][l]));
+        h = h.add(&w.linears[io][l].forward(&att));
         let x2 = rmsnorm(&h, &w.ln2[l]);
-        let mut g = x2.matmul(w.linears[ig][l]);
+        let mut g = w.linears[ig][l].forward(&x2);
         g.map_inplace(silu);
-        let u = x2.matmul(w.linears[iu][l]);
+        let u = w.linears[iu][l].forward(&x2);
         let mid = g.zip(&u, |a, b| a * b);
-        h = h.add(&mid.matmul(w.linears[id][l]));
+        h = h.add(&w.linears[id][l].forward(&mid));
         layers.push(LayerTrace {
             x_attn: x1,
             att,
@@ -316,13 +347,7 @@ pub fn effective_weights(
 ) -> Vec<Vec<Mat>> {
     let mut dense = student.dense();
     if let Some(ad) = adapters {
-        for f in 0..dense.len() {
-            for l in 0..dense[f].len() {
-                let (a, b) = ad.get(f, l);
-                let delta = a.matmul(&b.t());
-                dense[f][l] = dense[f][l].add(&delta);
-            }
-        }
+        ad.merge_into(&mut dense);
     }
     dense
 }

@@ -7,10 +7,15 @@
 //! * [`forward`] — a pure-Rust reference forward pass (test oracle for the
 //!   HLO artifacts + native evaluation path for quantizer studies that
 //!   don't need PJRT);
+//! * [`backend`] — the linear execution engine ([`backend::LinearBackend`]):
+//!   dense, adapter-merged, or fused packed-2-bit + LoRA serving form;
 //! * [`weights`] — binary checkpoint IO for run caching.
 
+pub mod backend;
 pub mod forward;
 pub mod weights;
+
+pub use backend::{BackendKind, LinearBackend};
 
 use anyhow::{anyhow, Result};
 
@@ -106,6 +111,22 @@ impl TeacherParams {
             ln2: vec![vec![1.0; dims.d_model]; dims.n_layers],
             fnorm: vec![1.0; dims.d_model],
             head: scaled(dims.d_model, dims.vocab, rng),
+        }
+    }
+
+    /// Clone with the seven linear families dropped (empty per-family
+    /// vecs) — for consumers that execute linears through another engine
+    /// and only need embed/norms/head (see `eval::BackendScorer`).
+    /// Keeping the dense fp32 linears out of the clone is what preserves
+    /// the packed backend's resident-memory win.
+    pub fn without_linears(&self) -> TeacherParams {
+        TeacherParams {
+            embed: self.embed.clone(),
+            linears: (0..LINEARS.len()).map(|_| Vec::new()).collect(),
+            ln1: self.ln1.clone(),
+            ln2: self.ln2.clone(),
+            fnorm: self.fnorm.clone(),
+            head: self.head.clone(),
         }
     }
 

@@ -99,8 +99,10 @@ impl Quantizer for Gptq {
     }
 
     fn quantize(&self, w: &Mat, ctx: &CalibCtx) -> QuantResult {
+        // ragged d_in is fine: the group grids come from quantize_uniform,
+        // which sizes a partial final group, and `i / group_size` below
+        // indexes those grids consistently
         let (d_in, d_out) = w.shape();
-        assert!(d_in % self.group_size == 0);
 
         // Hessian H = X Xᵀ (+ dampening). Without calibration samples fall
         // back to the diagonal proxy (equivalent to per-dim weighted RTN
@@ -128,7 +130,6 @@ impl Quantizer for Gptq {
         // the running group as it quantizes; original-W grids are the
         // common static-groups variant).
         let grids = quantize_uniform(w, self.bits, self.group_size, None);
-        let _n_groups = d_in / self.group_size;
         let levels = ((1u32 << self.bits) - 1) as f32;
 
         let mut work = w.clone(); // mutated with error feedback

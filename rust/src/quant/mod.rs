@@ -56,6 +56,12 @@ pub struct QuantizedTensor {
 }
 
 impl QuantizedTensor {
+    /// Number of (scale, zero) groups along `d_in` (final group may be
+    /// ragged when `d_in % group_size != 0`).
+    pub fn n_groups(&self) -> usize {
+        self.d_in.div_ceil(self.group_size)
+    }
+
     /// Dense dequantization.
     pub fn dequant(&self) -> Mat {
         let g = self.group_size;
@@ -82,7 +88,7 @@ impl QuantizedTensor {
     /// (packed codes + group metadata), for the memory-cost analysis.
     pub fn storage_bytes(&self) -> usize {
         let code_bits = self.d_in * self.d_out * self.bits as usize;
-        let meta = 2 * (self.d_in / self.group_size) * self.d_out * 4;
+        let meta = 2 * self.n_groups() * self.d_out * 4;
         code_bits / 8 + meta + self.codebook.len() * 4
     }
 }

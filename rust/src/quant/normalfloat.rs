@@ -114,8 +114,8 @@ impl Quantizer for NormalFloat {
 
     fn quantize(&self, w: &Mat, _ctx: &CalibCtx) -> QuantResult {
         let (d_in, d_out) = w.shape();
-        assert!(d_in % self.group_size == 0);
-        let n_groups = d_in / self.group_size;
+        // ragged final group when d_in is not a multiple of group_size
+        let n_groups = d_in.div_ceil(self.group_size);
         let cb = Self::codebook(self.bits);
         let mut codes = vec![0u8; d_in * d_out];
         let mut scales = Mat::zeros(n_groups, d_out);
@@ -123,14 +123,15 @@ impl Quantizer for NormalFloat {
 
         for g in 0..n_groups {
             let r0 = g * self.group_size;
+            let r1 = (r0 + self.group_size).min(d_in);
             for j in 0..d_out {
                 let mut absmax = 0.0f32;
-                for i in r0..r0 + self.group_size {
+                for i in r0..r1 {
                     absmax = absmax.max(w[(i, j)].abs());
                 }
                 let s = absmax.max(1e-9);
                 scales[(g, j)] = s;
-                for i in r0..r0 + self.group_size {
+                for i in r0..r1 {
                     let target = w[(i, j)] / s;
                     // codebook is sorted: binary search + neighbor compare
                     let idx = nearest_level(&cb, target);

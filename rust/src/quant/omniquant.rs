@@ -41,8 +41,8 @@ impl Quantizer for OmniQuant {
 
     fn quantize(&self, w: &Mat, ctx: &CalibCtx) -> QuantResult {
         let (d_in, d_out) = w.shape();
-        assert!(d_in % self.group_size == 0);
-        let n_groups = d_in / self.group_size;
+        // ragged final group when d_in is not a multiple of group_size
+        let n_groups = d_in.div_ceil(self.group_size);
         let diag_h = ctx.diag_h(d_in);
         let levels = ((1u32 << self.bits) - 1) as f32;
 
@@ -52,10 +52,11 @@ impl Quantizer for OmniQuant {
 
         for g in 0..n_groups {
             let r0 = g * self.group_size;
+            let r1 = (r0 + self.group_size).min(d_in);
             for j in 0..d_out {
                 let mut wmin = f32::INFINITY;
                 let mut wmax = f32::NEG_INFINITY;
-                for i in r0..r0 + self.group_size {
+                for i in r0..r1 {
                     let v = w[(i, j)];
                     wmin = wmin.min(v);
                     wmax = wmax.max(v);
@@ -68,7 +69,7 @@ impl Quantizer for OmniQuant {
                         let s = ((hi - lo) / levels).max(1e-9);
                         // weighted reconstruction error of this clip pair
                         let mut err = 0.0f32;
-                        for i in r0..r0 + self.group_size {
+                        for i in r0..r1 {
                             let v = w[(i, j)];
                             let c = ((v - lo) / s).round().clamp(0.0, levels);
                             let d = v - (lo + c * s);

@@ -6,6 +6,12 @@
 //! codes/byte, 4-bit packs 2 codes/byte; 3-bit stays one code per byte
 //! (cross-byte straddling isn't worth it at simulation scale — documented
 //! in DESIGN.md).
+//!
+//! Ragged lengths: when `d_in` is not a multiple of the codes-per-byte
+//! factor, the final packed row is zero-padded (code 0 in the unused
+//! lanes) and [`unpack_codes`] truncates back to `d_in` rows. Aligned
+//! shapes produce byte-identical output to the Python reference, which
+//! asserts alignment instead of padding.
 
 /// A packed code matrix plus its logical geometry.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,82 +24,80 @@ pub struct PackedTensor {
     pub bits: u8,
 }
 
-/// Number of packed rows for a given `d_in` and bit width.
-pub fn packed_rows(d_in: usize, bits: u8) -> usize {
+impl PackedTensor {
+    /// Bytes of packed code storage (group metadata excluded).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Codes stored per packed byte at a bit width.
+pub fn codes_per_byte(bits: u8) -> usize {
     match bits {
-        2 => {
-            assert!(d_in % 4 == 0, "2-bit packing needs d_in % 4 == 0");
-            d_in / 4
-        }
-        4 => {
-            assert!(d_in % 2 == 0, "4-bit packing needs d_in % 2 == 0");
-            d_in / 2
-        }
-        3 => d_in,
+        2 => 4,
+        4 => 2,
+        3 => 1,
         b => panic!("unsupported bits={b}"),
     }
+}
+
+/// Number of packed rows for a given `d_in` and bit width (final row
+/// zero-padded when `d_in` is not a multiple of the packing factor).
+pub fn packed_rows(d_in: usize, bits: u8) -> usize {
+    d_in.div_ceil(codes_per_byte(bits))
 }
 
 /// Pack codes (`[d_in, d_out]` row-major, one code per byte) along `d_in`.
 pub fn pack_codes(codes: &[u8], d_in: usize, d_out: usize, bits: u8) -> PackedTensor {
     assert_eq!(codes.len(), d_in * d_out);
+    let per = codes_per_byte(bits);
     let rows = packed_rows(d_in, bits);
     let mut data = vec![0u8; rows * d_out];
-    match bits {
-        2 => {
-            for pr in 0..rows {
-                for j in 0..d_out {
-                    let mut byte = 0u8;
-                    for k in 0..4 {
-                        let c = codes[(pr * 4 + k) * d_out + j];
-                        debug_assert!(c < 4);
-                        byte |= c << (2 * k);
-                    }
-                    data[pr * d_out + j] = byte;
+    if bits == 3 {
+        data.copy_from_slice(codes);
+        return PackedTensor { data, packed_rows: rows, d_in, d_out, bits };
+    }
+    let shift = bits as usize;
+    for pr in 0..rows {
+        for j in 0..d_out {
+            let mut byte = 0u8;
+            for k in 0..per {
+                let i = pr * per + k;
+                if i >= d_in {
+                    break; // zero-padded tail lanes
                 }
+                let c = codes[i * d_out + j];
+                debug_assert!((c as u32) < (1u32 << bits));
+                byte |= c << (shift * k);
             }
+            data[pr * d_out + j] = byte;
         }
-        4 => {
-            for pr in 0..rows {
-                for j in 0..d_out {
-                    let lo = codes[(pr * 2) * d_out + j];
-                    let hi = codes[(pr * 2 + 1) * d_out + j];
-                    debug_assert!(lo < 16 && hi < 16);
-                    data[pr * d_out + j] = lo | (hi << 4);
-                }
-            }
-        }
-        3 => data.copy_from_slice(codes),
-        _ => unreachable!(),
     }
     PackedTensor { data, packed_rows: rows, d_in, d_out, bits }
 }
 
-/// Unpack back to one code per byte, `[d_in, d_out]` row-major.
+/// Unpack back to one code per byte, `[d_in, d_out]` row-major (padding
+/// lanes of a ragged final row are dropped).
 pub fn unpack_codes(p: &PackedTensor) -> Vec<u8> {
     let mut codes = vec![0u8; p.d_in * p.d_out];
-    match p.bits {
-        2 => {
-            for pr in 0..p.packed_rows {
-                for j in 0..p.d_out {
-                    let byte = p.data[pr * p.d_out + j];
-                    for k in 0..4 {
-                        codes[(pr * 4 + k) * p.d_out + j] = (byte >> (2 * k)) & 0x3;
-                    }
+    if p.bits == 3 {
+        codes.copy_from_slice(&p.data);
+        return codes;
+    }
+    let per = codes_per_byte(p.bits);
+    let shift = p.bits as usize;
+    let mask = ((1u16 << p.bits) - 1) as u8;
+    for pr in 0..p.packed_rows {
+        for j in 0..p.d_out {
+            let byte = p.data[pr * p.d_out + j];
+            for k in 0..per {
+                let i = pr * per + k;
+                if i >= p.d_in {
+                    break;
                 }
+                codes[i * p.d_out + j] = (byte >> (shift * k)) & mask;
             }
         }
-        4 => {
-            for pr in 0..p.packed_rows {
-                for j in 0..p.d_out {
-                    let byte = p.data[pr * p.d_out + j];
-                    codes[(pr * 2) * p.d_out + j] = byte & 0xF;
-                    codes[(pr * 2 + 1) * p.d_out + j] = byte >> 4;
-                }
-            }
-        }
-        3 => codes.copy_from_slice(&p.data),
-        _ => unreachable!(),
     }
     codes
 }
@@ -134,22 +138,44 @@ mod tests {
         assert_eq!(unpack_codes(&p), codes);
     }
 
-    /// property: roundtrip over 100 random geometries
+    /// property: roundtrip over 200 random geometries, including lengths
+    /// NOT divisible by the codes-per-byte packing factor (padded tail)
     #[test]
     fn prop_roundtrip() {
         let mut rng = Rng::seed(24);
-        for case in 0..100 {
+        for case in 0..200 {
             let bits = [2u8, 3, 4][case % 3];
-            let mult = match bits {
-                2 => 4,
-                4 => 2,
-                _ => 1,
-            };
-            let d_in = mult * (1 + rng.below(16));
+            let d_in = 1 + rng.below(65); // any length, aligned or ragged
             let d_out = 1 + rng.below(24);
             let codes = random_codes(d_in, d_out, bits, &mut rng);
             let p = pack_codes(&codes, d_in, d_out, bits);
+            assert_eq!(p.packed_rows, packed_rows(d_in, bits));
             assert_eq!(unpack_codes(&p), codes, "bits={bits} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    /// property: packed size never exceeds one extra (padded) row, and the
+    /// padding lanes of a ragged final row hold zero codes
+    #[test]
+    fn prop_ragged_padding_is_zero() {
+        let mut rng = Rng::seed(25);
+        for _ in 0..50 {
+            for bits in [2u8, 4] {
+                let per = codes_per_byte(bits);
+                let d_in = 1 + rng.below(40);
+                if d_in % per == 0 {
+                    continue;
+                }
+                let d_out = 1 + rng.below(8);
+                let codes = random_codes(d_in, d_out, bits, &mut rng);
+                let p = pack_codes(&codes, d_in, d_out, bits);
+                let tail = d_in % per;
+                let mask = ((1u16 << (bits as usize * tail)) - 1) as u8;
+                for j in 0..d_out {
+                    let byte = p.data[(p.packed_rows - 1) * d_out + j];
+                    assert_eq!(byte & !mask, 0, "bits={bits} d_in={d_in} pad lanes nonzero");
+                }
+            }
         }
     }
 
@@ -164,9 +190,14 @@ mod tests {
         assert_eq!(p.data, vec![0x5A]);
     }
 
+    /// Misaligned lengths pack into a zero-padded final row (historically
+    /// this was rejected with a panic; ragged linears need it).
     #[test]
-    #[should_panic]
-    fn misaligned_2bit_rejected() {
-        pack_codes(&[0; 6], 6, 1, 2);
+    fn misaligned_2bit_pads() {
+        let codes = [1u8, 2, 3, 0, 1, 2];
+        let p = pack_codes(&codes, 6, 1, 2);
+        assert_eq!(p.packed_rows, 2);
+        assert_eq!(p.data, vec![0b0011_1001, 0b0000_1001]);
+        assert_eq!(unpack_codes(&p), codes);
     }
 }

@@ -28,8 +28,8 @@ pub fn quantize_uniform(
     gamma_beta: Option<&dyn Fn(usize, usize) -> (f32, f32)>,
 ) -> QuantizedTensor {
     let (d_in, d_out) = w.shape();
-    assert!(d_in % group_size == 0, "d_in {d_in} % group {group_size} != 0");
-    let n_groups = d_in / group_size;
+    // ragged final group when d_in is not a multiple of group_size
+    let n_groups = d_in.div_ceil(group_size);
     let levels = (1u32 << bits) - 1;
     let mut codes = vec![0u8; d_in * d_out];
     let mut scales = Mat::zeros(n_groups, d_out);
@@ -37,10 +37,11 @@ pub fn quantize_uniform(
 
     for g in 0..n_groups {
         let r0 = g * group_size;
+        let r1 = (r0 + group_size).min(d_in);
         for j in 0..d_out {
             let mut wmin = f32::INFINITY;
             let mut wmax = f32::NEG_INFINITY;
-            for i in r0..r0 + group_size {
+            for i in r0..r1 {
                 let v = w[(i, j)];
                 wmin = wmin.min(v);
                 wmax = wmax.max(v);
@@ -52,7 +53,7 @@ pub fn quantize_uniform(
             let s = range / levels as f32;
             scales[(g, j)] = s;
             zeros[(g, j)] = lo;
-            for i in r0..r0 + group_size {
+            for i in r0..r1 {
                 let v = w[(i, j)];
                 let c = ((v - lo) / s).round().clamp(0.0, levels as f32) as u8;
                 codes[i * d_out + j] = c;

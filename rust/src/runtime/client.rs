@@ -16,7 +16,12 @@ use super::manifest::{ArtifactSpec, DType, Manifest};
 
 /// Thread-local PJRT runtime over one artifact directory.
 pub struct Runtime {
-    client: PjRtClient,
+    /// Lazily-created PJRT client: manifest inspection and the native
+    /// `LinearBackend` execution paths never touch PJRT, so creation is
+    /// deferred to the first compile/upload. (Also keeps `Runtime::new`
+    /// usable under the vendored `xla` stub, whose client constructor
+    /// errors.)
+    client: RefCell<Option<Rc<PjRtClient>>>,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     /// cumulative PJRT execute wall time (perf accounting)
@@ -28,14 +33,23 @@ impl Runtime {
     /// Create a CPU runtime over `artifacts/`.
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
         Ok(Runtime {
-            client,
+            client: RefCell::new(None),
             manifest,
             cache: RefCell::new(HashMap::new()),
             exec_secs: RefCell::new(0.0),
             exec_count: RefCell::new(0),
         })
+    }
+
+    /// The PJRT client, created on first use.
+    fn client(&self) -> Result<Rc<PjRtClient>> {
+        let mut slot = self.client.borrow_mut();
+        if slot.is_none() {
+            let c = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            *slot = Some(Rc::new(c));
+        }
+        Ok(slot.as_ref().expect("client slot").clone())
     }
 
     /// Compile (or fetch from cache) an artifact's executable.
@@ -51,7 +65,7 @@ impl Runtime {
         .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
-            .client
+            .client()?
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
         let exe = Rc::new(exe);
@@ -131,7 +145,7 @@ impl Runtime {
     /// Upload a literal to a device-resident buffer (stays valid for the
     /// lifetime of the client; used to cache static inputs across calls).
     pub fn buffer_from_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
-        self.client
+        self.client()?
             .buffer_from_host_literal(None, lit)
             .map_err(|e| anyhow::anyhow!("{e:?}"))
     }

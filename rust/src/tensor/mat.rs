@@ -5,6 +5,11 @@ use std::ops::{Index, IndexMut};
 
 use super::Rng;
 
+/// Cache-block sizes shared by the matmul kernels: `BK` floats of a row
+/// (256 B) and a `BJ x BK` RHS tile (16 KiB) fit L1 comfortably.
+const BK: usize = 64;
+const BJ: usize = 64;
+
 /// A dense, row-major `f32` matrix. Most algorithms in this crate operate on
 /// weight matrices shaped `[rows = d_out, cols = d_in]` (PyTorch linear
 /// convention) or activations shaped `[tokens, features]`.
@@ -128,56 +133,107 @@ impl Mat {
         out
     }
 
-    /// Matrix product `self * other` with a blocked, transposed-RHS inner loop.
-    pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
-        let m = self.rows;
+    /// Blocked `self * other` kernel over the output-row range `[r0, r1)`,
+    /// accumulating into `out` (`(r1-r0) * other.cols` zeroed floats).
+    /// Both the single-threaded and threaded products call this, so they
+    /// produce bit-identical results per output row.
+    fn matmul_rows_into(&self, other: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
         let k = self.cols;
         let n = other.cols;
-        let mut out = Mat::zeros(m, n);
         // Blocked i-k-j loop: streams `other` rows, vectorizes over j.
-        const BK: usize = 64;
         for k0 in (0..k).step_by(BK) {
             let k1 = (k0 + BK).min(k);
-            for i in 0..m {
+            for i in r0..r1 {
                 let arow = self.row(i);
-                let orow = out.row_mut(i);
+                let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
                 for kk in k0..k1 {
                     let a = arow[kk];
                     if a == 0.0 {
                         continue;
                     }
                     let brow = &other.data[kk * n..kk * n + n];
-                    for j in 0..n {
-                        orow[j] += a * brow[j];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
                     }
                 }
             }
         }
+    }
+
+    fn assert_matmul_shapes(&self, other: &Mat) {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch {}x{} * {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+    }
+
+    /// Matrix product `self * other` with a blocked, transposed-RHS inner loop.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        self.assert_matmul_shapes(other);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_rows_into(other, 0, self.rows, &mut out.data);
         out
     }
 
-    /// `self * other^T` (handy when the RHS is stored row-major already
-    /// transposed, e.g. LoRA's `X A B^T`).
-    pub fn matmul_t(&self, other_t: &Mat) -> Mat {
-        assert_eq!(self.cols, other_t.cols, "matmul_t inner-dim mismatch");
-        let m = self.rows;
+    /// Multi-threaded tiled `self * other`: output rows are split into
+    /// contiguous chunks computed by scoped worker threads
+    /// ([`super::parallel_rows`]); each chunk runs the same blocked kernel
+    /// as [`Mat::matmul`], so results are identical to the single-threaded
+    /// product. `workers <= 1` (or a single-row output) falls back inline.
+    pub fn matmul_threaded(&self, other: &Mat, workers: usize) -> Mat {
+        self.assert_matmul_shapes(other);
+        let (m, n) = (self.rows, other.cols);
+        let data = super::parallel_rows(m, n, workers, |r0, r1, out| {
+            self.matmul_rows_into(other, r0, r1, out)
+        });
+        Mat { rows: m, cols: n, data }
+    }
+
+    /// Blocked `self * other_t^T` kernel over output-row range `[r0, r1)`.
+    /// Tiles over both the j (RHS-row) and k (inner) dimensions so a
+    /// `BJ x BK` block of `other_t` stays cache-hot across the LHS rows —
+    /// this is the LoRA `X A B^T` hot path.
+    fn matmul_t_rows_into(&self, other_t: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
         let k = self.cols;
         let n = other_t.rows;
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..n {
-                let brow = other_t.row(j);
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += arow[kk] * brow[kk];
+        for j0 in (0..n).step_by(BJ) {
+            let j1 = (j0 + BJ).min(n);
+            for k0 in (0..k).step_by(BK) {
+                let k1 = (k0 + BK).min(k);
+                for i in r0..r1 {
+                    let arow = &self.row(i)[k0..k1];
+                    let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
+                    for j in j0..j1 {
+                        let brow = &other_t.row(j)[k0..k1];
+                        let mut acc = 0.0f32;
+                        for (&x, &y) in arow.iter().zip(brow) {
+                            acc += x * y;
+                        }
+                        orow[j] += acc;
+                    }
                 }
-                orow[j] = acc;
             }
         }
+    }
+
+    /// `self * other^T` (handy when the RHS is stored row-major already
+    /// transposed, e.g. LoRA's `X A B^T`). Cache-blocked like [`Mat::matmul`].
+    pub fn matmul_t(&self, other_t: &Mat) -> Mat {
+        assert_eq!(self.cols, other_t.cols, "matmul_t inner-dim mismatch");
+        let mut out = Mat::zeros(self.rows, other_t.rows);
+        self.matmul_t_rows_into(other_t, 0, self.rows, &mut out.data);
         out
+    }
+
+    /// Multi-threaded tiled `self * other^T`; see [`Mat::matmul_threaded`].
+    pub fn matmul_t_threaded(&self, other_t: &Mat, workers: usize) -> Mat {
+        assert_eq!(self.cols, other_t.cols, "matmul_t inner-dim mismatch");
+        let (m, n) = (self.rows, other_t.rows);
+        let data = super::parallel_rows(m, n, workers, |r0, r1, out| {
+            self.matmul_t_rows_into(other_t, r0, r1, out)
+        });
+        Mat { rows: m, cols: n, data }
     }
 
     /// Elementwise map into a new matrix.
@@ -356,6 +412,34 @@ mod tests {
         let c1 = a.matmul(&b);
         let c2 = a.matmul_t(&b.t());
         assert!(c1.fro_dist(&c2) < 1e-4);
+    }
+
+    /// The blocked matmul_t must agree with matmul on shapes that exercise
+    /// partial j/k tiles (dims straddling the BJ/BK block boundaries).
+    #[test]
+    fn matmul_t_blocked_odd_shapes() {
+        let mut rng = Rng::seed(7);
+        for (m, k, n) in [(3, 70, 65), (65, 64, 1), (1, 129, 67), (9, 191, 130)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c1 = a.matmul(&b);
+            let c2 = a.matmul_t(&b.t());
+            let rel = c1.fro_dist(&c2) / c1.fro_norm().max(1e-6);
+            assert!(rel < 1e-5, "m={m} k={k} n={n} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn threaded_matmul_matches_single_threaded() {
+        let mut rng = Rng::seed(8);
+        for (m, k, n, w) in [(1, 8, 8, 4), (7, 33, 19, 3), (64, 65, 66, 4), (5, 4, 3, 16)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            // same row-kernel => bit-identical per output row
+            assert_eq!(a.matmul(&b), a.matmul_threaded(&b, w), "m={m} k={k} n={n} w={w}");
+            let bt = b.t();
+            assert_eq!(a.matmul_t(&bt), a.matmul_t_threaded(&bt, w), "t: m={m} k={k} n={n} w={w}");
+        }
     }
 
     #[test]

@@ -37,6 +37,54 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, workers: usize,
     });
     slots.into_iter().map(|s| s.expect("parallel_map slot")).collect()
 }
+/// Compute an `[m, n]` row-major buffer by splitting output rows into
+/// contiguous chunks across scoped worker threads. `kernel(r0, r1, out)`
+/// must fill `out` (zeroed, `(r1-r0)*n` long) with rows `[r0, r1)`.
+/// Workers write disjoint `chunks_mut` slices of one allocation — no
+/// per-worker buffers, no stitch copy. With `workers <= 1` the kernel
+/// runs inline over the full range, so threaded and single-threaded
+/// callers share one code path (and one floating-point association
+/// order per row).
+pub fn parallel_rows(
+    m: usize,
+    n: usize,
+    workers: usize,
+    kernel: impl Fn(usize, usize, &mut [f32]) + Sync,
+) -> Vec<f32> {
+    let mut data = vec![0.0f32; m * n];
+    let workers = workers.max(1).min(m.max(1));
+    if workers <= 1 || n == 0 {
+        kernel(0, m, &mut data);
+        return data;
+    }
+    let per = m.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let kernel = &kernel;
+        for (c, chunk) in data.chunks_mut(per * n).enumerate() {
+            scope.spawn(move || {
+                let r0 = c * per;
+                let r1 = (r0 + per).min(m);
+                kernel(r0, r1, chunk);
+            });
+        }
+    });
+    data
+}
+
+/// Worker-thread count worth spawning for a kernel of `flops` fused
+/// multiply-adds. Scoped-thread spawn costs tens of microseconds, so small
+/// problems stay single-threaded; large ones scale up to the hardware
+/// parallelism. Returns at least 1.
+pub fn suggested_workers(flops: usize) -> usize {
+    // ~2 MFLOP per worker amortizes thread spawn + result stitching
+    const FLOPS_PER_WORKER: usize = 1 << 21;
+    if flops < 2 * FLOPS_PER_WORKER {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    hw.min(flops / FLOPS_PER_WORKER).max(1)
+}
+
 pub use mat::Mat;
 pub use rng::Rng;
 pub use stats::{mean, quantile, std_dev, Summary};

@@ -1,0 +1,247 @@
+//! Parity tests for the `LinearBackend` execution engines: the fused
+//! packed+LoRA serving form must match the dequantize-then-dense-matmul
+//! oracle at the single-linear level (all scalar quantizers, all packed
+//! bit widths, odd shapes) and at the full-model-logits level, and its
+//! resident weight memory must be a fraction of dense f32. These tests
+//! are PJRT-free — they exercise the native engine only.
+
+use rilq::eval::{BackendScorer, Scorer};
+use rilq::lqec::AdapterSet;
+use rilq::model::backend::{student_backends, BackendKind, LinearBackend, PackedLoraLinear};
+use rilq::model::forward::forward_trace;
+use rilq::model::{ModelDims, StudentWeights, TeacherParams, LINEARS};
+use rilq::quant::{by_name, CalibCtx, Quantizer};
+use rilq::tensor::{Mat, Rng};
+
+fn dims(d_model: usize, d_ff: usize, group_size: usize) -> ModelDims {
+    ModelDims {
+        name: "parity".into(),
+        d_model,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff,
+        vocab: 48,
+        seq: 16,
+        batch: 2,
+        group_size,
+    }
+}
+
+/// Packed forward vs `x · dequant(Q)` for every scalar quantizer, bits in
+/// {2, 3, 4}, including odd shapes: `d_in` not divisible by the group
+/// size and not divisible by the codes-per-byte packing factor.
+#[test]
+fn packed_linear_matches_dequant_dense_all_quantizers() {
+    let mut rng = Rng::seed(9001);
+    let shapes = [(32usize, 12usize, 8usize), (48, 16, 16), (40, 10, 16), (37, 9, 16)];
+    for name in ["rtn", "nf", "omniquant", "gptq"] {
+        for bits in [2u8, 3, 4] {
+            for &(d_in, d_out, gs) in &shapes {
+                let q = by_name(name, bits, gs).unwrap();
+                let w = Mat::randn(d_in, d_out, &mut rng);
+                let qr = q.quantize(&w, &CalibCtx::with_seed(7));
+                let scalar = qr
+                    .as_scalar()
+                    .unwrap_or_else(|| panic!("{name} should produce scalar codes"));
+                let x = Mat::randn(6, d_in, &mut rng);
+                let oracle = x.matmul(&scalar.dequant());
+                let packed = PackedLoraLinear::from_quantized(scalar, None).forward(&x);
+                let err = oracle.fro_dist(&packed);
+                let tol = 1e-4 * oracle.fro_norm().max(1.0);
+                assert!(
+                    err <= tol,
+                    "{name} bits={bits} d_in={d_in} d_out={d_out} gs={gs}: err={err} tol={tol}"
+                );
+            }
+        }
+    }
+}
+
+/// The rank-r correction: packed + unmerged LoRA must match the
+/// adapter-merged dense oracle.
+#[test]
+fn packed_lora_matches_merged_oracle() {
+    let mut rng = Rng::seed(9002);
+    for (d_in, d_out, gs, r) in [(32usize, 12usize, 8usize, 4usize), (37, 9, 16, 3)] {
+        let q = by_name("rtn", 2, gs).unwrap();
+        let w = Mat::randn(d_in, d_out, &mut rng);
+        let scalar = q.quantize(&w, &CalibCtx::default());
+        let scalar = scalar.as_scalar().unwrap();
+        let a = Mat::randn(d_in, r, &mut rng).scale(0.1);
+        let b = Mat::randn(d_out, r, &mut rng).scale(0.1);
+        let x = Mat::randn(5, d_in, &mut rng);
+        let merged = x.matmul(&scalar.dequant().add(&a.matmul_t(&b)));
+        let packed =
+            PackedLoraLinear::from_quantized(scalar, Some((a, b))).forward(&x);
+        let err = merged.fro_dist(&packed);
+        let tol = 1e-4 * merged.fro_norm().max(1.0);
+        assert!(err <= tol, "d_in={d_in} gs={gs}: err={err} tol={tol}");
+    }
+}
+
+fn nonzero_adapters(d: &ModelDims, rank: usize, rng: &mut Rng) -> AdapterSet {
+    let mut ad = AdapterSet::zeros(d, rank);
+    for f in 0..7 {
+        for l in 0..d.n_layers {
+            let (di, do_) = d.linear_dims(LINEARS[f]);
+            ad.set(
+                f,
+                l,
+                Mat::randn(di, rank, rng).scale(0.05),
+                Mat::randn(do_, rank, rng).scale(0.05),
+            );
+        }
+    }
+    ad
+}
+
+/// Acceptance: full-model forward logits through the packed engine match
+/// the dense-dequant path within 1e-3.
+#[test]
+fn full_model_logits_parity_across_backends() {
+    let d = dims(16, 32, 8);
+    let mut rng = Rng::seed(9003);
+    let teacher = TeacherParams::init(&d, &mut rng);
+    let quant = by_name("rtn", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::default()
+    });
+    let adapters = nonzero_adapters(&d, 4, &mut rng);
+    let tokens: Vec<u32> = (0..12).map(|_| rng.below(d.vocab) as u32).collect();
+
+    let engines: Vec<_> = BackendKind::ALL
+        .iter()
+        .map(|&k| student_backends(&student, Some(&adapters), k).unwrap())
+        .collect();
+    let logits: Vec<Mat> = engines
+        .iter()
+        .map(|e| forward_trace(&d, &teacher.view_backends(e), &tokens).logits)
+        .collect();
+    for (i, l) in logits.iter().enumerate().skip(1) {
+        let mut max_abs = 0.0f32;
+        for r in 0..l.rows() {
+            for c in 0..l.cols() {
+                max_abs = max_abs.max((l[(r, c)] - logits[0][(r, c)]).abs());
+            }
+        }
+        assert!(
+            max_abs < 1e-3,
+            "backend {} vs dense: max logit diff {max_abs}",
+            BackendKind::ALL[i]
+        );
+    }
+}
+
+/// The scorer-level view of the same parity: per-token log-probs agree
+/// across all three engines.
+#[test]
+fn backend_scorers_agree_on_logp() {
+    let d = dims(16, 32, 8);
+    let mut rng = Rng::seed(9004);
+    let teacher = TeacherParams::init(&d, &mut rng);
+    let quant = by_name("nf", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::default()
+    });
+    let adapters = nonzero_adapters(&d, 4, &mut rng);
+    let seqs: Vec<Vec<u32>> = (0..3)
+        .map(|_| (0..d.seq).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+    let scored: Vec<Vec<Vec<f32>>> = BackendKind::ALL
+        .iter()
+        .map(|&k| {
+            BackendScorer::new(&d, &teacher, &student, Some(&adapters), k)
+                .unwrap()
+                .score_all(&seqs)
+                .unwrap()
+        })
+        .collect();
+    for k in 1..scored.len() {
+        for (a, b) in scored[0].iter().flatten().zip(scored[k].iter().flatten()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b} (backend {})", BackendKind::ALL[k]);
+        }
+    }
+}
+
+/// Acceptance: at 2-bit the packed engine's resident weight memory is
+/// under 1/4 of the dense f32 engine across the whole model.
+#[test]
+fn packed_weight_memory_under_quarter_of_dense() {
+    let d = dims(64, 128, 32);
+    let mut rng = Rng::seed(9005);
+    let teacher = TeacherParams::init(&d, &mut rng);
+    let quant = by_name("rtn", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::default()
+    });
+    let packed = BackendScorer::new(&d, &teacher, &student, None, BackendKind::Packed).unwrap();
+    let dense = BackendScorer::new(&d, &teacher, &student, None, BackendKind::Dense).unwrap();
+    assert!(
+        packed.weight_bytes() * 4 < dense.weight_bytes(),
+        "packed={} dense={}",
+        packed.weight_bytes(),
+        dense.weight_bytes()
+    );
+}
+
+/// Rotation/VQ quantizers carry no scalar codes: the packed engine must
+/// refuse them with a clear error while dense still works.
+#[test]
+fn packed_rejects_non_scalar_quantizers() {
+    let d = dims(16, 32, 8);
+    let mut rng = Rng::seed(9006);
+    let teacher = TeacherParams::init(&d, &mut rng);
+    let quant = by_name("vq", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::with_seed(3)
+    });
+    let err = student_backends(&student, None, BackendKind::Packed)
+        .err()
+        .expect("packed must reject VQ students");
+    assert!(format!("{err}").contains("scalar"), "{err}");
+    assert!(student_backends(&student, None, BackendKind::Dense).is_ok());
+}
+
+/// Zero adapters (the "no LQEC" baseline) must be a no-op in every engine:
+/// same logits as no adapters at all.
+#[test]
+fn zero_adapters_are_noop() {
+    let d = dims(16, 32, 8);
+    let mut rng = Rng::seed(9007);
+    let teacher = TeacherParams::init(&d, &mut rng);
+    let quant = by_name("rtn", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::default()
+    });
+    let zeros = AdapterSet::zeros(&d, 4);
+    let tokens: Vec<u32> = (0..10).map(|_| rng.below(d.vocab) as u32).collect();
+    for kind in BackendKind::ALL {
+        let with = student_backends(&student, Some(&zeros), kind).unwrap();
+        let without = student_backends(&student, None, kind).unwrap();
+        let a = forward_trace(&d, &teacher.view_backends(&with), &tokens).logits;
+        let b = forward_trace(&d, &teacher.view_backends(&without), &tokens).logits;
+        assert!(a.fro_dist(&b) < 1e-6, "backend {kind}");
+    }
+}
+
+/// The engine weight accounting must track the quantized-tensor storage
+/// accounting (codes + metadata) for the packed form.
+#[test]
+fn packed_weight_bytes_match_storage_accounting() {
+    let d = dims(64, 128, 32);
+    let mut rng = Rng::seed(9008);
+    let teacher = TeacherParams::init(&d, &mut rng);
+    let quant = by_name("rtn", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::default()
+    });
+    let engines = student_backends(&student, None, BackendKind::Packed).unwrap();
+    let engine_bytes: usize = engines.iter().flatten().map(|b| b.weight_bytes()).sum();
+    // same order of magnitude as QuantResult::storage_bytes (which counts
+    // fractional code bits rather than whole packed bytes)
+    let storage = student.storage_bytes();
+    assert!(
+        engine_bytes >= storage && engine_bytes < storage + storage / 2,
+        "engine={engine_bytes} storage={storage}"
+    );
+}
