@@ -17,7 +17,9 @@ use crate::data::{Corpus, Profile, Vocab};
 
 /// A stream of `[batch, seq]` token batches.
 pub struct BatchStream {
-    rx: Receiver<Vec<Vec<u32>>>,
+    /// `Option` so `Drop` can close the channel before joining the
+    /// producer (see below).
+    rx: Option<Receiver<Vec<Vec<u32>>>>,
     handle: Option<JoinHandle<()>>,
     produced_limit: usize,
 }
@@ -45,17 +47,17 @@ impl BatchStream {
                 }
             }
         });
-        BatchStream { rx, handle: Some(handle), produced_limit: limit }
+        BatchStream { rx: Some(rx), handle: Some(handle), produced_limit: limit }
     }
 
     /// Next batch; `None` when the stream is exhausted.
     pub fn next(&mut self) -> Option<Vec<Vec<u32>>> {
-        self.rx.recv().ok()
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
     }
 
     /// Non-blocking poll (used by tests to observe backpressure).
     pub fn try_next(&mut self) -> Option<Vec<Vec<u32>>> {
-        match self.rx.try_recv() {
+        match self.rx.as_ref()?.try_recv() {
             Ok(b) => Some(b),
             Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
         }
@@ -68,17 +70,11 @@ impl BatchStream {
 
 impl Drop for BatchStream {
     fn drop(&mut self) {
-        // Disconnect first so a blocked producer unblocks, then join.
-        // Draining the receiver is unnecessary: dropping rx closes it.
-        let _ = self.rx.try_recv();
+        // Dropping the receiver closes the channel, which unblocks a
+        // producer stuck on a full queue (its send errs and it exits) —
+        // no draining needed before the join.
+        drop(self.rx.take());
         if let Some(h) = self.handle.take() {
-            // producer exits on send error after rx drops; avoid joining a
-            // thread that is blocked on a full channel by draining
-            while self.rx.try_recv().is_ok() {}
-            drop(std::mem::replace(&mut self.rx, {
-                let (_tx, rx) = sync_channel(1);
-                rx
-            }));
             let _ = h.join();
         }
     }

@@ -7,6 +7,7 @@
 //! tensors (`data.bin`, [`TensorFile`]) plus optional JSON metadata.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
@@ -43,6 +44,13 @@ impl RunCache {
     }
 
     /// Load the cached tensors for a key, or compute + persist them.
+    ///
+    /// Persisting is atomic: the tensors are written to a unique temp
+    /// file in the same directory and `rename`d onto `data.bin`, so a
+    /// concurrent grid worker polling [`RunCache::contains`] (or racing
+    /// its own `get_or_compute` of the same key) can never load a
+    /// partially-written entry. Racing writers are idempotent — both
+    /// compute the same content-keyed payload; the last rename wins.
     pub fn get_or_compute(
         &self,
         key: &str,
@@ -57,7 +65,19 @@ impl RunCache {
         let tf = compute()?;
         std::fs::create_dir_all(&dir)?;
         std::fs::write(dir.join("key.txt"), key)?;
-        tf.save(&data)?;
+        // unique per process AND per call: two threads of one grid worker
+        // may race the same key
+        static NONCE: AtomicU64 = AtomicU64::new(0);
+        let tmp = dir.join(format!(
+            ".data.{}.{}.tmp",
+            std::process::id(),
+            NONCE.fetch_add(1, Ordering::Relaxed)
+        ));
+        tf.save(&tmp)?;
+        if let Err(e) = std::fs::rename(&tmp, &data) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e.into());
+        }
         Ok(tf)
     }
 
@@ -104,6 +124,66 @@ mod tests {
             assert_eq!(tf.get("x").unwrap().1, vec![1.0, 2.0]);
         }
         assert_eq!(calls, 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn concurrent_reader_never_sees_partial_entry() {
+        // writer persists a large entry while a reader polls `contains` +
+        // load as fast as it can: with write-then-rename the reader either
+        // sees nothing or the complete file — a torn read would fail
+        // TensorFile::load (bad magic / short read) or give wrong data.
+        let root = std::env::temp_dir().join(format!("rilq_cache_race_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let cache = RunCache::new(&root);
+        let key = "stage:race:v1";
+        let n = 1 << 20; // 4 MiB payload: large enough to expose torn writes
+        let payload: Vec<f32> = (0..n).map(|i| i as f32).collect();
+
+        std::thread::scope(|s| {
+            let writer = {
+                let cache = cache.clone();
+                let payload = payload.clone();
+                s.spawn(move || {
+                    let tf = cache
+                        .get_or_compute(key, || {
+                            let mut tf = TensorFile::new();
+                            tf.insert("x", vec![n], payload);
+                            Ok(tf)
+                        })
+                        .unwrap();
+                    assert_eq!(tf.get("x").unwrap().1.len(), n);
+                })
+            };
+            let reader = {
+                let cache = cache.clone();
+                let payload = payload.clone();
+                s.spawn(move || {
+                    let mut seen = false;
+                    for _ in 0..200_000 {
+                        if cache.contains(key) {
+                            // visible => must be complete and correct
+                            let tf = cache
+                                .get_or_compute(key, || panic!("hit expected once visible"))
+                                .unwrap();
+                            let (dims, data) = tf.get("x").unwrap();
+                            assert_eq!(dims, &vec![n]);
+                            assert_eq!(data.len(), n);
+                            assert_eq!(data[n - 1], payload[n - 1]);
+                            seen = true;
+                            break;
+                        }
+                        std::hint::spin_loop();
+                    }
+                    seen
+                })
+            };
+            writer.join().unwrap();
+            let seen = reader.join().unwrap();
+            // after the writer finished the entry must be visible even if
+            // the reader's poll window closed first
+            assert!(seen || cache.contains(key));
+        });
         std::fs::remove_dir_all(&root).ok();
     }
 

@@ -53,6 +53,12 @@ impl Metrics {
         self.inner.lock().unwrap().timers.get(name).map(|t| t.0).unwrap_or(0.0)
     }
 
+    /// How many times a named timer fired (e.g. forwards executed by the
+    /// serve loop).
+    pub fn timer_count(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().timers.get(name).map(|t| t.1).unwrap_or(0)
+    }
+
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
         let counters = Json::Obj(

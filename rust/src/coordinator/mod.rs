@@ -11,6 +11,9 @@
 //!   experiments;
 //! * [`scheduler`] — multi-threaded experiment-grid runner (one PJRT
 //!   runtime per worker, since `PjRtClient` is not `Send`);
+//! * [`serve`] — continuous-batching serving loop: a bounded request
+//!   queue feeding coalesced ragged batches through a shared scorer
+//!   (the `serve-bench` subcommand);
 //! * [`metrics`] — lightweight named counters/timers for §Perf accounting.
 
 pub mod batcher;
@@ -18,9 +21,11 @@ pub mod cache;
 pub mod driver;
 pub mod metrics;
 pub mod scheduler;
+pub mod serve;
 
 pub use batcher::BatchStream;
 pub use cache::RunCache;
 pub use driver::{CalibConfig, CalibResult, Driver, PretrainConfig};
 pub use metrics::Metrics;
 pub use scheduler::run_grid;
+pub use serve::{probe_throughput, ServeClient, ServeConfig, ServeProbe, ServeSummary, Server};

@@ -1,0 +1,401 @@
+//! Continuous-batching serving loop over a shared [`Scorer`].
+//!
+//! RILQ's deliverable is an adapter-merged weight-quantized model meant
+//! for *serving*: requests arrive one at a time, ragged, and the engine
+//! wants them coalesced so each `LinearBackend::forward` runs once per
+//! layer over the whole batch (see
+//! [`crate::model::forward::forward_trace_batch`]). This module is the
+//! loop that does the coalescing:
+//!
+//! * requests enter a **bounded** queue (`sync_channel` — the same
+//!   backpressure idiom as [`super::batcher::BatchStream`]: submitters
+//!   block when the queue is full, so server memory stays constant no
+//!   matter how fast clients push);
+//! * the serve loop blocks for the first request, then **greedily drains**
+//!   whatever else is already queued (up to `max_batch`) — under light
+//!   load a request never waits for a batch to fill, under heavy load
+//!   batches fill to `max_batch` automatically;
+//! * the coalesced ragged batch goes through `Scorer::score_batch` as the
+//!   real sequences only — **no PAD-dummy filler is ever forwarded**
+//!   (pinned by `tests/serve_loop.rs` via the token counters);
+//! * per-request failures (e.g. a sequence longer than the model window)
+//!   answer that request with `Err` without poisoning its batchmates or
+//!   the loop.
+//!
+//! Throughput and latency land in a [`Metrics`] sink
+//! (`serve.requests`, `serve.batches`, `serve.tokens`, `serve.errors`,
+//! `serve.latency_secs`, timer `serve.forward`), summarized by
+//! [`ServeSummary`]. The CLI exposes the loop as `rilq serve-bench`.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::eval::scorer::check_input;
+use crate::eval::{BackendScorer, Scorer};
+use crate::tensor::Rng;
+
+use super::Metrics;
+
+/// Serving-loop knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Coalesce at most this many requests into one forward.
+    pub max_batch: usize,
+    /// Bounded request-queue depth (backpressure: submit blocks beyond it).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, queue_capacity: 32 }
+    }
+}
+
+/// One queued scoring request.
+struct Request {
+    tokens: Vec<u32>,
+    enqueued: Instant,
+    resp: Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// A submitted request's pending response (one-shot).
+pub struct Pending {
+    rx: Receiver<Result<Vec<f32>>>,
+}
+
+impl Pending {
+    /// Block until the server answers: the `[len-1]` next-token log-probs,
+    /// or the per-request error.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("server shut down before answering this request"))?
+    }
+}
+
+/// Cheap, cloneable submission handle.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: SyncSender<Msg>,
+}
+
+impl ServeClient {
+    /// Enqueue a sequence for scoring. Blocks while the bounded queue is
+    /// full (backpressure); errs once the server has shut down.
+    pub fn submit(&self, tokens: Vec<u32>) -> Result<Pending> {
+        let (resp, rx) = channel();
+        self.tx
+            .send(Msg::Req(Request { tokens, enqueued: Instant::now(), resp }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(Pending { rx })
+    }
+
+    /// Submit and block for the answer.
+    pub fn score(&self, tokens: Vec<u32>) -> Result<Vec<f32>> {
+        self.submit(tokens)?.wait()
+    }
+}
+
+/// The running server: a dedicated loop thread owning the scorer queue.
+/// Dropping the `Server` initiates shutdown: requests already queued are
+/// drained and answered, later submissions err.
+pub struct Server {
+    tx: Option<SyncSender<Msg>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    /// Spawn the serve loop over an owned scorer.
+    pub fn start<S: Scorer + Send + Sync + 'static>(scorer: S, cfg: ServeConfig) -> Server {
+        Server::start_shared(Arc::new(scorer), cfg)
+    }
+
+    /// Spawn the serve loop over a shared scorer (e.g. one
+    /// [`crate::eval::BackendScorer`] also used elsewhere — the engine is
+    /// read-only at serving time).
+    pub fn start_shared(scorer: Arc<dyn Scorer + Send + Sync>, cfg: ServeConfig) -> Server {
+        let (tx, rx) = sync_channel(cfg.queue_capacity.max(1));
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let c = cfg.clone();
+        let worker = std::thread::Builder::new()
+            .name("rilq-serve".into())
+            .spawn(move || serve_loop(scorer, rx, c, m))
+            .expect("spawn serve loop");
+        Server { tx: Some(tx), worker: Some(worker), metrics, cfg }
+    }
+
+    pub fn client(&self) -> ServeClient {
+        ServeClient { tx: self.tx.as_ref().expect("server running").clone() }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Snapshot of the throughput/latency counters.
+    pub fn summary(&self) -> ServeSummary {
+        ServeSummary::from_metrics(&self.metrics)
+    }
+
+    /// Drain the queue, stop the loop, and return the final counters.
+    pub fn shutdown(mut self) -> ServeSummary {
+        self.stop();
+        ServeSummary::from_metrics(&self.metrics)
+    }
+
+    fn stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            // the sentinel queues behind every already-submitted request,
+            // so shutdown drains gracefully; send only errs if the loop
+            // is already gone
+            let _ = tx.send(Msg::Shutdown);
+            drop(tx);
+        }
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_loop(
+    scorer: Arc<dyn Scorer + Send + Sync>,
+    rx: Receiver<Msg>,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+) {
+    let max_batch = cfg.max_batch.max(1);
+    let dims = scorer.dims().clone();
+    // answer a malformed request (over-window, out-of-vocab) without
+    // touching the model — and without poisoning its batchmates
+    let admit = |req: Request, reqs: &mut Vec<Request>| {
+        match check_input(&dims, std::slice::from_ref(&req.tokens)) {
+            Ok(()) => reqs.push(req),
+            Err(e) => {
+                metrics.incr("serve.errors");
+                let _ = req.resp.send(Err(e));
+            }
+        }
+    };
+    let mut shutting_down = false;
+    while !shutting_down {
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let mut reqs = Vec::with_capacity(max_batch);
+        admit(first, &mut reqs);
+        // greedy coalesce: take whatever is already queued, never wait
+        while reqs.len() < max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Req(r)) => admit(r, &mut reqs),
+                Ok(Msg::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+        if reqs.is_empty() {
+            continue;
+        }
+        // move the tokens out (they are not needed for the response)
+        let batch: Vec<Vec<u32>> =
+            reqs.iter_mut().map(|r| std::mem::take(&mut r.tokens)).collect();
+        let n_tokens: usize = batch.iter().map(Vec::len).sum();
+        let scored = metrics.time("serve.forward", || scorer.score_batch(&batch));
+        match scored {
+            Ok(outs) => {
+                metrics.incr("serve.batches");
+                metrics.add("serve.requests", reqs.len() as f64);
+                metrics.add("serve.tokens", n_tokens as f64);
+                for (req, out) in reqs.into_iter().zip(outs) {
+                    metrics.add("serve.latency_secs", req.enqueued.elapsed().as_secs_f64());
+                    let _ = req.resp.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                // batch-level failure: answer every member, keep serving
+                metrics.add("serve.errors", reqs.len() as f64);
+                let msg = format!("{e:#}");
+                for req in reqs {
+                    let _ = req.resp.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+    // loop exit: any messages still queued were submitted after shutdown
+    // began; dropping their response senders errs the callers' `wait()`.
+}
+
+/// Aggregated serving counters, derived from the loop's [`Metrics`].
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub requests: f64,
+    pub batches: f64,
+    pub tokens: f64,
+    pub errors: f64,
+    /// wall seconds spent inside `score_batch`
+    pub forward_secs: f64,
+    /// mean request latency (enqueue → response), seconds
+    pub mean_latency_secs: f64,
+    /// scored tokens per forward second
+    pub tokens_per_sec: f64,
+    /// mean requests per executed batch
+    pub mean_occupancy: f64,
+}
+
+impl ServeSummary {
+    pub fn from_metrics(m: &Metrics) -> ServeSummary {
+        let requests = m.counter("serve.requests");
+        let batches = m.counter("serve.batches");
+        let tokens = m.counter("serve.tokens");
+        let forward_secs = m.timer_total("serve.forward");
+        ServeSummary {
+            requests,
+            batches,
+            tokens,
+            errors: m.counter("serve.errors"),
+            forward_secs,
+            mean_latency_secs: if requests > 0.0 {
+                m.counter("serve.latency_secs") / requests
+            } else {
+                0.0
+            },
+            tokens_per_sec: if forward_secs > 0.0 { tokens / forward_secs } else { 0.0 },
+            mean_occupancy: if batches > 0.0 { requests / batches } else { 0.0 },
+        }
+    }
+}
+
+impl std::fmt::Display for ServeSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests in {} batches (mean occupancy {:.2}), {} tokens, \
+             {:.0} tok/s, mean latency {:.2} ms, {} errors",
+            self.requests,
+            self.batches,
+            self.mean_occupancy,
+            self.tokens,
+            self.tokens_per_sec,
+            self.mean_latency_secs * 1e3,
+            self.errors
+        )
+    }
+}
+
+/// Result of [`probe_throughput`]: one batched-vs-per-sequence serving
+/// comparison over the same engine.
+#[derive(Clone, Debug)]
+pub struct ServeProbe {
+    pub total_tokens: usize,
+    /// wall seconds scoring every request with its own full forward
+    pub per_seq_secs: f64,
+    /// wall seconds answering the same requests through the serve loop
+    pub serve_secs: f64,
+    pub summary: ServeSummary,
+}
+
+impl ServeProbe {
+    pub fn speedup(&self) -> f64 {
+        self.per_seq_secs / self.serve_secs.max(1e-12)
+    }
+
+    pub fn sequential_tok_per_sec(&self) -> f64 {
+        self.total_tokens as f64 / self.per_seq_secs.max(1e-12)
+    }
+
+    pub fn batched_tok_per_sec(&self) -> f64 {
+        self.total_tokens as f64 / self.serve_secs.max(1e-12)
+    }
+}
+
+/// The measurement behind `rilq serve-bench` and the serve section of
+/// `bench_runtime` (one implementation so the two can't drift): generate
+/// a seeded ragged request mix (lengths in `[seq/2, seq]`), score it
+/// once per-sequence and once through a [`Server`], and cross-check the
+/// answers (logp parity vs the sequential path) and the token counters
+/// (forwarded tokens == Σ request lengths — no PAD-dummy waste) before
+/// reporting throughput.
+pub fn probe_throughput(
+    scorer: Arc<BackendScorer>,
+    n_requests: usize,
+    max_batch: usize,
+    seed: u64,
+) -> Result<ServeProbe> {
+    let dims = scorer.dims.clone();
+    let mut rng = Rng::seed(seed);
+    let requests: Vec<Vec<u32>> = (0..n_requests.max(1))
+        .map(|_| {
+            let len = (dims.seq / 2).max(1) + rng.below(dims.seq / 2 + 1);
+            (0..len).map(|_| rng.below(dims.vocab) as u32).collect()
+        })
+        .collect();
+    let total_tokens: usize = requests.iter().map(Vec::len).sum();
+
+    // warm the worker pool and caches before either timed section
+    scorer.score_sequential(&requests[..1])?;
+
+    let t0 = Instant::now();
+    let baseline = scorer.score_sequential(&requests)?;
+    let per_seq_secs = t0.elapsed().as_secs_f64();
+
+    let server = Server::start_shared(
+        scorer,
+        ServeConfig { max_batch, queue_capacity: max_batch.max(1) * 2 },
+    );
+    let client = server.client();
+    let t0 = Instant::now();
+    let pendings: Vec<Pending> = requests
+        .iter()
+        .map(|r| client.submit(r.clone()))
+        .collect::<Result<_>>()?;
+    let answers: Vec<Vec<f32>> =
+        pendings.into_iter().map(|p| p.wait()).collect::<Result<_>>()?;
+    let serve_secs = t0.elapsed().as_secs_f64();
+    drop(client);
+    let summary = server.shutdown();
+
+    for (a, b) in baseline.iter().zip(&answers) {
+        ensure!(a.len() == b.len(), "serve loop dropped logp positions");
+        for (x, y) in a.iter().zip(b) {
+            ensure!(
+                (x - y).abs() < 1e-4,
+                "serve loop diverged from the sequential path: {x} vs {y}"
+            );
+        }
+    }
+    ensure!(
+        summary.tokens as usize == total_tokens,
+        "serve loop forwarded {} tokens but the requests total {total_tokens} \
+         (PAD-dummy waste?)",
+        summary.tokens
+    );
+    Ok(ServeProbe { total_tokens, per_seq_secs, serve_secs, summary })
+}

@@ -1,7 +1,7 @@
 //! Multiple-choice log-likelihood ranking (lm-eval-harness CSQA protocol)
 //! and gsm-sim accuracy.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::tasks::{GsmItem, McItem};
 use crate::data::tokenizer::DIGIT0;
@@ -20,7 +20,13 @@ pub fn mc_accuracy(scorer: &dyn Scorer, items: &[McItem], length_norm: bool) -> 
             let mut seq = item.prompt.clone();
             let start = seq.len();
             seq.extend(choice);
-            assert!(seq.len() <= scorer.dims().seq, "item exceeds window");
+            if seq.len() > scorer.dims().seq {
+                bail!(
+                    "item {ii} choice {ci}: {} tokens exceed the model window of {}",
+                    seq.len(),
+                    scorer.dims().seq
+                );
+            }
             meta.push((ii, ci, start, choice.len()));
             seqs.push(seq);
         }

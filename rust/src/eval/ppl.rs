@@ -1,12 +1,13 @@
 //! Perplexity evaluation (the paper's WikiText-2 / C4 PPL columns).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::scorer::Scorer;
 
 /// Corpus perplexity: `exp( -Σ logp / #tokens )` over all next-token
 /// positions of all sequences (PAD-free sequences are assumed; `score_all`
-/// already trims padding).
+/// already trims padding). Empty input (no scoreable token positions) is
+/// an `Err`, not a process abort.
 pub fn perplexity(scorer: &dyn Scorer, seqs: &[Vec<u32>]) -> Result<f64> {
     let scored = scorer.score_all(seqs)?;
     let mut total = 0.0f64;
@@ -17,7 +18,9 @@ pub fn perplexity(scorer: &dyn Scorer, seqs: &[Vec<u32>]) -> Result<f64> {
             count += 1;
         }
     }
-    assert!(count > 0, "no tokens scored");
+    if count == 0 {
+        bail!("no tokens scored: perplexity needs at least one two-token sequence");
+    }
     Ok((-total / count as f64).exp())
 }
 
@@ -59,6 +62,17 @@ mod tests {
             .collect();
         let ppl = perplexity(&sc, &seqs).unwrap();
         assert!(ppl > 20.0 && ppl < 200.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn empty_input_is_err_not_panic() {
+        let d = dims();
+        let mut rng = Rng::seed(163);
+        let teacher = TeacherParams::init(&d, &mut rng);
+        let sc = NativeScorer { dims: d.clone(), teacher, dense: None };
+        assert!(perplexity(&sc, &[]).is_err());
+        // single-token sequences have no next-token positions either
+        assert!(perplexity(&sc, &[vec![1u32]]).is_err());
     }
 
     #[test]

@@ -1,43 +1,86 @@
 //! Scorer implementations.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::tokenizer::PAD;
 use crate::lqec::AdapterSet;
 use crate::model::backend::{model_weight_bytes, student_backends, BackendKind, LinearBackend};
-use crate::model::forward::{forward_trace, token_logp};
+use crate::model::forward::{forward_trace_batch, token_logp};
 use crate::model::{ModelDims, StudentWeights, TeacherParams};
 use crate::runtime::bindings::{output_f32, Bindings, DeviceBindings};
 use crate::runtime::{ArtifactSpec, Runtime};
 use crate::tensor::Mat;
 
+/// `Err` (not panic) on malformed input — a sequence exceeding the model
+/// window, or a token id outside the vocabulary (either would otherwise
+/// panic deep inside the forward via an out-of-range embedding row). A
+/// serving path must never abort the process on bad input.
+pub fn check_input(dims: &ModelDims, seqs: &[Vec<u32>]) -> Result<()> {
+    for (i, s) in seqs.iter().enumerate() {
+        if s.len() > dims.seq {
+            bail!(
+                "sequence {i} has {} tokens, exceeding the model window of {}",
+                s.len(),
+                dims.seq
+            );
+        }
+        if let Some(&t) = s.iter().find(|&&t| t as usize >= dims.vocab) {
+            bail!(
+                "sequence {i} contains token id {t}, outside the vocabulary of {}",
+                dims.vocab
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Batch scorer: log-prob of each realized next token.
 pub trait Scorer {
     fn dims(&self) -> &ModelDims;
 
-    /// `batch.len() == dims().batch`, every sequence exactly `dims().seq`
-    /// tokens. Returns one `[seq-1]` logp vector per sequence.
+    /// True when the implementation only accepts the exact lowered
+    /// geometry — `batch.len() == dims().batch`, every sequence exactly
+    /// `dims().seq` tokens (the HLO artifact path). Native scorers return
+    /// false and accept ragged batches of any size directly.
+    fn fixed_geometry(&self) -> bool {
+        false
+    }
+
+    /// Score one batch. Fixed-geometry scorers ([`Self::fixed_geometry`])
+    /// require exactly `[dims().batch, dims().seq]` tokens and return one
+    /// `[seq-1]` logp vector per sequence; ragged scorers accept any
+    /// number of sequences of any length `<= dims().seq` (longer is an
+    /// `Err`) and return one `[len_i-1]` vector per sequence.
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>>;
 
-    /// Score arbitrarily many sequences of arbitrary length (pads each to
-    /// `seq` with PAD and pads the final batch with dummy sequences).
+    /// Score arbitrarily many sequences of arbitrary length, in chunks of
+    /// `dims().batch`. Sequences longer than the model window are an
+    /// `Err`. Only fixed-geometry scorers see PAD: ragged scorers are
+    /// handed the real sequences, so no cycles are burned forwarding
+    /// PAD-only dummy rows.
     fn score_all(&self, seqs: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         let d = self.dims().clone();
+        check_input(&d, seqs)?;
         let mut out = Vec::with_capacity(seqs.len());
         let mut i = 0;
         while i < seqs.len() {
             let n = (seqs.len() - i).min(d.batch);
-            let mut batch: Vec<Vec<u32>> = Vec::with_capacity(d.batch);
-            for seq in &seqs[i..i + n] {
-                assert!(seq.len() <= d.seq, "sequence longer than model window");
-                let mut s = seq.clone();
-                s.resize(d.seq, PAD);
-                batch.push(s);
-            }
-            while batch.len() < d.batch {
-                batch.push(vec![PAD; d.seq]);
-            }
-            let scored = self.score_batch(&batch)?;
+            let scored = if self.fixed_geometry() {
+                // pad each sequence to `seq`, and the final short batch
+                // with PAD-only dummies, to match the lowered geometry
+                let mut batch: Vec<Vec<u32>> = Vec::with_capacity(d.batch);
+                for seq in &seqs[i..i + n] {
+                    let mut s = seq.clone();
+                    s.resize(d.seq, PAD);
+                    batch.push(s);
+                }
+                while batch.len() < d.batch {
+                    batch.push(vec![PAD; d.seq]);
+                }
+                self.score_batch(&batch)?
+            } else {
+                self.score_batch(&seqs[i..i + n])?
+            };
             for (k, seq) in seqs[i..i + n].iter().enumerate() {
                 // only the realized (unpadded) positions are meaningful
                 let keep = seq.len().saturating_sub(1);
@@ -85,7 +128,25 @@ impl Scorer for HloScorer<'_> {
         &self.dims
     }
 
+    /// The artifact is lowered for one exact `[batch, seq]` — `score_all`
+    /// must pad for it.
+    fn fixed_geometry(&self) -> bool {
+        true
+    }
+
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        // the artifact reads a fixed [batch, seq] token buffer; a ragged
+        // or short batch here would silently upload misaligned tokens
+        // (per-sequence check — compensating ragged lengths must not pass)
+        if batch.len() != self.dims.batch || batch.iter().any(|s| s.len() != self.dims.seq) {
+            bail!(
+                "HloScorer needs exactly [{}, {}] token geometry, got {:?} \
+                 (use score_all, which pads for fixed-geometry scorers)",
+                self.dims.batch,
+                self.dims.seq,
+                batch.iter().map(Vec::len).collect::<Vec<_>>()
+            );
+        }
         // tokens are the only per-call upload; every weight tensor is
         // already resident as a device buffer
         let mut dynb = Bindings::new();
@@ -118,15 +179,12 @@ impl Scorer for NativeScorer {
     }
 
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(batch.len());
-        for seq in batch {
-            let trace = match &self.dense {
-                Some(d) => forward_trace(&self.dims, &self.teacher.view_with(d), seq),
-                None => forward_trace(&self.dims, &self.teacher.view(), seq),
-            };
-            out.push(token_logp(&trace.logits, seq));
-        }
-        Ok(out)
+        check_input(&self.dims, batch)?;
+        let logits = match &self.dense {
+            Some(d) => forward_trace_batch(&self.dims, &self.teacher.view_with(d), batch),
+            None => forward_trace_batch(&self.dims, &self.teacher.view(), batch),
+        };
+        Ok(batch.iter().zip(&logits).map(|(seq, lg)| token_logp(lg, seq)).collect())
     }
 }
 
@@ -170,6 +228,20 @@ impl BackendScorer {
     pub fn weight_bytes(&self) -> usize {
         model_weight_bytes(&self.linears)
     }
+
+    /// Score each sequence with its own full forward — the pre-batching
+    /// serving path, kept as the baseline the `serve-bench` speedup is
+    /// measured against.
+    pub fn score_sequential(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        check_input(&self.dims, batch)?;
+        let view = self.teacher.view_backends(&self.linears);
+        let mut out = Vec::with_capacity(batch.len());
+        for seq in batch {
+            let trace = crate::model::forward::forward_trace(&self.dims, &view, seq);
+            out.push(token_logp(&trace.logits, seq));
+        }
+        Ok(out)
+    }
 }
 
 impl Scorer for BackendScorer {
@@ -177,14 +249,15 @@ impl Scorer for BackendScorer {
         &self.dims
     }
 
+    /// One coalesced forward for the whole (ragged) batch: every
+    /// [`LinearBackend::forward`] sees a `[Σ len_i, d_model]` activation
+    /// matrix, amortizing pool dispatch and the packed group-tile dequant
+    /// across all sequences.
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        check_input(&self.dims, batch)?;
         let view = self.teacher.view_backends(&self.linears);
-        let mut out = Vec::with_capacity(batch.len());
-        for seq in batch {
-            let trace = forward_trace(&self.dims, &view, seq);
-            out.push(token_logp(&trace.logits, seq));
-        }
-        Ok(out)
+        let logits = forward_trace_batch(&self.dims, &view, batch);
+        Ok(batch.iter().zip(&logits).map(|(seq, lg)| token_logp(lg, seq)).collect())
     }
 }
 
@@ -208,12 +281,25 @@ mod tests {
     }
 
     #[test]
-    fn native_scorer_scores_and_pads() {
+    fn overlong_sequence_is_err_not_panic() {
+        // a serving path must not abort the process on bad input
+        let d = dims();
+        let mut rng = Rng::seed(153);
+        let teacher = TeacherParams::init(&d, &mut rng);
+        let sc = NativeScorer { dims: d.clone(), teacher, dense: None };
+        let ok: Vec<u32> = (0..8).map(|_| rng.below(64) as u32).collect();
+        let too_long: Vec<u32> = (0..d.seq + 1).map(|_| rng.below(64) as u32).collect();
+        let err = sc.score_all(&[ok, too_long]).unwrap_err();
+        assert!(format!("{err}").contains("window"), "{err}");
+    }
+
+    #[test]
+    fn native_scorer_scores_ragged_lengths() {
         let d = dims();
         let mut rng = Rng::seed(151);
         let teacher = TeacherParams::init(&d, &mut rng);
         let sc = NativeScorer { dims: d.clone(), teacher, dense: None };
-        // 3 seqs of odd lengths -> 2 batches with padding
+        // 3 seqs of odd lengths -> 2 ragged chunks, scored without padding
         let seqs: Vec<Vec<u32>> = vec![
             (0..10).map(|_| rng.below(64) as u32).collect(),
             (0..16).map(|_| rng.below(64) as u32).collect(),

@@ -54,6 +54,35 @@
 //! tests (`tests/backend_parity.rs`) pin all three engines to each other
 //! and to the dequant oracle. Rotation/VQ quantizers (QuaRot, QuIP#)
 //! carry no scalar codes and therefore only run `dense`/`merged`.
+//!
+//! ## Serving (continuous batching)
+//!
+//! On top of the engines sits the native serving stack — ragged requests
+//! in, coalesced forwards out, no PAD-dummy filler anywhere:
+//!
+//! ```text
+//!   clients ──submit──▶ bounded queue (backpressure, sync_channel)
+//!                            │  coordinator::serve::Server
+//!                            ▼
+//!                greedy coalesce ≤ max_batch ragged requests
+//!                            │
+//!                            ▼
+//!        eval::Scorer::score_batch (BackendScorer: one
+//!        model::forward::forward_trace_batch over [Σ lenᵢ, d] —
+//!        every LinearBackend::forward runs once per layer for the
+//!        whole batch; packed group tiles decode once per row-chunk)
+//!                            │
+//!                            ▼
+//!        per-request logp answers + coordinator::Metrics
+//!        (serve.requests / batches / tokens / latency / forward)
+//! ```
+//!
+//! The matmul/packed kernels fan out on a **persistent worker pool**
+//! ([`tensor::pool`], dispatch ≈ a condvar wakeup instead of a per-call
+//! thread spawn), so small serving-size matmuls scale too. `rilq
+//! serve-bench` measures batched-vs-per-sequence throughput natively
+//! (PJRT-free); `tests/serve_loop.rs` pins the loop's semantics and
+//! `tests/backend_parity.rs` pins batched == per-sequence logits.
 
 pub mod tensor;
 pub mod quant;

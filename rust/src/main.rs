@@ -7,16 +7,25 @@
 //! rilq eval <config> [--quant=rtn --bits=2 --rank=16 --scope=model_gt]
 //!                    [--backend={dense|packed|merged}]
 //!                                   quantize+compensate+evaluate one cell
+//! rilq serve-bench [--backend=packed --batch=8 --requests=64 --seq=64]
+//!                                   continuous-batching serving benchmark
+//!                                   (native, PJRT-free)
 //! rilq inspect                      print manifest / artifact inventory
 //! ```
 
 use anyhow::{anyhow, Result};
 
 use rilq::cli::Args;
+use rilq::coordinator::probe_throughput;
+use rilq::eval::BackendScorer;
 use rilq::experiments::pipeline::Lab;
 use rilq::experiments::{catalog, run_experiment};
 use rilq::lqec::AdapterSet;
+use rilq::model::backend::BackendKind;
+use rilq::model::{ModelDims, StudentWeights, TeacherParams, LINEARS};
+use rilq::quant::{by_name, CalibCtx};
 use rilq::runtime::Runtime;
+use rilq::tensor::{Mat, Rng};
 
 fn main() {
     init_logger();
@@ -131,8 +140,92 @@ fn dispatch(args: &Args) -> Result<()> {
             );
             Ok(())
         }
+        "serve-bench" => serve_bench(args),
         other => Err(anyhow!("unknown subcommand '{other}'\n{HELP}")),
     }
+}
+
+/// Native, PJRT-free serving benchmark: per-sequence scoring vs the
+/// continuous-batching serve loop over the same `BackendScorer`.
+fn serve_bench(args: &Args) -> Result<()> {
+    // serving defaults to the packed W2A16 engine; --backend overrides
+    let backend = match args.opt("backend") {
+        Some(s) => BackendKind::parse(s)?,
+        None => BackendKind::Packed,
+    };
+    let bits = args.opt_usize("bits")?.unwrap_or(2) as u8;
+    let max_batch = args.opt_usize("batch")?.unwrap_or(8).max(1);
+    let n_requests = args.opt_usize("requests")?.unwrap_or(64).max(1);
+    let seq = args.opt_usize("seq")?.unwrap_or(64).max(2);
+    let n_layers = args.opt_usize("layers")?.unwrap_or(4).max(1);
+    let rank = args.opt_usize("rank")?.unwrap_or(8);
+    let dims = ModelDims {
+        name: "serve-bench".into(),
+        d_model: args.opt_usize("dmodel")?.unwrap_or(256),
+        n_layers,
+        n_heads: 8,
+        d_ff: args.opt_usize("dff")?.unwrap_or(512),
+        vocab: 512,
+        seq,
+        batch: max_batch,
+        group_size: 64,
+    };
+
+    let mut rng = Rng::seed(0x5e7e);
+    let teacher = TeacherParams::init(&dims, &mut rng);
+    let quant = by_name("rtn", bits, dims.group_size)?;
+    let student =
+        StudentWeights::quantize(&dims, &teacher, quant.as_ref(), &|_, _| CalibCtx::default());
+    let mut adapters = AdapterSet::zeros(&dims, rank);
+    for f in 0..LINEARS.len() {
+        for l in 0..dims.n_layers {
+            let (di, do_) = dims.linear_dims(LINEARS[f]);
+            adapters.set(
+                f,
+                l,
+                Mat::randn(di, rank, &mut rng).scale(0.01),
+                Mat::randn(do_, rank, &mut rng).scale(0.01),
+            );
+        }
+    }
+    let scorer = std::sync::Arc::new(BackendScorer::new(
+        &dims,
+        &teacher,
+        &student,
+        Some(&adapters),
+        backend,
+    )?);
+    println!(
+        "serve-bench: {backend} W{bits} r={rank}, d={} L={} seq={seq}, \
+         {n_requests} ragged requests, max_batch={max_batch}, \
+         resident weights {:.2} MiB",
+        dims.d_model,
+        dims.n_layers,
+        scorer.weight_bytes() as f64 / (1 << 20) as f64
+    );
+
+    // probe_throughput generates the ragged mix, runs both paths, and
+    // verifies logp parity + zero PAD-dummy forwards before reporting
+    let probe = probe_throughput(scorer, n_requests, max_batch, 0x5e7e)?;
+    println!(
+        "per-sequence path:  {} tokens in {:.3}s  ({:.0} tok/s)",
+        probe.total_tokens,
+        probe.per_seq_secs,
+        probe.sequential_tok_per_sec()
+    );
+    println!(
+        "batched serve loop: {} tokens in {:.3}s  ({:.0} tok/s)",
+        probe.total_tokens,
+        probe.serve_secs,
+        probe.batched_tok_per_sec()
+    );
+    println!("  {}", probe.summary);
+    println!(
+        "speedup: {:.2}x (batched vs per-sequence), mean batch occupancy {:.2}",
+        probe.speedup(),
+        probe.summary.mean_occupancy
+    );
+    Ok(())
 }
 
 const HELP: &str = "\
@@ -149,6 +242,12 @@ USAGE:
                                       dense  = f32 dequant (HLO artifact when lowered)
                                       packed = fused packed-2-bit + LoRA serving engine
                                       merged = adapter-merged dense (parity oracle)
+  rilq serve-bench [--backend={dense|packed|merged} --bits=2 --batch=8
+                    --requests=64 --seq=64 --layers=4 --rank=8]
+                                      native continuous-batching serving
+                                      benchmark: per-sequence vs coalesced
+                                      ragged batches on one BackendScorer
+                                      (PJRT-free; no artifacts needed)
   rilq inspect                        artifact / config inventory
   (global) --artifacts=DIR            artifact directory [default: artifacts]
 ";

@@ -12,8 +12,11 @@
 //!   [`Mat`] also implements the trait).
 //! * [`PackedLoraLinear`] — the W2A16 serving form and the native mirror of
 //!   the `lora_qmm_packed` Pallas kernel: bit-packed codes are dequantized
-//!   *group-by-group inside the matmul inner loop* (never materializing
-//!   the f32 weight matrix), followed by the same rank-r correction.
+//!   *group-by-group into a transient tile* that every activation row of
+//!   the call then streams dense multiply-adds against (the full f32
+//!   weight matrix is never materialized, and the decode cost amortizes
+//!   across the rows a batched forward coalesces), followed by the same
+//!   rank-r correction.
 //!   Resident weight memory is the packed footprint: `bits`/8 bytes per
 //!   weight + group (scale, zero) metadata + the scalar codebook.
 //! * [`MergedDenseLinear`] — `Q + A·Bᵀ` materialized once; the parity
@@ -280,97 +283,96 @@ impl PackedLoraLinear {
         }
     }
 
+    /// Decode the packed codes of input rows `[r0, r1)` (one quantization
+    /// group) into `tile`: `(r1-r0) x d_out` raw codebook values, scale
+    /// and zero NOT applied (they are factored out per group in
+    /// [`Self::forward_rows`]).
+    fn decode_group(&self, r0: usize, r1: usize, tile: &mut [f32]) {
+        let d_out = self.d_out;
+        let cb = &self.codebook;
+        let data = &self.packed.data;
+        match self.bits {
+            2 => {
+                for i in r0..r1 {
+                    let pr = i / 4;
+                    let sh = 2 * (i % 4);
+                    let prow = &data[pr * d_out..pr * d_out + d_out];
+                    let trow = &mut tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
+                    for (t, &byte) in trow.iter_mut().zip(prow) {
+                        *t = cb[((byte >> sh) & 3) as usize];
+                    }
+                }
+            }
+            4 => {
+                for i in r0..r1 {
+                    let pr = i / 2;
+                    let sh = 4 * (i % 2);
+                    let prow = &data[pr * d_out..pr * d_out + d_out];
+                    let trow = &mut tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
+                    for (t, &byte) in trow.iter_mut().zip(prow) {
+                        *t = cb[((byte >> sh) & 0xF) as usize];
+                    }
+                }
+            }
+            3 => {
+                // 3-bit codes stay one per byte
+                for i in r0..r1 {
+                    let prow = &data[i * d_out..i * d_out + d_out];
+                    let trow = &mut tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
+                    for (t, &code) in trow.iter_mut().zip(prow) {
+                        *t = cb[code as usize];
+                    }
+                }
+            }
+            b => panic!("unsupported packed bits={b}"),
+        }
+    }
+
     /// The fused kernel over token rows `[t0, t1)`, accumulating into
     /// `out` (`(t1-t0) * d_out` zeroed floats).
+    ///
+    /// Group-tile structure: each group's codes are decoded **once per
+    /// row-chunk** into an f32 tile, then every row in the chunk streams
+    /// dense multiply-adds against the hot tile. Per-token dequant cost
+    /// is `d_in·d_out / chunk_rows` — it amortizes toward zero as the
+    /// batched forward coalesces more rows per call, which is the whole
+    /// point of `forward_trace_batch` (the old kernel re-decoded the
+    /// packed bytes for every row). The per-group factorization
+    /// `y += s_g·Σ x_i·cb[code] + z_g·Σ x_i` is unchanged.
     fn forward_rows(&self, x: &Mat, t0: usize, t1: usize, out: &mut [f32]) {
+        if t0 == t1 {
+            return;
+        }
         let d_out = self.d_out;
         let gs = self.group_size;
         let n_groups = self.scales.rows();
-        let cb = &self.codebook;
-        let data = &self.packed.data;
-        // per-group partial sums Σ x_i·cb[code_ij], reused across groups
+        let mut tile = vec![0.0f32; gs * d_out];
+        // per-(row, group) partial sums Σ x_i·cb[code_ij]
         let mut tmp = vec![0.0f32; d_out];
-        for t in t0..t1 {
-            let xrow = x.row(t);
-            let orow = &mut out[(t - t0) * d_out..(t - t0) * d_out + d_out];
-            for g in 0..n_groups {
-                let r0 = g * gs;
-                let r1 = (r0 + gs).min(self.d_in);
+        for g in 0..n_groups {
+            let r0 = g * gs;
+            let r1 = (r0 + gs).min(self.d_in);
+            self.decode_group(r0, r1, &mut tile);
+            let srow = self.scales.row(g);
+            let zrow = self.zeros.row(g);
+            for t in t0..t1 {
+                let xrow = x.row(t);
                 for v in tmp.iter_mut() {
                     *v = 0.0;
                 }
                 let mut xsum = 0.0f32;
-                match self.bits {
-                    2 => {
-                        // byte-coalesced: one packed byte holds 4
-                        // consecutive input dims for a fixed output column
-                        let mut i = r0;
-                        while i < r1 {
-                            if i % 4 == 0 && i + 4 <= r1 {
-                                let (x0, x1, x2, x3) =
-                                    (xrow[i], xrow[i + 1], xrow[i + 2], xrow[i + 3]);
-                                xsum += x0 + x1 + x2 + x3;
-                                if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
-                                    let pr = i / 4;
-                                    let prow = &data[pr * d_out..pr * d_out + d_out];
-                                    for (acc, &byte) in tmp.iter_mut().zip(prow) {
-                                        let b = byte as usize;
-                                        *acc += x0 * cb[b & 3]
-                                            + x1 * cb[(b >> 2) & 3]
-                                            + x2 * cb[(b >> 4) & 3]
-                                            + x3 * cb[(b >> 6) & 3];
-                                    }
-                                }
-                                i += 4;
-                            } else {
-                                // ragged group edge: single-lane decode
-                                let xi = xrow[i];
-                                xsum += xi;
-                                if xi != 0.0 {
-                                    let pr = i / 4;
-                                    let sh = 2 * (i % 4);
-                                    let prow = &data[pr * d_out..pr * d_out + d_out];
-                                    for (acc, &byte) in tmp.iter_mut().zip(prow) {
-                                        *acc += xi * cb[((byte >> sh) & 3) as usize];
-                                    }
-                                }
-                                i += 1;
-                            }
-                        }
+                for i in r0..r1 {
+                    let xi = xrow[i];
+                    xsum += xi;
+                    if xi == 0.0 {
+                        continue;
                     }
-                    4 => {
-                        for i in r0..r1 {
-                            let xi = xrow[i];
-                            xsum += xi;
-                            if xi == 0.0 {
-                                continue;
-                            }
-                            let pr = i / 2;
-                            let sh = 4 * (i % 2);
-                            let prow = &data[pr * d_out..pr * d_out + d_out];
-                            for (acc, &byte) in tmp.iter_mut().zip(prow) {
-                                *acc += xi * cb[((byte >> sh) & 0xF) as usize];
-                            }
-                        }
+                    let trow = &tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
+                    for (acc, &wv) in tmp.iter_mut().zip(trow) {
+                        *acc += xi * wv;
                     }
-                    3 => {
-                        // 3-bit codes stay one per byte
-                        for i in r0..r1 {
-                            let xi = xrow[i];
-                            xsum += xi;
-                            if xi == 0.0 {
-                                continue;
-                            }
-                            let prow = &data[i * d_out..i * d_out + d_out];
-                            for (acc, &code) in tmp.iter_mut().zip(prow) {
-                                *acc += xi * cb[code as usize];
-                            }
-                        }
-                    }
-                    b => panic!("unsupported packed bits={b}"),
                 }
-                let srow = self.scales.row(g);
-                let zrow = self.zeros.row(g);
+                let orow = &mut out[(t - t0) * d_out..(t - t0) * d_out + d_out];
                 for j in 0..d_out {
                     orow[j] += srow[j] * tmp[j] + xsum * zrow[j];
                 }

@@ -224,13 +224,100 @@ pub fn forward_trace(dims: &ModelDims, w: &WeightView<'_>, tokens: &[u32]) -> Tr
     }
 
     let hidden = rmsnorm(&h, w.fnorm);
-    let logits = hidden.matmul(w.head);
+    let logits = LinearBackend::forward(w.head, &hidden);
     Trace { layers, hidden, logits }
 }
 
-/// Log-prob of the realized next token at each position: `[S-1]`.
+/// Multi-sequence forward: runs every sequence of a (possibly ragged)
+/// batch through each [`LinearBackend::forward`] as **one**
+/// `[Σ len_i, d_model]` activation matrix, so per-call costs — pool
+/// dispatch, packed group-tile dequantization, cache warming of the
+/// weight stream — are paid once per layer instead of once per sequence.
+/// Only attention (position-dependent: RoPE + causal mask) runs
+/// per-sequence, on row slices of the shared activation buffer.
+///
+/// Returns one `[len_i, V]` logits matrix per input sequence. Per-row
+/// kernels are independent of neighboring rows, so each sequence's
+/// logits are bitwise identical to a per-sequence [`forward_trace`]
+/// (pinned by `tests/backend_parity.rs`). Layer activations are not
+/// captured — calibration traces go through `forward_trace`.
+///
+/// Panics if a sequence exceeds `dims.seq`; serving-path callers
+/// validate first and surface `Err` (see `eval::Scorer::score_all`).
+pub fn forward_trace_batch(dims: &ModelDims, w: &WeightView<'_>, seqs: &[Vec<u32>]) -> Vec<Mat> {
+    if seqs.is_empty() {
+        return Vec::new();
+    }
+    for s in seqs {
+        assert!(s.len() <= dims.seq, "sequence longer than model seq");
+    }
+    let fam = |name: &str| LINEARS.iter().position(|&n| n == name).unwrap();
+    let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
+    let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
+
+    // row offsets of each sequence inside the coalesced activation matrix
+    let mut offsets = Vec::with_capacity(seqs.len());
+    let mut total = 0usize;
+    for s in seqs {
+        offsets.push(total);
+        total += s.len();
+    }
+
+    let d = dims.d_model;
+    let mut h = Mat::zeros(total, d);
+    for (si, seq) in seqs.iter().enumerate() {
+        for (p, &tok) in seq.iter().enumerate() {
+            let row = h.row_mut(offsets[si] + p);
+            let erow = w.embed.row(tok as usize);
+            row.copy_from_slice(erow);
+        }
+    }
+
+    for l in 0..dims.n_layers {
+        let x1 = rmsnorm(&h, &w.ln1[l]);
+        let q = w.linears[iq][l].forward(&x1);
+        let k = w.linears[ik][l].forward(&x1);
+        let v = w.linears[iv][l].forward(&x1);
+        // attention is the only position-dependent op: per-sequence slices
+        let mut att = Mat::zeros(total, d);
+        for (si, seq) in seqs.iter().enumerate() {
+            let s = seq.len();
+            if s == 0 {
+                continue;
+            }
+            let off = offsets[si];
+            let a = attention(
+                dims,
+                &q.block(off, 0, s, d),
+                &k.block(off, 0, s, d),
+                &v.block(off, 0, s, d),
+            );
+            att.set_block(off, 0, &a);
+        }
+        h = h.add(&w.linears[io][l].forward(&att));
+        let x2 = rmsnorm(&h, &w.ln2[l]);
+        let mut g = w.linears[ig][l].forward(&x2);
+        g.map_inplace(silu);
+        let u = w.linears[iu][l].forward(&x2);
+        let mid = g.zip(&u, |a, b| a * b);
+        h = h.add(&w.linears[id][l].forward(&mid));
+    }
+
+    let hidden = rmsnorm(&h, w.fnorm);
+    let logits = LinearBackend::forward(w.head, &hidden);
+    seqs.iter()
+        .enumerate()
+        .map(|(si, seq)| logits.block(offsets[si], 0, seq.len(), dims.vocab))
+        .collect()
+}
+
+/// Log-prob of the realized next token at each position: `[S-1]`
+/// (empty for sequences of fewer than two tokens).
 pub fn token_logp(logits: &Mat, tokens: &[u32]) -> Vec<f32> {
     let s = tokens.len();
+    if s < 2 {
+        return Vec::new();
+    }
     let mut out = Vec::with_capacity(s - 1);
     for pos in 0..s - 1 {
         let row = logits.row(pos);
@@ -382,6 +469,42 @@ mod tests {
         assert_eq!(t.hidden.shape(), (10, 16));
         assert_eq!(t.logits.shape(), (10, 32));
         assert_eq!(t.layers[0].mid.shape(), (10, 32));
+    }
+
+    #[test]
+    fn batch_forward_matches_per_sequence() {
+        // ragged lengths (including degenerate 0- and 1-token sequences)
+        // must reproduce the per-sequence forward exactly
+        let d = dims();
+        let mut rng = Rng::seed(106);
+        let p = TeacherParams::init(&d, &mut rng);
+        let lens = [10usize, 3, 12, 0, 1, 7];
+        let seqs: Vec<Vec<u32>> = lens
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.below(32) as u32).collect())
+            .collect();
+        let batched = forward_trace_batch(&d, &p.view(), &seqs);
+        assert_eq!(batched.len(), seqs.len());
+        for (seq, lg) in seqs.iter().zip(&batched) {
+            assert_eq!(lg.shape(), (seq.len(), 32));
+            if seq.is_empty() {
+                continue;
+            }
+            let solo = forward_trace(&d, &p.view(), seq);
+            assert!(
+                solo.logits.fro_dist(lg) < 1e-6,
+                "len {}: batched diverged from per-sequence",
+                seq.len()
+            );
+        }
+    }
+
+    #[test]
+    fn token_logp_handles_degenerate_lengths() {
+        let lg = Mat::zeros(0, 4);
+        assert!(token_logp(&lg, &[]).is_empty());
+        let lg = Mat::zeros(1, 4);
+        assert!(token_logp(&lg, &[2]).is_empty());
     }
 
     #[test]

@@ -177,7 +177,7 @@ impl Mat {
     }
 
     /// Multi-threaded tiled `self * other`: output rows are split into
-    /// contiguous chunks computed by scoped worker threads
+    /// contiguous chunks dispatched to the persistent worker pool
     /// ([`super::parallel_rows`]); each chunk runs the same blocked kernel
     /// as [`Mat::matmul`], so results are identical to the single-threaded
     /// product. `workers <= 1` (or a single-row output) falls back inline.

@@ -4,47 +4,46 @@
 //! `nalgebra`, or `rand`), so this module provides everything the
 //! quantizers, LQEC methods, and the pure-Rust reference model need:
 //! a row-major `f32` matrix type, a PCG-based RNG, Jacobi SVD,
-//! Hadamard transforms, and summary statistics.
+//! Hadamard transforms, summary statistics, and a persistent worker
+//! pool ([`pool`]) behind [`parallel_rows`] / [`parallel_map`].
 
 mod mat;
 mod rng;
 mod linalg;
+pub mod pool;
 mod stats;
 
 pub use linalg::{hadamard_matrix, svd_jacobi, Svd};
 
-/// Parallel map over an indexed domain using scoped std threads (the
-/// offline crate set has no rayon). Results come back in input order.
+/// Parallel map over an indexed domain on the persistent worker pool
+/// ([`pool`]; the offline crate set has no rayon). Results come back in
+/// input order. Items are claimed dynamically, so ragged per-item cost
+/// load-balances across the pool.
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, workers: usize, f: F) -> Vec<T> {
     let workers = workers.max(1).min(n.max(1));
     if workers <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots_ptr = std::sync::Mutex::new(&mut slots);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                if i >= n {
-                    return;
-                }
-                let v = f(i);
-                slots_ptr.lock().unwrap()[i] = Some(v);
-            });
-        }
+    let base = slots.as_mut_ptr() as usize;
+    pool::global().run_indexed(n, |i| {
+        let v = f(i);
+        // SAFETY: each task writes only slot `i` (disjoint), and
+        // run_indexed blocks until every task has finished. The old value
+        // is `None`, so overwriting without a drop is fine.
+        unsafe { (base as *mut Option<T>).add(i).write(Some(v)) };
     });
     slots.into_iter().map(|s| s.expect("parallel_map slot")).collect()
 }
+
 /// Compute an `[m, n]` row-major buffer by splitting output rows into
-/// contiguous chunks across scoped worker threads. `kernel(r0, r1, out)`
-/// must fill `out` (zeroed, `(r1-r0)*n` long) with rows `[r0, r1)`.
-/// Workers write disjoint `chunks_mut` slices of one allocation — no
-/// per-worker buffers, no stitch copy. With `workers <= 1` the kernel
-/// runs inline over the full range, so threaded and single-threaded
-/// callers share one code path (and one floating-point association
-/// order per row).
+/// contiguous chunks dispatched to the persistent worker pool ([`pool`]).
+/// `kernel(r0, r1, out)` must fill `out` (zeroed, `(r1-r0)*n` long) with
+/// rows `[r0, r1)`. Workers write disjoint slices of one allocation — no
+/// per-worker buffers, no stitch copy, no per-call thread spawn. With
+/// `workers <= 1` the kernel runs inline over the full range, so threaded
+/// and single-threaded callers share one code path (and one
+/// floating-point association order per row).
 pub fn parallel_rows(
     m: usize,
     n: usize,
@@ -58,26 +57,30 @@ pub fn parallel_rows(
         return data;
     }
     let per = m.div_ceil(workers);
-    std::thread::scope(|scope| {
-        let kernel = &kernel;
-        for (c, chunk) in data.chunks_mut(per * n).enumerate() {
-            scope.spawn(move || {
-                let r0 = c * per;
-                let r1 = (r0 + per).min(m);
-                kernel(r0, r1, chunk);
-            });
-        }
+    let n_chunks = m.div_ceil(per);
+    let base = data.as_mut_ptr() as usize;
+    pool::global().run_indexed(n_chunks, |c| {
+        let r0 = c * per;
+        let r1 = (r0 + per).min(m);
+        // SAFETY: chunk `c` owns rows [r0, r1) — the row ranges (and so
+        // the `[r0*n, r1*n)` buffer ranges) are pairwise disjoint, and
+        // run_indexed blocks until every chunk has finished.
+        let out = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut f32).add(r0 * n), (r1 - r0) * n)
+        };
+        kernel(r0, r1, out);
     });
     data
 }
 
-/// Worker-thread count worth spawning for a kernel of `flops` fused
-/// multiply-adds. Scoped-thread spawn costs tens of microseconds, so small
-/// problems stay single-threaded; large ones scale up to the hardware
-/// parallelism. Returns at least 1.
+/// Worker-lane count worth using for a kernel of `flops` fused
+/// multiply-adds. Dispatching to the persistent pool costs on the order
+/// of a condvar wakeup (vs ~tens of µs for the old per-call thread
+/// spawn), so the threshold sits well below the old 2 MFLOP/worker —
+/// small serving matmuls now scale too. Returns at least 1.
 pub fn suggested_workers(flops: usize) -> usize {
-    // ~2 MFLOP per worker amortizes thread spawn + result stitching
-    const FLOPS_PER_WORKER: usize = 1 << 21;
+    // ~0.5 MFLOP per lane amortizes a pool dispatch comfortably
+    const FLOPS_PER_WORKER: usize = 1 << 19;
     if flops < 2 * FLOPS_PER_WORKER {
         return 1;
     }

@@ -1,0 +1,258 @@
+//! Persistent worker pool for the data-parallel kernels.
+//!
+//! The first generation of [`super::parallel_rows`] / [`super::parallel_map`]
+//! spawned scoped std threads per call, which costs ~tens of microseconds
+//! per matmul — visible on the small linears that dominate a serving
+//! forward. This pool spawns `available_parallelism - 1` workers once
+//! (lazily, on first parallel call) and dispatches borrowed closures to
+//! them with a mutex + condvar, so a dispatch costs on the order of a
+//! wakeup instead of a thread spawn.
+//!
+//! ## Execution model
+//!
+//! A call to [`Pool::run_indexed`]`(n, f)` publishes one *job*: the task
+//! indices `0..n`, claimed dynamically by whoever gets there first. Both
+//! the pool workers **and the calling thread** claim indices, so a job
+//! never depends on pool workers being free: if every worker is busy (or
+//! the call comes *from* a pool worker — nested dispatch), the caller
+//! simply runs all tasks itself and the call degrades to a sequential
+//! loop instead of deadlocking.
+//!
+//! ## Safety
+//!
+//! The closure handed to workers borrows the caller's stack (the kernel
+//! and its output buffer). That borrow is erased to `'static` to cross
+//! the queue, which is sound because `run_indexed` does not return until
+//! (a) every task has finished and (b) no worker still holds a reference
+//! to the job — the caller removes the job from the queue and waits for
+//! the job's refcount to drain before its stack frame can die.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One published unit of fan-out work: tasks `0..n_tasks`, claimed by
+/// atomic counter. `run` really borrows the publishing caller's stack —
+/// see the module-level safety note.
+struct Job {
+    n_tasks: usize,
+    next: AtomicUsize,
+    run: Box<dyn Fn(usize) + Send + Sync>,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    /// first caught panic payload, re-raised on the publishing thread so
+    /// the original message/location survives
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Job {
+    /// Claim and run tasks until none are left. Called concurrently by
+    /// pool workers and the publishing thread.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.n_tasks {
+                return;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| (self.run)(i))) {
+                let mut slot = self.panic_payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            let mut done = self.done.lock().unwrap();
+            *done += 1;
+            if *done == self.n_tasks {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::SeqCst) >= self.n_tasks
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    cv: Condvar,
+}
+
+/// The persistent pool. Workers live for the process lifetime (they are
+/// never joined; they sleep on the condvar between jobs).
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool, spawned on first use with
+/// `available_parallelism - 1` workers (the caller of every job is the
+/// remaining lane).
+pub fn global() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Pool::new(hw.saturating_sub(1).max(1))
+    })
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // drop fully-claimed jobs at the front (their publisher
+                // also removes them; this is opportunistic cleanup)
+                while q.front().map_or(false, |j| j.exhausted()) {
+                    q.pop_front();
+                }
+                match q.front() {
+                    Some(j) => break j.clone(),
+                    None => q = shared.cv.wait(q).unwrap(),
+                }
+            }
+        };
+        job.work();
+    }
+}
+
+impl Pool {
+    fn new(workers: usize) -> Pool {
+        let shared = Arc::new(Shared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        for w in 0..workers {
+            let s = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("rilq-pool-{w}"))
+                .spawn(move || worker_loop(s))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, workers }
+    }
+
+    /// Pool worker count (excludes the calling thread's lane).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(i)` for every `i in 0..n_tasks` across the pool, blocking
+    /// until all complete. The caller participates, so completion never
+    /// depends on worker availability (nested calls degrade to inline
+    /// execution). A panicking task poisons the job and the panic is
+    /// re-raised here after every task has settled.
+    pub fn run_indexed(&self, n_tasks: usize, f: impl Fn(usize) + Sync) {
+        if n_tasks == 0 {
+            return;
+        }
+        if n_tasks == 1 {
+            f(0);
+            return;
+        }
+        let fref = &f;
+        let run: Box<dyn Fn(usize) + Send + Sync + '_> = Box::new(move |i| fref(i));
+        // SAFETY: lifetime erasure to cross the queue; the tail of this
+        // function guarantees no reference to `run` survives the frame
+        // (completion wait + queue removal + refcount drain).
+        let run: Box<dyn Fn(usize) + Send + Sync + 'static> =
+            unsafe { std::mem::transmute(run) };
+        let job = Arc::new(Job {
+            n_tasks,
+            next: AtomicUsize::new(0),
+            run,
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(job.clone());
+        }
+        self.shared.cv.notify_all();
+        job.work();
+        let mut done = job.done.lock().unwrap();
+        while *done < job.n_tasks {
+            done = job.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        // unpublish, then wait for workers to drop their handles so the
+        // borrowed closure cannot outlive this frame
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        while Arc::strong_count(&job) > 1 {
+            std::thread::yield_now();
+        }
+        if let Some(p) = job.panic_payload.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_indices_run_exactly_once() {
+        let n = 100;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        global().run_indexed(n, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn concurrent_callers_do_not_interfere() {
+        std::thread::scope(|s| {
+            for seed in 0..4u64 {
+                s.spawn(move || {
+                    let n = 50 + seed as usize;
+                    let sums: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                    global().run_indexed(n, |i| {
+                        sums[i].store(i * 2 + 1, Ordering::SeqCst);
+                    });
+                    let total: usize = sums.iter().map(|v| v.load(Ordering::SeqCst)).sum();
+                    assert_eq!(total, n * n); // sum of first n odd numbers
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn nested_dispatch_completes() {
+        // a task that itself fans out must not deadlock (the inner caller
+        // self-executes when all workers are busy)
+        let outer = 8;
+        let acc = AtomicUsize::new(0);
+        global().run_indexed(outer, |_| {
+            global().run_indexed(8, |_| {
+                acc.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(acc.load(Ordering::SeqCst), outer * 8);
+    }
+
+    #[test]
+    fn panics_propagate_to_caller() {
+        let r = std::panic::catch_unwind(|| {
+            global().run_indexed(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        });
+        // the ORIGINAL payload must survive (not a generic pool message)
+        let payload = r.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
+        // the pool must still be usable afterwards
+        let ok = AtomicUsize::new(0);
+        global().run_indexed(4, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+}
