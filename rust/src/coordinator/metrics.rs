@@ -1,16 +1,51 @@
-//! Lightweight metrics registry: named counters and wall-clock timers,
-//! rendered to JSON for EXPERIMENTS.md §Perf accounting.
+//! Lightweight metrics registry: named counters, wall-clock timers,
+//! level gauges (with high-water marks), and raw observation series
+//! (for latency percentiles), rendered to JSON for EXPERIMENTS.md §Perf
+//! accounting and the serve-loop summaries.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::report::Json;
+use crate::tensor::quantile;
+
+/// Retained samples per observation series. A long-running serve loop
+/// observes one latency per request forever; beyond the cap the series
+/// becomes a rolling window (percentiles reflect recent traffic, which is
+/// what a latency gauge should report) while `sum`/`count` stay all-time.
+const SERIES_CAP: usize = 4096;
+
+#[derive(Default)]
+struct Series {
+    /// all-time sum (for the mean), not just the retained window
+    sum: f64,
+    /// all-time sample count
+    count: u64,
+    /// bounded sample window (ring once `SERIES_CAP` is reached)
+    samples: Vec<f64>,
+    next: usize,
+}
+
+impl Series {
+    fn push(&mut self, v: f64) {
+        self.sum += v;
+        self.count += 1;
+        if self.samples.len() < SERIES_CAP {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+            self.next = (self.next + 1) % SERIES_CAP;
+        }
+    }
+}
 
 #[derive(Default)]
 struct Inner {
     counters: BTreeMap<String, f64>,
     timers: BTreeMap<String, (f64, u64)>, // (total secs, count)
+    gauges: BTreeMap<String, (f64, f64)>, // (current, peak)
+    observations: BTreeMap<String, Series>,
 }
 
 /// Thread-safe metrics sink.
@@ -59,6 +94,67 @@ impl Metrics {
         self.inner.lock().unwrap().timers.get(name).map(|t| t.1).unwrap_or(0)
     }
 
+    /// Move a level gauge by `delta` (e.g. queue depth +1 on submit, -1
+    /// on dequeue). The high-water mark is tracked automatically.
+    pub fn gauge_add(&self, name: &str, delta: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.gauges.entry(name.to_string()).or_insert((0.0, 0.0));
+        e.0 += delta;
+        e.1 = e.1.max(e.0);
+    }
+
+    /// Set a level gauge to an absolute value (e.g. resident KV bytes).
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.gauges.entry(name.to_string()).or_insert((0.0, 0.0));
+        e.0 = v;
+        e.1 = e.1.max(v);
+    }
+
+    /// Current gauge level (0.0 when never touched).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().gauges.get(name).map(|g| g.0).unwrap_or(0.0)
+    }
+
+    /// Gauge high-water mark (0.0 when never touched).
+    pub fn gauge_peak(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().gauges.get(name).map(|g| g.1).unwrap_or(0.0)
+    }
+
+    /// Record one sample of a distribution (e.g. a request latency) for
+    /// later percentile queries. Memory is bounded: each series keeps at
+    /// most [`SERIES_CAP`] samples (rolling window), while sum/count stay
+    /// all-time.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.observations.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// All-time sample count of a series.
+    pub fn observation_count(&self, name: &str) -> usize {
+        self.inner.lock().unwrap().observations.get(name).map(|s| s.count as usize).unwrap_or(0)
+    }
+
+    /// All-time sum of a series (mean = sum / count).
+    pub fn observation_sum(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().observations.get(name).map(|s| s.sum).unwrap_or(0.0)
+    }
+
+    /// Percentile over the retained sample window (`q` in `[0, 1]`; 0.0
+    /// when the series is empty). The sort runs on a copy outside any
+    /// hot path — the window is capped at [`SERIES_CAP`] samples.
+    pub fn percentile(&self, name: &str, q: f64) -> f64 {
+        let mut sorted = {
+            let g = self.inner.lock().unwrap();
+            match g.observations.get(name) {
+                Some(s) if !s.samples.is_empty() => s.samples.clone(),
+                _ => return 0.0,
+            }
+        };
+        sorted.sort_by(f64::total_cmp);
+        quantile(&sorted, q)
+    }
+
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
         let counters = Json::Obj(
@@ -78,7 +174,40 @@ impl Metrics {
                 })
                 .collect(),
         );
-        Json::obj(vec![("counters", counters), ("timers", timers)])
+        let gauges = Json::Obj(
+            g.gauges
+                .iter()
+                .map(|(k, &(cur, peak))| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![("value", Json::num(cur)), ("peak", Json::num(peak))]),
+                    )
+                })
+                .collect(),
+        );
+        let observations = Json::Obj(
+            g.observations
+                .iter()
+                .map(|(k, series)| {
+                    let mut sorted = series.samples.clone();
+                    sorted.sort_by(f64::total_cmp);
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(series.count as f64)),
+                            ("p50", Json::num(quantile(&sorted, 0.5))),
+                            ("p95", Json::num(quantile(&sorted, 0.95))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("timers", timers),
+            ("gauges", gauges),
+            ("observations", observations),
+        ])
     }
 }
 
@@ -102,5 +231,51 @@ mod tests {
         assert!(m.timer_total("work") >= 0.0);
         let j = m.to_json();
         assert!(j.req("timers").unwrap().get("work").is_some());
+    }
+
+    #[test]
+    fn gauges_track_level_and_peak() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("depth"), 0.0);
+        m.gauge_add("depth", 3.0);
+        m.gauge_add("depth", 2.0);
+        m.gauge_add("depth", -4.0);
+        assert_eq!(m.gauge("depth"), 1.0);
+        assert_eq!(m.gauge_peak("depth"), 5.0);
+        m.gauge_set("bytes", 100.0);
+        m.gauge_set("bytes", 40.0);
+        assert_eq!(m.gauge("bytes"), 40.0);
+        assert_eq!(m.gauge_peak("bytes"), 100.0);
+    }
+
+    #[test]
+    fn observation_window_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(SERIES_CAP + 100) {
+            m.observe("lat", i as f64);
+        }
+        // count/sum are all-time, the percentile window is capped
+        assert_eq!(m.observation_count("lat"), SERIES_CAP + 100);
+        let n = (SERIES_CAP + 100) as f64;
+        assert_eq!(m.observation_sum("lat"), n * (n - 1.0) / 2.0);
+        // oldest samples were overwritten: the window min is >= 100
+        assert!(m.percentile("lat", 0.0) >= 100.0);
+        assert_eq!(m.percentile("lat", 1.0), n - 1.0);
+    }
+
+    #[test]
+    fn observations_yield_percentiles() {
+        let m = Metrics::new();
+        assert_eq!(m.percentile("lat", 0.5), 0.0);
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            m.observe("lat", v);
+        }
+        assert_eq!(m.observation_count("lat"), 5);
+        assert_eq!(m.observation_sum("lat"), 15.0);
+        assert_eq!(m.percentile("lat", 0.5), 3.0);
+        assert!(m.percentile("lat", 0.95) > 4.0);
+        assert_eq!(m.percentile("lat", 1.0), 5.0);
+        let j = m.to_json();
+        assert!(j.req("observations").unwrap().get("lat").is_some());
     }
 }

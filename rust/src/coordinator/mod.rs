@@ -12,9 +12,12 @@
 //! * [`scheduler`] — multi-threaded experiment-grid runner (one PJRT
 //!   runtime per worker, since `PjRtClient` is not `Send`);
 //! * [`serve`] — continuous-batching serving loop: a bounded request
-//!   queue feeding coalesced ragged batches through a shared scorer
-//!   (the `serve-bench` subcommand);
-//! * [`metrics`] — lightweight named counters/timers for §Perf accounting.
+//!   queue feeding coalesced ragged batches through a shared scorer,
+//!   plus the KV-cache decode scheduler (batched prefill + lockstep
+//!   round-robin incremental steps, bounded cache residency) behind
+//!   `ServeClient::generate` (the `serve-bench` subcommand);
+//! * [`metrics`] — lightweight named counters/timers, level gauges, and
+//!   latency-percentile observations for §Perf accounting.
 
 pub mod batcher;
 pub mod cache;
@@ -28,4 +31,7 @@ pub use cache::RunCache;
 pub use driver::{CalibConfig, CalibResult, Driver, PretrainConfig};
 pub use metrics::Metrics;
 pub use scheduler::run_grid;
-pub use serve::{probe_throughput, ServeClient, ServeConfig, ServeProbe, ServeSummary, Server};
+pub use serve::{
+    probe_decode, probe_throughput, DecodeProbe, Generated, Pending, ServeClient, ServeConfig,
+    ServeProbe, ServeSummary, Server,
+};

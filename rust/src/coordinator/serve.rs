@@ -22,10 +22,28 @@
 //!   answer that request with `Err` without poisoning its batchmates or
 //!   the loop.
 //!
-//! Throughput and latency land in a [`Metrics`] sink
-//! (`serve.requests`, `serve.batches`, `serve.tokens`, `serve.errors`,
-//! `serve.latency_secs`, timer `serve.forward`), summarized by
-//! [`ServeSummary`]. The CLI exposes the loop as `rilq serve-bench`.
+//! ## Decode scheduling (KV cache)
+//!
+//! On cache-capable scorers ([`Scorer::supports_cache`]) the same loop
+//! also runs **incremental greedy decode**: [`ServeClient::generate`]
+//! submits a prompt plus a token budget, the loop prefills all freshly
+//! admitted prompts as one coalesced cached forward, then advances every
+//! active sequence **one token per iteration in lockstep round-robin** —
+//! each step coalesces the active sequences' next tokens into a single
+//! `[n_active, d_model]` forward, so the packed group-tile dequant keeps
+//! amortizing across the decode batch. Cache residency is accounted
+//! against the bounded queue: at most `max_active` KV caches are ever
+//! resident, and the loop **stops draining the queue** while its decode
+//! slots (or the score batch) are full, so backpressure propagates to
+//! submitters instead of ballooning server memory. Gauges
+//! (`serve.active_decodes`, `serve.kv_bytes`, `serve.queue_depth`) make
+//! the scheduler observable.
+//!
+//! Throughput and latency land in a [`Metrics`] sink (`serve.requests`,
+//! `serve.batches`, `serve.tokens`, `serve.errors`, latency
+//! observations with p50/p95, timers `serve.forward` / `serve.prefill` /
+//! `serve.decode_step`), summarized by [`ServeSummary`]. The CLI exposes
+//! the loop as `rilq serve-bench`.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
@@ -34,8 +52,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::eval::scorer::check_input;
+use crate::eval::scorer::{argmax_logp, check_input, greedy_decode_recompute};
 use crate::eval::{BackendScorer, Scorer};
+use crate::model::kv::KvCache;
 use crate::tensor::Rng;
 
 use super::Metrics;
@@ -43,15 +62,19 @@ use super::Metrics;
 /// Serving-loop knobs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Coalesce at most this many requests into one forward.
+    /// Coalesce at most this many scoring requests into one forward.
     pub max_batch: usize,
     /// Bounded request-queue depth (backpressure: submit blocks beyond it).
     pub queue_capacity: usize,
+    /// Maximum concurrently resident decode sequences (KV caches). The
+    /// loop stops draining the queue while every slot is taken, so
+    /// excess generate requests wait in the bounded queue.
+    pub max_active: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, queue_capacity: 32 }
+        ServeConfig { max_batch: 8, queue_capacity: 32, max_active: 8 }
     }
 }
 
@@ -62,20 +85,37 @@ struct Request {
     resp: Sender<Result<Vec<f32>>>,
 }
 
+/// One queued greedy-generation request.
+struct GenRequest {
+    prompt: Vec<u32>,
+    max_new: usize,
+    enqueued: Instant,
+    resp: Sender<Result<Generated>>,
+}
+
+/// A finished greedy generation: the decoded tokens and each one's
+/// log-prob under the distribution it was sampled from.
+#[derive(Clone, Debug)]
+pub struct Generated {
+    pub tokens: Vec<u32>,
+    pub logps: Vec<f32>,
+}
+
 enum Msg {
     Req(Request),
+    Gen(GenRequest),
     Shutdown,
 }
 
 /// A submitted request's pending response (one-shot).
-pub struct Pending {
-    rx: Receiver<Result<Vec<f32>>>,
+pub struct Pending<T = Vec<f32>> {
+    rx: Receiver<Result<T>>,
 }
 
-impl Pending {
-    /// Block until the server answers: the `[len-1]` next-token log-probs,
-    /// or the per-request error.
-    pub fn wait(self) -> Result<Vec<f32>> {
+impl<T> Pending<T> {
+    /// Block until the server answers (the scored log-probs or generated
+    /// tokens), or the per-request error.
+    pub fn wait(self) -> Result<T> {
         self.rx
             .recv()
             .map_err(|_| anyhow!("server shut down before answering this request"))?
@@ -86,6 +126,7 @@ impl Pending {
 #[derive(Clone)]
 pub struct ServeClient {
     tx: SyncSender<Msg>,
+    metrics: Arc<Metrics>,
 }
 
 impl ServeClient {
@@ -93,15 +134,37 @@ impl ServeClient {
     /// full (backpressure); errs once the server has shut down.
     pub fn submit(&self, tokens: Vec<u32>) -> Result<Pending> {
         let (resp, rx) = channel();
-        self.tx
-            .send(Msg::Req(Request { tokens, enqueued: Instant::now(), resp }))
-            .map_err(|_| anyhow!("server stopped"))?;
+        self.metrics.gauge_add("serve.queue_depth", 1.0);
+        let send = self
+            .tx
+            .send(Msg::Req(Request { tokens, enqueued: Instant::now(), resp }));
+        if send.is_err() {
+            self.metrics.gauge_add("serve.queue_depth", -1.0);
+            return Err(anyhow!("server stopped"));
+        }
         Ok(Pending { rx })
     }
 
     /// Submit and block for the answer.
     pub fn score(&self, tokens: Vec<u32>) -> Result<Vec<f32>> {
         self.submit(tokens)?.wait()
+    }
+
+    /// Enqueue a greedy-decode request: prefill `prompt` once, then
+    /// generate up to `max_new` tokens incrementally (KV cache). Errs at
+    /// admission when the scorer has no cache support or
+    /// `prompt + max_new - 1` exceeds the model window.
+    pub fn generate(&self, prompt: Vec<u32>, max_new: usize) -> Result<Pending<Generated>> {
+        let (resp, rx) = channel();
+        self.metrics.gauge_add("serve.queue_depth", 1.0);
+        let send = self
+            .tx
+            .send(Msg::Gen(GenRequest { prompt, max_new, enqueued: Instant::now(), resp }));
+        if send.is_err() {
+            self.metrics.gauge_add("serve.queue_depth", -1.0);
+            return Err(anyhow!("server stopped"));
+        }
+        Ok(Pending { rx })
     }
 }
 
@@ -137,7 +200,10 @@ impl Server {
     }
 
     pub fn client(&self) -> ServeClient {
-        ServeClient { tx: self.tx.as_ref().expect("server running").clone() }
+        ServeClient {
+            tx: self.tx.as_ref().expect("server running").clone(),
+            metrics: self.metrics.clone(),
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -179,6 +245,24 @@ impl Drop for Server {
     }
 }
 
+/// One in-flight decode sequence: its KV cache, the tokens generated so
+/// far (the last one not yet fed back), and the response channel.
+struct ActiveGen {
+    cache: KvCache,
+    tokens: Vec<u32>,
+    logps: Vec<f32>,
+    max_new: usize,
+    enqueued: Instant,
+    resp: Sender<Result<Generated>>,
+}
+
+fn finish_gen(a: ActiveGen, metrics: &Metrics) {
+    metrics.add("serve.gen_requests", 1.0);
+    metrics.add("serve.gen_tokens", a.tokens.len() as f64);
+    metrics.observe("serve.latency_secs", a.enqueued.elapsed().as_secs_f64());
+    let _ = a.resp.send(Ok(Generated { tokens: a.tokens, logps: a.logps }));
+}
+
 fn serve_loop(
     scorer: Arc<dyn Scorer + Send + Sync>,
     rx: Receiver<Msg>,
@@ -186,67 +270,232 @@ fn serve_loop(
     metrics: Arc<Metrics>,
 ) {
     let max_batch = cfg.max_batch.max(1);
+    let max_active = cfg.max_active.max(1);
     let dims = scorer.dims().clone();
-    // answer a malformed request (over-window, out-of-vocab) without
-    // touching the model — and without poisoning its batchmates
-    let admit = |req: Request, reqs: &mut Vec<Request>| {
-        match check_input(&dims, std::slice::from_ref(&req.tokens)) {
-            Ok(()) => reqs.push(req),
-            Err(e) => {
-                metrics.incr("serve.errors");
-                let _ = req.resp.send(Err(e));
+    let supports_cache = scorer.supports_cache();
+    let mut active: Vec<ActiveGen> = Vec::new();
+    let mut shutting_down = false;
+
+    // admit one message: malformed requests (over-window, out-of-vocab,
+    // no cache support, generation past the window) are answered without
+    // touching the model — and without poisoning their batchmates.
+    // Returns false when the shutdown sentinel was seen.
+    let admit = |msg: Msg, reqs: &mut Vec<Request>, fresh: &mut Vec<GenRequest>| -> bool {
+        match msg {
+            Msg::Shutdown => false,
+            Msg::Req(req) => {
+                metrics.gauge_add("serve.queue_depth", -1.0);
+                match check_input(&dims, std::slice::from_ref(&req.tokens)) {
+                    Ok(()) => reqs.push(req),
+                    Err(e) => {
+                        metrics.incr("serve.errors");
+                        let _ = req.resp.send(Err(e));
+                    }
+                }
+                true
+            }
+            Msg::Gen(g) => {
+                metrics.gauge_add("serve.queue_depth", -1.0);
+                if !supports_cache {
+                    metrics.incr("serve.errors");
+                    let _ = g.resp.send(Err(anyhow!(
+                        "this scorer has no KV-cache support; generate needs a \
+                         native backend scorer"
+                    )));
+                } else if g.prompt.is_empty() {
+                    metrics.incr("serve.errors");
+                    let _ = g.resp.send(Err(anyhow!("generate needs a non-empty prompt")));
+                } else if let Err(e) = check_input(&dims, std::slice::from_ref(&g.prompt)) {
+                    metrics.incr("serve.errors");
+                    let _ = g.resp.send(Err(e));
+                } else if g.prompt.len() + g.max_new.saturating_sub(1) > dims.seq {
+                    metrics.incr("serve.errors");
+                    let _ = g.resp.send(Err(anyhow!(
+                        "generating {} tokens from a {}-token prompt exceeds the \
+                         model window of {}",
+                        g.max_new,
+                        g.prompt.len(),
+                        dims.seq
+                    )));
+                } else if g.max_new == 0 {
+                    // nothing to decode: answer immediately
+                    metrics.add("serve.gen_requests", 1.0);
+                    metrics.observe("serve.latency_secs", g.enqueued.elapsed().as_secs_f64());
+                    let _ = g.resp.send(Ok(Generated { tokens: Vec::new(), logps: Vec::new() }));
+                } else {
+                    fresh.push(g);
+                }
+                true
             }
         }
     };
-    let mut shutting_down = false;
-    while !shutting_down {
-        let first = match rx.recv() {
-            Ok(Msg::Req(r)) => r,
-            Ok(Msg::Shutdown) | Err(_) => break,
-        };
-        let mut reqs = Vec::with_capacity(max_batch);
-        admit(first, &mut reqs);
-        // greedy coalesce: take whatever is already queued, never wait
-        while reqs.len() < max_batch {
-            match rx.try_recv() {
-                Ok(Msg::Req(r)) => admit(r, &mut reqs),
-                Ok(Msg::Shutdown) => {
-                    shutting_down = true;
-                    break;
+
+    loop {
+        // ---- intake ----------------------------------------------------
+        let mut reqs: Vec<Request> = Vec::with_capacity(max_batch);
+        let mut fresh: Vec<GenRequest> = Vec::new();
+        if !shutting_down {
+            if active.is_empty() {
+                // completely idle: block for the next message
+                match rx.recv() {
+                    Ok(msg) => {
+                        if !admit(msg, &mut reqs, &mut fresh) {
+                            shutting_down = true;
+                        }
+                    }
+                    Err(_) => break,
                 }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    shutting_down = true;
-                    break;
+            }
+            // greedy coalesce: take whatever is already queued — but stop
+            // while the score batch or the decode slots are full, leaving
+            // the rest in the bounded queue (cache-capacity accounting:
+            // backpressure reaches submitters instead of server memory)
+            while !shutting_down
+                && reqs.len() < max_batch
+                && active.len() + fresh.len() < max_active
+            {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if !admit(msg, &mut reqs, &mut fresh) {
+                            shutting_down = true;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
                 }
             }
         }
-        if reqs.is_empty() {
-            continue;
+
+        // ---- prefill freshly admitted decode sequences -----------------
+        if !fresh.is_empty() {
+            let news: Vec<Vec<u32>> =
+                fresh.iter_mut().map(|g| std::mem::take(&mut g.prompt)).collect();
+            let mut caches: Vec<KvCache> =
+                news.iter().map(|_| KvCache::new(&dims)).collect();
+            let scored = metrics.time("serve.prefill", || {
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                scorer.cache_forward_batch(&news, &mut refs)
+            });
+            match scored {
+                Ok(lgs) => {
+                    metrics.add(
+                        "serve.prefill_tokens",
+                        news.iter().map(Vec::len).sum::<usize>() as f64,
+                    );
+                    let mut caches = caches.into_iter();
+                    for (i, g) in fresh.into_iter().enumerate() {
+                        let cache = caches.next().expect("one cache per prefill");
+                        let (tok, lp) = argmax_logp(lgs[i].row(news[i].len() - 1));
+                        let st = ActiveGen {
+                            cache,
+                            tokens: vec![tok],
+                            logps: vec![lp],
+                            max_new: g.max_new,
+                            enqueued: g.enqueued,
+                            resp: g.resp,
+                        };
+                        if st.tokens.len() >= st.max_new {
+                            finish_gen(st, &metrics);
+                        } else {
+                            active.push(st);
+                        }
+                    }
+                }
+                Err(e) => {
+                    metrics.add("serve.errors", fresh.len() as f64);
+                    let msg = format!("{e:#}");
+                    for g in fresh {
+                        let _ = g.resp.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+            metrics.gauge_set("serve.active_decodes", active.len() as f64);
+            metrics.gauge_set(
+                "serve.kv_bytes",
+                active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
+            );
         }
-        // move the tokens out (they are not needed for the response)
-        let batch: Vec<Vec<u32>> =
-            reqs.iter_mut().map(|r| std::mem::take(&mut r.tokens)).collect();
-        let n_tokens: usize = batch.iter().map(Vec::len).sum();
-        let scored = metrics.time("serve.forward", || scorer.score_batch(&batch));
-        match scored {
-            Ok(outs) => {
-                metrics.incr("serve.batches");
-                metrics.add("serve.requests", reqs.len() as f64);
-                metrics.add("serve.tokens", n_tokens as f64);
-                for (req, out) in reqs.into_iter().zip(outs) {
-                    metrics.add("serve.latency_secs", req.enqueued.elapsed().as_secs_f64());
-                    let _ = req.resp.send(Ok(out));
+
+        // ---- one coalesced scoring forward -----------------------------
+        if !reqs.is_empty() {
+            // move the tokens out (they are not needed for the response)
+            let batch: Vec<Vec<u32>> =
+                reqs.iter_mut().map(|r| std::mem::take(&mut r.tokens)).collect();
+            let n_tokens: usize = batch.iter().map(Vec::len).sum();
+            let scored = metrics.time("serve.forward", || scorer.score_batch(&batch));
+            match scored {
+                Ok(outs) => {
+                    metrics.incr("serve.batches");
+                    metrics.add("serve.requests", reqs.len() as f64);
+                    metrics.add("serve.tokens", n_tokens as f64);
+                    for (req, out) in reqs.into_iter().zip(outs) {
+                        metrics
+                            .observe("serve.latency_secs", req.enqueued.elapsed().as_secs_f64());
+                        let _ = req.resp.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    // batch-level failure: answer every member, keep serving
+                    metrics.add("serve.errors", reqs.len() as f64);
+                    let msg = format!("{e:#}");
+                    for req in reqs {
+                        let _ = req.resp.send(Err(anyhow!("{msg}")));
+                    }
                 }
             }
-            Err(e) => {
-                // batch-level failure: answer every member, keep serving
-                metrics.add("serve.errors", reqs.len() as f64);
-                let msg = format!("{e:#}");
-                for req in reqs {
-                    let _ = req.resp.send(Err(anyhow!("{msg}")));
+        }
+
+        // ---- one lockstep decode step for every active sequence --------
+        if !active.is_empty() {
+            let news: Vec<Vec<u32>> = active
+                .iter()
+                .map(|a| vec![*a.tokens.last().expect("active has a sampled token")])
+                .collect();
+            let scored = metrics.time("serve.decode_step", || {
+                let mut refs: Vec<&mut KvCache> =
+                    active.iter_mut().map(|a| &mut a.cache).collect();
+                scorer.cache_forward_batch(&news, &mut refs)
+            });
+            match scored {
+                Ok(lgs) => {
+                    metrics.incr("serve.decode_steps");
+                    metrics.add("serve.decode_tokens", active.len() as f64);
+                    for (a, lg) in active.iter_mut().zip(&lgs) {
+                        let (tok, lp) = argmax_logp(lg.row(0));
+                        a.tokens.push(tok);
+                        a.logps.push(lp);
+                    }
+                    let mut i = 0;
+                    while i < active.len() {
+                        if active[i].tokens.len() >= active[i].max_new {
+                            finish_gen(active.swap_remove(i), &metrics);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                Err(e) => {
+                    // step-level failure: answer every active sequence,
+                    // free their caches, keep serving
+                    metrics.add("serve.errors", active.len() as f64);
+                    let msg = format!("{e:#}");
+                    for a in active.drain(..) {
+                        let _ = a.resp.send(Err(anyhow!("{msg}")));
+                    }
                 }
             }
+            metrics.gauge_set("serve.active_decodes", active.len() as f64);
+            metrics.gauge_set(
+                "serve.kv_bytes",
+                active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
+            );
+        }
+
+        if shutting_down && active.is_empty() {
+            break;
         }
     }
     // loop exit: any messages still queued were submitted after shutdown
@@ -264,10 +513,26 @@ pub struct ServeSummary {
     pub forward_secs: f64,
     /// mean request latency (enqueue → response), seconds
     pub mean_latency_secs: f64,
+    /// median request latency, seconds
+    pub latency_p50_secs: f64,
+    /// 95th-percentile request latency, seconds
+    pub latency_p95_secs: f64,
+    /// high-water mark of the request queue depth
+    pub queue_depth_peak: f64,
     /// scored tokens per forward second
     pub tokens_per_sec: f64,
     /// mean requests per executed batch
     pub mean_occupancy: f64,
+    /// answered generate requests
+    pub gen_requests: f64,
+    /// tokens produced by greedy decode
+    pub gen_tokens: f64,
+    /// prompt tokens prefilled into KV caches
+    pub prefill_tokens: f64,
+    /// lockstep decode-step forwards executed
+    pub decode_steps: f64,
+    /// high-water mark of resident KV-cache bytes
+    pub kv_bytes_peak: f64,
 }
 
 impl ServeSummary {
@@ -276,19 +541,28 @@ impl ServeSummary {
         let batches = m.counter("serve.batches");
         let tokens = m.counter("serve.tokens");
         let forward_secs = m.timer_total("serve.forward");
+        let n_lat = m.observation_count("serve.latency_secs");
         ServeSummary {
             requests,
             batches,
             tokens,
             errors: m.counter("serve.errors"),
             forward_secs,
-            mean_latency_secs: if requests > 0.0 {
-                m.counter("serve.latency_secs") / requests
+            mean_latency_secs: if n_lat > 0 {
+                m.observation_sum("serve.latency_secs") / n_lat as f64
             } else {
                 0.0
             },
+            latency_p50_secs: m.percentile("serve.latency_secs", 0.5),
+            latency_p95_secs: m.percentile("serve.latency_secs", 0.95),
+            queue_depth_peak: m.gauge_peak("serve.queue_depth"),
             tokens_per_sec: if forward_secs > 0.0 { tokens / forward_secs } else { 0.0 },
             mean_occupancy: if batches > 0.0 { requests / batches } else { 0.0 },
+            gen_requests: m.counter("serve.gen_requests"),
+            gen_tokens: m.counter("serve.gen_tokens"),
+            prefill_tokens: m.counter("serve.prefill_tokens"),
+            decode_steps: m.counter("serve.decode_steps"),
+            kv_bytes_peak: m.gauge_peak("serve.kv_bytes"),
         }
     }
 }
@@ -298,15 +572,32 @@ impl std::fmt::Display for ServeSummary {
         write!(
             f,
             "{} requests in {} batches (mean occupancy {:.2}), {} tokens, \
-             {:.0} tok/s, mean latency {:.2} ms, {} errors",
+             {:.0} tok/s, latency mean {:.2} / p50 {:.2} / p95 {:.2} ms, \
+             queue peak {:.0}, {} errors",
             self.requests,
             self.batches,
             self.mean_occupancy,
             self.tokens,
             self.tokens_per_sec,
             self.mean_latency_secs * 1e3,
+            self.latency_p50_secs * 1e3,
+            self.latency_p95_secs * 1e3,
+            self.queue_depth_peak,
             self.errors
-        )
+        )?;
+        if self.gen_requests > 0.0 {
+            write!(
+                f,
+                "; decode: {} generations, {} tokens over {} steps \
+                 ({} prompt tokens prefilled, KV peak {:.1} KiB)",
+                self.gen_requests,
+                self.gen_tokens,
+                self.decode_steps,
+                self.prefill_tokens,
+                self.kv_bytes_peak / 1024.0
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -368,7 +659,11 @@ pub fn probe_throughput(
 
     let server = Server::start_shared(
         scorer,
-        ServeConfig { max_batch, queue_capacity: max_batch.max(1) * 2 },
+        ServeConfig {
+            max_batch,
+            queue_capacity: max_batch.max(1) * 2,
+            max_active: max_batch.max(1),
+        },
     );
     let client = server.client();
     let t0 = Instant::now();
@@ -398,4 +693,106 @@ pub fn probe_throughput(
         summary.tokens
     );
     Ok(ServeProbe { total_tokens, per_seq_secs, serve_secs, summary })
+}
+
+/// Result of [`probe_decode`]: prefill-once + incremental steps vs the
+/// quadratic repeated-full-forward baseline, over one greedy generation.
+#[derive(Clone, Debug)]
+pub struct DecodeProbe {
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    /// wall seconds: greedy decode via repeated full forwards (O(S²) rows)
+    pub full_secs: f64,
+    /// wall seconds: the single prompt prefill
+    pub prefill_secs: f64,
+    /// wall seconds: the incremental single-token decode steps
+    pub step_secs: f64,
+}
+
+impl DecodeProbe {
+    /// Prefill + steps: the whole incremental path.
+    pub fn incremental_secs(&self) -> f64 {
+        self.prefill_secs + self.step_secs
+    }
+
+    /// How much faster prefill-once + incremental steps is than
+    /// recomputing the full forward for every generated token.
+    pub fn speedup(&self) -> f64 {
+        self.full_secs / self.incremental_secs().max(1e-12)
+    }
+
+    pub fn full_tok_per_sec(&self) -> f64 {
+        self.gen_tokens as f64 / self.full_secs.max(1e-12)
+    }
+
+    pub fn incremental_tok_per_sec(&self) -> f64 {
+        self.gen_tokens as f64 / self.incremental_secs().max(1e-12)
+    }
+
+    pub fn prefill_tok_per_sec(&self) -> f64 {
+        self.prompt_tokens as f64 / self.prefill_secs.max(1e-12)
+    }
+}
+
+/// The measurement behind the decode sections of `rilq serve-bench` and
+/// `bench_runtime`: greedy-generate `gen_len` tokens from a seeded
+/// `prompt_len`-token prompt twice — once recomputing the full forward
+/// per token, once with prefill + KV-cache steps — and cross-check that
+/// both paths produced the same tokens and log-probs before reporting.
+pub fn probe_decode(
+    scorer: &BackendScorer,
+    prompt_len: usize,
+    gen_len: usize,
+    seed: u64,
+) -> Result<DecodeProbe> {
+    let dims = scorer.dims.clone();
+    ensure!(
+        prompt_len >= 1 && gen_len >= 1,
+        "probe_decode needs a prompt and at least one generated token"
+    );
+    ensure!(
+        prompt_len + gen_len <= dims.seq,
+        "prompt {prompt_len} + generation {gen_len} exceeds the model window {}",
+        dims.seq
+    );
+    let mut rng = Rng::seed(seed);
+    let prompt: Vec<u32> = (0..prompt_len).map(|_| rng.below(dims.vocab) as u32).collect();
+
+    // warm the worker pool and caches before either timed section
+    scorer.forward_logits(&prompt)?;
+
+    let t0 = Instant::now();
+    let (full_toks, full_lps) = greedy_decode_recompute(scorer, &prompt, gen_len)?;
+    let full_secs = t0.elapsed().as_secs_f64();
+
+    let mut cache = scorer.new_cache();
+    let t0 = Instant::now();
+    let lg = scorer.cache_forward(&prompt, &mut cache)?;
+    let prefill_secs = t0.elapsed().as_secs_f64();
+    let (mut tok, mut lp) = argmax_logp(lg.row(prompt_len - 1));
+    let mut toks = vec![tok];
+    let mut lps = vec![lp];
+    let t0 = Instant::now();
+    while toks.len() < gen_len {
+        let lg = scorer.cache_forward(&[tok], &mut cache)?;
+        (tok, lp) = argmax_logp(lg.row(0));
+        toks.push(tok);
+        lps.push(lp);
+    }
+    let step_secs = t0.elapsed().as_secs_f64();
+
+    ensure!(
+        toks == full_toks,
+        "incremental decode diverged from the full-recompute decode"
+    );
+    for (a, b) in lps.iter().zip(&full_lps) {
+        ensure!((a - b).abs() < 1e-5, "incremental logp diverged: {a} vs {b}");
+    }
+    Ok(DecodeProbe {
+        prompt_tokens: prompt_len,
+        gen_tokens: gen_len,
+        full_secs,
+        prefill_secs,
+        step_secs,
+    })
 }

@@ -147,7 +147,8 @@ pub fn gen_mc(kind: TaskKind, vocab: &Vocab, n: usize, seed: u64) -> Vec<McItem>
                 let mut choices = vec![good];
                 for k in 0..3 {
                     let oc = (c + 1 + k) % lay.n_classes;
-                    choices.push(vec![vocab.adj(oc % lay.n_classes, rng.below(lay.adjs_per_class))]);
+                    choices
+                        .push(vec![vocab.adj(oc % lay.n_classes, rng.below(lay.adjs_per_class))]);
                 }
                 push_shuffled(&mut items, prompt, choices, &mut rng);
             }
@@ -161,7 +162,8 @@ pub fn gen_mc(kind: TaskKind, vocab: &Vocab, n: usize, seed: u64) -> Vec<McItem>
                 let mut choices = vec![good];
                 for k in 0..3 {
                     let oc = (c + 1 + k) % lay.n_classes;
-                    choices.push(vec![vocab.verb(oc % lay.n_classes, rng.below(lay.verbs_per_class))]);
+                    choices
+                        .push(vec![vocab.verb(oc % lay.n_classes, rng.below(lay.verbs_per_class))]);
                 }
                 push_shuffled(&mut items, prompt, choices, &mut rng);
             }
@@ -170,7 +172,12 @@ pub fn gen_mc(kind: TaskKind, vocab: &Vocab, n: usize, seed: u64) -> Vec<McItem>
     items
 }
 
-fn push_shuffled(items: &mut Vec<McItem>, prompt: Vec<u32>, mut choices: Vec<Vec<u32>>, rng: &mut Rng) {
+fn push_shuffled(
+    items: &mut Vec<McItem>,
+    prompt: Vec<u32>,
+    mut choices: Vec<Vec<u32>>,
+    rng: &mut Rng,
+) {
     // choice 0 is correct pre-shuffle
     let mut order: Vec<usize> = (0..choices.len()).collect();
     rng.shuffle(&mut order);
@@ -203,7 +210,13 @@ pub fn gen_gsm(vocab: &Vocab, n: usize, steps: usize, seed: u64) -> Vec<GsmItem>
 
 /// gsm-sim *fine-tuning* sequences: prompt + answer + SEP, padded into
 /// fixed-length training windows by concatenation.
-pub fn gsm_train_seqs(vocab: &Vocab, n_windows: usize, len: usize, steps: usize, seed: u64) -> Vec<Vec<u32>> {
+pub fn gsm_train_seqs(
+    vocab: &Vocab,
+    n_windows: usize,
+    len: usize,
+    steps: usize,
+    seed: u64,
+) -> Vec<Vec<u32>> {
     let items = gen_gsm(vocab, n_windows * len / 8 + 16, steps, seed);
     let mut stream = Vec::new();
     for it in &items {

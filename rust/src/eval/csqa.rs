@@ -11,7 +11,48 @@ use super::scorer::Scorer;
 /// Accuracy of choosing the candidate continuation with the highest total
 /// log-likelihood (`acc` in lm-eval-harness; set `length_norm` for
 /// `acc_norm`).
+///
+/// Scorers with KV-cache prefix reuse ([`Scorer::supports_prefix_reuse`])
+/// prefill each item's shared prompt **once** and score every choice's
+/// suffix incrementally — `prompt + Σ choice` forwarded rows per item
+/// instead of `choices × (prompt + choice)` — with bitwise-identical
+/// totals (pinned by `tests/kv_cache.rs`). Fixed-geometry scorers keep
+/// the flattened full-sequence path.
 pub fn mc_accuracy(scorer: &dyn Scorer, items: &[McItem], length_norm: bool) -> Result<f64> {
+    for (ii, item) in items.iter().enumerate() {
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let len = item.prompt.len() + choice.len();
+            if len > scorer.dims().seq {
+                bail!(
+                    "item {ii} choice {ci}: {len} tokens exceed the model window of {}",
+                    scorer.dims().seq
+                );
+            }
+        }
+    }
+
+    if scorer.supports_prefix_reuse() {
+        // shared-prompt path: one prefill per item, one suffix per choice
+        let mut correct = 0usize;
+        for item in items {
+            let lps = scorer.score_choices(&item.prompt, &item.choices)?;
+            let mut best = (f64::NEG_INFINITY, usize::MAX);
+            for (ci, lp) in lps.iter().enumerate() {
+                let mut total: f64 = lp.iter().map(|&x| x as f64).sum();
+                if length_norm {
+                    total /= item.choices[ci].len() as f64;
+                }
+                if total > best.0 {
+                    best = (total, ci);
+                }
+            }
+            if best.1 == item.correct {
+                correct += 1;
+            }
+        }
+        return Ok(correct as f64 / items.len() as f64);
+    }
+
     // flatten all (item, choice) into one scoring pass
     let mut seqs: Vec<Vec<u32>> = Vec::new();
     let mut meta: Vec<(usize, usize, usize, usize)> = Vec::new(); // (item, choice, start, len)
@@ -20,13 +61,6 @@ pub fn mc_accuracy(scorer: &dyn Scorer, items: &[McItem], length_norm: bool) -> 
             let mut seq = item.prompt.clone();
             let start = seq.len();
             seq.extend(choice);
-            if seq.len() > scorer.dims().seq {
-                bail!(
-                    "item {ii} choice {ci}: {} tokens exceed the model window of {}",
-                    seq.len(),
-                    scorer.dims().seq
-                );
-            }
             meta.push((ii, ci, start, choice.len()));
             seqs.push(seq);
         }

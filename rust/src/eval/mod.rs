@@ -12,6 +12,13 @@
 //!   (dense / fused packed+LoRA / adapter-merged);
 //! * [`scorer::NativeScorer`] — the pure-Rust reference model (teacher or
 //!   pre-materialized dense weights; PJRT-free studies and tests).
+//!
+//! The native scorers additionally support KV-cache execution: incremental
+//! cached forwards ([`Scorer::cache_forward`], batched for the decode
+//! scheduler), greedy decode ([`scorer::greedy_decode`]), and prefix-aware
+//! choice scoring ([`Scorer::score_choices`]) — `mc_accuracy` prefills each
+//! item's shared prompt once and scores every choice's suffix
+//! incrementally instead of re-running the prompt per choice.
 
 pub mod csqa;
 pub mod ppl;
@@ -19,4 +26,7 @@ pub mod scorer;
 
 pub use csqa::{gsm_accuracy, mc_accuracy};
 pub use ppl::perplexity;
-pub use scorer::{BackendScorer, HloScorer, NativeScorer, Scorer};
+pub use scorer::{
+    argmax_logp, greedy_decode, greedy_decode_recompute, BackendScorer, HloScorer, NativeScorer,
+    Scorer,
+};

@@ -1,11 +1,17 @@
 //! Scorer implementations.
 
-use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, ensure, Result};
 
 use crate::data::tokenizer::PAD;
 use crate::lqec::AdapterSet;
 use crate::model::backend::{model_weight_bytes, student_backends, BackendKind, LinearBackend};
-use crate::model::forward::{forward_trace_batch, token_logp};
+use crate::model::forward::{
+    forward_batch_with_cache, forward_trace_batch, forward_trace_with_cache, row_logp, token_logp,
+    WeightView,
+};
+use crate::model::kv::KvCache;
 use crate::model::{ModelDims, StudentWeights, TeacherParams};
 use crate::runtime::bindings::{output_f32, Bindings, DeviceBindings};
 use crate::runtime::{ArtifactSpec, Runtime};
@@ -17,19 +23,20 @@ use crate::tensor::Mat;
 /// serving path must never abort the process on bad input.
 pub fn check_input(dims: &ModelDims, seqs: &[Vec<u32>]) -> Result<()> {
     for (i, s) in seqs.iter().enumerate() {
-        if s.len() > dims.seq {
-            bail!(
-                "sequence {i} has {} tokens, exceeding the model window of {}",
-                s.len(),
-                dims.seq
-            );
-        }
-        if let Some(&t) = s.iter().find(|&&t| t as usize >= dims.vocab) {
-            bail!(
-                "sequence {i} contains token id {t}, outside the vocabulary of {}",
-                dims.vocab
-            );
-        }
+        check_seq(dims, i, s)?;
+    }
+    Ok(())
+}
+
+/// Single-sequence form of [`check_input`] — lets per-sequence callers
+/// (incremental decode, the recompute baseline) validate a borrowed slice
+/// without cloning it into a one-element batch.
+pub fn check_seq(dims: &ModelDims, i: usize, s: &[u32]) -> Result<()> {
+    if s.len() > dims.seq {
+        bail!("sequence {i} has {} tokens, exceeding the model window of {}", s.len(), dims.seq);
+    }
+    if let Some(&t) = s.iter().find(|&&t| t as usize >= dims.vocab) {
+        bail!("sequence {i} contains token id {t}, outside the vocabulary of {}", dims.vocab);
     }
     Ok(())
 }
@@ -52,6 +59,71 @@ pub trait Scorer {
     /// number of sequences of any length `<= dims().seq` (longer is an
     /// `Err`) and return one `[len_i-1]` vector per sequence.
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// True when [`Scorer::score_choices`] reuses a single prefill of the
+    /// shared prompt across choices (KV-cache prefix reuse) instead of
+    /// re-scoring `prompt + choice` from scratch per choice.
+    fn supports_prefix_reuse(&self) -> bool {
+        false
+    }
+
+    /// True when the scorer can run incremental cached forwards
+    /// ([`Scorer::cache_forward`]). Fixed-geometry HLO scorers cannot.
+    fn supports_cache(&self) -> bool {
+        false
+    }
+
+    /// Incremental forward against a per-sequence [`KvCache`]: push only
+    /// `new_tokens`, return their `[new, V]` logits, extend the cache.
+    /// Default errs — only native backend scorers own a cached forward.
+    fn cache_forward(&self, _new_tokens: &[u32], _cache: &mut KvCache) -> Result<Mat> {
+        bail!("this scorer has no KV-cache support (fixed-geometry HLO path)")
+    }
+
+    /// Batched incremental forward over independent sequences. The
+    /// default loops [`Scorer::cache_forward`]; native scorers override
+    /// it with one coalesced `[Σ new_i, d_model]` forward so the packed
+    /// group-tile dequant amortizes across the decode batch.
+    fn cache_forward_batch(
+        &self,
+        news: &[Vec<u32>],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Mat>> {
+        ensure!(
+            news.len() == caches.len(),
+            "cache_forward_batch: {} token lists but {} caches",
+            news.len(),
+            caches.len()
+        );
+        news.iter().zip(caches.iter_mut()).map(|(n, c)| self.cache_forward(n, c)).collect()
+    }
+
+    /// Score several candidate continuations of one shared prompt:
+    /// returns, per choice, the `[choice_len]` log-probs of the choice
+    /// tokens given everything before them. The default recomputes
+    /// `prompt + choice` from scratch per choice via [`Scorer::score_all`];
+    /// prefix-reuse scorers prefill the prompt once instead.
+    fn score_choices(&self, prompt: &[u32], choices: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            !prompt.is_empty(),
+            "score_choices needs a non-empty prompt (the first choice token \
+             has no conditioning position otherwise)"
+        );
+        let seqs: Vec<Vec<u32>> = choices
+            .iter()
+            .map(|c| {
+                let mut s = prompt.to_vec();
+                s.extend(c);
+                s
+            })
+            .collect();
+        let scored = self.score_all(&seqs)?;
+        Ok(scored
+            .iter()
+            .zip(choices)
+            .map(|(lp, c)| lp[prompt.len() - 1..prompt.len() - 1 + c.len()].to_vec())
+            .collect())
+    }
 
     /// Score arbitrarily many sequences of arbitrary length, in chunks of
     /// `dims().batch`. Sequences longer than the model window are an
@@ -90,6 +162,136 @@ pub trait Scorer {
         }
         Ok(out)
     }
+}
+
+/// Prefix-reuse choice scoring over a weight view: prefill the shared
+/// prompt once, then score each choice's suffix incrementally against the
+/// cached prefix, truncating back to the prompt between choices. Rows
+/// pushed through the linears: `prompt + Σ choice_len` instead of the
+/// naive `Σ (prompt + choice_len)` — the saving `mc_accuracy` banks on
+/// (CSQA scores 4–5 continuations of one shared prompt per item).
+///
+/// Truncation restores exact cache state, so results are bitwise-stable
+/// across choice order and bitwise-identical to full-sequence scoring.
+fn score_choices_cached(
+    dims: &ModelDims,
+    view: &WeightView<'_>,
+    prompt: &[u32],
+    choices: &[Vec<u32>],
+) -> Result<Vec<Vec<f32>>> {
+    ensure!(
+        !prompt.is_empty(),
+        "score_choices needs a non-empty prompt (the first choice token \
+         has no conditioning position otherwise)"
+    );
+    for (ci, c) in choices.iter().enumerate() {
+        if prompt.len() + c.len() > dims.seq {
+            bail!(
+                "choice {ci}: {} prompt + {} choice tokens exceed the model window of {}",
+                prompt.len(),
+                c.len(),
+                dims.seq
+            );
+        }
+    }
+    let mut cache = KvCache::new(dims);
+    let prefill = forward_trace_with_cache(dims, view, prompt, &mut cache)?;
+    let base = prefill.row(prompt.len() - 1);
+    let mut out = Vec::with_capacity(choices.len());
+    for c in choices {
+        if c.is_empty() {
+            out.push(Vec::new());
+            continue;
+        }
+        let mut lp = Vec::with_capacity(c.len());
+        lp.push(row_logp(base, c[0]));
+        let lg = forward_trace_with_cache(dims, view, c, &mut cache)?;
+        for t in 1..c.len() {
+            lp.push(row_logp(lg.row(t - 1), c[t]));
+        }
+        cache.truncate(prompt.len());
+        out.push(lp);
+    }
+    Ok(out)
+}
+
+/// Greedy incremental decode over any cache-capable scorer: prefill the
+/// prompt once, then feed the argmax token back one step at a time.
+/// Returns the generated tokens and each one's log-prob under the
+/// distribution it was sampled from.
+pub fn greedy_decode(
+    scorer: &dyn Scorer,
+    prompt: &[u32],
+    max_new: usize,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    let dims = scorer.dims().clone();
+    ensure!(!prompt.is_empty(), "greedy_decode needs a non-empty prompt");
+    if prompt.len() + max_new.saturating_sub(1) > dims.seq {
+        bail!(
+            "generating {max_new} tokens from a {}-token prompt exceeds the model window of {}",
+            prompt.len(),
+            dims.seq
+        );
+    }
+    let mut tokens = Vec::with_capacity(max_new);
+    let mut logps = Vec::with_capacity(max_new);
+    if max_new == 0 {
+        return Ok((tokens, logps));
+    }
+    let mut cache = KvCache::new(&dims);
+    let lg = scorer.cache_forward(prompt, &mut cache)?;
+    let (mut tok, mut lp) = argmax_logp(lg.row(prompt.len() - 1));
+    tokens.push(tok);
+    logps.push(lp);
+    while tokens.len() < max_new {
+        let lg = scorer.cache_forward(&[tok], &mut cache)?;
+        (tok, lp) = argmax_logp(lg.row(0));
+        tokens.push(tok);
+        logps.push(lp);
+    }
+    Ok((tokens, logps))
+}
+
+/// The quadratic baseline [`greedy_decode`] is measured against: rerun a
+/// full forward over the whole growing sequence for every generated
+/// token. Same tokens bitwise (per-row forwards are batch-invariant),
+/// O(S²) linear rows instead of O(S).
+pub fn greedy_decode_recompute(
+    scorer: &BackendScorer,
+    prompt: &[u32],
+    max_new: usize,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    ensure!(!prompt.is_empty(), "greedy_decode needs a non-empty prompt");
+    if prompt.len() + max_new.saturating_sub(1) > scorer.dims.seq {
+        bail!(
+            "generating {max_new} tokens from a {}-token prompt exceeds the model window of {}",
+            prompt.len(),
+            scorer.dims.seq
+        );
+    }
+    let mut seq = prompt.to_vec();
+    let mut tokens = Vec::with_capacity(max_new);
+    let mut logps = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let lg = scorer.forward_logits(&seq)?;
+        let (tok, lp) = argmax_logp(lg.row(seq.len() - 1));
+        tokens.push(tok);
+        logps.push(lp);
+        seq.push(tok);
+    }
+    Ok((tokens, logps))
+}
+
+/// Greedy pick from one logits row: the argmax token (first index on
+/// ties) and its log-prob.
+pub fn argmax_logp(row: &[f32]) -> (u32, f32) {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    (best as u32, row_logp(row, best as u32))
 }
 
 /// Production scorer: a forward artifact on the PJRT runtime. The
@@ -173,6 +375,15 @@ pub struct NativeScorer {
     pub dense: Option<Vec<Vec<Mat>>>,
 }
 
+impl NativeScorer {
+    fn view(&self) -> WeightView<'_> {
+        match &self.dense {
+            Some(d) => self.teacher.view_with(d),
+            None => self.teacher.view(),
+        }
+    }
+}
+
 impl Scorer for NativeScorer {
     fn dims(&self) -> &ModelDims {
         &self.dims
@@ -180,11 +391,32 @@ impl Scorer for NativeScorer {
 
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         check_input(&self.dims, batch)?;
-        let logits = match &self.dense {
-            Some(d) => forward_trace_batch(&self.dims, &self.teacher.view_with(d), batch),
-            None => forward_trace_batch(&self.dims, &self.teacher.view(), batch),
-        };
+        let logits = forward_trace_batch(&self.dims, &self.view(), batch);
         Ok(batch.iter().zip(&logits).map(|(seq, lg)| token_logp(lg, seq)).collect())
+    }
+
+    fn supports_prefix_reuse(&self) -> bool {
+        true
+    }
+
+    fn supports_cache(&self) -> bool {
+        true
+    }
+
+    fn cache_forward(&self, new_tokens: &[u32], cache: &mut KvCache) -> Result<Mat> {
+        forward_trace_with_cache(&self.dims, &self.view(), new_tokens, cache)
+    }
+
+    fn cache_forward_batch(
+        &self,
+        news: &[Vec<u32>],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Mat>> {
+        forward_batch_with_cache(&self.dims, &self.view(), news, caches)
+    }
+
+    fn score_choices(&self, prompt: &[u32], choices: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        score_choices_cached(&self.dims, &self.view(), prompt, choices)
     }
 }
 
@@ -203,6 +435,11 @@ pub struct BackendScorer {
     /// [`TeacherParams::without_linears`])
     teacher: TeacherParams,
     linears: Vec<Vec<Box<dyn LinearBackend>>>,
+    /// activation rows pushed through the model (every forward entry
+    /// point adds the rows it actually forwarded) — the observable that
+    /// proves prefix reuse does less work, same idiom as the serve
+    /// loop's PAD-waste token counter.
+    rows: AtomicUsize,
 }
 
 impl BackendScorer {
@@ -221,6 +458,7 @@ impl BackendScorer {
             kind,
             teacher: teacher.without_linears(),
             linears: student_backends(student, adapters, kind)?,
+            rows: AtomicUsize::new(0),
         })
     }
 
@@ -229,11 +467,35 @@ impl BackendScorer {
         model_weight_bytes(&self.linears)
     }
 
+    /// Total activation rows forwarded through the linears so far.
+    pub fn rows_forwarded(&self) -> usize {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    fn count_rows(&self, n: usize) {
+        self.rows.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Fresh KV cache sized for this scorer's model window.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(&self.dims)
+    }
+
+    /// Full-forward logits of one sequence — the recompute baseline the
+    /// incremental decode path is benchmarked against.
+    pub fn forward_logits(&self, tokens: &[u32]) -> Result<Mat> {
+        check_seq(&self.dims, 0, tokens)?;
+        self.count_rows(tokens.len());
+        let view = self.teacher.view_backends(&self.linears);
+        Ok(crate::model::forward::forward_trace(&self.dims, &view, tokens).logits)
+    }
+
     /// Score each sequence with its own full forward — the pre-batching
     /// serving path, kept as the baseline the `serve-bench` speedup is
     /// measured against.
     pub fn score_sequential(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         check_input(&self.dims, batch)?;
+        self.count_rows(batch.iter().map(Vec::len).sum());
         let view = self.teacher.view_backends(&self.linears);
         let mut out = Vec::with_capacity(batch.len());
         for seq in batch {
@@ -255,9 +517,45 @@ impl Scorer for BackendScorer {
     /// across all sequences.
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         check_input(&self.dims, batch)?;
+        self.count_rows(batch.iter().map(Vec::len).sum());
         let view = self.teacher.view_backends(&self.linears);
         let logits = forward_trace_batch(&self.dims, &view, batch);
         Ok(batch.iter().zip(&logits).map(|(seq, lg)| token_logp(lg, seq)).collect())
+    }
+
+    fn supports_prefix_reuse(&self) -> bool {
+        true
+    }
+
+    fn supports_cache(&self) -> bool {
+        true
+    }
+
+    fn cache_forward(&self, new_tokens: &[u32], cache: &mut KvCache) -> Result<Mat> {
+        let view = self.teacher.view_backends(&self.linears);
+        let lg = forward_trace_with_cache(&self.dims, &view, new_tokens, cache)?;
+        self.count_rows(new_tokens.len());
+        Ok(lg)
+    }
+
+    fn cache_forward_batch(
+        &self,
+        news: &[Vec<u32>],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Mat>> {
+        let view = self.teacher.view_backends(&self.linears);
+        let lgs = forward_batch_with_cache(&self.dims, &view, news, caches)?;
+        self.count_rows(news.iter().map(Vec::len).sum());
+        Ok(lgs)
+    }
+
+    /// Prefix reuse: prefill the shared prompt once, score each choice's
+    /// suffix incrementally (see [`score_choices_cached`]).
+    fn score_choices(&self, prompt: &[u32], choices: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let view = self.teacher.view_backends(&self.linears);
+        let out = score_choices_cached(&self.dims, &view, prompt, choices)?;
+        self.count_rows(prompt.len() + choices.iter().map(Vec::len).sum::<usize>());
+        Ok(out)
     }
 }
 

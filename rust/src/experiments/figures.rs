@@ -50,7 +50,9 @@ pub fn fig3a(lab: &mut Lab) -> Result<Vec<Table>> {
             f(ppls[1], 2),
         ]);
     }
-    t.note("Paper shape: quality falls (PPL rises) as rank shrinks for all three baselines at 2-bit.");
+    t.note(
+        "Paper shape: quality falls (PPL rises) as rank shrinks for all three baselines at 2-bit.",
+    );
     Ok(vec![t])
 }
 

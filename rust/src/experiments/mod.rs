@@ -90,4 +90,3 @@ pub fn run_experiment(rt: &Runtime, id: &str, fast: bool) -> Result<()> {
     }
     Ok(())
 }
-

@@ -306,7 +306,11 @@ impl<'r> Lab<'r> {
     }
 
     /// Scorer for the fp teacher.
-    pub fn teacher_scorer(&self, dims: &ModelDims, teacher: &TeacherParams) -> Result<HloScorer<'r>> {
+    pub fn teacher_scorer(
+        &self,
+        dims: &ModelDims,
+        teacher: &TeacherParams,
+    ) -> Result<HloScorer<'r>> {
         let name = format!("teacher_fwd_{}", dims.name);
         HloScorer::new(self.rt, &name, |b| {
             b.teacher(teacher);
@@ -392,7 +396,9 @@ impl<'r> Lab<'r> {
     pub fn ft_seqs(&self, dims: &ModelDims, task: &str, n_windows: usize) -> Vec<Vec<u32>> {
         let vocab = Vocab::new(dims.vocab, self.seed ^ 0x11);
         match task {
-            "gsm" => crate::data::tasks::gsm_train_seqs(&vocab, n_windows, dims.seq, 1, self.seed ^ 3),
+            "gsm" => {
+                crate::data::tasks::gsm_train_seqs(&vocab, n_windows, dims.seq, 1, self.seed ^ 3)
+            }
             _ => crate::data::tasks::csqa_train_seqs(&vocab, n_windows, dims.seq, self.seed ^ 4),
         }
     }

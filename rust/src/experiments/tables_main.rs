@@ -178,8 +178,14 @@ pub fn table2(lab: &mut Lab) -> Result<Vec<Table>> {
         for rilq_init in [false, true] {
             let init = if rilq_init {
                 let d = lab.default_adapters(&dims, rank);
-                let (ad, _) =
-                    lab.compensate(&dims, &teacher, &student, &d, "model_gt", &format!("{qname}2"))?;
+                let (ad, _) = lab.compensate(
+                    &dims,
+                    &teacher,
+                    &student,
+                    &d,
+                    "model_gt",
+                    &format!("{qname}2"),
+                )?;
                 ad
             } else {
                 lab.default_adapters(&dims, rank)
@@ -257,7 +263,8 @@ pub fn table3(lab: &mut Lab) -> Result<Vec<Table>> {
             } else {
                 AdapterSet::zeros(&dims, rank)
             };
-            let ft = fine_tune(lab, &dims, &teacher, &student, &init, "gsm", lab.calib.max_steps.min(120))?;
+            let steps = lab.calib.max_steps.min(120);
+            let ft = fine_tune(lab, &dims, &teacher, &student, &init, "gsm", steps)?;
             // project + merge for adapter-free eval
             let grouped = GroupedAdapterSet::project(&dims, &ft);
             let mut st = student.clone();

@@ -113,7 +113,8 @@ pub fn table10(lab: &mut Lab) -> Result<Vec<Table>> {
         cfg.max_steps = steps;
         cfg.patience = steps; // fixed budget, no early stop
         let init = lab.default_adapters(&dims, rank);
-        let res = Driver::new(lab.rt).calibrate(&dims, &teacher, &student, &init, "model_gt", &cfg)?;
+        let res =
+            Driver::new(lab.rt).calibrate(&dims, &teacher, &student, &init, "model_gt", &cfg)?;
         let ad = AdapterSet::from_flat(&dims, rank, &res.adapters_flat)?;
         let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
         let ev = lab.evaluate(&sc, &dims)?;
@@ -125,7 +126,9 @@ pub fn table10(lab: &mut Lab) -> Result<Vec<Table>> {
             f(res.wall_secs, 1),
         ]);
     }
-    t.note("paper shape: PPL improves with budget with diminishing returns; default budget suffices");
+    t.note(
+        "paper shape: PPL improves with budget with diminishing returns; default budget suffices",
+    );
     Ok(vec![t])
 }
 
@@ -233,6 +236,9 @@ pub fn table12(lab: &mut Lab) -> Result<Vec<Table>> {
             ]);
         }
     }
-    t.note("paper shape: W2 fine-tuning (QLoRA = RILQ) needs ~1/4 of FP16 LoRA's memory; RILQ adds nothing over QLoRA");
+    t.note(
+        "paper shape: W2 fine-tuning (QLoRA = RILQ) needs ~1/4 of FP16 LoRA's memory; \
+         RILQ adds nothing over QLoRA",
+    );
     Ok(vec![t])
 }

@@ -83,6 +83,46 @@
 //! serve-bench` measures batched-vs-per-sequence throughput natively
 //! (PJRT-free); `tests/serve_loop.rs` pins the loop's semantics and
 //! `tests/backend_parity.rs` pins batched == per-sequence logits.
+//!
+//! ## KV cache: incremental decode + prefix reuse
+//!
+//! Attention used to recompute the whole O(S²) causal triangle per
+//! request. [`model::kv::KvCache`] stores each layer's rotated-K / V rows
+//! per sequence so the forward only ever pushes *new* rows through the
+//! linears ([`model::forward::forward_trace_with_cache`] /
+//! [`model::forward::forward_step`]; RoPE angles come from one shared
+//! [`model::kv::RopeTable`] instead of per-element `powf` + `sin_cos`):
+//!
+//! ```text
+//!   prefill (once)                   decode (per token)
+//!   tokens[0..P] ──▶ forward ──┐     last tok ──▶ forward (1 row/linear)
+//!                              ▼                      │
+//!              KvCache: per layer, rotated K + V      │ argmax / logp
+//!              [n_heads, seq, head_dim] planes   ◀────┘ appended
+//!                              │
+//!   score_choices: truncate(P) ├──▶ choice A suffix  (cache reuse:
+//!   between choices — prompt   ├──▶ choice B suffix   prompt forwarded
+//!   prefilled exactly once     └──▶ ...               once per item)
+//! ```
+//!
+//! The serve loop schedules decode traffic too ([`ServeClient::generate`]
+//! → greedy generation): freshly admitted prompts prefill as one
+//! coalesced batch, then all active sequences advance **one token per
+//! iteration in lockstep round-robin** — each step is a single
+//! `[n_active, d_model]` forward, so the packed group-tile dequant keeps
+//! amortizing. At most `ServeConfig::max_active` KV caches are resident;
+//! while the slots are full the loop stops draining the bounded queue, so
+//! backpressure reaches submitters (cache-capacity accounting). Latency
+//! p50/p95, queue-depth, and KV-residency gauges land in
+//! [`coordinator::Metrics`]; `rilq serve-bench` and `cargo bench --bench
+//! bench_runtime` report prefill-vs-incremental tok/s, and
+//! `tests/kv_cache.rs` pins incremental == full-forward logits.
+//!
+//! [`ServeClient::generate`]: coordinator::serve::ServeClient::generate
+//! [`ServeConfig::max_active`]: coordinator::serve::ServeConfig::max_active
+
+// Clippy style-lint allowances for the numeric kernels live in
+// Cargo.toml's `[lints.clippy]` table so they cover tests/benches too.
 
 pub mod tensor;
 pub mod quant;

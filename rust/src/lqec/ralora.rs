@@ -134,7 +134,8 @@ mod tests {
         let got = plan.params_count(&d);
         // within 50% of the uniform budget (rounding + clamping slack)
         assert!(
-            (got as f64) < 1.5 * uniform_params as f64 && (got as f64) > 0.5 * uniform_params as f64,
+            (got as f64) < 1.5 * uniform_params as f64
+                && (got as f64) > 0.5 * uniform_params as f64,
             "got={got} uniform={uniform_params}"
         );
     }

@@ -7,16 +7,17 @@
 //! rilq eval <config> [--quant=rtn --bits=2 --rank=16 --scope=model_gt]
 //!                    [--backend={dense|packed|merged}]
 //!                                   quantize+compensate+evaluate one cell
-//! rilq serve-bench [--backend=packed --batch=8 --requests=64 --seq=64]
-//!                                   continuous-batching serving benchmark
-//!                                   (native, PJRT-free)
+//! rilq serve-bench [--backend=packed --batch=8 --requests=64 --seq=64
+//!                   --gen=N]
+//!                                   continuous-batching serving + KV-cache
+//!                                   decode benchmark (native, PJRT-free)
 //! rilq inspect                      print manifest / artifact inventory
 //! ```
 
 use anyhow::{anyhow, Result};
 
 use rilq::cli::Args;
-use rilq::coordinator::probe_throughput;
+use rilq::coordinator::{probe_decode, probe_throughput};
 use rilq::eval::BackendScorer;
 use rilq::experiments::pipeline::Lab;
 use rilq::experiments::{catalog, run_experiment};
@@ -131,7 +132,8 @@ fn dispatch(args: &Args) -> Result<()> {
             let sc = lab.student_scorer(&dims, &teacher, &student, &ad)?;
             let after = lab.evaluate(&sc, &dims)?;
             println!(
-                "{quant} W{bits} + {scope} [{backend}] (r={rank}, {} steps, {:.1}s): CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
+                "{quant} W{bits} + {scope} [{backend}] (r={rank}, {} steps, {:.1}s): \
+                 CSQA {:.2}%  Wiki2 {:.2}  C4 {:.2}",
                 res.steps,
                 res.wall_secs,
                 after.avg_acc * 100.0,
@@ -206,7 +208,7 @@ fn serve_bench(args: &Args) -> Result<()> {
 
     // probe_throughput generates the ragged mix, runs both paths, and
     // verifies logp parity + zero PAD-dummy forwards before reporting
-    let probe = probe_throughput(scorer, n_requests, max_batch, 0x5e7e)?;
+    let probe = probe_throughput(scorer.clone(), n_requests, max_batch, 0x5e7e)?;
     println!(
         "per-sequence path:  {} tokens in {:.3}s  ({:.0} tok/s)",
         probe.total_tokens,
@@ -224,6 +226,31 @@ fn serve_bench(args: &Args) -> Result<()> {
         "speedup: {:.2}x (batched vs per-sequence), mean batch occupancy {:.2}",
         probe.speedup(),
         probe.summary.mean_occupancy
+    );
+
+    // decode section: prefill-once + KV-cache steps vs repeated full
+    // forwards (probe_decode cross-checks token/logp parity internally)
+    let prompt_len = (seq / 2).max(1);
+    let gen = args
+        .opt_usize("gen")?
+        .unwrap_or(seq - prompt_len)
+        .clamp(1, seq - prompt_len);
+    let dprobe = probe_decode(&scorer, prompt_len, gen, 0xdec0)?;
+    println!(
+        "decode: prefill {} tok in {:.3}s ({:.0} tok/s); {} generated tok — \
+         incremental {:.3}s ({:.0} tok/s) vs full-recompute {:.3}s ({:.0} tok/s)",
+        dprobe.prompt_tokens,
+        dprobe.prefill_secs,
+        dprobe.prefill_tok_per_sec(),
+        dprobe.gen_tokens,
+        dprobe.incremental_secs(),
+        dprobe.incremental_tok_per_sec(),
+        dprobe.full_secs,
+        dprobe.full_tok_per_sec()
+    );
+    println!(
+        "decode speedup: {:.2}x (prefill + incremental steps vs quadratic recompute)",
+        dprobe.speedup()
     );
     Ok(())
 }
@@ -243,10 +270,14 @@ USAGE:
                                       packed = fused packed-2-bit + LoRA serving engine
                                       merged = adapter-merged dense (parity oracle)
   rilq serve-bench [--backend={dense|packed|merged} --bits=2 --batch=8
-                    --requests=64 --seq=64 --layers=4 --rank=8]
+                    --requests=64 --seq=64 --layers=4 --rank=8 --gen=N]
                                       native continuous-batching serving
                                       benchmark: per-sequence vs coalesced
-                                      ragged batches on one BackendScorer
+                                      ragged batches on one BackendScorer,
+                                      plus a KV-cache decode section
+                                      (prefill-once + incremental steps vs
+                                      quadratic full recompute; --gen sets
+                                      the generation length)
                                       (PJRT-free; no artifacts needed)
   rilq inspect                        artifact / config inventory
   (global) --artifacts=DIR            artifact directory [default: artifacts]

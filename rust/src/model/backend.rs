@@ -466,7 +466,13 @@ mod tests {
     use crate::quant::{CalibCtx, Quantizer, Rtn};
     use crate::tensor::Rng;
 
-    fn quantized(d_in: usize, d_out: usize, bits: u8, gs: usize, seed: u64) -> (Mat, QuantizedTensor) {
+    fn quantized(
+        d_in: usize,
+        d_out: usize,
+        bits: u8,
+        gs: usize,
+        seed: u64,
+    ) -> (Mat, QuantizedTensor) {
         let mut rng = Rng::seed(seed);
         let w = Mat::randn(d_in, d_out, &mut rng);
         let q = match Rtn::new(bits, gs).quantize(&w, &CalibCtx::default()) {

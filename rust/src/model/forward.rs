@@ -5,9 +5,12 @@
 //! numerical oracle for the AOT artifacts (integration tests compare the
 //! two to ~1e-3) and as a PJRT-free evaluation path for quantizer studies.
 
+use anyhow::{bail, ensure, Result};
+
 use crate::tensor::Mat;
 
 use super::backend::LinearBackend;
+use super::kv::{KvCache, RopeTable};
 use super::{ModelDims, StudentWeights, TeacherParams, LINEARS};
 
 const EPS: f32 = 1e-6;
@@ -124,69 +127,102 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// RoPE rotation applied in place on a `[S, hd]` head slice.
-/// Pair layout matches python: (even, odd) channel pairs.
-fn apply_rope(x: &mut Mat, hd: usize) {
-    let half = hd / 2;
+/// RoPE rotation applied in place on a `[S, hd]` head slice, position =
+/// row index. Kept for unit tests / external callers; the forward paths
+/// use the shared [`RopeTable`] directly.
+pub fn apply_rope(x: &mut Mat, hd: usize) {
+    let rope = RopeTable::shared(x.rows().max(1), hd);
     for s in 0..x.rows() {
-        let row = x.row_mut(s);
-        for k in 0..half {
-            let freq = 10000f32.powf(-(2.0 * k as f32) / hd as f32);
-            let ang = s as f32 * freq;
-            let (sin, cos) = ang.sin_cos();
-            let a = row[2 * k];
-            let b = row[2 * k + 1];
-            row[2 * k] = a * cos - b * sin;
-            row[2 * k + 1] = a * sin + b * cos;
-        }
+        rope.rotate(&mut x.row_mut(s)[..hd], s);
     }
 }
 
-/// Causal multi-head attention over `[S, d]` projections.
-fn attention(dims: &ModelDims, q: &Mat, k: &Mat, v: &Mat) -> Mat {
-    let s = q.rows();
+/// The shared causal-attention row kernel: `new` query rows at absolute
+/// positions `past..past+new` attend over `past+new` key/value rows held
+/// in head-major planes (`[n_heads, stride, head_dim]` — a [`KvCache`]
+/// layer, or a transient buffer built by [`attention`]). K rows are
+/// already rotated; Q rows are rotated here into one small scratch reused
+/// across heads — no per-head matrix gathers are allocated.
+///
+/// Per-row math (score loop order, max-subtracted softmax, the `w == 0`
+/// skip) is byte-for-byte the historical kernel, so full and incremental
+/// forwards produce bitwise-identical rows.
+fn attend_cached(
+    dims: &ModelDims,
+    rope: &RopeTable,
+    q: &Mat,
+    kbuf: &[f32],
+    vbuf: &[f32],
+    stride: usize,
+    past: usize,
+    out: &mut Mat,
+) {
+    let new = q.rows();
+    if new == 0 {
+        return;
+    }
     let (h, hd) = (dims.n_heads, dims.head_dim());
-    let mut out = Mat::zeros(s, dims.d_model);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut qh = vec![0.0f32; hd];
+    let mut scores: Vec<f32> = Vec::with_capacity(past + new);
     for head in 0..h {
-        // slice head channels
-        let slice = |m: &Mat| -> Mat {
-            Mat::from_fn(s, hd, |r, c| m[(r, head * hd + c)])
-        };
-        let mut qh = slice(q);
-        let mut kh = slice(k);
-        let vh = slice(v);
-        apply_rope(&mut qh, hd);
-        apply_rope(&mut kh, hd);
-        let scale = 1.0 / (hd as f32).sqrt();
-        for i in 0..s {
-            // causal row i attends to 0..=i
-            let qrow = qh.row(i);
-            let mut scores = vec![0.0f32; i + 1];
+        let hoff = head * hd;
+        let khead = &kbuf[head * stride * hd..];
+        let vhead = &vbuf[head * stride * hd..];
+        for i in 0..new {
+            let pos = past + i;
+            qh.copy_from_slice(&q.row(i)[hoff..hoff + hd]);
+            rope.rotate(&mut qh, pos);
+            // causal: position pos attends to 0..=pos
+            scores.clear();
+            scores.resize(pos + 1, 0.0);
             let mut maxs = f32::NEG_INFINITY;
-            for j in 0..=i {
-                let krow = kh.row(j);
-                let dot: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
-                scores[j] = dot * scale;
-                maxs = maxs.max(scores[j]);
+            for (j, sc) in scores.iter_mut().enumerate() {
+                let krow = &khead[j * hd..j * hd + hd];
+                let dot: f32 = qh.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                *sc = dot * scale;
+                maxs = maxs.max(*sc);
             }
             let mut denom = 0.0f32;
             for sc in &mut scores {
                 *sc = (*sc - maxs).exp();
                 denom += *sc;
             }
-            let orow = out.row_mut(i);
-            for j in 0..=i {
-                let w = scores[j] / denom;
+            let orow = &mut out.row_mut(i)[hoff..hoff + hd];
+            for (j, &sc) in scores.iter().enumerate() {
+                let w = sc / denom;
                 if w == 0.0 {
                     continue;
                 }
-                let vrow = vh.row(j);
-                for c in 0..hd {
-                    orow[head * hd + c] += w * vrow[c];
+                let vrow = &vhead[j * hd..j * hd + hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += w * vv;
                 }
             }
         }
     }
+}
+
+/// Causal multi-head attention over `[S, d]` projections (no cache): K is
+/// rotated once into a transient head-major buffer, then the shared
+/// kernel runs with `past == 0`.
+fn attention(dims: &ModelDims, rope: &RopeTable, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let s = q.rows();
+    let (h, hd) = (dims.n_heads, dims.head_dim());
+    let mut kbuf = vec![0.0f32; h * s * hd];
+    let mut vbuf = vec![0.0f32; h * s * hd];
+    for r in 0..s {
+        let krow = k.row(r);
+        let vrow = v.row(r);
+        for head in 0..h {
+            let off = (head * s + r) * hd;
+            kbuf[off..off + hd].copy_from_slice(&krow[head * hd..(head + 1) * hd]);
+            rope.rotate(&mut kbuf[off..off + hd], r);
+            vbuf[off..off + hd].copy_from_slice(&vrow[head * hd..(head + 1) * hd]);
+        }
+    }
+    let mut out = Mat::zeros(s, dims.d_model);
+    attend_cached(dims, rope, q, &kbuf, &vbuf, s, 0, &mut out);
     out
 }
 
@@ -197,6 +233,7 @@ pub fn forward_trace(dims: &ModelDims, w: &WeightView<'_>, tokens: &[u32]) -> Tr
     let fam = |name: &str| LINEARS.iter().position(|&n| n == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
     let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
+    let rope = RopeTable::shared(dims.seq, dims.head_dim());
 
     let mut h = Mat::from_fn(s, dims.d_model, |r, c| w.embed[(tokens[r] as usize, c)]);
     let mut layers = Vec::with_capacity(dims.n_layers);
@@ -206,7 +243,7 @@ pub fn forward_trace(dims: &ModelDims, w: &WeightView<'_>, tokens: &[u32]) -> Tr
         let q = w.linears[iq][l].forward(&x1);
         let k = w.linears[ik][l].forward(&x1);
         let v = w.linears[iv][l].forward(&x1);
-        let att = attention(dims, &q, &k, &v);
+        let att = attention(dims, &rope, &q, &k, &v);
         h = h.add(&w.linears[io][l].forward(&att));
         let x2 = rmsnorm(&h, &w.ln2[l]);
         let mut g = w.linears[ig][l].forward(&x2);
@@ -254,6 +291,7 @@ pub fn forward_trace_batch(dims: &ModelDims, w: &WeightView<'_>, seqs: &[Vec<u32
     let fam = |name: &str| LINEARS.iter().position(|&n| n == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
     let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
+    let rope = RopeTable::shared(dims.seq, dims.head_dim());
 
     // row offsets of each sequence inside the coalesced activation matrix
     let mut offsets = Vec::with_capacity(seqs.len());
@@ -288,6 +326,7 @@ pub fn forward_trace_batch(dims: &ModelDims, w: &WeightView<'_>, seqs: &[Vec<u32
             let off = offsets[si];
             let a = attention(
                 dims,
+                &rope,
                 &q.block(off, 0, s, d),
                 &k.block(off, 0, s, d),
                 &v.block(off, 0, s, d),
@@ -311,6 +350,211 @@ pub fn forward_trace_batch(dims: &ModelDims, w: &WeightView<'_>, seqs: &[Vec<u32
         .collect()
 }
 
+/// Validate that a cached forward of `new_tokens` fits the cache and the
+/// vocabulary; shared by the single-sequence and batched entry points.
+fn check_cache_step(
+    dims: &ModelDims,
+    cache: &KvCache,
+    new_tokens: &[u32],
+    seq_idx: usize,
+) -> Result<()> {
+    ensure!(
+        cache.matches(dims),
+        "sequence {seq_idx}: KV cache geometry does not match the model \
+         (cache capacity {}, model seq {})",
+        cache.capacity(),
+        dims.seq
+    );
+    if cache.len() + new_tokens.len() > dims.seq {
+        bail!(
+            "sequence {seq_idx}: {} cached + {} new tokens exceed the model window of {}",
+            cache.len(),
+            new_tokens.len(),
+            dims.seq
+        );
+    }
+    if let Some(&t) = new_tokens.iter().find(|&&t| t as usize >= dims.vocab) {
+        bail!("sequence {seq_idx}: token id {t} outside the vocabulary of {}", dims.vocab);
+    }
+    Ok(())
+}
+
+/// Incremental forward: push only `new_tokens` (absolute positions
+/// `cache.len()..cache.len()+new`) through every linear, attending over
+/// the cached K/V planes, and extend the cache. With an empty cache this
+/// is the *prefill* and produces logits bitwise identical to
+/// [`forward_trace`]; afterwards each call costs O(new) linear rows
+/// instead of re-running the whole sequence.
+///
+/// Returns the `[new, V]` logits of the new positions (an empty matrix
+/// for a 0-token suffix, cache untouched). Errs — never panics — when
+/// the step would overflow the model window, a token id is out of
+/// vocabulary, or the cache was built for a different geometry.
+pub fn forward_trace_with_cache(
+    dims: &ModelDims,
+    w: &WeightView<'_>,
+    new_tokens: &[u32],
+    cache: &mut KvCache,
+) -> Result<Mat> {
+    check_cache_step(dims, cache, new_tokens, 0)?;
+    let n = new_tokens.len();
+    if n == 0 {
+        return Ok(Mat::zeros(0, dims.vocab));
+    }
+    let fam = |name: &str| LINEARS.iter().position(|&nm| nm == name).unwrap();
+    let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
+    let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
+    let rope = RopeTable::shared(dims.seq, dims.head_dim());
+    let past = cache.len();
+
+    let mut h = Mat::from_fn(n, dims.d_model, |r, c| w.embed[(new_tokens[r] as usize, c)]);
+    for l in 0..dims.n_layers {
+        let x1 = rmsnorm(&h, &w.ln1[l]);
+        let q = w.linears[iq][l].forward(&x1);
+        let k = w.linears[ik][l].forward(&x1);
+        let v = w.linears[iv][l].forward(&x1);
+        cache.extend_layer(l, &rope, &k, &v, 0, n);
+        let mut att = Mat::zeros(n, dims.d_model);
+        attend_cached(
+            dims,
+            &rope,
+            &q,
+            cache.layer_k(l),
+            cache.layer_v(l),
+            cache.capacity(),
+            past,
+            &mut att,
+        );
+        h = h.add(&w.linears[io][l].forward(&att));
+        let x2 = rmsnorm(&h, &w.ln2[l]);
+        let mut g = w.linears[ig][l].forward(&x2);
+        g.map_inplace(silu);
+        let u = w.linears[iu][l].forward(&x2);
+        let mid = g.zip(&u, |a, b| a * b);
+        h = h.add(&w.linears[id][l].forward(&mid));
+    }
+    cache.commit(n);
+    let hidden = rmsnorm(&h, w.fnorm);
+    Ok(LinearBackend::forward(w.head, &hidden))
+}
+
+/// One decode step: feed a single token, get its `[V]` logits row back.
+pub fn forward_step(
+    dims: &ModelDims,
+    w: &WeightView<'_>,
+    token: u32,
+    cache: &mut KvCache,
+) -> Result<Vec<f32>> {
+    let lg = forward_trace_with_cache(dims, w, &[token], cache)?;
+    Ok(lg.row(0).to_vec())
+}
+
+/// Batched incremental forward over several independent sequences: the
+/// active sequences' new tokens are coalesced into **one**
+/// `[Σ new_i, d_model]` activation matrix per linear — the packed
+/// group-tile dequant amortizes across the whole decode batch exactly as
+/// in [`forward_trace_batch`] — while attention runs per sequence against
+/// its own cache. Per-sequence results are bitwise identical to calling
+/// [`forward_trace_with_cache`] one sequence at a time.
+///
+/// All sequences are validated before any cache is touched, so an `Err`
+/// (whose message names the offending sequence index) leaves every cache
+/// unchanged.
+pub fn forward_batch_with_cache(
+    dims: &ModelDims,
+    w: &WeightView<'_>,
+    news: &[Vec<u32>],
+    caches: &mut [&mut KvCache],
+) -> Result<Vec<Mat>> {
+    ensure!(
+        news.len() == caches.len(),
+        "forward_batch_with_cache: {} token lists but {} caches",
+        news.len(),
+        caches.len()
+    );
+    for (i, (seq, cache)) in news.iter().zip(caches.iter()).enumerate() {
+        check_cache_step(dims, cache, seq, i)?;
+    }
+    let fam = |name: &str| LINEARS.iter().position(|&nm| nm == name).unwrap();
+    let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
+    let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
+    let rope = RopeTable::shared(dims.seq, dims.head_dim());
+
+    let mut offsets = Vec::with_capacity(news.len());
+    let mut total = 0usize;
+    for seq in news {
+        offsets.push(total);
+        total += seq.len();
+    }
+    if total == 0 {
+        return Ok(news.iter().map(|_| Mat::zeros(0, dims.vocab)).collect());
+    }
+
+    let d = dims.d_model;
+    let mut h = Mat::zeros(total, d);
+    for (si, seq) in news.iter().enumerate() {
+        for (p, &tok) in seq.iter().enumerate() {
+            h.row_mut(offsets[si] + p).copy_from_slice(w.embed.row(tok as usize));
+        }
+    }
+
+    for l in 0..dims.n_layers {
+        let x1 = rmsnorm(&h, &w.ln1[l]);
+        let q = w.linears[iq][l].forward(&x1);
+        let k = w.linears[ik][l].forward(&x1);
+        let v = w.linears[iv][l].forward(&x1);
+        let mut att = Mat::zeros(total, d);
+        for (si, seq) in news.iter().enumerate() {
+            let n = seq.len();
+            if n == 0 {
+                continue;
+            }
+            let cache = &mut *caches[si];
+            let past = cache.len();
+            cache.extend_layer(l, &rope, &k, &v, offsets[si], n);
+            let qb = q.block(offsets[si], 0, n, d);
+            let mut ab = Mat::zeros(n, d);
+            attend_cached(
+                dims,
+                &rope,
+                &qb,
+                cache.layer_k(l),
+                cache.layer_v(l),
+                cache.capacity(),
+                past,
+                &mut ab,
+            );
+            att.set_block(offsets[si], 0, &ab);
+        }
+        h = h.add(&w.linears[io][l].forward(&att));
+        let x2 = rmsnorm(&h, &w.ln2[l]);
+        let mut g = w.linears[ig][l].forward(&x2);
+        g.map_inplace(silu);
+        let u = w.linears[iu][l].forward(&x2);
+        let mid = g.zip(&u, |a, b| a * b);
+        h = h.add(&w.linears[id][l].forward(&mid));
+    }
+    for (si, seq) in news.iter().enumerate() {
+        caches[si].commit(seq.len());
+    }
+    let hidden = rmsnorm(&h, w.fnorm);
+    let logits = LinearBackend::forward(w.head, &hidden);
+    Ok(news
+        .iter()
+        .enumerate()
+        .map(|(si, seq)| logits.block(offsets[si], 0, seq.len(), dims.vocab))
+        .collect())
+}
+
+/// Log-prob of one token under a single `[V]` logits row
+/// (max-subtracted log-sum-exp — the same math [`token_logp`] applies
+/// per position, so prefix-reuse scoring matches it bitwise).
+pub fn row_logp(row: &[f32], token: u32) -> f32 {
+    let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = row.iter().map(|&v| (v - maxv).exp()).sum::<f32>().ln() + maxv;
+    row[token as usize] - lse
+}
+
 /// Log-prob of the realized next token at each position: `[S-1]`
 /// (empty for sequences of fewer than two tokens).
 pub fn token_logp(logits: &Mat, tokens: &[u32]) -> Vec<f32> {
@@ -320,10 +564,7 @@ pub fn token_logp(logits: &Mat, tokens: &[u32]) -> Vec<f32> {
     }
     let mut out = Vec::with_capacity(s - 1);
     for pos in 0..s - 1 {
-        let row = logits.row(pos);
-        let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let lse: f32 = row.iter().map(|&v| (v - maxv).exp()).sum::<f32>().ln() + maxv;
-        out.push(row[tokens[pos + 1] as usize] - lse);
+        out.push(row_logp(logits.row(pos), tokens[pos + 1]));
     }
     out
 }
@@ -544,6 +785,61 @@ mod tests {
                 assert!((ra[c] - rb[c]).abs() < 1e-5, "pos {pos} leaked");
             }
         }
+    }
+
+    #[test]
+    fn cached_prefill_plus_steps_match_full_forward() {
+        let d = dims();
+        let mut rng = Rng::seed(107);
+        let p = TeacherParams::init(&d, &mut rng);
+        let tokens: Vec<u32> = (0..d.seq).map(|_| rng.below(32) as u32).collect();
+        let view = p.view();
+        let full = forward_trace(&d, &view, &tokens).logits;
+        let mut cache = super::KvCache::new(&d);
+        let prefix = 5;
+        let prefill = forward_trace_with_cache(&d, &view, &tokens[..prefix], &mut cache).unwrap();
+        for r in 0..prefix {
+            for c in 0..d.vocab {
+                assert!((prefill[(r, c)] - full[(r, c)]).abs() <= 1e-6, "prefill row {r}");
+            }
+        }
+        for (i, &t) in tokens[prefix..].iter().enumerate() {
+            let row = forward_step(&d, &view, t, &mut cache).unwrap();
+            let pos = prefix + i;
+            for c in 0..d.vocab {
+                assert!((row[c] - full[(pos, c)]).abs() <= 1e-6, "step pos {pos}");
+            }
+        }
+        assert_eq!(cache.len(), d.seq);
+    }
+
+    #[test]
+    fn batched_cache_forward_handles_empty_and_matches_solo() {
+        let d = dims();
+        let mut rng = Rng::seed(108);
+        let p = TeacherParams::init(&d, &mut rng);
+        let view = p.view();
+        let news: Vec<Vec<u32>> = vec![
+            (0..4).map(|_| rng.below(32) as u32).collect(),
+            Vec::new(),
+            (0..7).map(|_| rng.below(32) as u32).collect(),
+        ];
+        let mut caches: Vec<super::KvCache> =
+            news.iter().map(|_| super::KvCache::new(&d)).collect();
+        let mut refs: Vec<&mut super::KvCache> = caches.iter_mut().collect();
+        let lgs = forward_batch_with_cache(&d, &view, &news, &mut refs).unwrap();
+        assert_eq!(lgs[1].shape(), (0, d.vocab));
+        for (seq, lg) in news.iter().zip(&lgs) {
+            if seq.is_empty() {
+                continue;
+            }
+            let mut solo = super::KvCache::new(&d);
+            let want = forward_trace_with_cache(&d, &view, seq, &mut solo).unwrap();
+            assert!(want.fro_dist(lg) < 1e-7, "batched cached forward diverged");
+        }
+        assert_eq!(caches[0].len(), 4);
+        assert_eq!(caches[1].len(), 0);
+        assert_eq!(caches[2].len(), 7);
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Per-sequence KV cache and the shared RoPE angle table.
+//!
+//! The serving forward historically recomputed full causal attention over
+//! the whole sequence for every request — O(S²) work to score one more
+//! token. [`KvCache`] stores each layer's rotated K and raw V rows so a
+//! sequence can grow incrementally: prefill once, then push only the new
+//! rows through every linear (see `forward::forward_trace_with_cache` /
+//! `forward::forward_step`). [`RopeTable`] hoists the rotary-embedding
+//! angle computation (previously `powf` + `sin_cos` per (position,
+//! channel-pair) per head per layer) into one table shared across heads,
+//! layers, and sequences.
+//!
+//! Cache layout is head-major per layer: `[n_heads, capacity, head_dim]`,
+//! so the attention inner loop streams contiguous `head_dim`-float rows
+//! exactly like the old per-head gather copies did — without the copies.
+//! K rows are stored *already rotated* (a row's rotation depends only on
+//! its own absolute position, which never changes as the sequence grows).
+//!
+//! [`KvCache::truncate`] rolls the cache back to a shorter prefix, which
+//! is what makes shared-prompt scoring cheap: `mc_accuracy` prefills the
+//! prompt once, scores one choice's suffix, truncates back to the prompt,
+//! and scores the next choice — bitwise-stable across choices because
+//! truncation restores the exact buffer state.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::ModelDims;
+use crate::tensor::Mat;
+
+/// Precomputed `(sin, cos)` rotary table for positions `0..max_pos` and
+/// `head_dim / 2` channel pairs. One table serves every head, layer, and
+/// sequence of a model geometry; [`RopeTable::shared`] memoizes tables
+/// process-wide so repeated forwards don't even pay the table build.
+pub struct RopeTable {
+    head_dim: usize,
+    half: usize,
+    max_pos: usize,
+    sin: Vec<f32>,
+    cos: Vec<f32>,
+}
+
+impl RopeTable {
+    /// Build the table: `freq_k = 10000^(-2k / head_dim)`, angle
+    /// `pos * freq_k` — the same formula the per-element path used, so
+    /// rotated values are bitwise identical to the historical ones.
+    pub fn new(max_pos: usize, head_dim: usize) -> RopeTable {
+        let half = head_dim / 2;
+        let mut sin = Vec::with_capacity(max_pos * half);
+        let mut cos = Vec::with_capacity(max_pos * half);
+        for pos in 0..max_pos {
+            for k in 0..half {
+                let freq = 10000f32.powf(-(2.0 * k as f32) / head_dim as f32);
+                let (s, c) = (pos as f32 * freq).sin_cos();
+                sin.push(s);
+                cos.push(c);
+            }
+        }
+        RopeTable { head_dim, half, max_pos, sin, cos }
+    }
+
+    /// Process-wide memoized lookup: any existing table with the same
+    /// `head_dim` and at least `max_pos` positions is reused.
+    pub fn shared(max_pos: usize, head_dim: usize) -> Arc<RopeTable> {
+        static REGISTRY: OnceLock<Mutex<Vec<Arc<RopeTable>>>> = OnceLock::new();
+        let reg = REGISTRY.get_or_init(|| Mutex::new(Vec::new()));
+        let mut g = reg.lock().unwrap();
+        if let Some(t) = g.iter().find(|t| t.head_dim == head_dim && t.max_pos >= max_pos) {
+            return t.clone();
+        }
+        let t = Arc::new(RopeTable::new(max_pos, head_dim));
+        g.push(t.clone());
+        t
+    }
+
+    pub fn max_pos(&self) -> usize {
+        self.max_pos
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Rotate one `[head_dim]` slice in place for absolute position `pos`
+    /// ((even, odd) channel-pair layout, matching the python model).
+    #[inline]
+    pub fn rotate(&self, head: &mut [f32], pos: usize) {
+        debug_assert!(pos < self.max_pos, "position {} outside rope table", pos);
+        debug_assert_eq!(head.len(), self.head_dim);
+        let base = pos * self.half;
+        for k in 0..self.half {
+            let (sin, cos) = (self.sin[base + k], self.cos[base + k]);
+            let a = head[2 * k];
+            let b = head[2 * k + 1];
+            head[2 * k] = a * cos - b * sin;
+            head[2 * k + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Growable per-sequence key/value cache: for each layer, the rotated K
+/// and raw V projections of every position seen so far. Storage is
+/// allocated once at construction (`capacity == dims.seq`), so append and
+/// truncate never reallocate — `bytes()` is the constant resident
+/// footprint a serving scheduler accounts against.
+pub struct KvCache {
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    capacity: usize,
+    len: usize,
+    /// per layer, head-major `[n_heads, capacity, head_dim]`
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    /// Empty cache with room for `dims.seq` positions.
+    pub fn new(dims: &ModelDims) -> KvCache {
+        let size = dims.seq * dims.d_model;
+        KvCache {
+            d_model: dims.d_model,
+            n_layers: dims.n_layers,
+            n_heads: dims.n_heads,
+            head_dim: dims.head_dim(),
+            capacity: dims.seq,
+            len: 0,
+            k: (0..dims.n_layers).map(|_| vec![0.0; size]).collect(),
+            v: (0..dims.n_layers).map(|_| vec![0.0; size]).collect(),
+        }
+    }
+
+    /// Cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this cache can hold (`dims.seq` at build time).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions still available before the window is full.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// True when the cache was built for this model geometry.
+    pub fn matches(&self, dims: &ModelDims) -> bool {
+        self.d_model == dims.d_model
+            && self.n_layers == dims.n_layers
+            && self.n_heads == dims.n_heads
+            && self.capacity == dims.seq
+    }
+
+    /// Roll back to a shorter prefix (`n <= len`). Rows past `n` are
+    /// logically discarded; the next append overwrites them, so replaying
+    /// the same suffix reproduces bitwise-identical state.
+    pub fn truncate(&mut self, n: usize) {
+        assert!(n <= self.len, "truncate({n}) past cache length {}", self.len);
+        self.len = n;
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Resident memory of the cache buffers in bytes (constant — the
+    /// full-capacity K and V planes of every layer).
+    pub fn bytes(&self) -> usize {
+        4 * (self.n_layers * 2 * self.capacity * self.d_model)
+    }
+
+    /// Append `n` new rows (taken from `k`/`v` starting at row `r0`) to
+    /// one layer's planes at positions `len..len+n`, rotating K by each
+    /// row's absolute position. Every layer of a forward step appends
+    /// with the *same* base position; [`KvCache::commit`] advances `len`
+    /// once after all layers ran.
+    pub(crate) fn extend_layer(
+        &mut self,
+        layer: usize,
+        rope: &RopeTable,
+        k: &Mat,
+        v: &Mat,
+        r0: usize,
+        n: usize,
+    ) {
+        debug_assert!(self.len + n <= self.capacity, "kv cache overflow");
+        let (hd, cap) = (self.head_dim, self.capacity);
+        let kb = &mut self.k[layer];
+        let vb = &mut self.v[layer];
+        for i in 0..n {
+            let pos = self.len + i;
+            let krow = k.row(r0 + i);
+            let vrow = v.row(r0 + i);
+            for h in 0..self.n_heads {
+                let off = (h * cap + pos) * hd;
+                kb[off..off + hd].copy_from_slice(&krow[h * hd..(h + 1) * hd]);
+                rope.rotate(&mut kb[off..off + hd], pos);
+                vb[off..off + hd].copy_from_slice(&vrow[h * hd..(h + 1) * hd]);
+            }
+        }
+    }
+
+    /// Advance the cached length after every layer appended its rows.
+    pub(crate) fn commit(&mut self, n: usize) {
+        debug_assert!(self.len + n <= self.capacity);
+        self.len += n;
+    }
+
+    /// One layer's rotated-K plane (`[n_heads, capacity, head_dim]`).
+    pub(crate) fn layer_k(&self, layer: usize) -> &[f32] {
+        &self.k[layer]
+    }
+
+    /// One layer's V plane (`[n_heads, capacity, head_dim]`).
+    pub(crate) fn layer_v(&self, layer: usize) -> &[f32] {
+        &self.v[layer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "kv".into(),
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 32,
+            seq: 12,
+            batch: 2,
+            group_size: 8,
+        }
+    }
+
+    #[test]
+    fn rope_table_matches_reference_formula() {
+        let hd = 8;
+        let t = RopeTable::new(6, hd);
+        for pos in 0..6 {
+            for k in 0..hd / 2 {
+                let freq = 10000f32.powf(-(2.0 * k as f32) / hd as f32);
+                let (s, c) = (pos as f32 * freq).sin_cos();
+                let mut probe = vec![0.0f32; hd];
+                probe[2 * k] = 1.0;
+                t.rotate(&mut probe, pos);
+                assert_eq!(probe[2 * k], c, "pos {pos} k {k}");
+                assert_eq!(probe[2 * k + 1], s, "pos {pos} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_tables_are_reused_and_cover_smaller_requests() {
+        let a = RopeTable::shared(10, 8);
+        let b = RopeTable::shared(6, 8);
+        assert!(b.max_pos() >= 6);
+        assert_eq!(a.head_dim(), b.head_dim());
+        // a table for a different head_dim is a different table
+        let c = RopeTable::shared(10, 4);
+        assert_eq!(c.head_dim(), 4);
+    }
+
+    #[test]
+    fn cache_len_truncate_and_bytes() {
+        let d = dims();
+        let mut c = KvCache::new(&d);
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.capacity(), d.seq);
+        assert_eq!(c.remaining(), d.seq);
+        assert!(c.matches(&d));
+        // append 3 rows to every layer, then commit
+        let rope = RopeTable::new(d.seq, d.head_dim());
+        let k = Mat::full(3, d.d_model, 1.0);
+        let v = Mat::full(3, d.d_model, 2.0);
+        for l in 0..d.n_layers {
+            c.extend_layer(l, &rope, &k, &v, 0, 3);
+        }
+        c.commit(3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.remaining(), d.seq - 3);
+        c.truncate(1);
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+        // bytes is the constant full-capacity footprint
+        assert_eq!(c.bytes(), 4 * 2 * d.n_layers * d.seq * d.d_model);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate")]
+    fn truncate_past_len_panics() {
+        let mut c = KvCache::new(&dims());
+        c.truncate(1);
+    }
+}

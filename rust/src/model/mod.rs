@@ -9,13 +9,18 @@
 //!   don't need PJRT);
 //! * [`backend`] — the linear execution engine ([`backend::LinearBackend`]):
 //!   dense, adapter-merged, or fused packed-2-bit + LoRA serving form;
+//! * [`kv`] — per-sequence KV cache + shared RoPE table: incremental
+//!   decode ([`forward::forward_step`]) and shared-prompt prefix reuse
+//!   without quadratic recompute;
 //! * [`weights`] — binary checkpoint IO for run caching.
 
 pub mod backend;
 pub mod forward;
+pub mod kv;
 pub mod weights;
 
 pub use backend::{BackendKind, LinearBackend};
+pub use kv::{KvCache, RopeTable};
 
 use anyhow::{anyhow, Result};
 

@@ -216,7 +216,9 @@ impl Bindings {
             let val = self
                 .map
                 .get(&ts.name)
-                .ok_or_else(|| anyhow!("artifact {}: missing static binding '{}'", spec.name, ts.name))?;
+                .ok_or_else(|| {
+                    anyhow!("artifact {}: missing static binding '{}'", spec.name, ts.name)
+                })?;
             let lit = match (val.as_ref(), ts.dtype) {
                 (BufVal::F32(d), DType::F32) => lit_f32(&ts.shape, d)?,
                 (BufVal::I32(d), DType::I32) => lit_i32(&ts.shape, d)?,

@@ -330,7 +330,10 @@ impl Mat {
 
     /// Overwrite a sub-block starting at `(r0, c0)`.
     pub fn set_block(&mut self, r0: usize, c0: usize, block: &Mat) {
-        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols, "set_block out of range");
+        assert!(
+            r0 + block.rows <= self.rows && c0 + block.cols <= self.cols,
+            "set_block out of range"
+        );
         for r in 0..block.rows {
             for c in 0..block.cols {
                 self[(r0 + r, c0 + c)] = block[(r, c)];

@@ -1,0 +1,348 @@
+//! KV-cache acceptance tests: incremental logits (prefill + N
+//! `forward_step`s) match the full `forward_trace` logits across all
+//! three backends, cache edge cases err instead of panicking, prefix
+//! reuse across choices is bitwise-stable, and `mc_accuracy` with prefix
+//! reuse forwards measurably fewer linear rows than the full-recompute
+//! path while scoring identically.
+
+use anyhow::Result;
+use rilq::eval::{greedy_decode, greedy_decode_recompute, mc_accuracy, BackendScorer, Scorer};
+use rilq::model::backend::{student_backends, BackendKind};
+use rilq::model::forward::{forward_step, forward_trace, forward_trace_with_cache};
+use rilq::model::{KvCache, ModelDims, StudentWeights, TeacherParams};
+use rilq::quant::{by_name, CalibCtx};
+use rilq::tensor::Rng;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        name: "kv".into(),
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 48,
+        seq: 16,
+        batch: 2,
+        group_size: 8,
+    }
+}
+
+fn student(d: &ModelDims, seed: u64) -> (TeacherParams, StudentWeights) {
+    let mut rng = Rng::seed(seed);
+    let teacher = TeacherParams::init(d, &mut rng);
+    let quant = by_name("rtn", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::default()
+    });
+    (teacher, student)
+}
+
+fn packed_scorer(seed: u64) -> BackendScorer {
+    let d = dims();
+    let (teacher, sw) = student(&d, seed);
+    BackendScorer::new(&d, &teacher, &sw, None, BackendKind::Packed).unwrap()
+}
+
+/// Acceptance: prefill + N single-token steps reproduce the full-forward
+/// logits within 1e-5 at every position, for dense, packed, and merged.
+#[test]
+fn incremental_logits_match_full_forward_all_backends() {
+    let d = dims();
+    let (teacher, sw) = student(&d, 61);
+    let mut rng = Rng::seed(62);
+    let tokens: Vec<u32> = (0..d.seq).map(|_| rng.below(d.vocab) as u32).collect();
+    let prefix = 6usize;
+    for kind in BackendKind::ALL {
+        let engines = student_backends(&sw, None, kind).unwrap();
+        let view = teacher.view_backends(&engines);
+        let full = forward_trace(&d, &view, &tokens).logits;
+
+        let mut cache = KvCache::new(&d);
+        let prefill =
+            forward_trace_with_cache(&d, &view, &tokens[..prefix], &mut cache).unwrap();
+        let mut rows: Vec<Vec<f32>> = (0..prefix).map(|r| prefill.row(r).to_vec()).collect();
+        for &t in &tokens[prefix..] {
+            rows.push(forward_step(&d, &view, t, &mut cache).unwrap());
+        }
+        assert_eq!(cache.len(), tokens.len());
+        for (pos, row) in rows.iter().enumerate() {
+            let frow = full.row(pos);
+            let max_abs = row
+                .iter()
+                .zip(frow)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_abs <= 1e-5,
+                "backend {kind}, pos {pos}: incremental vs full max diff {max_abs}"
+            );
+        }
+    }
+}
+
+/// An empty prefix is just a prefill: a cached forward of the whole
+/// sequence from an empty cache equals `forward_trace` exactly.
+#[test]
+fn empty_prefix_prefill_equals_full_forward() {
+    let d = dims();
+    let (teacher, _) = student(&d, 63);
+    let mut rng = Rng::seed(64);
+    let tokens: Vec<u32> = (0..10).map(|_| rng.below(d.vocab) as u32).collect();
+    let view = teacher.view();
+    let full = forward_trace(&d, &view, &tokens).logits;
+    let mut cache = KvCache::new(&d);
+    let cached = forward_trace_with_cache(&d, &view, &tokens, &mut cache).unwrap();
+    assert_eq!(full.shape(), cached.shape());
+    assert!(full.fro_dist(&cached) < 1e-7, "prefill diverged from forward_trace");
+}
+
+/// Window edge cases: a prefix exactly at `dims.seq` is fine, a 0-token
+/// suffix at the full window is fine (and a no-op), and any step past
+/// the window is an `Err`, not a panic.
+#[test]
+fn window_boundary_and_zero_suffix() {
+    let d = dims();
+    let (teacher, _) = student(&d, 65);
+    let mut rng = Rng::seed(66);
+    let tokens: Vec<u32> = (0..d.seq).map(|_| rng.below(d.vocab) as u32).collect();
+    let view = teacher.view();
+    let mut cache = KvCache::new(&d);
+    let lg = forward_trace_with_cache(&d, &view, &tokens, &mut cache).unwrap();
+    assert_eq!(lg.shape(), (d.seq, d.vocab));
+    assert_eq!(cache.len(), d.seq);
+    assert_eq!(cache.remaining(), 0);
+
+    // degenerate 0-token suffix: empty logits, cache untouched
+    let empty = forward_trace_with_cache(&d, &view, &[], &mut cache).unwrap();
+    assert_eq!(empty.shape(), (0, d.vocab));
+    assert_eq!(cache.len(), d.seq);
+
+    // one token past the window: Err, cache untouched
+    let err = forward_step(&d, &view, 1, &mut cache).unwrap_err();
+    assert!(format!("{err}").contains("window"), "{err}");
+    assert_eq!(cache.len(), d.seq);
+
+    // out-of-vocab token id: Err naming the vocabulary, not a panic
+    cache.truncate(4);
+    let err = forward_step(&d, &view, d.vocab as u32, &mut cache).unwrap_err();
+    assert!(format!("{err}").contains("vocabulary"), "{err}");
+    assert_eq!(cache.len(), 4);
+
+    // a cache built for a different geometry is rejected
+    let mut small = ModelDims { seq: 8, ..d.clone() };
+    small.name = "other".into();
+    let mut wrong = KvCache::new(&small);
+    let err = forward_step(&d, &view, 1, &mut wrong).unwrap_err();
+    assert!(format!("{err}").contains("geometry"), "{err}");
+}
+
+/// Cache reuse across choices is bitwise-stable: scoring the same
+/// choices twice through the prefix-reuse path produces identical bits,
+/// and matches the full-recompute default path within 1e-5.
+#[test]
+fn choice_scoring_prefix_reuse_is_stable_and_correct() {
+    let sc = packed_scorer(67);
+    let d = sc.dims().clone();
+    let mut rng = Rng::seed(68);
+    let prompt: Vec<u32> = (0..8).map(|_| rng.below(d.vocab) as u32).collect();
+    let choices: Vec<Vec<u32>> = vec![
+        (0..3).map(|_| rng.below(d.vocab) as u32).collect(),
+        (0..5).map(|_| rng.below(d.vocab) as u32).collect(),
+        vec![rng.below(d.vocab) as u32],
+        Vec::new(), // degenerate 0-token choice
+    ];
+    let a = sc.score_choices(&prompt, &choices).unwrap();
+    let b = sc.score_choices(&prompt, &choices).unwrap();
+    assert_eq!(a, b, "prefix-reuse scoring must be bitwise-stable across runs");
+    assert!(a[3].is_empty());
+
+    // parity vs the default full-recompute path
+    struct NoPrefix<'s>(&'s BackendScorer);
+    impl Scorer for NoPrefix<'_> {
+        fn dims(&self) -> &ModelDims {
+            self.0.dims()
+        }
+        fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+            self.0.score_batch(batch)
+        }
+    }
+    let full = NoPrefix(&sc).score_choices(&prompt, &choices).unwrap();
+    for (ci, (x, y)) in a.iter().zip(&full).enumerate() {
+        assert_eq!(x.len(), y.len(), "choice {ci} length");
+        for (p, q) in x.iter().zip(y) {
+            assert!((p - q).abs() <= 1e-5, "choice {ci}: {p} vs {q}");
+        }
+    }
+}
+
+/// Acceptance: `mc_accuracy` through the prefix-reuse path forwards
+/// measurably fewer linear rows than the full-recompute path (the
+/// row-counter idiom of the serve loop's PAD-waste check) and scores
+/// identically.
+#[test]
+fn mc_accuracy_prefix_reuse_forwards_fewer_rows() {
+    use rilq::data::tasks::{gen_mc, TaskKind};
+    use rilq::data::tokenizer::Vocab;
+
+    let d = ModelDims {
+        name: "mc".into(),
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 256,
+        seq: 32,
+        batch: 4,
+        group_size: 8,
+    };
+    let (teacher, sw) = student(&d, 69);
+    let reuse = BackendScorer::new(&d, &teacher, &sw, None, BackendKind::Packed).unwrap();
+    let naive = BackendScorer::new(&d, &teacher, &sw, None, BackendKind::Packed).unwrap();
+
+    struct NoPrefix(BackendScorer);
+    impl Scorer for NoPrefix {
+        fn dims(&self) -> &ModelDims {
+            self.0.dims()
+        }
+        fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+            self.0.score_batch(batch)
+        }
+    }
+    let naive = NoPrefix(naive);
+
+    let v = Vocab::new(256, 1);
+    let items = gen_mc(TaskKind::ArcESim, &v, 20, 5);
+    let acc_reuse = mc_accuracy(&reuse, &items, false).unwrap();
+    let acc_naive = mc_accuracy(&naive, &items, false).unwrap();
+    assert_eq!(acc_reuse, acc_naive, "prefix reuse changed the accuracy");
+
+    let rows_reuse = reuse.rows_forwarded();
+    let rows_naive = naive.0.rows_forwarded();
+    // prefix reuse: prompt + Σ choice per item; naive: Σ (prompt + choice)
+    assert!(
+        rows_reuse < rows_naive,
+        "prefix reuse must forward fewer rows ({rows_reuse} vs {rows_naive})"
+    );
+    let saved: usize = items
+        .iter()
+        .map(|it| it.prompt.len() * (it.choices.len() - 1))
+        .sum();
+    assert_eq!(
+        rows_naive - rows_reuse,
+        saved,
+        "row saving must equal the re-prefilled prompt rows"
+    );
+}
+
+/// Batched cached forward (the decode scheduler's coalesced step) is
+/// bitwise identical to stepping each sequence's cache individually.
+#[test]
+fn batched_cache_forward_matches_individual() {
+    let sc = packed_scorer(70);
+    let d = sc.dims().clone();
+    let mut rng = Rng::seed(71);
+    let prompts: Vec<Vec<u32>> = [4usize, 7, 1]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+    let suffixes: Vec<Vec<u32>> = [3usize, 2, 4]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+
+    // individual path
+    let mut solo_lgs = Vec::new();
+    for (p, s) in prompts.iter().zip(&suffixes) {
+        let mut cache = sc.new_cache();
+        sc.cache_forward(p, &mut cache).unwrap();
+        solo_lgs.push(sc.cache_forward(s, &mut cache).unwrap());
+    }
+
+    // batched path: coalesced prefill, then coalesced suffix step
+    let mut caches: Vec<KvCache> = prompts.iter().map(|_| sc.new_cache()).collect();
+    {
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        sc.cache_forward_batch(&prompts, &mut refs).unwrap();
+    }
+    let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+    let batch_lgs = sc.cache_forward_batch(&suffixes, &mut refs).unwrap();
+
+    for (si, (a, b)) in solo_lgs.iter().zip(&batch_lgs).enumerate() {
+        assert_eq!(a.shape(), b.shape());
+        assert!(
+            a.fro_dist(b) < 1e-6,
+            "sequence {si}: batched cached step diverged from individual"
+        );
+    }
+
+    // a batch where one sequence would overflow leaves every cache intact
+    let lens_before: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+    let over: Vec<Vec<u32>> = vec![
+        vec![1],
+        (0..d.seq).map(|_| 1u32).collect(), // overflows its cache
+        vec![2],
+    ];
+    let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+    let err = sc.cache_forward_batch(&over, &mut refs).unwrap_err();
+    assert!(format!("{err}").contains("sequence 1"), "{err}");
+    let lens_after: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+    assert_eq!(lens_before, lens_after, "failed batch must not touch any cache");
+}
+
+/// Greedy decode helpers: the cached path and the quadratic recompute
+/// baseline generate identical tokens, and the cached path runs a
+/// linear number of forwarded rows.
+#[test]
+fn greedy_decode_cached_matches_recompute() {
+    let sc = packed_scorer(72);
+    let d = sc.dims().clone();
+    let mut rng = Rng::seed(73);
+    let prompt: Vec<u32> = (0..6).map(|_| rng.below(d.vocab) as u32).collect();
+    let gen = 8usize;
+
+    let before = sc.rows_forwarded();
+    let (toks_full, lps_full) = greedy_decode_recompute(&sc, &prompt, gen).unwrap();
+    let full_rows = sc.rows_forwarded() - before;
+
+    let before = sc.rows_forwarded();
+    let (toks_inc, lps_inc) = greedy_decode(&sc, &prompt, gen).unwrap();
+    let inc_rows = sc.rows_forwarded() - before;
+
+    assert_eq!(toks_full, toks_inc, "decode paths diverged");
+    for (a, b) in lps_full.iter().zip(&lps_inc) {
+        assert!((a - b).abs() <= 1e-5, "{a} vs {b}");
+    }
+    assert_eq!(toks_inc.len(), gen);
+    // incremental: prompt + (gen-1) rows; recompute: Σ (prompt + i) rows
+    assert_eq!(inc_rows, prompt.len() + gen - 1);
+    assert!(
+        full_rows > 3 * inc_rows,
+        "recompute baseline should forward many times more rows \
+         ({full_rows} vs {inc_rows})"
+    );
+
+    // over-window budgets err instead of panicking
+    let err = greedy_decode(&sc, &prompt, d.seq).unwrap_err();
+    assert!(format!("{err}").contains("window"), "{err}");
+}
+
+/// A scorer drives an empty-choice list and single-choice lists through
+/// the prefix path without surprises.
+#[test]
+fn score_choices_degenerate_inputs() {
+    let sc = packed_scorer(74);
+    let d = sc.dims().clone();
+    let mut rng = Rng::seed(75);
+    let prompt: Vec<u32> = (0..4).map(|_| rng.below(d.vocab) as u32).collect();
+    assert!(sc.score_choices(&prompt, &[]).unwrap().is_empty());
+    let one = sc.score_choices(&prompt, &[vec![1, 2]]).unwrap();
+    assert_eq!(one.len(), 1);
+    assert_eq!(one[0].len(), 2);
+    // empty prompt: Err (first choice token has no conditioning position)
+    let err = sc.score_choices(&[], &[vec![1]]).unwrap_err();
+    assert!(format!("{err}").contains("non-empty"), "{err}");
+    // over-window prompt+choice: Err naming the window
+    let long: Vec<u32> = (0..d.seq).map(|_| 1).collect();
+    let err = sc.score_choices(&long, &[vec![1]]).unwrap_err();
+    assert!(format!("{err}").contains("window"), "{err}");
+}

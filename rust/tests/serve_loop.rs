@@ -1,13 +1,16 @@
 //! Integration tests for the continuous-batching serve loop
 //! (`coordinator::serve`): ragged request mixes are answered correctly
 //! with no PAD-dummy forwards, coalescing actually happens under load,
-//! bad requests don't poison their batchmates, and shutdown drains.
+//! bad requests don't poison their batchmates, shutdown drains, and the
+//! KV-cache decode mode (prefill + lockstep round-robin steps) matches
+//! the single-stream greedy decode while respecting its cache-slot
+//! budget.
 
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 use rilq::coordinator::{ServeConfig, Server};
-use rilq::eval::{BackendScorer, Scorer};
+use rilq::eval::{greedy_decode, BackendScorer, Scorer};
 use rilq::model::backend::BackendKind;
 use rilq::model::{ModelDims, StudentWeights, TeacherParams};
 use rilq::quant::{by_name, CalibCtx};
@@ -57,7 +60,7 @@ fn ragged_mix_every_request_answered_no_pad_waste() {
 
     let server = Server::start_shared(
         scorer.clone(),
-        ServeConfig { max_batch: 4, queue_capacity: 8 },
+        ServeConfig { max_batch: 4, queue_capacity: 8, max_active: 4 },
     );
     // 3 client threads, 4 requests each
     let answers: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
@@ -195,7 +198,7 @@ fn queued_requests_coalesce_up_to_max_batch() {
     let gate = Arc::new(GateScorer::new(dims()));
     let server = Server::start_shared(
         gate.clone(),
-        ServeConfig { max_batch: 4, queue_capacity: 16 },
+        ServeConfig { max_batch: 4, queue_capacity: 16, max_active: 4 },
     );
     let client = server.client();
 
@@ -234,7 +237,7 @@ fn shutdown_drains_queued_requests() {
     let mut rng = Rng::seed(46);
     let server = Server::start_shared(
         scorer,
-        ServeConfig { max_batch: 2, queue_capacity: 16 },
+        ServeConfig { max_batch: 2, queue_capacity: 16, max_active: 2 },
     );
     let client = server.client();
     let pendings: Vec<_> = (0..6)
@@ -250,4 +253,122 @@ fn shutdown_drains_queued_requests() {
     assert_eq!(summary.requests, 6.0);
     // the loop is gone: a late submission must err, not hang
     assert!(client.submit(vec![1, 2]).is_err() || client.score(vec![1, 2]).is_err());
+}
+
+/// Decode mode: generate requests answered through the lockstep
+/// round-robin scheduler match the single-stream greedy decode bit for
+/// bit, and the decode metrics/gauges report the scheduler's behavior.
+#[test]
+fn generate_requests_match_single_stream_decode() {
+    let scorer = packed_scorer(47);
+    let d = scorer.dims().clone();
+    let mut rng = Rng::seed(48);
+    let prompts: Vec<Vec<u32>> = [5usize, 3, 8, 6, 4]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+    let max_new = 6usize;
+    let want: Vec<_> = prompts
+        .iter()
+        .map(|p| greedy_decode(scorer.as_ref(), p, max_new).unwrap())
+        .collect();
+
+    // max_active 2 < 5 requests: slots must recycle across generations
+    let server = Server::start_shared(
+        scorer.clone(),
+        ServeConfig { max_batch: 4, queue_capacity: 16, max_active: 2 },
+    );
+    let client = server.client();
+    let pendings: Vec<_> = prompts
+        .iter()
+        .map(|p| client.generate(p.clone(), max_new).unwrap())
+        .collect();
+    let answers: Vec<_> = pendings.into_iter().map(|p| p.wait().unwrap()).collect();
+    drop(client);
+    let summary = server.shutdown();
+
+    for (k, (got, (toks, lps))) in answers.iter().zip(&want).enumerate() {
+        assert_eq!(&got.tokens, toks, "request {k}: decode diverged");
+        assert_eq!(got.logps.len(), lps.len());
+        for (a, b) in got.logps.iter().zip(lps) {
+            assert!((a - b).abs() < 1e-5, "request {k}: {a} vs {b}");
+        }
+    }
+    assert_eq!(summary.gen_requests as usize, prompts.len());
+    assert_eq!(summary.gen_tokens as usize, prompts.len() * max_new);
+    assert_eq!(
+        summary.prefill_tokens as usize,
+        prompts.iter().map(Vec::len).sum::<usize>(),
+        "prefill must forward exactly the prompt tokens, once"
+    );
+    assert!(summary.decode_steps > 0.0);
+    assert!(summary.kv_bytes_peak > 0.0, "KV residency gauge never moved");
+    // cache-capacity accounting: never more than max_active caches resident
+    let cache_bytes = scorer.new_cache().bytes() as f64;
+    assert!(
+        summary.kv_bytes_peak <= 2.0 * cache_bytes + 0.5,
+        "kv peak {} exceeds max_active * per-cache bytes {}",
+        summary.kv_bytes_peak,
+        2.0 * cache_bytes
+    );
+    assert!(summary.latency_p95_secs >= summary.latency_p50_secs);
+    assert!(summary.latency_p50_secs >= 0.0);
+    assert_eq!(summary.errors, 0.0);
+}
+
+/// A generate request that cannot fit its budget in the model window is
+/// answered with `Err` at admission without poisoning concurrent scoring
+/// or decode traffic (mixed-workload loop survival).
+#[test]
+fn over_window_generation_errs_alone() {
+    let scorer = packed_scorer(49);
+    let d = scorer.dims().clone();
+    let mut rng = Rng::seed(50);
+    let server = Server::start_shared(
+        scorer.clone(),
+        ServeConfig { max_batch: 4, queue_capacity: 16, max_active: 2 },
+    );
+    let client = server.client();
+
+    let prompt: Vec<u32> = (0..6).map(|_| rng.below(d.vocab) as u32).collect();
+    let score_seq: Vec<u32> = (0..9).map(|_| rng.below(d.vocab) as u32).collect();
+    let p_good = client.generate(prompt.clone(), 4).unwrap();
+    // 6 prompt + (seq) new - 1 > seq: rejected at admission
+    let p_over = client.generate(prompt.clone(), d.seq).unwrap();
+    let p_empty = client.generate(Vec::new(), 3).unwrap();
+    let p_zero = client.generate(prompt.clone(), 0).unwrap();
+    let p_score = client.submit(score_seq).unwrap();
+
+    let good = p_good.wait().unwrap();
+    assert_eq!(good.tokens.len(), 4);
+    let err = p_over.wait().unwrap_err();
+    assert!(format!("{err}").contains("window"), "{err}");
+    let err = p_empty.wait().unwrap_err();
+    assert!(format!("{err}").contains("non-empty"), "{err}");
+    let zero = p_zero.wait().unwrap();
+    assert!(zero.tokens.is_empty() && zero.logps.is_empty());
+    assert_eq!(p_score.wait().unwrap().len(), 8);
+
+    drop(client);
+    let summary = server.shutdown();
+    assert_eq!(summary.errors, 2.0);
+    // the zero-budget generation counts as answered, not errored
+    assert_eq!(summary.gen_requests, 2.0);
+    assert_eq!(summary.requests, 1.0);
+}
+
+/// A scorer without KV-cache support (the fixed-geometry HLO shape,
+/// simulated by GateScorer's defaults) must reject generate requests
+/// with a clear error instead of wedging the loop.
+#[test]
+fn generate_on_cacheless_scorer_errs() {
+    let gate = Arc::new(GateScorer::new(dims()));
+    let server = Server::start_shared(gate, ServeConfig::default());
+    let client = server.client();
+    let err = client.generate(vec![1, 2, 3], 4).unwrap().wait().unwrap_err();
+    assert!(format!("{err}").contains("KV-cache"), "{err}");
+    drop(client);
+    let summary = server.shutdown();
+    assert_eq!(summary.errors, 1.0);
+    assert_eq!(summary.gen_requests, 0.0);
 }
