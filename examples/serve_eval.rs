@@ -111,5 +111,37 @@ fn main() -> anyhow::Result<()> {
     let native = rilq::eval::NativeScorer { dims: dims.clone(), teacher, dense: Some(dense) };
     let ppl_native = rilq::eval::perplexity(&native, &seqs)?;
     println!("native merged-dense reference PPL {ppl_native:.2} (parity check)");
+
+    // the same reference served through the request-lifecycle engine:
+    // the scoring workload runs as Request::Score traffic and shares the
+    // scheduler with a sampled generation (typed Engine API demo)
+    use rilq::engine::{Engine, EngineConfig, SamplingParams};
+    let prompt: Vec<u32> = seqs[0][..8.min(seqs[0].len())].to_vec();
+    let max_new = (dims.seq - prompt.len()).min(16);
+    let engine = Engine::start(native, EngineConfig::default());
+    let client = engine.client();
+    let ppl_engine = rilq::eval::perplexity_client(&client, &seqs)?;
+    let gen = client
+        .generate(
+            prompt,
+            SamplingParams {
+                max_new,
+                temperature: 0.8,
+                top_k: 16,
+                top_p: 0.95,
+                seed: Some(1),
+                stop: Vec::new(),
+            },
+        )?
+        .wait()?;
+    let summary = engine.shutdown();
+    anyhow::ensure!(
+        (ppl_engine - ppl_native).abs() < 1e-6,
+        "engine-served PPL diverged from the direct eval"
+    );
+    println!(
+        "engine-served PPL {ppl_engine:.2} (== direct), plus {} sampled tokens; {summary}",
+        gen.tokens.len()
+    );
     Ok(())
 }

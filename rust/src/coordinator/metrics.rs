@@ -140,19 +140,22 @@ impl Metrics {
         self.inner.lock().unwrap().observations.get(name).map(|s| s.sum).unwrap_or(0.0)
     }
 
-    /// Percentile over the retained sample window (`q` in `[0, 1]`; 0.0
-    /// when the series is empty). The sort runs on a copy outside any
-    /// hot path — the window is capped at [`SERIES_CAP`] samples.
-    pub fn percentile(&self, name: &str, q: f64) -> f64 {
+    /// Percentile over the retained sample window (`q` in `[0, 1]`).
+    /// `None` when the series has no samples — an empty series has no
+    /// percentiles, and fabricating `0.0` misreports a latency summary
+    /// (a singleton series reports its one sample for every `q`). The
+    /// sort runs on a copy outside any hot path — the window is capped
+    /// at [`SERIES_CAP`] samples.
+    pub fn percentile(&self, name: &str, q: f64) -> Option<f64> {
         let mut sorted = {
             let g = self.inner.lock().unwrap();
             match g.observations.get(name) {
                 Some(s) if !s.samples.is_empty() => s.samples.clone(),
-                _ => return 0.0,
+                _ => return None,
             }
         };
         sorted.sort_by(f64::total_cmp);
-        quantile(&sorted, q)
+        Some(quantile(&sorted, q))
     }
 
     pub fn to_json(&self) -> Json {
@@ -259,22 +262,27 @@ mod tests {
         let n = (SERIES_CAP + 100) as f64;
         assert_eq!(m.observation_sum("lat"), n * (n - 1.0) / 2.0);
         // oldest samples were overwritten: the window min is >= 100
-        assert!(m.percentile("lat", 0.0) >= 100.0);
-        assert_eq!(m.percentile("lat", 1.0), n - 1.0);
+        assert!(m.percentile("lat", 0.0).unwrap() >= 100.0);
+        assert_eq!(m.percentile("lat", 1.0), Some(n - 1.0));
     }
 
     #[test]
     fn observations_yield_percentiles() {
         let m = Metrics::new();
-        assert_eq!(m.percentile("lat", 0.5), 0.0);
+        // empty and singleton series are both well-defined
+        assert_eq!(m.percentile("lat", 0.5), None);
+        m.observe("lat", 7.0);
+        assert_eq!(m.percentile("lat", 0.5), Some(7.0));
+        assert_eq!(m.percentile("lat", 0.95), Some(7.0));
+        let m = Metrics::new();
         for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
             m.observe("lat", v);
         }
         assert_eq!(m.observation_count("lat"), 5);
         assert_eq!(m.observation_sum("lat"), 15.0);
-        assert_eq!(m.percentile("lat", 0.5), 3.0);
-        assert!(m.percentile("lat", 0.95) > 4.0);
-        assert_eq!(m.percentile("lat", 1.0), 5.0);
+        assert_eq!(m.percentile("lat", 0.5), Some(3.0));
+        assert!(m.percentile("lat", 0.95).unwrap() > 4.0);
+        assert_eq!(m.percentile("lat", 1.0), Some(5.0));
         let j = m.to_json();
         assert!(j.req("observations").unwrap().get("lat").is_some());
     }

@@ -11,11 +11,12 @@
 //!   experiments;
 //! * [`scheduler`] — multi-threaded experiment-grid runner (one PJRT
 //!   runtime per worker, since `PjRtClient` is not `Send`);
-//! * [`serve`] — continuous-batching serving loop: a bounded request
-//!   queue feeding coalesced ragged batches through a shared scorer,
-//!   plus the KV-cache decode scheduler (batched prefill + lockstep
-//!   round-robin incremental steps, bounded cache residency) behind
-//!   `ServeClient::generate` (the `serve-bench` subcommand);
+//! * [`serve`] — the serving compatibility layer + benchmark probes
+//!   over the [`crate::engine`] request-lifecycle engine (which owns
+//!   the continuous-batching/decode scheduler now): deprecated
+//!   `Server`/`ServeClient` shims, [`serve::ServeSummary`], and the
+//!   `probe_throughput`/`probe_decode` harnesses behind `rilq
+//!   serve-bench`;
 //! * [`metrics`] — lightweight named counters/timers, level gauges, and
 //!   latency-percentile observations for §Perf accounting.
 
@@ -35,3 +36,5 @@ pub use serve::{
     probe_decode, probe_throughput, DecodeProbe, Generated, Pending, ServeClient, ServeConfig,
     ServeProbe, ServeSummary, Server,
 };
+// The serving loop itself lives in `crate::engine` now; these stay
+// importable from the coordinator for pre-engine callers.

@@ -1,522 +1,134 @@
-//! Continuous-batching serving loop over a shared [`Scorer`].
+//! Serving compatibility layer and benchmark probes over the
+//! [`crate::engine`] request-lifecycle engine.
 //!
-//! RILQ's deliverable is an adapter-merged weight-quantized model meant
-//! for *serving*: requests arrive one at a time, ragged, and the engine
-//! wants them coalesced so each `LinearBackend::forward` runs once per
-//! layer over the whole batch (see
-//! [`crate::model::forward::forward_trace_batch`]). This module is the
-//! loop that does the coalescing:
+//! The continuous-batching loop that used to live here was rebuilt as
+//! [`crate::engine::Engine`]: typed [`crate::engine::Request`]s, a
+//! two-queue admission scheduler (score traffic is served *between*
+//! decode iterations instead of head-of-line blocking behind full
+//! decode slots), chunked prefill, sampling, and streaming. This module
+//! keeps:
 //!
-//! * requests enter a **bounded** queue (`sync_channel` — the same
-//!   backpressure idiom as [`super::batcher::BatchStream`]: submitters
-//!   block when the queue is full, so server memory stays constant no
-//!   matter how fast clients push);
-//! * the serve loop blocks for the first request, then **greedily drains**
-//!   whatever else is already queued (up to `max_batch`) — under light
-//!   load a request never waits for a batch to fill, under heavy load
-//!   batches fill to `max_batch` automatically;
-//! * the coalesced ragged batch goes through `Scorer::score_batch` as the
-//!   real sequences only — **no PAD-dummy filler is ever forwarded**
-//!   (pinned by `tests/serve_loop.rs` via the token counters);
-//! * per-request failures (e.g. a sequence longer than the model window)
-//!   answer that request with `Err` without poisoning its batchmates or
-//!   the loop.
-//!
-//! ## Decode scheduling (KV cache)
-//!
-//! On cache-capable scorers ([`Scorer::supports_cache`]) the same loop
-//! also runs **incremental greedy decode**: [`ServeClient::generate`]
-//! submits a prompt plus a token budget, the loop prefills all freshly
-//! admitted prompts as one coalesced cached forward, then advances every
-//! active sequence **one token per iteration in lockstep round-robin** —
-//! each step coalesces the active sequences' next tokens into a single
-//! `[n_active, d_model]` forward, so the packed group-tile dequant keeps
-//! amortizing across the decode batch. Cache residency is accounted
-//! against the bounded queue: at most `max_active` KV caches are ever
-//! resident, and the loop **stops draining the queue** while its decode
-//! slots (or the score batch) are full, so backpressure propagates to
-//! submitters instead of ballooning server memory. Gauges
-//! (`serve.active_decodes`, `serve.kv_bytes`, `serve.queue_depth`) make
-//! the scheduler observable.
-//!
-//! Throughput and latency land in a [`Metrics`] sink (`serve.requests`,
-//! `serve.batches`, `serve.tokens`, `serve.errors`, latency
-//! observations with p50/p95, timers `serve.forward` / `serve.prefill` /
-//! `serve.decode_step`), summarized by [`ServeSummary`]. The CLI exposes
-//! the loop as `rilq serve-bench`.
+//! * [`Server`] / [`ServeClient`] — thin **deprecated** shims so
+//!   pre-engine callers keep compiling; they delegate verb-for-verb to
+//!   [`crate::engine::EngineClient`] (`score` → `Request::Score`,
+//!   `generate` → `Request::Generate` with greedy
+//!   [`crate::engine::SamplingParams`]);
+//! * [`ServeSummary`] — the aggregated serving counters, derived from
+//!   the engine's [`Metrics`];
+//! * [`probe_throughput`] / [`probe_decode`] — the shared measurement
+//!   harnesses behind `rilq serve-bench` and `bench_runtime`.
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{ensure, Result};
 
-use crate::eval::scorer::{argmax_logp, check_input, greedy_decode_recompute};
-use crate::eval::{BackendScorer, Scorer};
-use crate::model::kv::KvCache;
+use crate::engine::{Engine, EngineConfig, SamplingParams};
+use crate::eval::scorer::greedy_decode_recompute;
+use crate::eval::{argmax_logp, BackendScorer, Scorer};
 use crate::tensor::Rng;
 
 use super::Metrics;
 
-/// Serving-loop knobs.
-#[derive(Clone, Debug)]
-pub struct ServeConfig {
-    /// Coalesce at most this many scoring requests into one forward.
-    pub max_batch: usize,
-    /// Bounded request-queue depth (backpressure: submit blocks beyond it).
-    pub queue_capacity: usize,
-    /// Maximum concurrently resident decode sequences (KV caches). The
-    /// loop stops draining the queue while every slot is taken, so
-    /// excess generate requests wait in the bounded queue.
-    pub max_active: usize,
-}
+// Compatibility re-exports: these types moved into the engine.
+pub use crate::engine::EngineConfig as ServeConfig;
+pub use crate::engine::{Generated, Pending};
 
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig { max_batch: 8, queue_capacity: 32, max_active: 8 }
-    }
-}
-
-/// One queued scoring request.
-struct Request {
-    tokens: Vec<u32>,
-    enqueued: Instant,
-    resp: Sender<Result<Vec<f32>>>,
-}
-
-/// One queued greedy-generation request.
-struct GenRequest {
-    prompt: Vec<u32>,
-    max_new: usize,
-    enqueued: Instant,
-    resp: Sender<Result<Generated>>,
-}
-
-/// A finished greedy generation: the decoded tokens and each one's
-/// log-prob under the distribution it was sampled from.
-#[derive(Clone, Debug)]
-pub struct Generated {
-    pub tokens: Vec<u32>,
-    pub logps: Vec<f32>,
-}
-
-enum Msg {
-    Req(Request),
-    Gen(GenRequest),
-    Shutdown,
-}
-
-/// A submitted request's pending response (one-shot).
-pub struct Pending<T = Vec<f32>> {
-    rx: Receiver<Result<T>>,
-}
-
-impl<T> Pending<T> {
-    /// Block until the server answers (the scored log-probs or generated
-    /// tokens), or the per-request error.
-    pub fn wait(self) -> Result<T> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("server shut down before answering this request"))?
-    }
-}
-
-/// Cheap, cloneable submission handle.
-#[derive(Clone)]
-pub struct ServeClient {
-    tx: SyncSender<Msg>,
-    metrics: Arc<Metrics>,
-}
-
-impl ServeClient {
-    /// Enqueue a sequence for scoring. Blocks while the bounded queue is
-    /// full (backpressure); errs once the server has shut down.
-    pub fn submit(&self, tokens: Vec<u32>) -> Result<Pending> {
-        let (resp, rx) = channel();
-        self.metrics.gauge_add("serve.queue_depth", 1.0);
-        let send = self
-            .tx
-            .send(Msg::Req(Request { tokens, enqueued: Instant::now(), resp }));
-        if send.is_err() {
-            self.metrics.gauge_add("serve.queue_depth", -1.0);
-            return Err(anyhow!("server stopped"));
-        }
-        Ok(Pending { rx })
-    }
-
-    /// Submit and block for the answer.
-    pub fn score(&self, tokens: Vec<u32>) -> Result<Vec<f32>> {
-        self.submit(tokens)?.wait()
-    }
-
-    /// Enqueue a greedy-decode request: prefill `prompt` once, then
-    /// generate up to `max_new` tokens incrementally (KV cache). Errs at
-    /// admission when the scorer has no cache support or
-    /// `prompt + max_new - 1` exceeds the model window.
-    pub fn generate(&self, prompt: Vec<u32>, max_new: usize) -> Result<Pending<Generated>> {
-        let (resp, rx) = channel();
-        self.metrics.gauge_add("serve.queue_depth", 1.0);
-        let send = self
-            .tx
-            .send(Msg::Gen(GenRequest { prompt, max_new, enqueued: Instant::now(), resp }));
-        if send.is_err() {
-            self.metrics.gauge_add("serve.queue_depth", -1.0);
-            return Err(anyhow!("server stopped"));
-        }
-        Ok(Pending { rx })
-    }
-}
-
-/// The running server: a dedicated loop thread owning the scorer queue.
-/// Dropping the `Server` initiates shutdown: requests already queued are
-/// drained and answered, later submissions err.
+/// The running serve loop — a compatibility wrapper over a
+/// single-replica [`Engine`]. New code should construct the engine
+/// directly ([`Engine::start`]) and use its typed client.
 pub struct Server {
-    tx: Option<SyncSender<Msg>>,
-    worker: Option<JoinHandle<()>>,
-    metrics: Arc<Metrics>,
-    cfg: ServeConfig,
+    engine: Engine,
 }
 
 impl Server {
     /// Spawn the serve loop over an owned scorer.
     pub fn start<S: Scorer + Send + Sync + 'static>(scorer: S, cfg: ServeConfig) -> Server {
-        Server::start_shared(Arc::new(scorer), cfg)
+        Server { engine: Engine::start(scorer, cfg) }
     }
 
     /// Spawn the serve loop over a shared scorer (e.g. one
-    /// [`crate::eval::BackendScorer`] also used elsewhere — the engine is
-    /// read-only at serving time).
+    /// [`BackendScorer`] also used elsewhere — the engine is read-only
+    /// at serving time).
     pub fn start_shared(scorer: Arc<dyn Scorer + Send + Sync>, cfg: ServeConfig) -> Server {
-        let (tx, rx) = sync_channel(cfg.queue_capacity.max(1));
-        let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let c = cfg.clone();
-        let worker = std::thread::Builder::new()
-            .name("rilq-serve".into())
-            .spawn(move || serve_loop(scorer, rx, c, m))
-            .expect("spawn serve loop");
-        Server { tx: Some(tx), worker: Some(worker), metrics, cfg }
+        Server { engine: Engine::start_shared(scorer, cfg) }
+    }
+
+    /// The underlying engine (the non-deprecated surface).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
     pub fn client(&self) -> ServeClient {
-        ServeClient {
-            tx: self.tx.as_ref().expect("server running").clone(),
-            metrics: self.metrics.clone(),
-        }
+        ServeClient { inner: self.engine.client() }
     }
 
     pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+        self.engine.metrics()
     }
 
     pub fn config(&self) -> &ServeConfig {
-        &self.cfg
+        self.engine.config()
     }
 
     /// Snapshot of the throughput/latency counters.
     pub fn summary(&self) -> ServeSummary {
-        ServeSummary::from_metrics(&self.metrics)
+        self.engine.summary()
     }
 
     /// Drain the queue, stop the loop, and return the final counters.
-    pub fn shutdown(mut self) -> ServeSummary {
-        self.stop();
-        ServeSummary::from_metrics(&self.metrics)
-    }
-
-    fn stop(&mut self) {
-        if let Some(tx) = self.tx.take() {
-            // the sentinel queues behind every already-submitted request,
-            // so shutdown drains gracefully; send only errs if the loop
-            // is already gone
-            let _ = tx.send(Msg::Shutdown);
-            drop(tx);
-        }
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) -> ServeSummary {
+        self.engine.shutdown()
     }
 }
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.stop();
+/// Cheap, cloneable submission handle — the pre-engine verbs, kept as
+/// deprecated shims over [`crate::engine::EngineClient`].
+#[derive(Clone)]
+pub struct ServeClient {
+    inner: crate::engine::EngineClient,
+}
+
+impl ServeClient {
+    /// The typed client this shim delegates to.
+    pub fn engine(&self) -> &crate::engine::EngineClient {
+        &self.inner
+    }
+
+    /// Enqueue a sequence for scoring.
+    #[deprecated(note = "use EngineClient::score (Request::Score lifecycle)")]
+    pub fn submit(&self, tokens: Vec<u32>) -> Result<Pending<Vec<f32>>> {
+        self.inner.score(tokens)
+    }
+
+    /// Submit and block for the answer.
+    #[deprecated(note = "use EngineClient::score(..)?.wait()")]
+    pub fn score(&self, tokens: Vec<u32>) -> Result<Vec<f32>> {
+        self.inner.score(tokens)?.wait()
+    }
+
+    /// Greedy generation with a token budget.
+    #[deprecated(note = "use EngineClient::generate with SamplingParams (greedy/sampled/streamed)")]
+    pub fn generate(&self, prompt: Vec<u32>, max_new: usize) -> Result<Pending<Generated>> {
+        self.inner.generate(prompt, SamplingParams::greedy(max_new))
     }
 }
 
-/// One in-flight decode sequence: its KV cache, the tokens generated so
-/// far (the last one not yet fed back), and the response channel.
-struct ActiveGen {
-    cache: KvCache,
-    tokens: Vec<u32>,
-    logps: Vec<f32>,
-    max_new: usize,
-    enqueued: Instant,
-    resp: Sender<Result<Generated>>,
-}
-
-fn finish_gen(a: ActiveGen, metrics: &Metrics) {
-    metrics.add("serve.gen_requests", 1.0);
-    metrics.add("serve.gen_tokens", a.tokens.len() as f64);
-    metrics.observe("serve.latency_secs", a.enqueued.elapsed().as_secs_f64());
-    let _ = a.resp.send(Ok(Generated { tokens: a.tokens, logps: a.logps }));
-}
-
-fn serve_loop(
-    scorer: Arc<dyn Scorer + Send + Sync>,
-    rx: Receiver<Msg>,
-    cfg: ServeConfig,
-    metrics: Arc<Metrics>,
-) {
-    let max_batch = cfg.max_batch.max(1);
-    let max_active = cfg.max_active.max(1);
-    let dims = scorer.dims().clone();
-    let supports_cache = scorer.supports_cache();
-    let mut active: Vec<ActiveGen> = Vec::new();
-    let mut shutting_down = false;
-
-    // admit one message: malformed requests (over-window, out-of-vocab,
-    // no cache support, generation past the window) are answered without
-    // touching the model — and without poisoning their batchmates.
-    // Returns false when the shutdown sentinel was seen.
-    let admit = |msg: Msg, reqs: &mut Vec<Request>, fresh: &mut Vec<GenRequest>| -> bool {
-        match msg {
-            Msg::Shutdown => false,
-            Msg::Req(req) => {
-                metrics.gauge_add("serve.queue_depth", -1.0);
-                match check_input(&dims, std::slice::from_ref(&req.tokens)) {
-                    Ok(()) => reqs.push(req),
-                    Err(e) => {
-                        metrics.incr("serve.errors");
-                        let _ = req.resp.send(Err(e));
-                    }
-                }
-                true
-            }
-            Msg::Gen(g) => {
-                metrics.gauge_add("serve.queue_depth", -1.0);
-                if !supports_cache {
-                    metrics.incr("serve.errors");
-                    let _ = g.resp.send(Err(anyhow!(
-                        "this scorer has no KV-cache support; generate needs a \
-                         native backend scorer"
-                    )));
-                } else if g.prompt.is_empty() {
-                    metrics.incr("serve.errors");
-                    let _ = g.resp.send(Err(anyhow!("generate needs a non-empty prompt")));
-                } else if let Err(e) = check_input(&dims, std::slice::from_ref(&g.prompt)) {
-                    metrics.incr("serve.errors");
-                    let _ = g.resp.send(Err(e));
-                } else if g.prompt.len() + g.max_new.saturating_sub(1) > dims.seq {
-                    metrics.incr("serve.errors");
-                    let _ = g.resp.send(Err(anyhow!(
-                        "generating {} tokens from a {}-token prompt exceeds the \
-                         model window of {}",
-                        g.max_new,
-                        g.prompt.len(),
-                        dims.seq
-                    )));
-                } else if g.max_new == 0 {
-                    // nothing to decode: answer immediately
-                    metrics.add("serve.gen_requests", 1.0);
-                    metrics.observe("serve.latency_secs", g.enqueued.elapsed().as_secs_f64());
-                    let _ = g.resp.send(Ok(Generated { tokens: Vec::new(), logps: Vec::new() }));
-                } else {
-                    fresh.push(g);
-                }
-                true
-            }
-        }
-    };
-
-    loop {
-        // ---- intake ----------------------------------------------------
-        let mut reqs: Vec<Request> = Vec::with_capacity(max_batch);
-        let mut fresh: Vec<GenRequest> = Vec::new();
-        if !shutting_down {
-            if active.is_empty() {
-                // completely idle: block for the next message
-                match rx.recv() {
-                    Ok(msg) => {
-                        if !admit(msg, &mut reqs, &mut fresh) {
-                            shutting_down = true;
-                        }
-                    }
-                    Err(_) => break,
-                }
-            }
-            // greedy coalesce: take whatever is already queued — but stop
-            // while the score batch or the decode slots are full, leaving
-            // the rest in the bounded queue (cache-capacity accounting:
-            // backpressure reaches submitters instead of server memory)
-            while !shutting_down
-                && reqs.len() < max_batch
-                && active.len() + fresh.len() < max_active
-            {
-                match rx.try_recv() {
-                    Ok(msg) => {
-                        if !admit(msg, &mut reqs, &mut fresh) {
-                            shutting_down = true;
-                        }
-                    }
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        shutting_down = true;
-                        break;
-                    }
-                }
-            }
-        }
-
-        // ---- prefill freshly admitted decode sequences -----------------
-        if !fresh.is_empty() {
-            let news: Vec<Vec<u32>> =
-                fresh.iter_mut().map(|g| std::mem::take(&mut g.prompt)).collect();
-            let mut caches: Vec<KvCache> =
-                news.iter().map(|_| KvCache::new(&dims)).collect();
-            let scored = metrics.time("serve.prefill", || {
-                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
-                scorer.cache_forward_batch(&news, &mut refs)
-            });
-            match scored {
-                Ok(lgs) => {
-                    metrics.add(
-                        "serve.prefill_tokens",
-                        news.iter().map(Vec::len).sum::<usize>() as f64,
-                    );
-                    let mut caches = caches.into_iter();
-                    for (i, g) in fresh.into_iter().enumerate() {
-                        let cache = caches.next().expect("one cache per prefill");
-                        let (tok, lp) = argmax_logp(lgs[i].row(news[i].len() - 1));
-                        let st = ActiveGen {
-                            cache,
-                            tokens: vec![tok],
-                            logps: vec![lp],
-                            max_new: g.max_new,
-                            enqueued: g.enqueued,
-                            resp: g.resp,
-                        };
-                        if st.tokens.len() >= st.max_new {
-                            finish_gen(st, &metrics);
-                        } else {
-                            active.push(st);
-                        }
-                    }
-                }
-                Err(e) => {
-                    metrics.add("serve.errors", fresh.len() as f64);
-                    let msg = format!("{e:#}");
-                    for g in fresh {
-                        let _ = g.resp.send(Err(anyhow!("{msg}")));
-                    }
-                }
-            }
-            metrics.gauge_set("serve.active_decodes", active.len() as f64);
-            metrics.gauge_set(
-                "serve.kv_bytes",
-                active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
-            );
-        }
-
-        // ---- one coalesced scoring forward -----------------------------
-        if !reqs.is_empty() {
-            // move the tokens out (they are not needed for the response)
-            let batch: Vec<Vec<u32>> =
-                reqs.iter_mut().map(|r| std::mem::take(&mut r.tokens)).collect();
-            let n_tokens: usize = batch.iter().map(Vec::len).sum();
-            let scored = metrics.time("serve.forward", || scorer.score_batch(&batch));
-            match scored {
-                Ok(outs) => {
-                    metrics.incr("serve.batches");
-                    metrics.add("serve.requests", reqs.len() as f64);
-                    metrics.add("serve.tokens", n_tokens as f64);
-                    for (req, out) in reqs.into_iter().zip(outs) {
-                        metrics
-                            .observe("serve.latency_secs", req.enqueued.elapsed().as_secs_f64());
-                        let _ = req.resp.send(Ok(out));
-                    }
-                }
-                Err(e) => {
-                    // batch-level failure: answer every member, keep serving
-                    metrics.add("serve.errors", reqs.len() as f64);
-                    let msg = format!("{e:#}");
-                    for req in reqs {
-                        let _ = req.resp.send(Err(anyhow!("{msg}")));
-                    }
-                }
-            }
-        }
-
-        // ---- one lockstep decode step for every active sequence --------
-        if !active.is_empty() {
-            let news: Vec<Vec<u32>> = active
-                .iter()
-                .map(|a| vec![*a.tokens.last().expect("active has a sampled token")])
-                .collect();
-            let scored = metrics.time("serve.decode_step", || {
-                let mut refs: Vec<&mut KvCache> =
-                    active.iter_mut().map(|a| &mut a.cache).collect();
-                scorer.cache_forward_batch(&news, &mut refs)
-            });
-            match scored {
-                Ok(lgs) => {
-                    metrics.incr("serve.decode_steps");
-                    metrics.add("serve.decode_tokens", active.len() as f64);
-                    for (a, lg) in active.iter_mut().zip(&lgs) {
-                        let (tok, lp) = argmax_logp(lg.row(0));
-                        a.tokens.push(tok);
-                        a.logps.push(lp);
-                    }
-                    let mut i = 0;
-                    while i < active.len() {
-                        if active[i].tokens.len() >= active[i].max_new {
-                            finish_gen(active.swap_remove(i), &metrics);
-                        } else {
-                            i += 1;
-                        }
-                    }
-                }
-                Err(e) => {
-                    // step-level failure: answer every active sequence,
-                    // free their caches, keep serving
-                    metrics.add("serve.errors", active.len() as f64);
-                    let msg = format!("{e:#}");
-                    for a in active.drain(..) {
-                        let _ = a.resp.send(Err(anyhow!("{msg}")));
-                    }
-                }
-            }
-            metrics.gauge_set("serve.active_decodes", active.len() as f64);
-            metrics.gauge_set(
-                "serve.kv_bytes",
-                active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
-            );
-        }
-
-        if shutting_down && active.is_empty() {
-            break;
-        }
-    }
-    // loop exit: any messages still queued were submitted after shutdown
-    // began; dropping their response senders errs the callers' `wait()`.
-}
-
-/// Aggregated serving counters, derived from the loop's [`Metrics`].
+/// Aggregated serving counters, derived from the engine's [`Metrics`].
 #[derive(Clone, Debug)]
 pub struct ServeSummary {
     pub requests: f64,
     pub batches: f64,
     pub tokens: f64,
     pub errors: f64,
-    /// wall seconds spent inside `score_batch`
+    /// wall seconds spent inside scoring forwards
     pub forward_secs: f64,
     /// mean request latency (enqueue → response), seconds
     pub mean_latency_secs: f64,
-    /// median request latency, seconds
-    pub latency_p50_secs: f64,
-    /// 95th-percentile request latency, seconds
-    pub latency_p95_secs: f64,
+    /// median request latency, seconds (`None` until something is observed)
+    pub latency_p50_secs: Option<f64>,
+    /// 95th-percentile request latency, seconds (`None` until observed)
+    pub latency_p95_secs: Option<f64>,
     /// high-water mark of the request queue depth
     pub queue_depth_peak: f64,
     /// scored tokens per forward second
@@ -525,11 +137,13 @@ pub struct ServeSummary {
     pub mean_occupancy: f64,
     /// answered generate requests
     pub gen_requests: f64,
-    /// tokens produced by greedy decode
+    /// tokens produced by decode (greedy or sampled)
     pub gen_tokens: f64,
+    /// answered choice-scoring requests
+    pub choice_requests: f64,
     /// prompt tokens prefilled into KV caches
     pub prefill_tokens: f64,
-    /// lockstep decode-step forwards executed
+    /// fused prefill/decode scheduler steps executed
     pub decode_steps: f64,
     /// high-water mark of resident KV-cache bytes
     pub kv_bytes_peak: f64,
@@ -553,6 +167,9 @@ impl ServeSummary {
             } else {
                 0.0
             },
+            // empty and singleton series are both well-defined: no
+            // observations -> None, one observation -> that sample for
+            // every percentile (regression-tested below)
             latency_p50_secs: m.percentile("serve.latency_secs", 0.5),
             latency_p95_secs: m.percentile("serve.latency_secs", 0.95),
             queue_depth_peak: m.gauge_peak("serve.queue_depth"),
@@ -560,10 +177,18 @@ impl ServeSummary {
             mean_occupancy: if batches > 0.0 { requests / batches } else { 0.0 },
             gen_requests: m.counter("serve.gen_requests"),
             gen_tokens: m.counter("serve.gen_tokens"),
+            choice_requests: m.counter("serve.choice_requests"),
             prefill_tokens: m.counter("serve.prefill_tokens"),
             decode_steps: m.counter("serve.decode_steps"),
             kv_bytes_peak: m.gauge_peak("serve.kv_bytes"),
         }
+    }
+}
+
+fn fmt_ms(v: Option<f64>) -> String {
+    match v {
+        Some(s) => format!("{:.2}", s * 1e3),
+        None => "-".to_string(),
     }
 }
 
@@ -572,7 +197,7 @@ impl std::fmt::Display for ServeSummary {
         write!(
             f,
             "{} requests in {} batches (mean occupancy {:.2}), {} tokens, \
-             {:.0} tok/s, latency mean {:.2} / p50 {:.2} / p95 {:.2} ms, \
+             {:.0} tok/s, latency mean {:.2} / p50 {} / p95 {} ms, \
              queue peak {:.0}, {} errors",
             self.requests,
             self.batches,
@@ -580,15 +205,15 @@ impl std::fmt::Display for ServeSummary {
             self.tokens,
             self.tokens_per_sec,
             self.mean_latency_secs * 1e3,
-            self.latency_p50_secs * 1e3,
-            self.latency_p95_secs * 1e3,
+            fmt_ms(self.latency_p50_secs),
+            fmt_ms(self.latency_p95_secs),
             self.queue_depth_peak,
             self.errors
         )?;
         if self.gen_requests > 0.0 {
             write!(
                 f,
-                "; decode: {} generations, {} tokens over {} steps \
+                "; decode: {} generations, {} tokens over {} scheduler steps \
                  ({} prompt tokens prefilled, KV peak {:.1} KiB)",
                 self.gen_requests,
                 self.gen_tokens,
@@ -608,7 +233,7 @@ pub struct ServeProbe {
     pub total_tokens: usize,
     /// wall seconds scoring every request with its own full forward
     pub per_seq_secs: f64,
-    /// wall seconds answering the same requests through the serve loop
+    /// wall seconds answering the same requests through the engine
     pub serve_secs: f64,
     pub summary: ServeSummary,
 }
@@ -630,7 +255,7 @@ impl ServeProbe {
 /// The measurement behind `rilq serve-bench` and the serve section of
 /// `bench_runtime` (one implementation so the two can't drift): generate
 /// a seeded ragged request mix (lengths in `[seq/2, seq]`), score it
-/// once per-sequence and once through a [`Server`], and cross-check the
+/// once per-sequence and once through an [`Engine`], and cross-check the
 /// answers (logp parity vs the sequential path) and the token counters
 /// (forwarded tokens == Σ request lengths — no PAD-dummy waste) before
 /// reporting throughput.
@@ -657,25 +282,26 @@ pub fn probe_throughput(
     let baseline = scorer.score_sequential(&requests)?;
     let per_seq_secs = t0.elapsed().as_secs_f64();
 
-    let server = Server::start_shared(
+    let engine = Engine::start_shared(
         scorer,
-        ServeConfig {
+        EngineConfig {
             max_batch,
             queue_capacity: max_batch.max(1) * 2,
             max_active: max_batch.max(1),
+            ..EngineConfig::default()
         },
     );
-    let client = server.client();
+    let client = engine.client();
     let t0 = Instant::now();
-    let pendings: Vec<Pending> = requests
+    let pendings: Vec<Pending<Vec<f32>>> = requests
         .iter()
-        .map(|r| client.submit(r.clone()))
+        .map(|r| client.score(r.clone()))
         .collect::<Result<_>>()?;
     let answers: Vec<Vec<f32>> =
         pendings.into_iter().map(|p| p.wait()).collect::<Result<_>>()?;
     let serve_secs = t0.elapsed().as_secs_f64();
     drop(client);
-    let summary = server.shutdown();
+    let summary = engine.shutdown();
 
     for (a, b) in baseline.iter().zip(&answers) {
         ensure!(a.len() == b.len(), "serve loop dropped logp positions");
@@ -795,4 +421,35 @@ pub fn probe_decode(
         prefill_secs,
         step_secs,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_from_empty_metrics_reports_none_percentiles() {
+        // regression: a summary over a fresh (or latency-free) metrics
+        // sink must not panic or fabricate percentiles
+        let m = Metrics::new();
+        let s = ServeSummary::from_metrics(&m);
+        assert_eq!(s.latency_p50_secs, None);
+        assert_eq!(s.latency_p95_secs, None);
+        assert_eq!(s.mean_latency_secs, 0.0);
+        // the Display path must render the None percentiles too
+        let text = format!("{s}");
+        assert!(text.contains("p50 -"), "{text}");
+    }
+
+    #[test]
+    fn summary_from_singleton_series_reports_that_sample() {
+        let m = Metrics::new();
+        m.observe("serve.latency_secs", 0.25);
+        let s = ServeSummary::from_metrics(&m);
+        assert_eq!(s.latency_p50_secs, Some(0.25));
+        assert_eq!(s.latency_p95_secs, Some(0.25));
+        assert!((s.mean_latency_secs - 0.25).abs() < 1e-12);
+        let text = format!("{s}");
+        assert!(text.contains("p50 250.00"), "{text}");
+    }
 }

@@ -1,0 +1,63 @@
+//! Capability descriptor for scorers/backends.
+//!
+//! Before the engine existed, the [`crate::eval::Scorer`] trait grew one
+//! probe method per capability (`fixed_geometry`, `supports_cache`,
+//! `supports_prefix_reuse`, …) and every caller re-interrogated the
+//! booleans it cared about. [`EngineCaps`] replaces that sprawl: a
+//! backend declares *once* what it can do, and the scheduler/eval paths
+//! consult the one descriptor.
+
+/// What a scorer implementation can execute. Returned once by
+/// [`crate::eval::Scorer::caps`]; the engine's admission scheduler and
+/// the eval harness branch on the descriptor instead of probing
+/// per-capability methods.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineCaps {
+    /// Only the exact lowered geometry is accepted — `batch.len() ==
+    /// dims().batch`, every sequence exactly `dims().seq` tokens (the HLO
+    /// artifact path). Ragged scorers take any batch of any lengths
+    /// `<= dims().seq` directly.
+    pub fixed_geometry: bool,
+    /// Incremental KV-cache forwards ([`crate::eval::Scorer::cache_forward`]
+    /// and the batched variant) are implemented — the engine can admit
+    /// `Generate` requests and run chunked prefill + decode steps.
+    pub incremental: bool,
+    /// [`crate::eval::Scorer::score_choices`] prefills a shared prompt
+    /// once and scores each choice suffix against the cached prefix
+    /// (`mc_accuracy` routes per-item when set).
+    pub prefix_reuse: bool,
+}
+
+impl EngineCaps {
+    /// A ragged batch scorer with no cache support (the trait default).
+    pub fn ragged() -> EngineCaps {
+        EngineCaps::default()
+    }
+
+    /// The fixed-geometry HLO artifact path: exact `[batch, seq]` token
+    /// buffers, no incremental execution.
+    pub fn fixed() -> EngineCaps {
+        EngineCaps { fixed_geometry: true, ..EngineCaps::default() }
+    }
+
+    /// A native cache-capable scorer: ragged batches, incremental
+    /// decode, and prefix-reuse choice scoring.
+    pub fn incremental() -> EngineCaps {
+        EngineCaps { fixed_geometry: false, incremental: true, prefix_reuse: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_declare_coherent_capability_sets() {
+        let r = EngineCaps::ragged();
+        assert!(!r.fixed_geometry && !r.incremental && !r.prefix_reuse);
+        let f = EngineCaps::fixed();
+        assert!(f.fixed_geometry && !f.incremental && !f.prefix_reuse);
+        let i = EngineCaps::incremental();
+        assert!(!i.fixed_geometry && i.incremental && i.prefix_reuse);
+    }
+}

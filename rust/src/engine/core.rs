@@ -1,0 +1,713 @@
+//! The request-lifecycle engine: typed admission, two-queue scheduling,
+//! chunked prefill, lockstep decode, and streaming delivery.
+//!
+//! One [`Engine`] owns one loop thread per scorer replica. Each loop
+//! iteration is one scheduler round:
+//!
+//! 1. **intake** — drain the bounded submission channel into two
+//!    internal queues (score/choices work vs. generations waiting for a
+//!    decode slot), validating at admission so malformed requests are
+//!    answered immediately without touching the model. Because waiting
+//!    generations park in their own queue, score traffic behind them is
+//!    *not* head-of-line blocked while every decode slot is full;
+//! 2. **promote** — move waiting generations into free decode slots
+//!    (at most [`EngineConfig::max_active`] resident KV caches — the
+//!    placement constraint a multi-replica [`super::Dispatch`] policy
+//!    balances);
+//! 3. **score** — one coalesced `score_batch` over up to
+//!    [`EngineConfig::max_batch`] queued scoring requests (plus any
+//!    choice-scoring jobs, which prefix-reuse backends run with one
+//!    prompt prefill each);
+//! 4. **step** — one fused forward over every active generation: decode
+//!    sequences contribute their last sampled token, sequences still
+//!    prefilling contribute their next [`EngineConfig::prefill_chunk`]
+//!    prompt tokens. Chunking bounds the rows any single iteration
+//!    forwards, so a long prompt cannot stall decode steps (or newly
+//!    admitted traffic) behind one monolithic prefill — and because
+//!    every kernel in the forward is row-independent, chunked prefill
+//!    is bitwise identical to the one-shot prefill.
+//!
+//! Sampled tokens stream to [`TokenStream`] subscribers the moment they
+//! are committed; the final [`Generated`] answer arrives on the
+//! request's [`Pending`].
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::serve::ServeSummary;
+use crate::coordinator::Metrics;
+use crate::eval::scorer::{check_input, check_seq};
+use crate::eval::Scorer;
+use crate::model::kv::KvCache;
+use crate::model::ModelDims;
+use crate::tensor::Rng;
+
+use super::dispatch::{Dispatch, RoundRobin};
+use super::request::{Generated, Pending, Request, Response, TokenEvent, TokenStream};
+use super::sampling::{sample_token, SamplingParams};
+
+/// Engine scheduling knobs.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Coalesce at most this many scoring requests into one forward.
+    pub max_batch: usize,
+    /// Bounded submission-queue depth (backpressure: submit blocks
+    /// beyond it). Also caps each internal waiting queue, so engine
+    /// memory stays constant no matter how fast clients push.
+    pub queue_capacity: usize,
+    /// Maximum concurrently resident decode sequences (KV caches).
+    /// Excess generations wait in the admission queue — without
+    /// blocking score traffic behind them.
+    pub max_active: usize,
+    /// Prefill slice size in tokens: long prompts enter the KV cache in
+    /// chunks of this many tokens, interleaved with decode steps of the
+    /// other active sequences (`0` = unchunked single-shot prefill).
+    pub prefill_chunk: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_batch: 8, queue_capacity: 32, max_active: 8, prefill_chunk: 32 }
+    }
+}
+
+/// One submission: the typed request plus its reply plumbing.
+struct Submission {
+    req: Request,
+    enqueued: Instant,
+    resp: Sender<Result<Response>>,
+    stream: Option<Sender<TokenEvent>>,
+}
+
+enum Msg {
+    Sub(Submission),
+    Shutdown,
+}
+
+/// Cheap, cloneable submission handle onto a running [`Engine`].
+#[derive(Clone)]
+pub struct EngineClient {
+    txs: Vec<SyncSender<Msg>>,
+    dispatch: Arc<dyn Dispatch>,
+    metrics: Arc<Metrics>,
+}
+
+impl EngineClient {
+    fn submit_raw(
+        &self,
+        req: Request,
+        stream: Option<Sender<TokenEvent>>,
+    ) -> Result<Receiver<Result<Response>>> {
+        let (resp, rx) = channel();
+        self.metrics.gauge_add("serve.queue_depth", 1.0);
+        let replica = self.dispatch.route(&req, self.txs.len()) % self.txs.len();
+        let sent = self.txs[replica].send(Msg::Sub(Submission {
+            req,
+            enqueued: Instant::now(),
+            resp,
+            stream,
+        }));
+        if sent.is_err() {
+            self.metrics.gauge_add("serve.queue_depth", -1.0);
+            return Err(anyhow!("engine stopped"));
+        }
+        Ok(rx)
+    }
+
+    /// Submit any [`Request`]; blocks while the bounded queue is full
+    /// (backpressure), errs once the engine has shut down.
+    pub fn submit(&self, req: Request) -> Result<Pending<Response>> {
+        Ok(Pending::new(self.submit_raw(req, None)?, Ok))
+    }
+
+    /// Enqueue a sequence for scoring.
+    pub fn score(&self, tokens: Vec<u32>) -> Result<Pending<Vec<f32>>> {
+        let rx = self.submit_raw(Request::Score { tokens }, None)?;
+        Ok(Pending::new(rx, Response::into_scored))
+    }
+
+    /// Enqueue choice scoring: per-choice log-probs of each candidate
+    /// continuation of one shared prompt.
+    pub fn choices(
+        &self,
+        prompt: Vec<u32>,
+        choices: Vec<Vec<u32>>,
+    ) -> Result<Pending<Vec<Vec<f32>>>> {
+        let rx = self.submit_raw(Request::Choices { prompt, choices }, None)?;
+        Ok(Pending::new(rx, Response::into_choices))
+    }
+
+    /// Enqueue a generation under `params` (greedy when
+    /// `params.temperature == 0`).
+    pub fn generate(&self, prompt: Vec<u32>, params: SamplingParams) -> Result<Pending<Generated>> {
+        let rx = self.submit_raw(Request::Generate { prompt, params }, None)?;
+        Ok(Pending::new(rx, Response::into_generated))
+    }
+
+    /// Like [`EngineClient::generate`], but also deliver each token the
+    /// moment it is sampled. The stream drains independently of the
+    /// final answer; collected stream tokens always equal
+    /// `Generated::tokens` of the paired [`Pending`].
+    pub fn generate_stream(
+        &self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+    ) -> Result<(TokenStream, Pending<Generated>)> {
+        let (tx, rx) = channel();
+        let resp = self.submit_raw(Request::Generate { prompt, params }, Some(tx))?;
+        Ok((TokenStream { rx }, Pending::new(resp, Response::into_generated)))
+    }
+}
+
+/// The running engine: one scheduler loop per scorer replica, a shared
+/// metrics sink, and a [`Dispatch`] policy placing submissions.
+/// Dropping the engine initiates shutdown: requests already queued are
+/// drained and answered, later submissions err.
+pub struct Engine {
+    txs: Option<Vec<SyncSender<Msg>>>,
+    workers: Vec<JoinHandle<()>>,
+    dispatch: Arc<dyn Dispatch>,
+    metrics: Arc<Metrics>,
+    cfg: EngineConfig,
+}
+
+impl Engine {
+    /// Spawn the engine over an owned scorer.
+    pub fn start<S: Scorer + Send + Sync + 'static>(scorer: S, cfg: EngineConfig) -> Engine {
+        Engine::start_shared(Arc::new(scorer), cfg)
+    }
+
+    /// Spawn the engine over a shared scorer (read-only at serving time).
+    pub fn start_shared(scorer: Arc<dyn Scorer + Send + Sync>, cfg: EngineConfig) -> Engine {
+        Engine::start_sharded(vec![scorer], cfg, Arc::new(RoundRobin::new()))
+    }
+
+    /// Spawn one scheduler loop per scorer replica, routing submissions
+    /// through `dispatch`. All replicas share one metrics sink, so
+    /// [`Engine::summary`] aggregates the fleet.
+    pub fn start_sharded(
+        scorers: Vec<Arc<dyn Scorer + Send + Sync>>,
+        cfg: EngineConfig,
+        dispatch: Arc<dyn Dispatch>,
+    ) -> Engine {
+        assert!(!scorers.is_empty(), "engine needs at least one scorer replica");
+        let metrics = Arc::new(Metrics::new());
+        let mut txs = Vec::with_capacity(scorers.len());
+        let mut workers = Vec::with_capacity(scorers.len());
+        for (i, scorer) in scorers.into_iter().enumerate() {
+            let (tx, rx) = sync_channel(cfg.queue_capacity.max(1));
+            let m = metrics.clone();
+            let c = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("rilq-engine-{i}"))
+                    .spawn(move || engine_loop(scorer, rx, c, m))
+                    .expect("spawn engine loop"),
+            );
+            txs.push(tx);
+        }
+        Engine { txs: Some(txs), workers, dispatch, metrics, cfg }
+    }
+
+    pub fn client(&self) -> EngineClient {
+        EngineClient {
+            txs: self.txs.as_ref().expect("engine running").clone(),
+            dispatch: self.dispatch.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.txs.as_ref().map(Vec::len).unwrap_or(0)
+    }
+
+    /// Snapshot of the throughput/latency counters.
+    pub fn summary(&self) -> ServeSummary {
+        ServeSummary::from_metrics(&self.metrics)
+    }
+
+    /// Drain the queues, stop every loop, and return the final counters.
+    pub fn shutdown(mut self) -> ServeSummary {
+        self.stop();
+        ServeSummary::from_metrics(&self.metrics)
+    }
+
+    fn stop(&mut self) {
+        if let Some(txs) = self.txs.take() {
+            for tx in &txs {
+                // the sentinel queues behind every already-submitted
+                // request, so shutdown drains gracefully
+                let _ = tx.send(Msg::Shutdown);
+            }
+            drop(txs);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// A queued scoring-side job (plain score or choice scoring).
+enum ScoreJob {
+    Plain { tokens: Vec<u32>, enqueued: Instant, resp: Sender<Result<Response>> },
+    Choices {
+        prompt: Vec<u32>,
+        choices: Vec<Vec<u32>>,
+        enqueued: Instant,
+        resp: Sender<Result<Response>>,
+    },
+}
+
+/// A validated generation waiting for a decode slot.
+struct GenJob {
+    prompt: Vec<u32>,
+    params: SamplingParams,
+    enqueued: Instant,
+    resp: Sender<Result<Response>>,
+    stream: Option<Sender<TokenEvent>>,
+}
+
+/// One resident generation: its KV cache, prefill progress, and the
+/// tokens sampled so far (the last one not yet fed back).
+struct ActiveGen {
+    cache: KvCache,
+    prompt: Vec<u32>,
+    /// prompt positions already in the cache; the prompt is fully
+    /// prefilled (and decoding has begun) once `done == prompt.len()`
+    done: usize,
+    tokens: Vec<u32>,
+    logps: Vec<f32>,
+    params: SamplingParams,
+    rng: Rng,
+    enqueued: Instant,
+    resp: Sender<Result<Response>>,
+    stream: Option<Sender<TokenEvent>>,
+}
+
+impl ActiveGen {
+    fn admit(g: GenJob, dims: &ModelDims) -> ActiveGen {
+        let rng = g.params.rng();
+        ActiveGen {
+            cache: KvCache::new(dims),
+            prompt: g.prompt,
+            done: 0,
+            tokens: Vec::new(),
+            logps: Vec::new(),
+            params: g.params,
+            rng,
+            enqueued: g.enqueued,
+            resp: g.resp,
+            stream: g.stream,
+        }
+    }
+
+    /// Commit one sampled token: record it, stream it.
+    fn push(&mut self, tok: u32, lp: f32) {
+        self.tokens.push(tok);
+        self.logps.push(lp);
+        if let Some(tx) = &self.stream {
+            // a dropped stream receiver is not an error — the final
+            // answer still goes out on `resp`
+            let _ = tx.send(TokenEvent { token: tok, logp: lp });
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.tokens.len() >= self.params.max_new
+            || self.tokens.last().is_some_and(|t| self.params.stop.contains(t))
+    }
+}
+
+fn finish_gen(a: ActiveGen, metrics: &Metrics) {
+    metrics.add("serve.gen_requests", 1.0);
+    metrics.add("serve.gen_tokens", a.tokens.len() as f64);
+    metrics.observe("serve.latency_secs", a.enqueued.elapsed().as_secs_f64());
+    let _ = a
+        .resp
+        .send(Ok(Response::Generated(Generated { tokens: a.tokens, logps: a.logps })));
+}
+
+/// Admission validation for a `Choices` request (window + vocabulary),
+/// mirroring what [`crate::eval::Scorer::score_choices`] requires.
+fn validate_choices(dims: &ModelDims, prompt: &[u32], choices: &[Vec<u32>]) -> Result<()> {
+    if prompt.is_empty() {
+        bail!("choice scoring needs a non-empty prompt");
+    }
+    check_seq(dims, 0, prompt)?;
+    for (ci, c) in choices.iter().enumerate() {
+        if prompt.len() + c.len() > dims.seq {
+            bail!(
+                "choice {ci}: {} prompt + {} choice tokens exceed the model window of {}",
+                prompt.len(),
+                c.len(),
+                dims.seq
+            );
+        }
+        check_seq(dims, ci, c)?;
+    }
+    Ok(())
+}
+
+fn engine_loop(
+    scorer: Arc<dyn Scorer + Send + Sync>,
+    rx: Receiver<Msg>,
+    cfg: EngineConfig,
+    metrics: Arc<Metrics>,
+) {
+    let max_batch = cfg.max_batch.max(1);
+    let max_active = cfg.max_active.max(1);
+    // the scoring queue must hold at least a full batch, or a small
+    // queue_capacity silently caps coalescing below max_batch
+    let score_cap = cfg.queue_capacity.max(max_batch);
+    let gen_cap = cfg.queue_capacity.max(1);
+    let chunk = if cfg.prefill_chunk == 0 { usize::MAX } else { cfg.prefill_chunk };
+    let dims = scorer.dims().clone();
+    let caps = scorer.caps();
+
+    let mut score_q: VecDeque<ScoreJob> = VecDeque::new();
+    let mut gen_wait: VecDeque<GenJob> = VecDeque::new();
+    let mut active: Vec<ActiveGen> = Vec::new();
+    // one-slot parking spot for a drained message whose target queue is
+    // full: intake pauses (bounded memory) without the full queue of one
+    // request kind blocking admission of the other kind
+    let mut stash: Option<Msg> = None;
+    let mut shutting_down = false;
+
+    // does this message target the generation waiting queue?
+    let wants_gen = |msg: &Msg| -> bool {
+        matches!(msg, Msg::Sub(Submission { req: Request::Generate { .. }, .. }))
+    };
+    // Admit one message: malformed requests (over-window, out-of-vocab,
+    // no cache support, generation past the window, bad sampling params)
+    // are answered without touching the model — and without poisoning
+    // anything already queued. Returns false on the shutdown sentinel.
+    let admit = |msg: Msg,
+                 score_q: &mut VecDeque<ScoreJob>,
+                 gen_wait: &mut VecDeque<GenJob>|
+     -> bool {
+        let sub = match msg {
+            Msg::Shutdown => return false,
+            Msg::Sub(sub) => sub,
+        };
+        metrics.gauge_add("serve.queue_depth", -1.0);
+        let Submission { req, enqueued, resp, stream } = sub;
+        match req {
+            Request::Score { tokens } => {
+                match check_input(&dims, std::slice::from_ref(&tokens)) {
+                    Ok(()) => score_q.push_back(ScoreJob::Plain { tokens, enqueued, resp }),
+                    Err(e) => {
+                        metrics.incr("serve.errors");
+                        let _ = resp.send(Err(e));
+                    }
+                }
+            }
+            Request::Choices { prompt, choices } => {
+                match validate_choices(&dims, &prompt, &choices) {
+                    Ok(()) => {
+                        score_q.push_back(ScoreJob::Choices { prompt, choices, enqueued, resp })
+                    }
+                    Err(e) => {
+                        metrics.incr("serve.errors");
+                        let _ = resp.send(Err(e));
+                    }
+                }
+            }
+            Request::Generate { prompt, params } => {
+                let admitted: Result<()> = (|| {
+                    if !caps.incremental {
+                        bail!(
+                            "this scorer has no KV-cache support; generate needs a \
+                             native backend scorer"
+                        );
+                    }
+                    params.validate()?;
+                    if prompt.is_empty() {
+                        bail!("generate needs a non-empty prompt");
+                    }
+                    check_seq(&dims, 0, &prompt)?;
+                    if prompt.len() + params.max_new.saturating_sub(1) > dims.seq {
+                        bail!(
+                            "generating {} tokens from a {}-token prompt exceeds the \
+                             model window of {}",
+                            params.max_new,
+                            prompt.len(),
+                            dims.seq
+                        );
+                    }
+                    Ok(())
+                })();
+                match admitted {
+                    Err(e) => {
+                        metrics.incr("serve.errors");
+                        let _ = resp.send(Err(e));
+                    }
+                    Ok(()) if params.max_new == 0 => {
+                        // nothing to decode: answer immediately (the
+                        // dropped stream sender ends any TokenStream)
+                        metrics.add("serve.gen_requests", 1.0);
+                        metrics.observe("serve.latency_secs", enqueued.elapsed().as_secs_f64());
+                        let _ = resp.send(Ok(Response::Generated(Generated {
+                            tokens: Vec::new(),
+                            logps: Vec::new(),
+                        })));
+                    }
+                    Ok(()) => gen_wait.push_back(GenJob { prompt, params, enqueued, resp, stream }),
+                }
+            }
+        }
+        true
+    };
+
+    // One drained message -> its queue, the stash (when that queue is
+    // full), or an immediate answer via `admit`. The single copy of the
+    // routing policy, shared by stash re-admission and fresh intake.
+    // Returns false on the shutdown sentinel (which is never stashed).
+    let offer = |msg: Msg,
+                 score_q: &mut VecDeque<ScoreJob>,
+                 gen_wait: &mut VecDeque<GenJob>,
+                 stash: &mut Option<Msg>|
+     -> bool {
+        let full = match &msg {
+            Msg::Shutdown => false,
+            m if wants_gen(m) => gen_wait.len() >= gen_cap,
+            _ => score_q.len() >= score_cap,
+        };
+        if full {
+            *stash = Some(msg);
+            true
+        } else {
+            admit(msg, score_q, gen_wait)
+        }
+    };
+
+    loop {
+        // ---- intake: admit new work between scheduler iterations -------
+        // a previously stashed message re-admits as soon as its queue has
+        // room (this runs even while shutting down: the stashed request
+        // was submitted before the sentinel and must still be answered)
+        if let Some(msg) = stash.take() {
+            if !offer(msg, &mut score_q, &mut gen_wait, &mut stash) {
+                shutting_down = true;
+            }
+        }
+        if !shutting_down {
+            if stash.is_none() && score_q.is_empty() && gen_wait.is_empty() && active.is_empty()
+            {
+                // completely idle: block for the next message
+                match rx.recv() {
+                    Ok(msg) => {
+                        if !admit(msg, &mut score_q, &mut gen_wait) {
+                            shutting_down = true;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            // drain whatever is already queued. A full set of decode slots
+            // no longer pauses intake — score traffic queued behind a long
+            // generation is admitted (and served) between its decode
+            // steps — and the two waiting queues are bounded separately:
+            // a message whose own queue is full parks in the one-slot
+            // stash (pausing intake, so memory stays bounded) without the
+            // other kind's queue being the reason admission stops
+            while !shutting_down && stash.is_none() {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if !offer(msg, &mut score_q, &mut gen_wait, &mut stash) {
+                            shutting_down = true;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // ---- promote waiting generations into free decode slots --------
+        while active.len() < max_active {
+            match gen_wait.pop_front() {
+                Some(g) => active.push(ActiveGen::admit(g, &dims)),
+                None => break,
+            }
+        }
+        metrics.gauge_set("serve.gen_backlog", gen_wait.len() as f64);
+        metrics.gauge_set("serve.active_decodes", active.len() as f64);
+        metrics.gauge_set(
+            "serve.kv_bytes",
+            active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
+        );
+
+        // ---- one coalesced scoring batch -------------------------------
+        if !score_q.is_empty() {
+            let take = score_q.len().min(max_batch);
+            let jobs: Vec<ScoreJob> = score_q.drain(..take).collect();
+            let mut plain: Vec<(Vec<u32>, Instant, Sender<Result<Response>>)> = Vec::new();
+            let mut choice_jobs = Vec::new();
+            for j in jobs {
+                match j {
+                    ScoreJob::Plain { tokens, enqueued, resp } => {
+                        plain.push((tokens, enqueued, resp))
+                    }
+                    ScoreJob::Choices { prompt, choices, enqueued, resp } => {
+                        choice_jobs.push((prompt, choices, enqueued, resp))
+                    }
+                }
+            }
+            if !plain.is_empty() {
+                let batch: Vec<Vec<u32>> =
+                    plain.iter_mut().map(|(t, _, _)| std::mem::take(t)).collect();
+                let n_tokens: usize = batch.iter().map(Vec::len).sum();
+                let scored = metrics.time("serve.forward", || {
+                    if caps.fixed_geometry {
+                        // the HLO path needs exact [batch, seq] geometry;
+                        // score_all pads and chunks for it
+                        scorer.score_all(&batch)
+                    } else {
+                        scorer.score_batch(&batch)
+                    }
+                });
+                match scored {
+                    Ok(outs) => {
+                        metrics.incr("serve.batches");
+                        metrics.add("serve.requests", plain.len() as f64);
+                        metrics.add("serve.tokens", n_tokens as f64);
+                        for ((_, enq, resp), out) in plain.into_iter().zip(outs) {
+                            metrics.observe("serve.latency_secs", enq.elapsed().as_secs_f64());
+                            let _ = resp.send(Ok(Response::Scored(out)));
+                        }
+                    }
+                    Err(e) => {
+                        // batch-level failure: answer every member, keep serving
+                        metrics.add("serve.errors", plain.len() as f64);
+                        let msg = format!("{e:#}");
+                        for (_, _, resp) in plain {
+                            let _ = resp.send(Err(anyhow!("{msg}")));
+                        }
+                    }
+                }
+            }
+            for (prompt, choices, enq, resp) in choice_jobs {
+                // timed under its own key: serve.forward backs the
+                // tokens_per_sec summary, whose numerator counts only
+                // plain-score tokens
+                let scored = metrics
+                    .time("serve.choice_forward", || scorer.score_choices(&prompt, &choices));
+                match scored {
+                    Ok(out) => {
+                        metrics.add("serve.choice_requests", 1.0);
+                        metrics.add(
+                            "serve.choice_tokens",
+                            (prompt.len() + choices.iter().map(Vec::len).sum::<usize>()) as f64,
+                        );
+                        metrics.observe("serve.latency_secs", enq.elapsed().as_secs_f64());
+                        let _ = resp.send(Ok(Response::Choices(out)));
+                    }
+                    Err(e) => {
+                        metrics.incr("serve.errors");
+                        let _ = resp.send(Err(e));
+                    }
+                }
+            }
+        }
+
+        // ---- one fused prefill-chunk / decode step over active ---------
+        if !active.is_empty() {
+            let mut news: Vec<Vec<u32>> = Vec::with_capacity(active.len());
+            let mut prefill_rows = 0usize;
+            let mut decode_rows = 0usize;
+            for a in &active {
+                if a.done < a.prompt.len() {
+                    let end = (a.done + chunk).min(a.prompt.len());
+                    news.push(a.prompt[a.done..end].to_vec());
+                    prefill_rows += end - a.done;
+                } else {
+                    news.push(vec![*a.tokens.last().expect("decoding sequence has a token")]);
+                    decode_rows += 1;
+                }
+            }
+            let scored = metrics.time("serve.decode_step", || {
+                let mut refs: Vec<&mut KvCache> =
+                    active.iter_mut().map(|a| &mut a.cache).collect();
+                scorer.cache_forward_batch(&news, &mut refs)
+            });
+            match scored {
+                Ok(lgs) => {
+                    metrics.incr("serve.decode_steps");
+                    metrics.add("serve.prefill_tokens", prefill_rows as f64);
+                    metrics.add("serve.decode_tokens", decode_rows as f64);
+                    for (i, a) in active.iter_mut().enumerate() {
+                        let n = news[i].len();
+                        if a.done < a.prompt.len() {
+                            a.done += n;
+                            if a.done == a.prompt.len() {
+                                // prompt complete: the first token samples
+                                // from the last prompt position's logits
+                                let (tok, lp) =
+                                    sample_token(lgs[i].row(n - 1), &a.params, &mut a.rng);
+                                a.push(tok, lp);
+                            }
+                        } else {
+                            let (tok, lp) = sample_token(lgs[i].row(0), &a.params, &mut a.rng);
+                            a.push(tok, lp);
+                        }
+                    }
+                    let mut i = 0;
+                    while i < active.len() {
+                        if active[i].finished() {
+                            finish_gen(active.swap_remove(i), &metrics);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                Err(e) => {
+                    // step-level failure: answer every active sequence,
+                    // free their caches, keep serving
+                    metrics.add("serve.errors", active.len() as f64);
+                    let msg = format!("{e:#}");
+                    for a in active.drain(..) {
+                        let _ = a.resp.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+            metrics.gauge_set("serve.active_decodes", active.len() as f64);
+            metrics.gauge_set(
+                "serve.kv_bytes",
+                active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
+            );
+        }
+
+        if shutting_down
+            && stash.is_none()
+            && score_q.is_empty()
+            && gen_wait.is_empty()
+            && active.is_empty()
+        {
+            break;
+        }
+    }
+    // loop exit: any messages still queued were submitted after shutdown
+    // began; dropping their response senders errs the callers' `wait()`.
+}

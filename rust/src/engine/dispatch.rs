@@ -1,0 +1,55 @@
+//! Multi-replica dispatch seam.
+//!
+//! One engine loop drives one scorer replica; scaling past a single
+//! worker means running several loops and deciding, per request, which
+//! replica admits it. [`Dispatch`] is that decision point —
+//! [`super::Engine::start_sharded`] routes every submission through it.
+//! Per-replica KV residency (`KvCache::bytes × max_active`) is the
+//! placement constraint a smarter policy would balance; [`RoundRobin`]
+//! is the baseline that ignores it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::request::Request;
+
+/// Route a request to one of `n_replicas` engine loops. Implementations
+/// must be cheap and thread-safe — every submission calls this once.
+/// Out-of-range returns are clamped by the caller (`% n_replicas`).
+pub trait Dispatch: Send + Sync {
+    fn route(&self, req: &Request, n_replicas: usize) -> usize;
+}
+
+/// Baseline placement: rotate submissions across replicas regardless of
+/// request kind or replica load.
+#[derive(Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl Dispatch for RoundRobin {
+    fn route(&self, _req: &Request, n_replicas: usize) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % n_replicas.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_replicas() {
+        let rr = RoundRobin::new();
+        let req = Request::Score { tokens: vec![1] };
+        let got: Vec<usize> = (0..6).map(|_| rr.route(&req, 3)).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+        // degenerate replica counts never panic
+        assert_eq!(rr.route(&req, 1), 0);
+        assert_eq!(rr.route(&req, 0), 0);
+    }
+}

@@ -1,0 +1,45 @@
+//! Request-lifecycle serving engine — the typed API every workload
+//! (perplexity scoring, multiple-choice eval, sampled generation)
+//! programs against.
+//!
+//! ```text
+//!   EngineClient            Engine (one loop per scorer replica)
+//!   ────────────            ───────────────────────────────────────────
+//!   submit(Request) ──┐     ┌ intake ── validate ──┬─▶ score/choices q
+//!     Score{..}       │     │  (bounded channel,   └─▶ gen waiting q
+//!     Choices{..}     ├────▶│   Dispatch picks          │
+//!     Generate{..}    │     │   the replica)            ▼ promote while
+//!       + Sampling-   │     │                      decode slots free
+//!         Params      │     │                      (≤ max_active KV)
+//!                     │     ├ score: one coalesced score_batch
+//!   Pending<Response> │     │   (≤ max_batch requests per round)
+//!     .wait()         ◀─────┤ step: one fused cache_forward_batch —
+//!     .wait_timeout() │     │   decode seqs feed their last token,
+//!   TokenStream ◀─────┘     │   prefilling seqs feed the next
+//!     (per-token events)    │   prefill_chunk prompt tokens
+//!                           └ repeat — new traffic admits BETWEEN steps
+//! ```
+//!
+//! The scheduler round structure is what kills head-of-line blocking:
+//! score traffic is served between decode iterations of long
+//! generations, and long prompts prefill in chunks instead of
+//! monopolizing an iteration. Backends declare capabilities once via
+//! [`EngineCaps`] (see [`crate::eval::Scorer::caps`]) instead of being
+//! probed per-capability; [`Dispatch`] is the placement seam for
+//! multi-replica serving, with per-replica KV residency
+//! (`max_active × KvCache::bytes`) as the constraint.
+//!
+//! The legacy [`crate::coordinator::serve::ServeClient`] verbs survive
+//! as deprecated shims over [`EngineClient`].
+
+pub mod caps;
+pub mod core;
+pub mod dispatch;
+pub mod request;
+pub mod sampling;
+
+pub use self::caps::EngineCaps;
+pub use self::core::{Engine, EngineClient, EngineConfig};
+pub use self::dispatch::{Dispatch, RoundRobin};
+pub use self::request::{Generated, Pending, Request, Response, TokenEvent, TokenStream};
+pub use self::sampling::{argmax_logp, sample_token, SamplingParams, DEFAULT_SAMPLING_SEED};

@@ -1,0 +1,194 @@
+//! The typed request lifecycle: what enters the engine ([`Request`]),
+//! what comes back ([`Response`] through a [`Pending`] handle), and the
+//! incremental token channel ([`TokenStream`]) for generation.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::sampling::SamplingParams;
+
+/// One unit of work submitted to the engine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Score a token sequence: log-prob of each realized next token
+    /// (`[len-1]` values). Answered with [`Response::Scored`].
+    Score { tokens: Vec<u32> },
+    /// Score several candidate continuations of one shared prompt
+    /// (the CSQA protocol). Prefix-reuse backends prefill the prompt
+    /// once. Answered with [`Response::Choices`].
+    Choices { prompt: Vec<u32>, choices: Vec<Vec<u32>> },
+    /// Generate up to `params.max_new` tokens from `prompt` under the
+    /// sampling configuration. Answered with [`Response::Generated`];
+    /// submit via [`super::EngineClient::generate_stream`] to also
+    /// receive each token as it is sampled.
+    Generate { prompt: Vec<u32>, params: SamplingParams },
+}
+
+/// A finished generation: the sampled tokens and each one's log-prob
+/// under the full distribution it was drawn from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Generated {
+    pub tokens: Vec<u32>,
+    pub logps: Vec<f32>,
+}
+
+/// The engine's answer to a [`Request`] (variants correspond 1:1).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Scored(Vec<f32>),
+    Choices(Vec<Vec<f32>>),
+    Generated(Generated),
+}
+
+impl Response {
+    pub(crate) fn into_scored(self) -> Result<Vec<f32>> {
+        match self {
+            Response::Scored(v) => Ok(v),
+            other => Err(anyhow!("engine answered a Score request with {other:?}")),
+        }
+    }
+
+    pub(crate) fn into_choices(self) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Response::Choices(v) => Ok(v),
+            other => Err(anyhow!("engine answered a Choices request with {other:?}")),
+        }
+    }
+
+    pub(crate) fn into_generated(self) -> Result<Generated> {
+        match self {
+            Response::Generated(g) => Ok(g),
+            other => Err(anyhow!("engine answered a Generate request with {other:?}")),
+        }
+    }
+}
+
+/// A submitted request's pending answer (one-shot). The typed
+/// convenience submitters ([`super::EngineClient::score`] /
+/// [`super::EngineClient::generate`] / …) return a `Pending` already
+/// projected to their payload type; [`super::EngineClient::submit`]
+/// returns `Pending<Response>`.
+pub struct Pending<T = Vec<f32>> {
+    rx: Receiver<Result<Response>>,
+    project: fn(Response) -> Result<T>,
+}
+
+impl<T> Pending<T> {
+    pub(crate) fn new(rx: Receiver<Result<Response>>, project: fn(Response) -> Result<T>) -> Self {
+        Pending { rx, project }
+    }
+
+    /// Block until the engine answers, or the per-request error.
+    pub fn wait(self) -> Result<T> {
+        let r = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("engine shut down before answering this request"))??;
+        (self.project)(r)
+    }
+
+    /// Like [`Pending::wait`], but fail fast after `dur` instead of
+    /// hanging on a wedged worker. A timeout consumes nothing — the
+    /// handle stays valid, so callers can retry or give up.
+    pub fn wait_timeout(&self, dur: Duration) -> Result<T> {
+        match self.rx.recv_timeout(dur) {
+            Ok(r) => (self.project)(r?),
+            Err(RecvTimeoutError::Timeout) => {
+                Err(anyhow!("request not answered within {dur:?} (wedged worker?)"))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("engine shut down before answering this request"))
+            }
+        }
+    }
+}
+
+/// One incrementally delivered generation token.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenEvent {
+    pub token: u32,
+    /// Log-prob of `token` under the full distribution it was sampled
+    /// from (same quantity as [`Generated::logps`]).
+    pub logp: f32,
+}
+
+/// Incremental token delivery for one `Generate` request: each sampled
+/// token arrives as a [`TokenEvent`] the moment the engine commits it.
+/// The stream ends (iterator returns `None`) when the generation
+/// finishes, errs, or the engine shuts down — the final
+/// [`Generated`] answer (or the error) still arrives on the paired
+/// [`Pending`]. The channel is unbounded, so a slow consumer never
+/// stalls the engine loop.
+pub struct TokenStream {
+    pub(crate) rx: Receiver<TokenEvent>,
+}
+
+impl TokenStream {
+    /// Block for the next token; `None` once the generation is over.
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Iterator for TokenStream {
+    type Item = TokenEvent;
+
+    fn next(&mut self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn pending_projects_the_matching_variant() {
+        let (tx, rx) = channel();
+        tx.send(Ok(Response::Scored(vec![-1.0, -2.0]))).unwrap();
+        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        assert_eq!(p.wait().unwrap(), vec![-1.0, -2.0]);
+    }
+
+    #[test]
+    fn pending_rejects_a_mismatched_variant() {
+        let (tx, rx) = channel();
+        tx.send(Ok(Response::Choices(vec![]))).unwrap();
+        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        assert!(p.wait().is_err());
+    }
+
+    #[test]
+    fn wait_timeout_fails_fast_and_leaves_the_handle_usable() {
+        let (tx, rx) = channel();
+        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        let err = p.wait_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(format!("{err}").contains("within"), "{err}");
+        // the answer can still be collected after a timeout
+        tx.send(Ok(Response::Scored(vec![-3.0]))).unwrap();
+        assert_eq!(p.wait_timeout(Duration::from_millis(10)).unwrap(), vec![-3.0]);
+    }
+
+    #[test]
+    fn dropped_sender_reports_shutdown() {
+        let (tx, rx) = channel::<Result<Response>>();
+        drop(tx);
+        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        let err = p.wait().unwrap_err();
+        assert!(format!("{err}").contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn token_stream_iterates_until_the_sender_drops() {
+        let (tx, rx) = channel();
+        tx.send(TokenEvent { token: 3, logp: -0.5 }).unwrap();
+        tx.send(TokenEvent { token: 9, logp: -1.5 }).unwrap();
+        drop(tx);
+        let stream = TokenStream { rx };
+        let toks: Vec<u32> = stream.map(|e| e.token).collect();
+        assert_eq!(toks, vec![3, 9]);
+    }
+}

@@ -1,0 +1,312 @@
+//! Token selection: greedy argmax and seeded stochastic sampling
+//! (temperature / top-k / top-p) over one logits row.
+//!
+//! Determinism contract: greedy selection (`temperature == 0`, the
+//! default) involves no randomness at all — ties break toward the
+//! **lowest token id** — so `seed: None` is fully reproducible in greedy
+//! mode. Stochastic sampling draws from a per-request [`Rng`]; with
+//! `seed: Some(s)` the whole generation is a pure function of `(prompt,
+//! params, model)`, and with `seed: None` a fixed default seed is used so
+//! even "unseeded" sampling replays identically.
+
+use anyhow::{ensure, Result};
+
+use crate::model::forward::row_logp;
+use crate::tensor::Rng;
+
+/// The seed used for stochastic sampling when
+/// [`SamplingParams::seed`] is `None` — sampling stays reproducible even
+/// without an explicit seed.
+pub const DEFAULT_SAMPLING_SEED: u64 = 0x5a3d_517e;
+
+/// How `Generate` requests pick tokens. The default is greedy decoding
+/// (`temperature == 0`), bitwise-identical to
+/// [`crate::eval::greedy_decode`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Token budget: generation stops after this many tokens (0 = answer
+    /// immediately with an empty generation).
+    pub max_new: usize,
+    /// Softmax temperature; `0.0` selects greedy argmax decoding.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens before sampling
+    /// (`0` disables the filter).
+    pub top_k: usize,
+    /// Nucleus filter: keep the smallest set of tokens whose probability
+    /// mass reaches `top_p` (`1.0` disables the filter).
+    pub top_p: f32,
+    /// RNG seed for stochastic sampling. `None` uses
+    /// [`DEFAULT_SAMPLING_SEED`]; greedy mode never draws randomness.
+    pub seed: Option<u64>,
+    /// Stop tokens: generation halts as soon as one of these is sampled.
+    /// The stop token is **included** in the output (its logp aligns with
+    /// the token list).
+    pub stop: Vec<u32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            max_new: 16,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: None,
+            stop: Vec::new(),
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy decoding with a token budget — the configuration whose
+    /// output is pinned bitwise against [`crate::eval::greedy_decode`].
+    pub fn greedy(max_new: usize) -> SamplingParams {
+        SamplingParams { max_new, ..SamplingParams::default() }
+    }
+
+    /// True when token selection is deterministic argmax.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Admission-time validation (the engine answers `Err` instead of
+    /// sampling from a malformed distribution).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.temperature.is_finite() && self.temperature >= 0.0,
+            "temperature must be finite and >= 0, got {}",
+            self.temperature
+        );
+        ensure!(
+            self.top_p > 0.0 && self.top_p <= 1.0,
+            "top_p must be in (0, 1], got {}",
+            self.top_p
+        );
+        Ok(())
+    }
+
+    /// The per-request RNG this configuration samples from.
+    pub fn rng(&self) -> Rng {
+        Rng::seed(self.seed.unwrap_or(DEFAULT_SAMPLING_SEED))
+    }
+}
+
+/// Greedy pick from one logits row: the argmax token and its log-prob
+/// under the full distribution.
+///
+/// Tie-breaking is **explicitly deterministic: the lowest token id
+/// wins** (strict `>` comparison scanning ids in ascending order), so
+/// greedy decoding with `seed: None` reproduces exactly — across runs,
+/// backends, and batch compositions.
+pub fn argmax_logp(row: &[f32]) -> (u32, f32) {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate().skip(1) {
+        // strict >: an equal later logit never displaces an earlier one
+        if v > row[best] {
+            best = i;
+        }
+    }
+    (best as u32, row_logp(row, best as u32))
+}
+
+/// Pick one token from a logits row under `params`, advancing `rng` only
+/// in stochastic mode. Returns `(token, logp)` where `logp` is the
+/// token's log-prob under the **full** (unfiltered, untempered)
+/// distribution — the same quantity greedy decoding reports, so
+/// generation log-probs are comparable across sampling configurations.
+///
+/// Stochastic selection: logits are divided by `temperature`, the
+/// candidate list is sorted by descending logit (ties toward the lowest
+/// id, mirroring [`argmax_logp`]), truncated to `top_k`, then to the
+/// smallest prefix whose softmax mass reaches `top_p`, and the token is
+/// drawn from the renormalized remainder.
+pub fn sample_token(row: &[f32], params: &SamplingParams, rng: &mut Rng) -> (u32, f32) {
+    if params.is_greedy() {
+        return argmax_logp(row);
+    }
+    // candidates ordered by (logit desc, id asc) — a total, deterministic
+    // order, so the same seed replays the same choices. With top-k active
+    // the top k are partitioned out first (O(V) select) so the sort only
+    // ever touches k elements, not the whole vocabulary.
+    let by_logit_then_id = |&a: &usize, &b: &usize| {
+        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    };
+    let mut ids: Vec<usize> = (0..row.len()).collect();
+    if params.top_k > 0 && params.top_k < ids.len() {
+        // the comparator is a total order, so the selected top-k SET is
+        // unique and the subsequent sort keeps determinism
+        ids.select_nth_unstable_by(params.top_k - 1, by_logit_then_id);
+        ids.truncate(params.top_k);
+    }
+    ids.sort_unstable_by(by_logit_then_id);
+    // tempered softmax over the kept candidates (max-subtracted). A tiny
+    // temperature can overflow 1/T — or the scaled max logit — to
+    // infinity, which would NaN every probability via inf - inf; the
+    // T -> 0 limit is argmax, so take it directly in that regime.
+    let inv_t = 1.0 / params.temperature;
+    let maxl = row[ids[0]] * inv_t;
+    if !maxl.is_finite() {
+        return argmax_logp(row);
+    }
+    let mut probs: Vec<f64> = ids.iter().map(|&i| ((row[i] * inv_t - maxl) as f64).exp()).collect();
+    let total: f64 = probs.iter().sum();
+    if params.top_p < 1.0 {
+        // nucleus: smallest prefix reaching top_p of the kept mass
+        let mut acc = 0.0f64;
+        let mut keep = probs.len();
+        for (n, &p) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= params.top_p as f64 * total {
+                keep = n + 1;
+                break;
+            }
+        }
+        ids.truncate(keep);
+        probs.truncate(keep);
+    }
+    let tok = ids[rng.sample_weighted(&probs)] as u32;
+    (tok, row_logp(row, tok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_ties_break_toward_lowest_token_id() {
+        let (tok, _) = argmax_logp(&[1.0, 3.0, 3.0, 2.0]);
+        assert_eq!(tok, 1, "equal logits must resolve to the lowest id");
+        let (tok, _) = argmax_logp(&[5.0, 5.0, 5.0]);
+        assert_eq!(tok, 0);
+    }
+
+    #[test]
+    fn greedy_logp_is_full_distribution_logp() {
+        let row = [0.0f32, 2.0, -1.0];
+        let (tok, lp) = argmax_logp(&row);
+        assert_eq!(tok, 1);
+        assert!((lp - row_logp(&row, 1)).abs() == 0.0);
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn zero_temperature_never_touches_the_rng() {
+        let row = [0.1f32, 0.9, 0.5];
+        let params = SamplingParams::greedy(4);
+        let mut rng = Rng::seed(1);
+        let before = rng.clone();
+        let (tok, _) = sample_token(&row, &params, &mut rng);
+        assert_eq!(tok, 1);
+        // the rng state is untouched: greedy is reproducible with seed=None
+        let mut a = rng;
+        let mut b = before;
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn peaked_distribution_always_samples_the_peak() {
+        let mut row = vec![0.0f32; 16];
+        row[7] = 50.0; // ~e^50 more likely than anything else
+        let params = SamplingParams {
+            temperature: 1.0,
+            ..SamplingParams::greedy(1)
+        };
+        let mut rng = Rng::seed(3);
+        for _ in 0..64 {
+            assert_eq!(sample_token(&row, &params, &mut rng).0, 7);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_the_candidate_set() {
+        let row = [1.0f32, 8.0, 7.5, 1.0, 0.0, 6.0];
+        let params = SamplingParams {
+            temperature: 2.0,
+            top_k: 2,
+            ..SamplingParams::greedy(1)
+        };
+        let mut rng = Rng::seed(4);
+        for _ in 0..128 {
+            let (tok, _) = sample_token(&row, &params, &mut rng);
+            assert!(tok == 1 || tok == 2, "token {tok} outside top-2");
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_degenerates_to_argmax() {
+        let row = [0.3f32, 0.1, 0.9, 0.2];
+        let params = SamplingParams {
+            temperature: 1.5,
+            top_p: 1e-6,
+            ..SamplingParams::greedy(1)
+        };
+        let mut rng = Rng::seed(5);
+        for _ in 0..32 {
+            assert_eq!(sample_token(&row, &params, &mut rng).0, 2);
+        }
+    }
+
+    #[test]
+    fn subnormal_temperature_degenerates_to_argmax() {
+        // 1/T overflows f32 to infinity here; sampling must take the
+        // T -> 0 limit (argmax) instead of NaN-ing the distribution
+        let row = [0.3f32, 0.1, 0.9, 0.2];
+        let params = SamplingParams { temperature: 1e-39, ..SamplingParams::greedy(1) };
+        assert!(!params.is_greedy());
+        let mut rng = Rng::seed(11);
+        for _ in 0..16 {
+            let (tok, lp) = sample_token(&row, &params, &mut rng);
+            assert_eq!(tok, 2);
+            assert!(lp.is_finite());
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_identically() {
+        let mut rng = Rng::seed(6);
+        let row: Vec<f32> = (0..32).map(|_| rng.next_gaussian()).collect();
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: 8,
+            top_p: 0.9,
+            seed: Some(99),
+            ..SamplingParams::greedy(1)
+        };
+        let draw = |seed: u64| -> Vec<u32> {
+            let mut r = Rng::seed(seed);
+            (0..20).map(|_| sample_token(&row, &params, &mut r).0).collect()
+        };
+        assert_eq!(draw(99), draw(99));
+    }
+
+    #[test]
+    fn unseeded_params_fall_back_to_the_default_seed() {
+        let p = SamplingParams::default();
+        let mut a = p.rng();
+        let mut b = Rng::seed(DEFAULT_SAMPLING_SEED);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_params() {
+        let bad_t = SamplingParams { temperature: f32::NAN, ..Default::default() };
+        assert!(bad_t.validate().is_err());
+        let bad_p = SamplingParams { top_p: 0.0, ..Default::default() };
+        assert!(bad_p.validate().is_err());
+        let bad_p2 = SamplingParams { top_p: 1.5, ..Default::default() };
+        assert!(bad_p2.validate().is_err());
+        assert!(SamplingParams::default().validate().is_ok());
+    }
+
+    #[test]
+    fn sampled_logp_reports_the_full_distribution() {
+        let row = [0.5f32, 1.5, -0.5, 2.5];
+        let params = SamplingParams {
+            temperature: 0.7,
+            ..SamplingParams::greedy(1)
+        };
+        let mut rng = Rng::seed(8);
+        let (tok, lp) = sample_token(&row, &params, &mut rng);
+        assert!((lp - row_logp(&row, tok)).abs() == 0.0);
+    }
+}

@@ -12,12 +12,13 @@ use super::scorer::Scorer;
 /// log-likelihood (`acc` in lm-eval-harness; set `length_norm` for
 /// `acc_norm`).
 ///
-/// Scorers with KV-cache prefix reuse ([`Scorer::supports_prefix_reuse`])
-/// prefill each item's shared prompt **once** and score every choice's
-/// suffix incrementally — `prompt + Σ choice` forwarded rows per item
-/// instead of `choices × (prompt + choice)` — with bitwise-identical
-/// totals (pinned by `tests/kv_cache.rs`). Fixed-geometry scorers keep
-/// the flattened full-sequence path.
+/// Scorers declaring KV-cache prefix reuse (`caps().prefix_reuse`, see
+/// [`crate::engine::EngineCaps`]) prefill each item's shared prompt
+/// **once** and score every choice's suffix incrementally — `prompt +
+/// Σ choice` forwarded rows per item instead of `choices × (prompt +
+/// choice)` — with bitwise-identical totals (pinned by
+/// `tests/kv_cache.rs`). Fixed-geometry scorers keep the flattened
+/// full-sequence path.
 pub fn mc_accuracy(scorer: &dyn Scorer, items: &[McItem], length_norm: bool) -> Result<f64> {
     for (ii, item) in items.iter().enumerate() {
         for (ci, choice) in item.choices.iter().enumerate() {
@@ -31,7 +32,7 @@ pub fn mc_accuracy(scorer: &dyn Scorer, items: &[McItem], length_norm: bool) -> 
         }
     }
 
-    if scorer.supports_prefix_reuse() {
+    if scorer.caps().prefix_reuse {
         // shared-prompt path: one prefill per item, one suffix per choice
         let mut correct = 0usize;
         for item in items {

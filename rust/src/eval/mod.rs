@@ -13,19 +13,24 @@
 //! * [`scorer::NativeScorer`] — the pure-Rust reference model (teacher or
 //!   pre-materialized dense weights; PJRT-free studies and tests).
 //!
-//! The native scorers additionally support KV-cache execution: incremental
-//! cached forwards ([`Scorer::cache_forward`], batched for the decode
-//! scheduler), greedy decode ([`scorer::greedy_decode`]), and prefix-aware
-//! choice scoring ([`Scorer::score_choices`]) — `mc_accuracy` prefills each
-//! item's shared prompt once and scores every choice's suffix
-//! incrementally instead of re-running the prompt per choice.
+//! Every implementation declares what it can execute **once** via
+//! [`Scorer::caps`] (an [`crate::engine::EngineCaps`] descriptor); the
+//! engine scheduler and this harness branch on the descriptor instead of
+//! probing per-capability methods. The native scorers declare
+//! incremental KV-cache execution: cached forwards
+//! ([`Scorer::cache_forward`], batched for the decode scheduler), greedy
+//! decode ([`scorer::greedy_decode`]), and prefix-aware choice scoring
+//! ([`Scorer::score_choices`]) — `mc_accuracy` prefills each item's
+//! shared prompt once and scores every choice's suffix incrementally
+//! instead of re-running the prompt per choice. Scoring can also run as
+//! engine traffic ([`ppl::perplexity_client`]).
 
 pub mod csqa;
 pub mod ppl;
 pub mod scorer;
 
 pub use csqa::{gsm_accuracy, mc_accuracy};
-pub use ppl::perplexity;
+pub use ppl::{perplexity, perplexity_client};
 pub use scorer::{
     argmax_logp, greedy_decode, greedy_decode_recompute, BackendScorer, HloScorer, NativeScorer,
     Scorer,

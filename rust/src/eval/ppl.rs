@@ -2,18 +2,17 @@
 
 use anyhow::{bail, Result};
 
+use crate::engine::EngineClient;
+
 use super::scorer::Scorer;
 
-/// Corpus perplexity: `exp( -Σ logp / #tokens )` over all next-token
-/// positions of all sequences (PAD-free sequences are assumed; `score_all`
-/// already trims padding). Empty input (no scoreable token positions) is
-/// an `Err`, not a process abort.
-pub fn perplexity(scorer: &dyn Scorer, seqs: &[Vec<u32>]) -> Result<f64> {
-    let scored = scorer.score_all(seqs)?;
+/// `exp( -Σ logp / #tokens )` over per-sequence logp vectors; `Err` when
+/// no position was scoreable.
+fn ppl_from_logps(scored: impl IntoIterator<Item = Vec<f32>>) -> Result<f64> {
     let mut total = 0.0f64;
     let mut count = 0usize;
-    for lp in &scored {
-        for &x in lp {
+    for lp in scored {
+        for &x in &lp {
             total += x as f64;
             count += 1;
         }
@@ -22,6 +21,32 @@ pub fn perplexity(scorer: &dyn Scorer, seqs: &[Vec<u32>]) -> Result<f64> {
         bail!("no tokens scored: perplexity needs at least one two-token sequence");
     }
     Ok((-total / count as f64).exp())
+}
+
+/// Corpus perplexity: `exp( -Σ logp / #tokens )` over all next-token
+/// positions of all sequences (PAD-free sequences are assumed; `score_all`
+/// already trims padding). Empty input (no scoreable token positions) is
+/// an `Err`, not a process abort.
+pub fn perplexity(scorer: &dyn Scorer, seqs: &[Vec<u32>]) -> Result<f64> {
+    ppl_from_logps(scorer.score_all(seqs)?)
+}
+
+/// [`perplexity`] through a running [`crate::engine::Engine`]: every
+/// sequence is submitted as a `Request::Score` (all of them in flight at
+/// once, so the engine coalesces them into batched forwards) and the
+/// aggregation is identical to the direct path. This is the eval-as-a-
+/// workload form — the same engine can interleave this scoring traffic
+/// with live generation.
+pub fn perplexity_client(client: &EngineClient, seqs: &[Vec<u32>]) -> Result<f64> {
+    let pendings: Vec<_> = seqs
+        .iter()
+        .map(|s| client.score(s.clone()))
+        .collect::<Result<Vec<_>>>()?;
+    let scored = pendings
+        .into_iter()
+        .map(|p| p.wait())
+        .collect::<Result<Vec<_>>>()?;
+    ppl_from_logps(scored)
 }
 
 /// Mean NLL (nats/token) — same data as [`perplexity`], linear scale.
@@ -73,6 +98,26 @@ mod tests {
         assert!(perplexity(&sc, &[]).is_err());
         // single-token sequences have no next-token positions either
         assert!(perplexity(&sc, &[vec![1u32]]).is_err());
+    }
+
+    #[test]
+    fn engine_scoring_matches_direct_perplexity() {
+        use crate::engine::{Engine, EngineConfig};
+        let d = dims();
+        let mut rng = Rng::seed(164);
+        let teacher = TeacherParams::init(&d, &mut rng);
+        let sc = NativeScorer { dims: d.clone(), teacher, dense: None };
+        let seqs: Vec<Vec<u32>> = (0..5)
+            .map(|_| (0..12).map(|_| rng.below(64) as u32).collect())
+            .collect();
+        let want = perplexity(&sc, &seqs).unwrap();
+        let engine = Engine::start(sc, EngineConfig::default());
+        let got = perplexity_client(&engine.client(), &seqs).unwrap();
+        engine.shutdown();
+        assert!(
+            (want - got).abs() < 1e-9,
+            "engine-path perplexity diverged: {want} vs {got}"
+        );
     }
 
     #[test]

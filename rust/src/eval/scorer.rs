@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use anyhow::{bail, ensure, Result};
 
 use crate::data::tokenizer::PAD;
+use crate::engine::EngineCaps;
 use crate::lqec::AdapterSet;
 use crate::model::backend::{model_weight_bytes, student_backends, BackendKind, LinearBackend};
 use crate::model::forward::{
@@ -45,33 +46,24 @@ pub fn check_seq(dims: &ModelDims, i: usize, s: &[u32]) -> Result<()> {
 pub trait Scorer {
     fn dims(&self) -> &ModelDims;
 
-    /// True when the implementation only accepts the exact lowered
-    /// geometry — `batch.len() == dims().batch`, every sequence exactly
-    /// `dims().seq` tokens (the HLO artifact path). Native scorers return
-    /// false and accept ragged batches of any size directly.
-    fn fixed_geometry(&self) -> bool {
-        false
+    /// What this implementation can execute, declared **once** as an
+    /// [`EngineCaps`] descriptor — the engine's admission scheduler and
+    /// the eval harness consult it instead of probing per-capability
+    /// booleans (the pre-engine `fixed_geometry` / `supports_cache` /
+    /// `supports_prefix_reuse` sprawl). The default is a ragged batch
+    /// scorer with no cache support; the HLO path declares
+    /// [`EngineCaps::fixed`], the native backends
+    /// [`EngineCaps::incremental`].
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::ragged()
     }
 
-    /// Score one batch. Fixed-geometry scorers ([`Self::fixed_geometry`])
+    /// Score one batch. Fixed-geometry scorers (`caps().fixed_geometry`)
     /// require exactly `[dims().batch, dims().seq]` tokens and return one
     /// `[seq-1]` logp vector per sequence; ragged scorers accept any
     /// number of sequences of any length `<= dims().seq` (longer is an
     /// `Err`) and return one `[len_i-1]` vector per sequence.
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>>;
-
-    /// True when [`Scorer::score_choices`] reuses a single prefill of the
-    /// shared prompt across choices (KV-cache prefix reuse) instead of
-    /// re-scoring `prompt + choice` from scratch per choice.
-    fn supports_prefix_reuse(&self) -> bool {
-        false
-    }
-
-    /// True when the scorer can run incremental cached forwards
-    /// ([`Scorer::cache_forward`]). Fixed-geometry HLO scorers cannot.
-    fn supports_cache(&self) -> bool {
-        false
-    }
 
     /// Incremental forward against a per-sequence [`KvCache`]: push only
     /// `new_tokens`, return their `[new, V]` logits, extend the cache.
@@ -102,7 +94,8 @@ pub trait Scorer {
     /// returns, per choice, the `[choice_len]` log-probs of the choice
     /// tokens given everything before them. The default recomputes
     /// `prompt + choice` from scratch per choice via [`Scorer::score_all`];
-    /// prefix-reuse scorers prefill the prompt once instead.
+    /// prefix-reuse scorers (`caps().prefix_reuse`) prefill the prompt
+    /// once instead.
     fn score_choices(&self, prompt: &[u32], choices: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         ensure!(
             !prompt.is_empty(),
@@ -137,7 +130,7 @@ pub trait Scorer {
         let mut i = 0;
         while i < seqs.len() {
             let n = (seqs.len() - i).min(d.batch);
-            let scored = if self.fixed_geometry() {
+            let scored = if self.caps().fixed_geometry {
                 // pad each sequence to `seq`, and the final short batch
                 // with PAD-only dummies, to match the lowered geometry
                 let mut batch: Vec<Vec<u32>> = Vec::with_capacity(d.batch);
@@ -282,17 +275,10 @@ pub fn greedy_decode_recompute(
     Ok((tokens, logps))
 }
 
-/// Greedy pick from one logits row: the argmax token (first index on
-/// ties) and its log-prob.
-pub fn argmax_logp(row: &[f32]) -> (u32, f32) {
-    let mut best = 0usize;
-    for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
-        }
-    }
-    (best as u32, row_logp(row, best as u32))
-}
+// Greedy token selection lives with the sampling code now; re-exported
+// here because every decode path in this module is defined in terms of
+// it (ties deterministically break toward the lowest token id).
+pub use crate::engine::sampling::argmax_logp;
 
 /// Production scorer: a forward artifact on the PJRT runtime. The
 /// per-call bindings (weights, adapters) are captured once; only the token
@@ -331,9 +317,9 @@ impl Scorer for HloScorer<'_> {
     }
 
     /// The artifact is lowered for one exact `[batch, seq]` — `score_all`
-    /// must pad for it.
-    fn fixed_geometry(&self) -> bool {
-        true
+    /// must pad for it; no incremental execution.
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::fixed()
     }
 
     fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
@@ -395,12 +381,8 @@ impl Scorer for NativeScorer {
         Ok(batch.iter().zip(&logits).map(|(seq, lg)| token_logp(lg, seq)).collect())
     }
 
-    fn supports_prefix_reuse(&self) -> bool {
-        true
-    }
-
-    fn supports_cache(&self) -> bool {
-        true
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::incremental()
     }
 
     fn cache_forward(&self, new_tokens: &[u32], cache: &mut KvCache) -> Result<Mat> {
@@ -523,12 +505,8 @@ impl Scorer for BackendScorer {
         Ok(batch.iter().zip(&logits).map(|(seq, lg)| token_logp(lg, seq)).collect())
     }
 
-    fn supports_prefix_reuse(&self) -> bool {
-        true
-    }
-
-    fn supports_cache(&self) -> bool {
-        true
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::incremental()
     }
 
     fn cache_forward(&self, new_tokens: &[u32], cache: &mut KvCache) -> Result<Mat> {

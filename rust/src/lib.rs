@@ -55,27 +55,45 @@
 //! and to the dequant oracle. Rotation/VQ quantizers (QuaRot, QuIP#)
 //! carry no scalar codes and therefore only run `dense`/`merged`.
 //!
-//! ## Serving (continuous batching)
+//! ## Serving: the request-lifecycle engine
 //!
-//! On top of the engines sits the native serving stack — ragged requests
-//! in, coalesced forwards out, no PAD-dummy filler anywhere:
+//! On top of the execution backends sits [`engine::Engine`] — the typed
+//! serving surface every workload programs against. Requests are an
+//! explicit lifecycle (no PAD-dummy filler anywhere):
 //!
 //! ```text
-//!   clients ──submit──▶ bounded queue (backpressure, sync_channel)
-//!                            │  coordinator::serve::Server
-//!                            ▼
-//!                greedy coalesce ≤ max_batch ragged requests
-//!                            │
-//!                            ▼
-//!        eval::Scorer::score_batch (BackendScorer: one
-//!        model::forward::forward_trace_batch over [Σ lenᵢ, d] —
-//!        every LinearBackend::forward runs once per layer for the
-//!        whole batch; packed group tiles decode once per row-chunk)
-//!                            │
-//!                            ▼
-//!        per-request logp answers + coordinator::Metrics
-//!        (serve.requests / batches / tokens / latency / forward)
+//!   EngineClient::submit(Request)          Engine loop (per replica,
+//!     Score    { tokens }                   placed by engine::Dispatch)
+//!     Choices  { prompt, choices }         ───────────────────────────
+//!     Generate { prompt, SamplingParams }   1 intake: validate, split
+//!        │  bounded queue (backpressure)      ├▶ score/choices queue
+//!        └────────────────────────────────▶   └▶ gen waiting queue
+//!                                            2 promote gens while KV
+//!   answers flow back:                         slots free (≤ max_active
+//!     Pending<Response>::wait /                resident KvCaches)
+//!       wait_timeout(dur)                    3 score: ONE coalesced
+//!     TokenStream (per-token events            score_batch ≤ max_batch
+//!       while Generate runs)                 4 step: ONE fused forward —
+//!                                              decode seqs feed their
+//!   capabilities consulted once via            last token, prefilling
+//!   eval::Scorer::caps() → EngineCaps          seqs their next
+//!   (fixed_geometry / incremental /            prefill_chunk tokens
+//!    prefix_reuse) — no boolean probing      5 repeat: new traffic is
+//!                                              admitted BETWEEN steps
 //! ```
+//!
+//! Two properties fall out of the round structure: score traffic queued
+//! behind long generations is served between decode iterations (no
+//! head-of-line blocking when every decode slot is busy), and long
+//! prompts prefill in `prefill_chunk` slices so one request can't
+//! monopolize an iteration. Greedy generation (`SamplingParams::greedy`)
+//! is bitwise-identical to [`eval::greedy_decode`]; temperature /
+//! top-k / top-p sampling is seeded and reproducible
+//! ([`engine::sampling`]). Scoring forwards coalesce exactly as before:
+//! one [`model::forward::forward_trace_batch`] over `[Σ lenᵢ, d]`, so
+//! the packed group-tile dequant amortizes across the batch. The
+//! pre-engine `coordinator::serve::ServeClient` verbs survive as
+//! deprecated shims.
 //!
 //! The matmul/packed kernels fan out on a **persistent worker pool**
 //! ([`tensor::pool`], dispatch ≈ a condvar wakeup instead of a per-call
@@ -105,21 +123,21 @@
 //!   prefilled exactly once     └──▶ ...               once per item)
 //! ```
 //!
-//! The serve loop schedules decode traffic too ([`ServeClient::generate`]
-//! → greedy generation): freshly admitted prompts prefill as one
-//! coalesced batch, then all active sequences advance **one token per
-//! iteration in lockstep round-robin** — each step is a single
-//! `[n_active, d_model]` forward, so the packed group-tile dequant keeps
-//! amortizing. At most `ServeConfig::max_active` KV caches are resident;
-//! while the slots are full the loop stops draining the bounded queue, so
-//! backpressure reaches submitters (cache-capacity accounting). Latency
-//! p50/p95, queue-depth, and KV-residency gauges land in
+//! The engine schedules decode traffic over the same cache machinery
+//! ([`engine::EngineClient::generate`]): admitted prompts enter the KV
+//! cache in `prefill_chunk` slices, then every active sequence advances
+//! **one token per scheduler step** — each step is a single fused
+//! `[Σ newᵢ, d_model]` forward mixing prefill chunks and decode tokens,
+//! so the packed group-tile dequant keeps amortizing. At most
+//! `EngineConfig::max_active` KV caches are resident per replica (the
+//! placement constraint the [`engine::Dispatch`] seam balances across
+//! replicas); excess generations wait in their own queue so score
+//! traffic is never head-of-line blocked behind them. Latency p50/p95,
+//! queue-depth, KV-residency, and gen-backlog gauges land in
 //! [`coordinator::Metrics`]; `rilq serve-bench` and `cargo bench --bench
 //! bench_runtime` report prefill-vs-incremental tok/s, and
-//! `tests/kv_cache.rs` pins incremental == full-forward logits.
-//!
-//! [`ServeClient::generate`]: coordinator::serve::ServeClient::generate
-//! [`ServeConfig::max_active`]: coordinator::serve::ServeConfig::max_active
+//! `tests/kv_cache.rs` + `tests/engine_api.rs` pin incremental ==
+//! full-forward logits and engine greedy == `greedy_decode`.
 
 // Clippy style-lint allowances for the numeric kernels live in
 // Cargo.toml's `[lints.clippy]` table so they cover tests/benches too.
@@ -129,6 +147,7 @@ pub mod quant;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod eval;
 pub mod experiments;
 pub mod lqec;

@@ -8,9 +8,10 @@
 //!                    [--backend={dense|packed|merged}]
 //!                                   quantize+compensate+evaluate one cell
 //! rilq serve-bench [--backend=packed --batch=8 --requests=64 --seq=64
-//!                   --gen=N]
-//!                                   continuous-batching serving + KV-cache
-//!                                   decode benchmark (native, PJRT-free)
+//!                   --gen=N --sample --stream --smoke]
+//!                                   request-lifecycle engine benchmark:
+//!                                   continuous batching, KV-cache decode,
+//!                                   sampling + streaming (native, PJRT-free)
 //! rilq inspect                      print manifest / artifact inventory
 //! ```
 
@@ -18,6 +19,7 @@ use anyhow::{anyhow, Result};
 
 use rilq::cli::Args;
 use rilq::coordinator::{probe_decode, probe_throughput};
+use rilq::engine::{Engine, EngineConfig, SamplingParams, TokenEvent};
 use rilq::eval::BackendScorer;
 use rilq::experiments::pipeline::Lab;
 use rilq::experiments::{catalog, run_experiment};
@@ -148,29 +150,32 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 /// Native, PJRT-free serving benchmark: per-sequence scoring vs the
-/// continuous-batching serve loop over the same `BackendScorer`.
+/// request-lifecycle engine over the same `BackendScorer`, plus decode
+/// and (with `--sample`/`--stream`) sampled/streamed generation
+/// sections. `--smoke` shrinks the geometry to a CI-sized sanity run.
 fn serve_bench(args: &Args) -> Result<()> {
     // serving defaults to the packed W2A16 engine; --backend overrides
     let backend = match args.opt("backend") {
         Some(s) => BackendKind::parse(s)?,
         None => BackendKind::Packed,
     };
+    let smoke = args.flag("smoke");
     let bits = args.opt_usize("bits")?.unwrap_or(2) as u8;
     let max_batch = args.opt_usize("batch")?.unwrap_or(8).max(1);
-    let n_requests = args.opt_usize("requests")?.unwrap_or(64).max(1);
-    let seq = args.opt_usize("seq")?.unwrap_or(64).max(2);
-    let n_layers = args.opt_usize("layers")?.unwrap_or(4).max(1);
-    let rank = args.opt_usize("rank")?.unwrap_or(8);
+    let n_requests = args.opt_usize("requests")?.unwrap_or(if smoke { 12 } else { 64 }).max(1);
+    let seq = args.opt_usize("seq")?.unwrap_or(if smoke { 16 } else { 64 }).max(2);
+    let n_layers = args.opt_usize("layers")?.unwrap_or(if smoke { 2 } else { 4 }).max(1);
+    let rank = args.opt_usize("rank")?.unwrap_or(if smoke { 2 } else { 8 });
     let dims = ModelDims {
         name: "serve-bench".into(),
-        d_model: args.opt_usize("dmodel")?.unwrap_or(256),
+        d_model: args.opt_usize("dmodel")?.unwrap_or(if smoke { 64 } else { 256 }),
         n_layers,
         n_heads: 8,
-        d_ff: args.opt_usize("dff")?.unwrap_or(512),
-        vocab: 512,
+        d_ff: args.opt_usize("dff")?.unwrap_or(if smoke { 128 } else { 512 }),
+        vocab: if smoke { 128 } else { 512 },
         seq,
         batch: max_batch,
-        group_size: 64,
+        group_size: if smoke { 32 } else { 64 },
     };
 
     let mut rng = Rng::seed(0x5e7e);
@@ -252,6 +257,65 @@ fn serve_bench(args: &Args) -> Result<()> {
         "decode speedup: {:.2}x (prefill + incremental steps vs quadratic recompute)",
         dprobe.speedup()
     );
+
+    // sampling/streaming section: generation traffic through the typed
+    // engine API, with a seeded-determinism cross-check
+    if args.flag("sample") || args.flag("stream") {
+        let sampled = args.flag("sample");
+        let params = SamplingParams {
+            max_new: gen,
+            temperature: if sampled { 0.8 } else { 0.0 },
+            top_k: if sampled { 16 } else { 0 },
+            top_p: if sampled { 0.95 } else { 1.0 },
+            seed: Some(0xa11ce),
+            stop: Vec::new(),
+        };
+        let engine = Engine::start_shared(
+            scorer.clone(),
+            EngineConfig {
+                max_batch,
+                queue_capacity: max_batch * 2,
+                max_active: max_batch,
+                prefill_chunk: (seq / 4).max(1),
+            },
+        );
+        let client = engine.client();
+        let mut rng = Rng::seed(0x5a3);
+        let prompts: Vec<Vec<u32>> = (0..4)
+            .map(|_| (0..prompt_len).map(|_| rng.below(dims.vocab) as u32).collect())
+            .collect();
+        let t0 = std::time::Instant::now();
+        // one generation streams token-by-token, the rest run concurrently
+        let (stream, first) = client.generate_stream(prompts[0].clone(), params.clone())?;
+        let rest: Vec<_> = prompts[1..]
+            .iter()
+            .map(|p| client.generate(p.clone(), params.clone()))
+            .collect::<Result<_>>()?;
+        let streamed: Vec<TokenEvent> = stream.collect();
+        let got = first.wait()?;
+        let mut n_tokens = got.tokens.len();
+        for p in rest {
+            n_tokens += p.wait()?.tokens.len();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        if streamed.iter().map(|e| e.token).collect::<Vec<_>>() != got.tokens {
+            return Err(anyhow!("streamed tokens diverged from the collected generation"));
+        }
+        // same seed, same prompt => identical generation
+        let replay = client.generate(prompts[0].clone(), params.clone())?.wait()?;
+        if replay.tokens != got.tokens {
+            return Err(anyhow!("seeded sampling did not replay deterministically"));
+        }
+        let summary = engine.shutdown();
+        println!(
+            "{} via engine: {} generations, {n_tokens} tokens in {secs:.3}s \
+             ({:.0} tok/s); streamed == collected, seeded replay identical",
+            if sampled { "sampled decode (T=0.8, top-k 16, top-p 0.95)" } else { "greedy decode" },
+            prompts.len(),
+            n_tokens as f64 / secs.max(1e-12)
+        );
+        println!("  {summary}");
+    }
     Ok(())
 }
 
@@ -270,14 +334,19 @@ USAGE:
                                       packed = fused packed-2-bit + LoRA serving engine
                                       merged = adapter-merged dense (parity oracle)
   rilq serve-bench [--backend={dense|packed|merged} --bits=2 --batch=8
-                    --requests=64 --seq=64 --layers=4 --rank=8 --gen=N]
-                                      native continuous-batching serving
-                                      benchmark: per-sequence vs coalesced
-                                      ragged batches on one BackendScorer,
-                                      plus a KV-cache decode section
-                                      (prefill-once + incremental steps vs
-                                      quadratic full recompute; --gen sets
-                                      the generation length)
+                    --requests=64 --seq=64 --layers=4 --rank=8 --gen=N
+                    --sample --stream --smoke]
+                                      native engine serving benchmark:
+                                      per-sequence vs coalesced ragged
+                                      batches on one BackendScorer, a
+                                      KV-cache decode section (prefill-once
+                                      + incremental steps vs quadratic full
+                                      recompute; --gen sets the generation
+                                      length), and with --sample/--stream a
+                                      sampled (T/top-k/top-p, seeded) or
+                                      token-streamed generation section
+                                      through the typed Engine API;
+                                      --smoke shrinks geometry for CI
                                       (PJRT-free; no artifacts needed)
   rilq inspect                        artifact / config inventory
   (global) --artifacts=DIR            artifact directory [default: artifacts]

@@ -449,6 +449,44 @@ pub fn forward_step(
     Ok(lg.row(0).to_vec())
 }
 
+/// Chunked prefill: feed `tokens` into the cache in `chunk`-sized slices
+/// instead of one monolithic forward, returning the full `[len, V]`
+/// logits. Slicing a long prompt bounds the rows any one forward call
+/// touches, so prefill work can interleave with other traffic. Every
+/// kernel in the cached forward is row-independent, so the result is
+/// **bitwise identical** to a one-shot [`forward_trace_with_cache`] of
+/// the whole prompt — the property pinned by the unit test here.
+///
+/// This is the single-sequence *reference* for that equivalence and the
+/// entry point for callers prefilling one cache at a time. The engine
+/// scheduler itself slices per sequence inside its fused multi-sequence
+/// step (`engine::core`), feeding each chunk through
+/// [`forward_batch_with_cache`]; that serving path is pinned against
+/// the one-shot greedy decode end-to-end in `tests/engine_api.rs`. If
+/// chunk-boundary semantics ever change, change both (and the tests
+/// will catch a drift).
+pub fn forward_prefill_chunked(
+    dims: &ModelDims,
+    w: &WeightView<'_>,
+    tokens: &[u32],
+    cache: &mut KvCache,
+    chunk: usize,
+) -> Result<Mat> {
+    ensure!(chunk >= 1, "prefill chunk size must be at least 1 token");
+    // validate the whole prompt up front so an `Err` never leaves the
+    // cache partially extended
+    check_cache_step(dims, cache, tokens, 0)?;
+    let mut out = Mat::zeros(tokens.len(), dims.vocab);
+    let mut done = 0usize;
+    while done < tokens.len() {
+        let end = (done + chunk).min(tokens.len());
+        let lg = forward_trace_with_cache(dims, w, &tokens[done..end], cache)?;
+        out.set_block(done, 0, &lg);
+        done = end;
+    }
+    Ok(out)
+}
+
 /// Batched incremental forward over several independent sequences: the
 /// active sequences' new tokens are coalesced into **one**
 /// `[Σ new_i, d_model]` activation matrix per linear — the packed
@@ -811,6 +849,36 @@ mod tests {
             }
         }
         assert_eq!(cache.len(), d.seq);
+    }
+
+    #[test]
+    fn chunked_prefill_is_bitwise_identical_to_one_shot() {
+        let d = dims();
+        let mut rng = Rng::seed(109);
+        let p = TeacherParams::init(&d, &mut rng);
+        let view = p.view();
+        let tokens: Vec<u32> = (0..11).map(|_| rng.below(32) as u32).collect();
+        let mut one_shot = super::KvCache::new(&d);
+        let want = forward_trace_with_cache(&d, &view, &tokens, &mut one_shot).unwrap();
+        for chunk in [1usize, 3, 4, 11, 64] {
+            let mut cache = super::KvCache::new(&d);
+            let got = forward_prefill_chunked(&d, &view, &tokens, &mut cache, chunk).unwrap();
+            assert_eq!(cache.len(), tokens.len());
+            assert_eq!(got.shape(), want.shape());
+            for r in 0..tokens.len() {
+                for c in 0..d.vocab {
+                    assert!(
+                        got[(r, c)].to_bits() == want[(r, c)].to_bits(),
+                        "chunk {chunk}: row {r} col {c} not bitwise identical"
+                    );
+                }
+            }
+        }
+        // over-window prompt: Err before the cache is touched
+        let mut cache = super::KvCache::new(&d);
+        let long: Vec<u32> = (0..d.seq + 1).map(|_| rng.below(32) as u32).collect();
+        assert!(forward_prefill_chunked(&d, &view, &long, &mut cache, 4).is_err());
+        assert_eq!(cache.len(), 0);
     }
 
     #[test]

@@ -1,20 +1,24 @@
-//! Integration tests for the continuous-batching serve loop
-//! (`coordinator::serve`): ragged request mixes are answered correctly
-//! with no PAD-dummy forwards, coalescing actually happens under load,
-//! bad requests don't poison their batchmates, shutdown drains, and the
-//! KV-cache decode mode (prefill + lockstep round-robin steps) matches
-//! the single-stream greedy decode while respecting its cache-slot
-//! budget.
+//! Integration tests for the request-lifecycle engine
+//! (`rilq::engine`): ragged scoring mixes are answered correctly with no
+//! PAD-dummy forwards, coalescing happens under load, bad requests don't
+//! poison their batchmates, shutdown drains, decode scheduling (chunked
+//! prefill + lockstep steps) matches single-stream greedy decode, score
+//! traffic is admitted *between* decode iterations (no head-of-line
+//! blocking behind full decode slots), `wait_timeout` fails fast on a
+//! wedged worker, and the deprecated `ServeClient` shims still serve.
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 use rilq::coordinator::{ServeConfig, Server};
+use rilq::engine::{Engine, EngineCaps, EngineConfig, RoundRobin, SamplingParams};
 use rilq::eval::{greedy_decode, BackendScorer, Scorer};
 use rilq::model::backend::BackendKind;
+use rilq::model::kv::KvCache;
 use rilq::model::{ModelDims, StudentWeights, TeacherParams};
 use rilq::quant::{by_name, CalibCtx};
-use rilq::tensor::Rng;
+use rilq::tensor::{Mat, Rng};
 
 fn dims() -> ModelDims {
     ModelDims {
@@ -58,27 +62,27 @@ fn ragged_mix_every_request_answered_no_pad_waste() {
     let want = scorer.score_all(&requests).unwrap();
     let total_tokens: usize = lens.iter().sum();
 
-    let server = Server::start_shared(
+    let engine = Engine::start_shared(
         scorer.clone(),
-        ServeConfig { max_batch: 4, queue_capacity: 8, max_active: 4 },
+        EngineConfig { max_batch: 4, queue_capacity: 8, max_active: 4, prefill_chunk: 8 },
     );
     // 3 client threads, 4 requests each
     let answers: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..3)
             .map(|c| {
-                let client = server.client();
+                let client = engine.client();
                 let chunk: Vec<Vec<u32>> = requests[c * 4..(c + 1) * 4].to_vec();
                 s.spawn(move || {
                     chunk
                         .into_iter()
-                        .map(|r| client.score(r).unwrap())
+                        .map(|r| client.score(r).unwrap().wait().unwrap())
                         .collect::<Vec<_>>()
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
-    let summary = server.shutdown();
+    let summary = engine.shutdown();
 
     for (c, got) in answers.iter().enumerate() {
         for (k, logp) in got.iter().enumerate() {
@@ -101,23 +105,23 @@ fn ragged_mix_every_request_answered_no_pad_waste() {
 
 /// Malformed requests — over the window, or carrying an out-of-vocab
 /// token id (which would index past the embedding table) — are answered
-/// with `Err` without killing the serve thread or poisoning the valid
-/// requests around them.
+/// with `Err` at admission without killing the engine or poisoning the
+/// valid requests around them.
 #[test]
 fn malformed_requests_err_alone() {
     let scorer = packed_scorer(43);
     let d = scorer.dims().clone();
     let mut rng = Rng::seed(44);
-    let server = Server::start_shared(scorer, ServeConfig::default());
-    let client = server.client();
+    let engine = Engine::start_shared(scorer, EngineConfig::default());
+    let client = engine.client();
 
     let good: Vec<u32> = (0..8).map(|_| rng.below(d.vocab) as u32).collect();
     let too_long: Vec<u32> = (0..d.seq + 5).map(|_| rng.below(d.vocab) as u32).collect();
     let bad_token: Vec<u32> = vec![d.vocab as u32, 0, 1];
-    let p1 = client.submit(good.clone()).unwrap();
-    let p2 = client.submit(too_long).unwrap();
-    let p3 = client.submit(bad_token).unwrap();
-    let p4 = client.submit(good).unwrap();
+    let p1 = client.score(good.clone()).unwrap();
+    let p2 = client.score(too_long).unwrap();
+    let p3 = client.score(bad_token).unwrap();
+    let p4 = client.score(good).unwrap();
     assert_eq!(p1.wait().unwrap().len(), 7);
     let err = p2.wait().unwrap_err();
     assert!(format!("{err}").contains("window"), "{err}");
@@ -127,14 +131,15 @@ fn malformed_requests_err_alone() {
     assert_eq!(p4.wait().unwrap().len(), 7);
 
     drop(client);
-    let summary = server.shutdown();
+    let summary = engine.shutdown();
     assert_eq!(summary.errors, 2.0);
     assert_eq!(summary.requests, 2.0);
 }
 
 /// Gate scorer: blocks inside `score_batch` until opened, recording the
 /// batch sizes the loop hands it — lets the test pin coalescing behavior
-/// deterministically.
+/// deterministically. Implements only the ragged-batch surface, so its
+/// caps are the trait default (no cache, no prefix reuse).
 struct GateScorer {
     dims: ModelDims,
     state: Mutex<GateState>,
@@ -196,23 +201,23 @@ impl Scorer for GateScorer {
 #[test]
 fn queued_requests_coalesce_up_to_max_batch() {
     let gate = Arc::new(GateScorer::new(dims()));
-    let server = Server::start_shared(
+    let engine = Engine::start_shared(
         gate.clone(),
-        ServeConfig { max_batch: 4, queue_capacity: 16, max_active: 4 },
+        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 4, prefill_chunk: 8 },
     );
-    let client = server.client();
+    let client = engine.client();
 
-    let p0 = client.submit(vec![1, 2, 3]).unwrap();
+    let p0 = client.score(vec![1, 2, 3]).unwrap();
     gate.wait_entered(1); // loop is now blocked inside the first forward
     let pending: Vec<_> =
-        (0..7).map(|_| client.submit(vec![1, 2, 3, 4]).unwrap()).collect();
+        (0..7).map(|_| client.score(vec![1, 2, 3, 4]).unwrap()).collect();
     gate.open();
     assert_eq!(p0.wait().unwrap().len(), 2);
     for p in pending {
         assert_eq!(p.wait().unwrap().len(), 3);
     }
     drop(client);
-    let summary = server.shutdown();
+    let summary = engine.shutdown();
 
     let sizes = gate.batch_sizes();
     assert_eq!(sizes.iter().sum::<usize>(), 8);
@@ -228,36 +233,54 @@ fn queued_requests_coalesce_up_to_max_batch() {
     assert!((summary.mean_occupancy - 8.0 / sizes.len() as f64).abs() < 1e-9);
 }
 
-/// Dropping the server drains requests already queued (graceful
+/// A pending answer can be bounded in time: a worker wedged inside the
+/// model must surface as a fast `Err`, not a hung test.
+#[test]
+fn wait_timeout_fails_fast_on_wedged_worker() {
+    let gate = Arc::new(GateScorer::new(dims()));
+    let engine = Engine::start_shared(gate.clone(), EngineConfig::default());
+    let client = engine.client();
+    let p = client.score(vec![1, 2, 3]).unwrap();
+    gate.wait_entered(1); // the loop is now stuck inside score_batch
+    let err = p.wait_timeout(Duration::from_millis(50)).unwrap_err();
+    assert!(format!("{err}").contains("within"), "{err}");
+    // a timeout consumes nothing: unwedge and the answer still arrives
+    gate.open();
+    assert_eq!(p.wait_timeout(Duration::from_secs(30)).unwrap().len(), 2);
+    drop(client);
+    engine.shutdown();
+}
+
+/// Dropping the engine drains requests already queued (graceful
 /// shutdown), and later submissions err instead of hanging.
 #[test]
 fn shutdown_drains_queued_requests() {
     let scorer = packed_scorer(45);
     let d = scorer.dims().clone();
     let mut rng = Rng::seed(46);
-    let server = Server::start_shared(
+    let engine = Engine::start_shared(
         scorer,
-        ServeConfig { max_batch: 2, queue_capacity: 16, max_active: 2 },
+        EngineConfig { max_batch: 2, queue_capacity: 16, max_active: 2, prefill_chunk: 8 },
     );
-    let client = server.client();
+    let client = engine.client();
     let pendings: Vec<_> = (0..6)
         .map(|_| {
             let seq: Vec<u32> = (0..10).map(|_| rng.below(d.vocab) as u32).collect();
-            client.submit(seq).unwrap()
+            client.score(seq).unwrap()
         })
         .collect();
-    let summary = server.shutdown(); // queues the sentinel behind the 6 requests
+    let summary = engine.shutdown(); // queues the sentinel behind the 6 requests
     for p in pendings {
         assert_eq!(p.wait().unwrap().len(), 9);
     }
     assert_eq!(summary.requests, 6.0);
     // the loop is gone: a late submission must err, not hang
-    assert!(client.submit(vec![1, 2]).is_err() || client.score(vec![1, 2]).is_err());
+    assert!(client.score(vec![1, 2]).is_err());
 }
 
-/// Decode mode: generate requests answered through the lockstep
-/// round-robin scheduler match the single-stream greedy decode bit for
-/// bit, and the decode metrics/gauges report the scheduler's behavior.
+/// Decode mode: generate requests answered through the chunked-prefill +
+/// lockstep scheduler match the single-stream greedy decode bit for bit,
+/// and the decode metrics/gauges report the scheduler's behavior.
 #[test]
 fn generate_requests_match_single_stream_decode() {
     let scorer = packed_scorer(47);
@@ -273,25 +296,30 @@ fn generate_requests_match_single_stream_decode() {
         .map(|p| greedy_decode(scorer.as_ref(), p, max_new).unwrap())
         .collect();
 
-    // max_active 2 < 5 requests: slots must recycle across generations
-    let server = Server::start_shared(
+    // max_active 2 < 5 requests: slots must recycle across generations;
+    // prefill_chunk 3 < the longest prompt: chunked prefill must replay
+    // the one-shot prefill bitwise
+    let engine = Engine::start_shared(
         scorer.clone(),
-        ServeConfig { max_batch: 4, queue_capacity: 16, max_active: 2 },
+        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 2, prefill_chunk: 3 },
     );
-    let client = server.client();
+    let client = engine.client();
     let pendings: Vec<_> = prompts
         .iter()
-        .map(|p| client.generate(p.clone(), max_new).unwrap())
+        .map(|p| client.generate(p.clone(), SamplingParams::greedy(max_new)).unwrap())
         .collect();
     let answers: Vec<_> = pendings.into_iter().map(|p| p.wait().unwrap()).collect();
     drop(client);
-    let summary = server.shutdown();
+    let summary = engine.shutdown();
 
     for (k, (got, (toks, lps))) in answers.iter().zip(&want).enumerate() {
         assert_eq!(&got.tokens, toks, "request {k}: decode diverged");
         assert_eq!(got.logps.len(), lps.len());
         for (a, b) in got.logps.iter().zip(lps) {
-            assert!((a - b).abs() < 1e-5, "request {k}: {a} vs {b}");
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "request {k}: logp not bitwise identical ({a} vs {b})"
+            );
         }
     }
     assert_eq!(summary.gen_requests as usize, prompts.len());
@@ -311,33 +339,148 @@ fn generate_requests_match_single_stream_decode() {
         summary.kv_bytes_peak,
         2.0 * cache_bytes
     );
-    assert!(summary.latency_p95_secs >= summary.latency_p50_secs);
-    assert!(summary.latency_p50_secs >= 0.0);
+    assert!(summary.latency_p95_secs.unwrap() >= summary.latency_p50_secs.unwrap());
+    assert!(summary.latency_p50_secs.unwrap() >= 0.0);
     assert_eq!(summary.errors, 0.0);
 }
 
-/// A generate request that cannot fit its budget in the model window is
-/// answered with `Err` at admission without poisoning concurrent scoring
-/// or decode traffic (mixed-workload loop survival).
+/// Step scorer: a fake cache-capable backend that logs every scheduler
+/// call, so tests can pin *when* the engine serves score traffic
+/// relative to decode steps.
+struct StepScorer {
+    dims: ModelDims,
+    state: Mutex<Vec<&'static str>>,
+    cv: Condvar,
+}
+
+impl StepScorer {
+    fn new(dims: ModelDims) -> StepScorer {
+        StepScorer { dims, state: Mutex::new(Vec::new()), cv: Condvar::new() }
+    }
+
+    fn log(&self, ev: &'static str) {
+        self.state.lock().unwrap().push(ev);
+        self.cv.notify_all();
+    }
+
+    fn wait_steps(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.iter().filter(|&&e| e == "step").count() < n {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn events(&self) -> Vec<&'static str> {
+        self.state.lock().unwrap().clone()
+    }
+}
+
+impl Scorer for StepScorer {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::incremental()
+    }
+
+    fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        self.log("score");
+        Ok(batch
+            .iter()
+            .map(|s| vec![-1.0; s.len().saturating_sub(1)])
+            .collect())
+    }
+
+    fn cache_forward_batch(
+        &self,
+        news: &[Vec<u32>],
+        _caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Mat>> {
+        self.log("step");
+        Ok(news.iter().map(|n| Mat::zeros(n.len(), self.dims.vocab)).collect())
+    }
+}
+
+/// Acceptance: a short score request submitted while a long generation
+/// holds every decode slot is served BETWEEN its decode iterations —
+/// the admission scheduler no longer head-of-line blocks intake when
+/// `max_active` is saturated.
+#[test]
+fn score_completes_while_long_generation_holds_decode_slots() {
+    let d = ModelDims {
+        name: "interleave".into(),
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 16,
+        seq: 64,
+        batch: 4,
+        group_size: 8,
+    };
+    let fake = Arc::new(StepScorer::new(d));
+    let engine = Engine::start_shared(
+        fake.clone(),
+        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 1, prefill_chunk: 4 },
+    );
+    let client = engine.client();
+
+    // one long generation occupies the only decode slot for ~48 steps
+    let gen = client.generate(vec![1, 2], SamplingParams::greedy(48)).unwrap();
+    fake.wait_steps(2);
+    // submitted mid-generation: must be answered without waiting for it
+    let score = client.score(vec![1, 2, 3]).unwrap();
+    let logp = score
+        .wait_timeout(Duration::from_secs(30))
+        .expect("score request head-of-line blocked behind a long generation");
+    assert_eq!(logp.len(), 2);
+    let g = gen.wait().unwrap();
+    assert_eq!(g.tokens.len(), 48);
+    drop(client);
+    engine.shutdown();
+
+    let ev = fake.events();
+    let score_at = ev.iter().position(|&e| e == "score").expect("score never ran");
+    let last_step = ev.iter().rposition(|&e| e == "step").unwrap();
+    assert!(
+        score_at < last_step,
+        "score was served only after the generation finished: {ev:?}"
+    );
+    assert!(
+        ev[..score_at].iter().filter(|&&e| e == "step").count() >= 2,
+        "score was served before any decode step happened: {ev:?}"
+    );
+}
+
+/// A generate request that cannot fit its budget in the model window —
+/// or carries malformed sampling params — is answered with `Err` at
+/// admission without poisoning concurrent scoring or decode traffic.
 #[test]
 fn over_window_generation_errs_alone() {
     let scorer = packed_scorer(49);
     let d = scorer.dims().clone();
     let mut rng = Rng::seed(50);
-    let server = Server::start_shared(
+    let engine = Engine::start_shared(
         scorer.clone(),
-        ServeConfig { max_batch: 4, queue_capacity: 16, max_active: 2 },
+        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 2, prefill_chunk: 8 },
     );
-    let client = server.client();
+    let client = engine.client();
 
     let prompt: Vec<u32> = (0..6).map(|_| rng.below(d.vocab) as u32).collect();
     let score_seq: Vec<u32> = (0..9).map(|_| rng.below(d.vocab) as u32).collect();
-    let p_good = client.generate(prompt.clone(), 4).unwrap();
+    let p_good = client.generate(prompt.clone(), SamplingParams::greedy(4)).unwrap();
     // 6 prompt + (seq) new - 1 > seq: rejected at admission
-    let p_over = client.generate(prompt.clone(), d.seq).unwrap();
-    let p_empty = client.generate(Vec::new(), 3).unwrap();
-    let p_zero = client.generate(prompt.clone(), 0).unwrap();
-    let p_score = client.submit(score_seq).unwrap();
+    let p_over = client.generate(prompt.clone(), SamplingParams::greedy(d.seq)).unwrap();
+    let p_empty = client.generate(Vec::new(), SamplingParams::greedy(3)).unwrap();
+    let p_zero = client.generate(prompt.clone(), SamplingParams::greedy(0)).unwrap();
+    let p_nan = client
+        .generate(
+            prompt.clone(),
+            SamplingParams { temperature: f32::NAN, ..SamplingParams::greedy(2) },
+        )
+        .unwrap();
+    let p_score = client.score(score_seq).unwrap();
 
     let good = p_good.wait().unwrap();
     assert_eq!(good.tokens.len(), 4);
@@ -347,28 +490,98 @@ fn over_window_generation_errs_alone() {
     assert!(format!("{err}").contains("non-empty"), "{err}");
     let zero = p_zero.wait().unwrap();
     assert!(zero.tokens.is_empty() && zero.logps.is_empty());
+    let err = p_nan.wait().unwrap_err();
+    assert!(format!("{err}").contains("temperature"), "{err}");
     assert_eq!(p_score.wait().unwrap().len(), 8);
 
     drop(client);
-    let summary = server.shutdown();
-    assert_eq!(summary.errors, 2.0);
+    let summary = engine.shutdown();
+    assert_eq!(summary.errors, 3.0);
     // the zero-budget generation counts as answered, not errored
     assert_eq!(summary.gen_requests, 2.0);
     assert_eq!(summary.requests, 1.0);
 }
 
-/// A scorer without KV-cache support (the fixed-geometry HLO shape,
-/// simulated by GateScorer's defaults) must reject generate requests
-/// with a clear error instead of wedging the loop.
+/// A scorer without KV-cache support (caps without `incremental`, e.g.
+/// the fixed-geometry HLO shape) must reject generate requests with a
+/// clear error instead of wedging the loop.
 #[test]
 fn generate_on_cacheless_scorer_errs() {
     let gate = Arc::new(GateScorer::new(dims()));
-    let server = Server::start_shared(gate, ServeConfig::default());
-    let client = server.client();
-    let err = client.generate(vec![1, 2, 3], 4).unwrap().wait().unwrap_err();
+    gate.open(); // scoring stays live; only generate is rejected
+    let engine = Engine::start_shared(gate, EngineConfig::default());
+    let client = engine.client();
+    let err = client
+        .generate(vec![1, 2, 3], SamplingParams::greedy(4))
+        .unwrap()
+        .wait()
+        .unwrap_err();
     assert!(format!("{err}").contains("KV-cache"), "{err}");
     drop(client);
-    let summary = server.shutdown();
+    let summary = engine.shutdown();
     assert_eq!(summary.errors, 1.0);
     assert_eq!(summary.gen_requests, 0.0);
+}
+
+/// Two replicas behind a round-robin dispatcher: every request is
+/// answered correctly and the shared metrics sink aggregates the fleet.
+#[test]
+fn sharded_engine_round_robin_serves_all_requests() {
+    let a = packed_scorer(51);
+    let b = packed_scorer(51); // same seed => identical weights
+    let d = a.dims().clone();
+    let mut rng = Rng::seed(52);
+    let requests: Vec<Vec<u32>> = (0..8)
+        .map(|_| (0..10).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+    let want = a.score_all(&requests).unwrap();
+
+    let replicas: Vec<Arc<dyn Scorer + Send + Sync>> = vec![a, b];
+    let engine =
+        Engine::start_sharded(replicas, EngineConfig::default(), Arc::new(RoundRobin::new()));
+    assert_eq!(engine.n_replicas(), 2);
+    let client = engine.client();
+    let pendings: Vec<_> = requests.iter().map(|r| client.score(r.clone()).unwrap()).collect();
+    for (p, expect) in pendings.into_iter().zip(&want) {
+        let got = p.wait().unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (x, y) in got.iter().zip(expect) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+    drop(client);
+    let summary = engine.shutdown();
+    assert_eq!(summary.requests, 8.0);
+}
+
+/// The pre-engine `Server`/`ServeClient` verbs still compile and serve,
+/// delegating to the engine (deprecation shims).
+#[test]
+#[allow(deprecated)]
+fn deprecated_serve_client_shims_still_serve() {
+    let scorer = packed_scorer(53);
+    let d = scorer.dims().clone();
+    let mut rng = Rng::seed(54);
+    let seq: Vec<u32> = (0..9).map(|_| rng.below(d.vocab) as u32).collect();
+    let prompt: Vec<u32> = (0..4).map(|_| rng.below(d.vocab) as u32).collect();
+    let want_score = scorer.score_all(std::slice::from_ref(&seq)).unwrap();
+    let (want_toks, _) = greedy_decode(scorer.as_ref(), &prompt, 5).unwrap();
+
+    let server = Server::start_shared(
+        scorer,
+        ServeConfig { max_batch: 4, queue_capacity: 8, max_active: 2, prefill_chunk: 4 },
+    );
+    let client = server.client();
+    let got = client.score(seq.clone()).unwrap();
+    assert_eq!(got.len(), want_score[0].len());
+    for (x, y) in got.iter().zip(&want_score[0]) {
+        assert!((x - y).abs() < 1e-5);
+    }
+    let pending = client.submit(seq).unwrap();
+    assert_eq!(pending.wait().unwrap().len(), 8);
+    let gen = client.generate(prompt, 5).unwrap().wait().unwrap();
+    assert_eq!(gen.tokens, want_toks);
+    let summary = server.shutdown();
+    assert_eq!(summary.requests, 2.0);
+    assert_eq!(summary.gen_requests, 1.0);
 }
