@@ -72,12 +72,19 @@ impl Metrics {
     pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
         let t0 = Instant::now();
         let r = f();
-        let dt = t0.elapsed().as_secs_f64();
+        self.timer_add(name, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    /// Add one externally measured duration to a named timer — for call
+    /// sites that need the elapsed value themselves (e.g. the engine
+    /// loop derives a `serve.kernel_gflops` observation from the same
+    /// measurement it books under `serve.forward`).
+    pub fn timer_add(&self, name: &str, secs: f64) {
         let mut g = self.inner.lock().unwrap();
         let e = g.timers.entry(name.to_string()).or_insert((0.0, 0));
-        e.0 += dt;
+        e.0 += secs;
         e.1 += 1;
-        r
     }
 
     pub fn counter(&self, name: &str) -> f64 {

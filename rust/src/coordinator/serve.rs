@@ -147,6 +147,10 @@ pub struct ServeSummary {
     pub decode_steps: f64,
     /// high-water mark of resident KV-cache bytes
     pub kv_bytes_peak: f64,
+    /// median compute rate of the quantized linears across timed
+    /// forwards (GFLOP/s over `ModelDims::linear_flops_per_token` —
+    /// the `serve.kernel_gflops` series; `None` until a forward ran)
+    pub kernel_gflops_p50: Option<f64>,
 }
 
 impl ServeSummary {
@@ -181,6 +185,7 @@ impl ServeSummary {
             prefill_tokens: m.counter("serve.prefill_tokens"),
             decode_steps: m.counter("serve.decode_steps"),
             kv_bytes_peak: m.gauge_peak("serve.kv_bytes"),
+            kernel_gflops_p50: m.percentile("serve.kernel_gflops", 0.5),
         }
     }
 }
@@ -210,6 +215,9 @@ impl std::fmt::Display for ServeSummary {
             self.queue_depth_peak,
             self.errors
         )?;
+        if let Some(g) = self.kernel_gflops_p50 {
+            write!(f, ", kernel {g:.2} GFLOP/s (p50)")?;
+        }
         if self.gen_requests > 0.0 {
             write!(
                 f,
@@ -439,6 +447,21 @@ mod tests {
         // the Display path must render the None percentiles too
         let text = format!("{s}");
         assert!(text.contains("p50 -"), "{text}");
+    }
+
+    #[test]
+    fn summary_reports_kernel_gflops_when_observed() {
+        // None until a timed forward fed the series; then the median
+        // sample surfaces through the summary and its Display line
+        let m = Metrics::new();
+        assert_eq!(ServeSummary::from_metrics(&m).kernel_gflops_p50, None);
+        let empty = format!("{}", ServeSummary::from_metrics(&m));
+        assert!(!empty.contains("GFLOP/s"), "{empty}");
+        m.observe("serve.kernel_gflops", 12.5);
+        let s = ServeSummary::from_metrics(&m);
+        assert_eq!(s.kernel_gflops_p50, Some(12.5));
+        let text = format!("{s}");
+        assert!(text.contains("kernel 12.50 GFLOP/s"), "{text}");
     }
 
     #[test]

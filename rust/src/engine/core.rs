@@ -337,6 +337,17 @@ impl ActiveGen {
     }
 }
 
+/// Record one `serve.kernel_gflops` sample: the compute rate the
+/// quantized linears sustained over a timed forward of `rows` activation
+/// rows (`rows * ModelDims::linear_flops_per_token / secs`). Zero-row or
+/// unmeasurably fast calls are skipped — no sample beats a fabricated
+/// rate (the `Metrics::percentile` None-over-0.0 convention).
+fn observe_gflops(metrics: &Metrics, rows: usize, flops_per_row: f64, secs: f64) {
+    if rows > 0 && secs > 0.0 {
+        metrics.observe("serve.kernel_gflops", rows as f64 * flops_per_row / secs / 1e9);
+    }
+}
+
 fn finish_gen(a: ActiveGen, metrics: &Metrics) {
     metrics.add("serve.gen_requests", 1.0);
     metrics.add("serve.gen_tokens", a.tokens.len() as f64);
@@ -382,6 +393,9 @@ fn engine_loop(
     let chunk = if cfg.prefill_chunk == 0 { usize::MAX } else { cfg.prefill_chunk };
     let dims = scorer.dims().clone();
     let caps = scorer.caps();
+    // numerator of the serve.kernel_gflops observation series: FLOPs one
+    // activation row spends in the quantized linears + LM head
+    let flops_per_row = dims.linear_flops_per_token() as f64;
 
     let mut score_q: VecDeque<ScoreJob> = VecDeque::new();
     let mut gen_wait: VecDeque<GenJob> = VecDeque::new();
@@ -579,15 +593,23 @@ fn engine_loop(
                 let batch: Vec<Vec<u32>> =
                     plain.iter_mut().map(|(t, _, _)| std::mem::take(t)).collect();
                 let n_tokens: usize = batch.iter().map(Vec::len).sum();
-                let scored = metrics.time("serve.forward", || {
-                    if caps.fixed_geometry {
-                        // the HLO path needs exact [batch, seq] geometry;
-                        // score_all pads and chunks for it
-                        scorer.score_all(&batch)
-                    } else {
-                        scorer.score_batch(&batch)
-                    }
-                });
+                let t0 = Instant::now();
+                let scored = if caps.fixed_geometry {
+                    // the HLO path needs exact [batch, seq] geometry;
+                    // score_all pads and chunks for it
+                    scorer.score_all(&batch)
+                } else {
+                    scorer.score_batch(&batch)
+                };
+                let fsecs = t0.elapsed().as_secs_f64();
+                metrics.timer_add("serve.forward", fsecs);
+                // kernel_gflops measures the native micro-kernels only:
+                // the fixed-geometry path runs padded batches through
+                // PJRT, where real-token FLOPs over wall time would
+                // misstate both the work and the engine that did it
+                if !caps.fixed_geometry {
+                    observe_gflops(&metrics, n_tokens, flops_per_row, fsecs);
+                }
                 match scored {
                     Ok(outs) => {
                         metrics.incr("serve.batches");
@@ -612,15 +634,26 @@ fn engine_loop(
                 // timed under its own key: serve.forward backs the
                 // tokens_per_sec summary, whose numerator counts only
                 // plain-score tokens
-                let scored = metrics
-                    .time("serve.choice_forward", || scorer.score_choices(&prompt, &choices));
+                let choice_tokens = prompt.len() + choices.iter().map(Vec::len).sum::<usize>();
+                // rows actually pushed through the linears: a
+                // prefix-reuse scorer prefills the prompt once, the
+                // score_all fallback forwards prompt+choice per choice
+                let fwd_rows = if caps.prefix_reuse {
+                    choice_tokens
+                } else {
+                    choices.iter().map(|c| prompt.len() + c.len()).sum()
+                };
+                let t0 = Instant::now();
+                let scored = scorer.score_choices(&prompt, &choices);
+                let csecs = t0.elapsed().as_secs_f64();
+                metrics.timer_add("serve.choice_forward", csecs);
+                if !caps.fixed_geometry {
+                    observe_gflops(&metrics, fwd_rows, flops_per_row, csecs);
+                }
                 match scored {
                     Ok(out) => {
                         metrics.add("serve.choice_requests", 1.0);
-                        metrics.add(
-                            "serve.choice_tokens",
-                            (prompt.len() + choices.iter().map(Vec::len).sum::<usize>()) as f64,
-                        );
+                        metrics.add("serve.choice_tokens", choice_tokens as f64);
                         metrics.observe("serve.latency_secs", enq.elapsed().as_secs_f64());
                         let _ = resp.send(Ok(Response::Choices(out)));
                     }
@@ -647,11 +680,15 @@ fn engine_loop(
                     decode_rows += 1;
                 }
             }
-            let scored = metrics.time("serve.decode_step", || {
+            let t0 = Instant::now();
+            let scored = {
                 let mut refs: Vec<&mut KvCache> =
                     active.iter_mut().map(|a| &mut a.cache).collect();
                 scorer.cache_forward_batch(&news, &mut refs)
-            });
+            };
+            let dsecs = t0.elapsed().as_secs_f64();
+            metrics.timer_add("serve.decode_step", dsecs);
+            observe_gflops(&metrics, prefill_rows + decode_rows, flops_per_row, dsecs);
             match scored {
                 Ok(lgs) => {
                     metrics.incr("serve.decode_steps");

@@ -102,6 +102,36 @@
 //! (PJRT-free); `tests/serve_loop.rs` pins the loop's semantics and
 //! `tests/backend_parity.rs` pins batched == per-sequence logits.
 //!
+//! ## Micro-kernel layer (the FLOP path)
+//!
+//! Below the backends sits one vectorized primitive set,
+//! [`tensor::kernels`]: 8-wide unrolled multiply-add lanes over
+//! `chunks_exact(8)` (auto-vectorized to AVX/NEON on stable Rust — no
+//! `std::simd`, no `mul_add` libm traps) behind `dot` / `dot4` / `axpy`
+//! / `scale_zero_combine`. Everything hot composes from them:
+//!
+//! ```text
+//!   Mat::matmul      j/k-tiled, RHS packed into a transposed L1 panel ┐
+//!   Mat::matmul_t    j/k-tiled, RHS already transposed                ├─ 4-row
+//!   PackedLoraLinear byte→f32 LUT dequant (one 256-entry table per    │  micro-
+//!     forward_rows   packed-code lane, process-shared per codebook;   │  tiles +
+//!                    group tile + partial sums in thread-local        │  dot/axpy
+//!                    scratch — zero allocs per chunk)                 │  lanes
+//!   attention        rotated-Q·K dots, weighted-V axpy               ─┘
+//! ```
+//!
+//! Two contracts keep this safe to parallelize: each kernel's per-row
+//! reduction order is **fixed** (a row's bits never depend on which
+//! micro-tile, chunk, or thread computed it), and `parallel_rows`
+//! publishes *several small chunks per lane* to the pool's atomic task
+//! cursor (work-stealing), so ragged decode batches stop tail-stalling
+//! on a static split. The pre-vectorization scalar kernels survive as
+//! `*_naive` test references (vectorized == naive ≤1e-5; LUT decode ==
+//! shift/mask bitwise), and `cargo bench --bench bench_runtime --
+//! --json <path>` emits the machine-readable perf record (tok/s,
+//! per-kernel GFLOP/s, speedup ratios; `BENCH_PR5.json` in CI) with the
+//! live `serve.kernel_gflops` series feeding the serve summaries.
+//!
 //! ## KV cache: incremental decode + prefix reuse
 //!
 //! Attention used to recompute the whole O(S²) causal triangle per

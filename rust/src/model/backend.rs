@@ -29,13 +29,16 @@
 //! downstream — `Lab`, the coordinator driver, the CLI `--backend` flag,
 //! and the runtime benches — selects an execution form via [`BackendKind`].
 
+use std::cell::RefCell;
 use std::fmt;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::lqec::AdapterSet;
+use crate::quant::packing::codes_per_byte;
 use crate::quant::{PackedTensor, QuantResult, QuantizedTensor};
-use crate::tensor::{suggested_workers, Mat};
+use crate::tensor::{kernels, suggested_workers, Mat};
 
 use super::StudentWeights;
 
@@ -253,12 +256,71 @@ pub struct PackedLoraLinear {
     zeros: Mat,
     /// `[2^bits]`
     codebook: Vec<f32>,
+    /// One 256-entry dequant LUT per code lane of a packed byte
+    /// (`codes_per_byte(bits)` lanes): `byte_luts[lane][byte] =
+    /// codebook[(byte >> bits*lane) & mask]`. Decoding becomes a single
+    /// indexed load per element — no shift, mask, or second codebook
+    /// indirection in the inner loop — and stays **bitwise** the
+    /// shift/mask decode by construction (pinned in the tests below).
+    /// Process-shared per distinct `(bits, codebook)` — see
+    /// [`shared_byte_luts`].
+    byte_luts: Arc<Vec<[f32; 256]>>,
     group_size: usize,
     bits: u8,
     d_in: usize,
     d_out: usize,
     /// optional `(A: [d_in, r], B: [d_out, r])`
     pub lora: Option<(Mat, Mat)>,
+}
+
+/// Process-shared memo of [`build_byte_luts`] results, keyed by
+/// `(bits, codebook)`: every linear quantized by the same method shares
+/// one 1–4 KiB table set (the `RopeTable::shared` idiom), which is why
+/// the LUTs are not part of per-linear [`LinearBackend::weight_bytes`]
+/// accounting.
+fn shared_byte_luts(codebook: &[f32], bits: u8) -> Arc<Vec<[f32; 256]>> {
+    static MEMO: Mutex<Vec<(u8, Vec<u32>, Arc<Vec<[f32; 256]>>)>> = Mutex::new(Vec::new());
+    let key: Vec<u32> = codebook.iter().map(|v| v.to_bits()).collect();
+    let mut memo = MEMO.lock().unwrap();
+    if let Some((_, _, luts)) = memo.iter().find(|(b, k, _)| *b == bits && *k == key) {
+        return luts.clone();
+    }
+    let luts = Arc::new(build_byte_luts(codebook, bits));
+    memo.push((bits, key, luts.clone()));
+    luts
+}
+
+/// Build the per-lane byte→value dequant LUTs for a scalar codebook.
+/// 2-bit: 4 lanes × 256; 4-bit: 2 lanes × 256; 3-bit (one code per
+/// byte): 1 lane whose live entries are the 8-entry codebook itself.
+fn build_byte_luts(codebook: &[f32], bits: u8) -> Vec<[f32; 256]> {
+    let lanes = codes_per_byte(bits);
+    let mask = (1usize << bits) - 1;
+    (0..lanes)
+        .map(|lane| {
+            let shift = bits as usize * lane;
+            let mut tab = [0.0f32; 256];
+            for (byte, t) in tab.iter_mut().enumerate() {
+                // the lane mask keeps `code < 2^bits`, so every entry is a
+                // real codebook value (byte values that cannot occur in
+                // the packed stream just repeat the table cyclically)
+                let code = (byte >> shift) & mask;
+                *t = codebook[code];
+            }
+            tab
+        })
+        .collect()
+}
+
+thread_local! {
+    /// Per-thread dequant scratch for [`PackedLoraLinear::forward_rows`]:
+    /// the group tile (`group_size * d_out`) plus the per-row partial-sum
+    /// row (`d_out`), reused across every group, call, and layer instead
+    /// of a fresh `Vec` per row-chunk — single-row decode steps no longer
+    /// pay an allocation per (group, chunk). One buffer per pool worker;
+    /// `forward_rows` never re-enters itself on a thread, so the borrow
+    /// is exclusive for the kernel's duration.
+    static PACKED_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 impl PackedLoraLinear {
@@ -274,6 +336,7 @@ impl PackedLoraLinear {
             packed: q.pack(),
             scales: q.scales.clone(),
             zeros: q.zeros.clone(),
+            byte_luts: shared_byte_luts(&q.codebook, q.bits),
             codebook: q.codebook.clone(),
             group_size: q.group_size,
             bits: q.bits,
@@ -287,7 +350,71 @@ impl PackedLoraLinear {
     /// group) into `tile`: `(r1-r0) x d_out` raw codebook values, scale
     /// and zero NOT applied (they are factored out per group in
     /// [`Self::forward_rows`]).
+    ///
+    /// Dequant is a pure table lookup (see [`build_byte_luts`]): on the
+    /// byte-aligned fast path each packed byte is loaded **once** and
+    /// scatters all of its `codes_per_byte` rows through the per-lane
+    /// LUTs — no shift, mask, or codebook indirection in the inner loop.
+    /// Group boundaries landing mid-byte (ragged `d_in`, group sizes not
+    /// divisible by the packing factor) fall back to lane-at-a-time
+    /// lookups of the same tables, so both paths stay **bitwise** the
+    /// shift/mask reference ([`Self::decode_group_naive`], pinned below).
     fn decode_group(&self, r0: usize, r1: usize, tile: &mut [f32]) {
+        let d_out = self.d_out;
+        let data = &self.packed.data;
+        let luts = &self.byte_luts[..];
+        let per = codes_per_byte(self.bits);
+        if per == 1 {
+            // 3-bit: one code per byte — a direct gather through the LUT
+            for i in r0..r1 {
+                let prow = &data[i * d_out..(i + 1) * d_out];
+                let trow = &mut tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
+                for (t, &c) in trow.iter_mut().zip(prow) {
+                    *t = luts[0][c as usize];
+                }
+            }
+            return;
+        }
+        let mut i = r0;
+        while i < r1 {
+            let prow = &data[(i / per) * d_out..(i / per + 1) * d_out];
+            if i % per == 0 && i + per <= r1 {
+                let base = (i - r0) * d_out;
+                if per == 4 {
+                    let (t0, rest) = tile[base..base + 4 * d_out].split_at_mut(d_out);
+                    let (t1, rest) = rest.split_at_mut(d_out);
+                    let (t2, t3) = rest.split_at_mut(d_out);
+                    for (j, &b) in prow.iter().enumerate() {
+                        let b = b as usize;
+                        t0[j] = luts[0][b];
+                        t1[j] = luts[1][b];
+                        t2[j] = luts[2][b];
+                        t3[j] = luts[3][b];
+                    }
+                } else {
+                    let (t0, t1) = tile[base..base + 2 * d_out].split_at_mut(d_out);
+                    for (j, &b) in prow.iter().enumerate() {
+                        let b = b as usize;
+                        t0[j] = luts[0][b];
+                        t1[j] = luts[1][b];
+                    }
+                }
+                i += per;
+            } else {
+                let lut = &luts[i % per];
+                let trow = &mut tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
+                for (t, &b) in trow.iter_mut().zip(prow) {
+                    *t = lut[b as usize];
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// The pre-LUT shift/mask/codebook decode, kept as the bitwise
+    /// reference [`Self::decode_group`] is pinned against.
+    #[cfg(test)]
+    fn decode_group_naive(&self, r0: usize, r1: usize, tile: &mut [f32]) {
         let d_out = self.d_out;
         let cb = &self.codebook;
         let data = &self.packed.data;
@@ -315,7 +442,6 @@ impl PackedLoraLinear {
                 }
             }
             3 => {
-                // 3-bit codes stay one per byte
                 for i in r0..r1 {
                     let prow = &data[i * d_out..i * d_out + d_out];
                     let trow = &mut tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
@@ -332,12 +458,16 @@ impl PackedLoraLinear {
     /// `out` (`(t1-t0) * d_out` zeroed floats).
     ///
     /// Group-tile structure: each group's codes are decoded **once per
-    /// row-chunk** into an f32 tile, then every row in the chunk streams
-    /// dense multiply-adds against the hot tile. Per-token dequant cost
-    /// is `d_in·d_out / chunk_rows` — it amortizes toward zero as the
-    /// batched forward coalesces more rows per call, which is the whole
-    /// point of `forward_trace_batch` (the old kernel re-decoded the
-    /// packed bytes for every row). The per-group factorization
+    /// row-chunk** into an f32 tile (LUT decode, see
+    /// [`Self::decode_group`]), then every row in the chunk streams
+    /// 8-wide unrolled multiply-adds against the hot tile
+    /// ([`kernels::axpy`] / [`kernels::scale_zero_combine`]). Per-token
+    /// dequant cost is `d_in·d_out / chunk_rows` — it amortizes toward
+    /// zero as the batched forward coalesces more rows per call. The
+    /// tile and the per-row partial-sum row live in one thread-local
+    /// scratch ([`PACKED_SCRATCH`]) reused across groups, calls, and
+    /// layers — single-row decode steps no longer pay a fresh `Vec`
+    /// per chunk. The per-group factorization
     /// `y += s_g·Σ x_i·cb[code] + z_g·Σ x_i` is unchanged.
     fn forward_rows(&self, x: &Mat, t0: usize, t1: usize, out: &mut [f32]) {
         if t0 == t1 {
@@ -346,38 +476,38 @@ impl PackedLoraLinear {
         let d_out = self.d_out;
         let gs = self.group_size;
         let n_groups = self.scales.rows();
-        let mut tile = vec![0.0f32; gs * d_out];
-        // per-(row, group) partial sums Σ x_i·cb[code_ij]
-        let mut tmp = vec![0.0f32; d_out];
-        for g in 0..n_groups {
-            let r0 = g * gs;
-            let r1 = (r0 + gs).min(self.d_in);
-            self.decode_group(r0, r1, &mut tile);
-            let srow = self.scales.row(g);
-            let zrow = self.zeros.row(g);
-            for t in t0..t1 {
-                let xrow = x.row(t);
-                for v in tmp.iter_mut() {
-                    *v = 0.0;
-                }
-                let mut xsum = 0.0f32;
-                for i in r0..r1 {
-                    let xi = xrow[i];
-                    xsum += xi;
-                    if xi == 0.0 {
-                        continue;
+        PACKED_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            let need = gs * d_out + d_out;
+            if buf.len() < need {
+                buf.resize(need, 0.0);
+            }
+            let (tile, rest) = buf.split_at_mut(gs * d_out);
+            // per-(row, group) partial sums Σ x_i·cb[code_ij]
+            let tmp = &mut rest[..d_out];
+            for g in 0..n_groups {
+                let r0 = g * gs;
+                let r1 = (r0 + gs).min(self.d_in);
+                self.decode_group(r0, r1, tile);
+                let srow = self.scales.row(g);
+                let zrow = self.zeros.row(g);
+                for t in t0..t1 {
+                    let xrow = x.row(t);
+                    tmp.fill(0.0);
+                    let mut xsum = 0.0f32;
+                    for i in r0..r1 {
+                        let xi = xrow[i];
+                        xsum += xi;
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        kernels::axpy(xi, &tile[(i - r0) * d_out..(i - r0 + 1) * d_out], tmp);
                     }
-                    let trow = &tile[(i - r0) * d_out..(i - r0 + 1) * d_out];
-                    for (acc, &wv) in tmp.iter_mut().zip(trow) {
-                        *acc += xi * wv;
-                    }
-                }
-                let orow = &mut out[(t - t0) * d_out..(t - t0) * d_out + d_out];
-                for j in 0..d_out {
-                    orow[j] += srow[j] * tmp[j] + xsum * zrow[j];
+                    let orow = &mut out[(t - t0) * d_out..(t - t0) * d_out + d_out];
+                    kernels::scale_zero_combine(orow, srow, tmp, xsum, zrow);
                 }
             }
-        }
+        });
     }
 }
 
@@ -492,6 +622,62 @@ mod tests {
             let packed = PackedLoraLinear::from_quantized(&q, None).forward(&x);
             let rel = dense.fro_dist(&packed) / dense.fro_norm().max(1e-6);
             assert!(rel < 1e-5, "d_in={d_in} gs={gs} bits={bits} rel={rel}");
+        }
+    }
+
+    /// PR-5 pin: the byte-LUT decode is BITWISE the shift/mask/codebook
+    /// decode, for every bit width, on aligned groups, groups whose
+    /// boundaries land mid-byte, and ragged final groups.
+    #[test]
+    fn lut_decode_is_bitwise_shift_mask_decode() {
+        for (case, (bits, d_in, d_out, gs)) in [
+            (0u64, (2u8, 64usize, 9usize, 16usize)), // aligned fast path
+            (1, (2, 37, 5, 16)),                     // ragged final group
+            (2, (2, 26, 3, 10)),                     // group boundary mid-byte
+            (3, (3, 23, 4, 8)),                      // one code per byte
+            (4, (4, 31, 6, 16)),                     // 2-lane packing, ragged
+            (5, (4, 9, 3, 5)),                       // 2-lane, mid-byte groups
+        ] {
+            let (_, q) = quantized(d_in, d_out, bits, gs, 0x107 + case);
+            let p = PackedLoraLinear::from_quantized(&q, None);
+            for g in 0..q.n_groups() {
+                let r0 = g * gs;
+                let r1 = (r0 + gs).min(d_in);
+                let mut lut = vec![0.0f32; (r1 - r0) * d_out];
+                let mut naive = vec![0.0f32; (r1 - r0) * d_out];
+                p.decode_group(r0, r1, &mut lut);
+                p.decode_group_naive(r0, r1, &mut naive);
+                for (a, b) in lut.iter().zip(&naive) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} d_in={d_in} group={g}");
+                }
+            }
+        }
+    }
+
+    /// PR-5 property grid: the packed kernel matches the dense dequant
+    /// oracle ≤1e-5 across odd token/shape counts for every bit width
+    /// (token rows and d_out straddle the 8-lane unroll and the 4-row
+    /// micro-tile; d_in straddles group and byte boundaries).
+    #[test]
+    fn packed_forward_property_grid() {
+        let mut rng = Rng::seed(0x9a1d);
+        for bits in [2u8, 3, 4] {
+            for &t in &[1usize, 3, 7] {
+                for &(d_in, gs) in &[(7usize, 8usize), (64, 16), (100, 16)] {
+                    for &d_out in &[1usize, 3, 64, 100] {
+                        let seed = 0x500 + bits as u64 + (t * d_in * d_out) as u64;
+                        let (_, q) = quantized(d_in, d_out, bits, gs, seed);
+                        let x = Mat::randn(t, d_in, &mut rng);
+                        let dense = x.matmul(&q.dequant());
+                        let packed = PackedLoraLinear::from_quantized(&q, None).forward(&x);
+                        let rel = dense.fro_dist(&packed) / dense.fro_norm().max(1e-6);
+                        assert!(
+                            rel < 1e-5,
+                            "bits={bits} t={t} d_in={d_in} gs={gs} d_out={d_out} rel={rel}"
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::tensor::Mat;
+use crate::tensor::{kernels, Mat};
 
 use super::backend::LinearBackend;
 use super::kv::{KvCache, RopeTable};
@@ -113,7 +113,7 @@ fn rmsnorm(x: &Mat, g: &[f32]) -> Mat {
     let mut out = Mat::zeros(x.rows(), x.cols());
     for r in 0..x.rows() {
         let row = x.row(r);
-        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / row.len() as f32;
+        let ms: f32 = kernels::dot(row, row) / row.len() as f32;
         let inv = 1.0 / (ms + EPS).sqrt();
         let orow = out.row_mut(r);
         for c in 0..row.len() {
@@ -145,8 +145,11 @@ pub fn apply_rope(x: &mut Mat, hd: usize) {
 /// across heads — no per-head matrix gathers are allocated.
 ///
 /// Per-row math (score loop order, max-subtracted softmax, the `w == 0`
-/// skip) is byte-for-byte the historical kernel, so full and incremental
-/// forwards produce bitwise-identical rows.
+/// skip) is shared between the full and incremental paths, and the
+/// Q·K dots / weighted-V accumulations run on the 8-wide unrolled
+/// [`kernels::dot`] / [`kernels::axpy`] primitives — whose per-row
+/// reduction order is fixed (see `tensor::kernels`) — so full and
+/// incremental forwards produce bitwise-identical rows.
 fn attend_cached(
     dims: &ModelDims,
     rope: &RopeTable,
@@ -179,8 +182,7 @@ fn attend_cached(
             let mut maxs = f32::NEG_INFINITY;
             for (j, sc) in scores.iter_mut().enumerate() {
                 let krow = &khead[j * hd..j * hd + hd];
-                let dot: f32 = qh.iter().zip(krow).map(|(&a, &b)| a * b).sum();
-                *sc = dot * scale;
+                *sc = kernels::dot(&qh, krow) * scale;
                 maxs = maxs.max(*sc);
             }
             let mut denom = 0.0f32;
@@ -194,10 +196,7 @@ fn attend_cached(
                 if w == 0.0 {
                     continue;
                 }
-                let vrow = &vhead[j * hd..j * hd + hd];
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += w * vv;
-                }
+                kernels::axpy(w, &vhead[j * hd..j * hd + hd], orow);
             }
         }
     }

@@ -67,6 +67,19 @@ impl ModelDims {
         v * d + l * (4 * d * d + 3 * d * f + 2 * d) + d + d * v
     }
 
+    /// FLOPs one activation row (token) spends in the seven quantized
+    /// linear families plus the LM head — 2 FLOPs (multiply + add) per
+    /// resident weight. This is the numerator behind the
+    /// `serve.kernel_gflops` observation series and the bench GFLOP/s
+    /// columns. Embedding (a gather), norms, and attention (cost grows
+    /// with position, data-dependent) are excluded, so reported GFLOP/s
+    /// slightly *undercount* the true arithmetic — a conservative
+    /// efficiency figure.
+    pub fn linear_flops_per_token(&self) -> usize {
+        let (d, f, v, l) = (self.d_model, self.d_ff, self.vocab, self.n_layers);
+        2 * (l * (4 * d * d + 3 * d * f) + d * v)
+    }
+
     /// Parse from a manifest `configs.<name>` object.
     pub fn from_json(j: &Json) -> Result<ModelDims> {
         Ok(ModelDims {

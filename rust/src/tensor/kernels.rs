@@ -1,0 +1,216 @@
+//! Vectorized micro-kernel primitives shared by every f32 hot loop.
+//!
+//! The serving hot path (packed dequant-fused matmul, dense/merged
+//! matmuls, the attention row kernel) used to run scalar inner loops.
+//! These primitives restructure them as 8-wide unrolled multiply-add
+//! lanes over `chunks_exact(8)` — a shape stable-Rust LLVM reliably
+//! auto-vectorizes to AVX/NEON packed ops without a `std::simd` nightly
+//! dependency or `target-cpu` flags (plain `a * b + acc`, **not**
+//! `f32::mul_add`, which lowers to a libm call on targets without a
+//! guaranteed FMA unit).
+//!
+//! ## The bitwise row-invariance contract
+//!
+//! Every primitive computes a fixed floating-point reduction DAG per
+//! *logical row*: the 8 partial lanes accumulate chunk-by-chunk, the
+//! scalar tail accumulates in order, and `reduce8` folds the lanes in
+//! one fixed pairwise tree. [`dot4`] interleaves four rows for register
+//! blocking but performs, per row, *exactly* the ops of [`dot`] in the
+//! same order — so a row's result never depends on whether it was
+//! computed in a 4-row micro-tile, as a remainder row, or in a different
+//! [`super::parallel_rows`] chunk. That invariance is what keeps
+//! batched == per-sequence forwards, chunked == one-shot prefill, and
+//! threaded == single-threaded matmuls **bitwise** identical (pinned in
+//! `tests/engine_api.rs`, `model::forward` unit tests, and
+//! [`super::Mat`]'s threaded-parity tests).
+
+/// Unroll width of every kernel: 8 f32 lanes (one AVX register / two
+/// NEON registers).
+pub const LANES: usize = 8;
+
+/// Fold the 8 partial lanes in a fixed pairwise tree. One association
+/// order everywhere — part of the row-invariance contract above.
+#[inline(always)]
+fn reduce8(l: [f32; LANES]) -> f32 {
+    let a = l[0] + l[4];
+    let b = l[1] + l[5];
+    let c = l[2] + l[6];
+    let d = l[3] + l[7];
+    (a + c) + (b + d)
+}
+
+/// 8-wide unrolled dot product. `a` and `b` must be the same length.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            lanes[l] += x[l] * y[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    reduce8(lanes) + tail
+}
+
+/// Four dot products of four LHS rows against one shared RHS row — the
+/// register-blocked micro-tile: `b` is loaded once per chunk and feeds
+/// four accumulator sets. Each returned value is **bitwise identical**
+/// to `dot(a_i, b)` (same per-row op sequence; see the module contract).
+#[inline]
+pub fn dot4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    debug_assert!(a0.len() == b.len() && a1.len() == b.len());
+    debug_assert!(a2.len() == b.len() && a3.len() == b.len());
+    let mut l0 = [0.0f32; LANES];
+    let mut l1 = [0.0f32; LANES];
+    let mut l2 = [0.0f32; LANES];
+    let mut l3 = [0.0f32; LANES];
+    let mut cb = b.chunks_exact(LANES);
+    let mut c0 = a0.chunks_exact(LANES);
+    let mut c1 = a1.chunks_exact(LANES);
+    let mut c2 = a2.chunks_exact(LANES);
+    let mut c3 = a3.chunks_exact(LANES);
+    let lhs = (&mut c0).zip(&mut c1).zip(&mut c2).zip(&mut c3);
+    for (y, (((x0, x1), x2), x3)) in (&mut cb).zip(lhs) {
+        for l in 0..LANES {
+            l0[l] += x0[l] * y[l];
+            l1[l] += x1[l] * y[l];
+            l2[l] += x2[l] * y[l];
+            l3[l] += x3[l] * y[l];
+        }
+    }
+    let mut t = [0.0f32; 4];
+    let yr = cb.remainder();
+    let (r0, r1, r2, r3) = (c0.remainder(), c1.remainder(), c2.remainder(), c3.remainder());
+    for (i, &y) in yr.iter().enumerate() {
+        t[0] += r0[i] * y;
+        t[1] += r1[i] * y;
+        t[2] += r2[i] * y;
+        t[3] += r3[i] * y;
+    }
+    [reduce8(l0) + t[0], reduce8(l1) + t[1], reduce8(l2) + t[2], reduce8(l3) + t[3]]
+}
+
+/// 8-wide unrolled `out[j] += alpha * x[j]`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let mut co = out.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (o, v) in (&mut co).zip(&mut cx) {
+        for l in 0..LANES {
+            o[l] += alpha * v[l];
+        }
+    }
+    for (o, &v) in co.into_remainder().iter_mut().zip(cx.remainder()) {
+        *o += alpha * v;
+    }
+}
+
+/// The packed-backend group combine, 8-wide:
+/// `out[j] += s[j] * t[j] + xsum * z[j]` — scales, the code partial sum,
+/// and the zero-point term fused in one pass (see
+/// `model::backend::PackedLoraLinear`).
+#[inline]
+pub fn scale_zero_combine(out: &mut [f32], s: &[f32], t: &[f32], xsum: f32, z: &[f32]) {
+    debug_assert!(s.len() == out.len() && t.len() == out.len() && z.len() == out.len());
+    let mut co = out.chunks_exact_mut(LANES);
+    let mut cs = s.chunks_exact(LANES);
+    let mut ct = t.chunks_exact(LANES);
+    let mut cz = z.chunks_exact(LANES);
+    for (((o, sv), tv), zv) in (&mut co).zip(&mut cs).zip(&mut ct).zip(&mut cz) {
+        for l in 0..LANES {
+            o[l] += sv[l] * tv[l] + xsum * zv[l];
+        }
+    }
+    let (sr, tr, zr) = (cs.remainder(), ct.remainder(), cz.remainder());
+    for (i, o) in co.into_remainder().iter_mut().enumerate() {
+        *o += sr[i] * tr[i] + xsum * zr[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    fn dot_naive(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive_across_lengths() {
+        let mut rng = Rng::seed(0xd07);
+        // lengths straddling the 8-lane boundary, incl. 0 and tail-only
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100, 257] {
+            let a = randv(n, &mut rng);
+            let b = randv(n, &mut rng);
+            let got = dot(&a, &b) as f64;
+            let want = dot_naive(&a, &b);
+            let scale = a.iter().map(|x| x.abs() as f64).sum::<f64>().max(1.0);
+            assert!((got - want).abs() / scale < 1e-5, "n={n}: {got} vs {want}");
+        }
+    }
+
+    /// The register-blocked 4-row micro-tile must be BITWISE the single-row
+    /// dot — the invariance every bitwise-parity test in the repo rests on.
+    #[test]
+    fn dot4_is_bitwise_four_dots() {
+        let mut rng = Rng::seed(0xd04);
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| randv(n, &mut rng)).collect();
+            let b = randv(n, &mut rng);
+            let got = dot4(&rows[0], &rows[1], &rows[2], &rows[3], &b);
+            for (i, r) in rows.iter().enumerate() {
+                assert_eq!(got[i].to_bits(), dot(r, &b).to_bits(), "n={n} row={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar() {
+        let mut rng = Rng::seed(0xa27);
+        for n in [0usize, 1, 5, 8, 13, 100] {
+            let x = randv(n, &mut rng);
+            let mut out = randv(n, &mut rng);
+            let mut want = out.clone();
+            let alpha = 0.37f32;
+            for (w, &v) in want.iter_mut().zip(&x) {
+                *w += alpha * v;
+            }
+            axpy(alpha, &x, &mut out);
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-6, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_zero_combine_matches_scalar() {
+        let mut rng = Rng::seed(0x5c2);
+        for n in [0usize, 1, 7, 8, 9, 100] {
+            let s = randv(n, &mut rng);
+            let t = randv(n, &mut rng);
+            let z = randv(n, &mut rng);
+            let xsum = 1.25f32;
+            let mut out = randv(n, &mut rng);
+            let mut want = out.clone();
+            for j in 0..n {
+                want[j] += s[j] * t[j] + xsum * z[j];
+            }
+            scale_zero_combine(&mut out, &s, &t, xsum, &z);
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-6, "n={n}");
+            }
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //! singular-vector-magnitude analysis of Fig. 4(c); the Hadamard matrix
 //! drives the QuaRot-style rotation quantizer.
 
-use super::Mat;
+use super::{kernels, Mat};
 
 /// Thin SVD result: `a ≈ u * diag(s) * vt` with `u: m×k`, `s: k`, `vt: k×n`,
 /// `k = min(m, n)`, singular values sorted descending.
@@ -32,11 +32,9 @@ impl Svd {
                 if uik == 0.0 {
                     continue;
                 }
-                let orow = out.row_mut(i);
+                // rank-1 update row: 8-wide unrolled axpy (see `kernels`)
                 let vrow = self.vt.row(k);
-                for j in 0..n {
-                    orow[j] += uik * vrow[j];
-                }
+                kernels::axpy(uik, vrow, out.row_mut(i));
             }
         }
         out

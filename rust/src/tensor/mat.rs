@@ -3,12 +3,63 @@
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
-use super::Rng;
+use super::{kernels, Rng};
 
 /// Cache-block sizes shared by the matmul kernels: `BK` floats of a row
 /// (256 B) and a `BJ x BK` RHS tile (16 KiB) fit L1 comfortably.
 const BK: usize = 64;
 const BJ: usize = 64;
+
+/// Register-blocked micro-tile shared by [`Mat::matmul`] and
+/// [`Mat::matmul_t`]: accumulate the output block
+/// `rows [i_lo, i_hi) x cols [j0, j0+nb)` (`+=`) from LHS k-columns
+/// `[k0, k1)` against RHS rows supplied by `brow(jj)` (each a `k1-k0`
+/// slice — a packed panel row for `matmul`, a row slice of the
+/// already-transposed RHS for `matmul_t`). Four LHS rows stream each RHS
+/// row at once via [`kernels::dot4`]; since `dot4` is bitwise four
+/// [`kernels::dot`]s, a row's value never depends on whether it ran in
+/// the 4-row block or the remainder loop — the invariance that keeps
+/// threaded/chunked/batched callers bit-identical per row.
+#[allow(clippy::too_many_arguments)]
+fn micro_tile<'a>(
+    a: &Mat,
+    r0: usize,
+    i_lo: usize,
+    i_hi: usize,
+    k0: usize,
+    k1: usize,
+    n: usize,
+    j0: usize,
+    nb: usize,
+    brow: impl Fn(usize) -> &'a [f32],
+    out: &mut [f32],
+) {
+    let mut i = i_lo;
+    while i + 4 <= i_hi {
+        let a0 = &a.row(i)[k0..k1];
+        let a1 = &a.row(i + 1)[k0..k1];
+        let a2 = &a.row(i + 2)[k0..k1];
+        let a3 = &a.row(i + 3)[k0..k1];
+        let base = (i - r0) * n + j0;
+        for jj in 0..nb {
+            let d = kernels::dot4(a0, a1, a2, a3, brow(jj));
+            out[base + jj] += d[0];
+            out[base + n + jj] += d[1];
+            out[base + 2 * n + jj] += d[2];
+            out[base + 3 * n + jj] += d[3];
+        }
+        i += 4;
+    }
+    while i < i_hi {
+        let arow = &a.row(i)[k0..k1];
+        let base = (i - r0) * n + j0;
+        let orow = &mut out[base..base + nb];
+        for (jj, o) in orow.iter_mut().enumerate() {
+            *o += kernels::dot(arow, brow(jj));
+        }
+        i += 1;
+    }
+}
 
 /// A dense, row-major `f32` matrix. Most algorithms in this crate operate on
 /// weight matrices shaped `[rows = d_out, cols = d_in]` (PyTorch linear
@@ -135,12 +186,50 @@ impl Mat {
 
     /// Blocked `self * other` kernel over the output-row range `[r0, r1)`,
     /// accumulating into `out` (`(r1-r0) * other.cols` zeroed floats).
-    /// Both the single-threaded and threaded products call this, so they
-    /// produce bit-identical results per output row.
+    ///
+    /// Each `BJ x BK` block of the RHS is first packed into a small
+    /// *transposed panel* (16 KiB, L1-resident, thread-local — no
+    /// allocation per call or per work-stealing chunk), so the K-loop
+    /// inside the [`micro_tile`] is unit-stride on **both** operands —
+    /// the panel is amortized across every LHS row of the chunk. Both
+    /// the single-threaded and threaded products call this, and per-row
+    /// results are independent of the chunking (see [`micro_tile`]), so
+    /// they produce bit-identical results per output row.
     fn matmul_rows_into(&self, other: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
+        thread_local! {
+            static PANEL: std::cell::RefCell<Vec<f32>> =
+                std::cell::RefCell::new(vec![0.0f32; BJ * BK]);
+        }
         let k = self.cols;
         let n = other.cols;
-        // Blocked i-k-j loop: streams `other` rows, vectorizes over j.
+        PANEL.with(|cell| {
+            let mut panel = cell.borrow_mut();
+            for j0 in (0..n).step_by(BJ) {
+                let j1 = (j0 + BJ).min(n);
+                let nb = j1 - j0;
+                for k0 in (0..k).step_by(BK) {
+                    let k1 = (k0 + BK).min(k);
+                    let bk = k1 - k0;
+                    // pack the transposed panel: panel[jj][kk] = other[k0+kk, j0+jj]
+                    for kk in k0..k1 {
+                        let brow = &other.data[kk * n + j0..kk * n + j1];
+                        for (jj, &b) in brow.iter().enumerate() {
+                            panel[jj * bk + (kk - k0)] = b;
+                        }
+                    }
+                    let p = &panel[..];
+                    micro_tile(self, r0, r0, r1, k0, k1, n, j0, nb, |jj| &p[jj * bk..][..bk], out);
+                }
+            }
+        });
+    }
+
+    /// The pre-vectorization scalar kernel, kept as the numerical
+    /// reference the micro-tiled product is pinned against (≤1e-5).
+    #[cfg(test)]
+    fn matmul_rows_into_naive(&self, other: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
+        let k = self.cols;
+        let n = other.cols;
         for k0 in (0..k).step_by(BK) {
             let k1 = (k0 + BK).min(k);
             for i in r0..r1 {
@@ -193,8 +282,37 @@ impl Mat {
     /// Blocked `self * other_t^T` kernel over output-row range `[r0, r1)`.
     /// Tiles over both the j (RHS-row) and k (inner) dimensions so a
     /// `BJ x BK` block of `other_t` stays cache-hot across the LHS rows —
-    /// this is the LoRA `X A B^T` hot path.
+    /// this is the LoRA `X A B^T` hot path. The RHS is already row-major
+    /// transposed, so no panel pack is needed: rows go straight into the
+    /// 4-row [`micro_tile`] with unit stride on both operands.
     fn matmul_t_rows_into(&self, other_t: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
+        let k = self.cols;
+        let n = other_t.rows;
+        for j0 in (0..n).step_by(BJ) {
+            let j1 = (j0 + BJ).min(n);
+            for k0 in (0..k).step_by(BK) {
+                let k1 = (k0 + BK).min(k);
+                micro_tile(
+                    self,
+                    r0,
+                    r0,
+                    r1,
+                    k0,
+                    k1,
+                    n,
+                    j0,
+                    j1 - j0,
+                    |jj| &other_t.row(j0 + jj)[k0..k1],
+                    out,
+                );
+            }
+        }
+    }
+
+    /// The pre-vectorization scalar `matmul_t` kernel — the parity
+    /// reference for the micro-tiled version.
+    #[cfg(test)]
+    fn matmul_t_rows_into_naive(&self, other_t: &Mat, r0: usize, r1: usize, out: &mut [f32]) {
         let k = self.cols;
         let n = other_t.rows;
         for j0 in (0..n).step_by(BJ) {
@@ -442,6 +560,64 @@ mod tests {
             assert_eq!(a.matmul(&b), a.matmul_threaded(&b, w), "m={m} k={k} n={n} w={w}");
             let bt = b.t();
             assert_eq!(a.matmul_t(&bt), a.matmul_t_threaded(&bt, w), "t: m={m} k={k} n={n} w={w}");
+        }
+    }
+
+    /// Tentpole pin: the vectorized micro-tiled kernels match the scalar
+    /// reference kernels ≤1e-5 (relative) across odd shapes straddling
+    /// every blocking boundary (4-row micro-tile, 8-lane unroll, BK/BJ
+    /// tiles) — the property-test grid from the PR-5 acceptance list.
+    #[test]
+    fn vectorized_matches_naive_reference() {
+        let mut rng = Rng::seed(0x7e57);
+        for &m in &[1usize, 3, 7, 64, 100] {
+            for &k in &[1usize, 3, 7, 64, 100] {
+                for &n in &[1usize, 3, 7, 64, 100] {
+                    let a = Mat::randn(m, k, &mut rng);
+                    let b = Mat::randn(k, n, &mut rng);
+                    let got = a.matmul(&b);
+                    let mut want = Mat::zeros(m, n);
+                    a.matmul_rows_into_naive(&b, 0, m, &mut want.data);
+                    let rel = got.fro_dist(&want) / want.fro_norm().max(1e-6);
+                    assert!(rel < 1e-5, "matmul m={m} k={k} n={n} rel={rel}");
+
+                    let bt = b.t();
+                    let got_t = a.matmul_t(&bt);
+                    let mut want_t = Mat::zeros(m, n);
+                    a.matmul_t_rows_into_naive(&bt, 0, m, &mut want_t.data);
+                    let rel = got_t.fro_dist(&want_t) / want_t.fro_norm().max(1e-6);
+                    assert!(rel < 1e-5, "matmul_t m={m} k={k} n={n} rel={rel}");
+                }
+            }
+        }
+    }
+
+    /// Bitwise row invariance: running the kernel over arbitrary row
+    /// sub-ranges (including splits landing mid-micro-tile) reproduces
+    /// the full-range rows exactly — the property the finer-grained
+    /// work-stealing chunks, batched forwards, and chunked prefill all
+    /// rest on.
+    #[test]
+    fn kernel_rows_are_chunk_invariant_bitwise() {
+        let mut rng = Rng::seed(0x51ab);
+        let (m, k, n) = (13usize, 37usize, 21usize);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let full = a.matmul(&b);
+        let bt = b.t();
+        let full_t = a.matmul_t(&bt);
+        for split in [1usize, 2, 3, 5, 6] {
+            let mut data = vec![0.0f32; m * n];
+            let mut data_t = vec![0.0f32; m * n];
+            let mut r0 = 0;
+            while r0 < m {
+                let r1 = (r0 + split).min(m);
+                a.matmul_rows_into(&b, r0, r1, &mut data[r0 * n..r1 * n]);
+                a.matmul_t_rows_into(&bt, r0, r1, &mut data_t[r0 * n..r1 * n]);
+                r0 = r1;
+            }
+            assert_eq!(full.data(), &data[..], "matmul split={split}");
+            assert_eq!(full_t.data(), &data_t[..], "matmul_t split={split}");
         }
     }
 

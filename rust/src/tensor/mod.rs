@@ -7,6 +7,7 @@
 //! Hadamard transforms, summary statistics, and a persistent worker
 //! pool ([`pool`]) behind [`parallel_rows`] / [`parallel_map`].
 
+pub mod kernels;
 mod mat;
 mod rng;
 mod linalg;
@@ -56,7 +57,17 @@ pub fn parallel_rows(
         kernel(0, m, &mut data);
         return data;
     }
-    let per = m.div_ceil(workers);
+    // Finer-grained chunk queue: split into ~CHUNKS_PER_WORKER pieces per
+    // lane instead of one static chunk each. The pool's atomic task
+    // cursor then hands chunks to whichever lane is free, so a ragged
+    // batch (per-row cost varies with sequence position, group count,
+    // cache hits) no longer tail-stalls on the slowest static chunk.
+    // The floor of MIN_CHUNK_ROWS keeps the 4-row register micro-tiles
+    // of the matmul kernels populated; per-row results are chunk-
+    // invariant bitwise (see `kernels`), so the split is free to move.
+    const CHUNKS_PER_WORKER: usize = 4;
+    const MIN_CHUNK_ROWS: usize = 4;
+    let per = m.div_ceil(workers * CHUNKS_PER_WORKER).max(MIN_CHUNK_ROWS);
     let n_chunks = m.div_ceil(per);
     let base = data.as_mut_ptr() as usize;
     pool::global().run_indexed(n_chunks, |c| {
@@ -73,14 +84,20 @@ pub fn parallel_rows(
     data
 }
 
+/// Multiply-add count one worker lane must amortize before parallel
+/// dispatch pays for itself. Recalibrated for the PR-5 vectorized
+/// micro-kernels: serial throughput rose ~4x (8-wide unrolled FMA lanes
+/// + register-blocked micro-tiles), so the break-even moved up 4x with
+/// it — a lane now chews through ~2 MFLOP in the time the old scalar
+/// kernel spent on ~0.5 MFLOP, while the pool-dispatch cost (a condvar
+/// wakeup) stayed fixed.
+pub const FLOPS_PER_WORKER: usize = 1 << 21;
+
 /// Worker-lane count worth using for a kernel of `flops` fused
-/// multiply-adds. Dispatching to the persistent pool costs on the order
-/// of a condvar wakeup (vs ~tens of µs for the old per-call thread
-/// spawn), so the threshold sits well below the old 2 MFLOP/worker —
-/// small serving matmuls now scale too. Returns at least 1.
+/// multiply-adds: 1 below `2 *` [`FLOPS_PER_WORKER`] (dispatch overhead
+/// would eat the win), then one lane per [`FLOPS_PER_WORKER`] capped at
+/// the hardware parallelism. Returns at least 1.
 pub fn suggested_workers(flops: usize) -> usize {
-    // ~0.5 MFLOP per lane amortizes a pool dispatch comfortably
-    const FLOPS_PER_WORKER: usize = 1 << 19;
     if flops < 2 * FLOPS_PER_WORKER {
         return 1;
     }
@@ -91,3 +108,54 @@ pub fn suggested_workers(flops: usize) -> usize {
 pub use mat::Mat;
 pub use rng::Rng;
 pub use stats::{mean, quantile, std_dev, Summary};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pins the recalibrated parallel-dispatch break-even (PR 5): serial
+    /// stays serial below `2 * FLOPS_PER_WORKER`, lanes scale linearly
+    /// with work above it, and the hardware cap always binds.
+    #[test]
+    fn suggested_workers_threshold_logic() {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        assert_eq!(suggested_workers(0), 1);
+        assert_eq!(suggested_workers(FLOPS_PER_WORKER), 1);
+        assert_eq!(suggested_workers(2 * FLOPS_PER_WORKER - 1), 1);
+        // at the break-even: one lane per FLOPS_PER_WORKER, hw-capped
+        assert_eq!(suggested_workers(2 * FLOPS_PER_WORKER), hw.min(2));
+        assert_eq!(suggested_workers(3 * FLOPS_PER_WORKER), hw.min(3));
+        assert_eq!(suggested_workers(usize::MAX / 2), hw);
+        // monotone: more work never suggests fewer lanes
+        let mut prev = 0;
+        for shift in 16..30 {
+            let w = suggested_workers(1usize << shift);
+            assert!(w >= prev, "non-monotone at 1<<{shift}");
+            prev = w;
+        }
+    }
+
+    /// The finer-grained chunk queue must still produce exactly the
+    /// inline result for every (rows, workers) geometry — chunks are
+    /// disjoint, cover all rows, and per-row output is chunk-invariant.
+    #[test]
+    fn parallel_rows_fine_chunks_match_inline() {
+        for (m, n, workers) in [(1usize, 3usize, 4usize), (5, 2, 2), (16, 3, 4), (103, 7, 8)] {
+            let inline = parallel_rows(m, n, 1, |r0, r1, out| {
+                for r in r0..r1 {
+                    for c in 0..n {
+                        out[(r - r0) * n + c] = (r * n + c) as f32;
+                    }
+                }
+            });
+            let pooled = parallel_rows(m, n, workers, |r0, r1, out| {
+                for r in r0..r1 {
+                    for c in 0..n {
+                        out[(r - r0) * n + c] = (r * n + c) as f32;
+                    }
+                }
+            });
+            assert_eq!(inline, pooled, "m={m} n={n} workers={workers}");
+        }
+    }
+}

@@ -18,6 +18,14 @@
 //! simply runs all tasks itself and the call degrades to a sequential
 //! loop instead of deadlocking.
 //!
+//! The atomic claim cursor doubles as a work-stealing chunk queue:
+//! [`super::parallel_rows`] publishes several small row chunks per lane
+//! (instead of one static chunk each), so when per-task cost is ragged —
+//! packed-group decode, attention rows whose cost grows with position —
+//! fast lanes keep claiming chunks while a slow lane finishes its
+//! current one, and the job no longer tail-stalls on the slowest static
+//! split.
+//!
 //! ## Safety
 //!
 //! The closure handed to workers borrows the caller's stack (the kernel
