@@ -15,12 +15,15 @@
 //! PJRT section.
 //!
 //! `--json <path>` writes the whole run as a machine-readable perf
-//! record (`BENCH_PR5.json` in CI, uploaded as a workflow artifact) so
+//! record (`BENCH_PR6.json` in CI, uploaded as a workflow artifact) so
 //! the perf trajectory is recorded instead of scrolling away in logs;
-//! `--baseline <path>` loads a previous record and reports the packed
-//! tok/s speedup against it.
+//! `--baseline <path>` loads a previous record (CI passes the committed
+//! `BENCH_BASELINE.json`) and **fails the run** when packed tok/s or the
+//! machine-relative ratios (packed/merged, serve speedup, decode
+//! speedup) regress past their floors.
 
 use rilq::coordinator::{probe_decode, probe_throughput};
+use rilq::engine::{Engine, EngineConfig, SamplingParams};
 use rilq::eval::{BackendScorer, Scorer};
 use rilq::lqec::AdapterSet;
 use rilq::model::backend::BackendKind;
@@ -40,6 +43,19 @@ use rilq::tensor::{Mat, Rng};
 /// the vectorized inner loops), not on CI timer noise.
 const MIN_PACKED_VS_MERGED: f64 = 0.20;
 
+/// `--baseline` floor for absolute packed tok/s. The committed
+/// `BENCH_BASELINE.json` carries a deliberately conservative value (a
+/// floor, not one machine's snapshot), so with this multiplier the check
+/// only trips on an order-of-magnitude throughput collapse — never on
+/// runner-to-runner hardware variance.
+const MIN_TOKS_VS_BASELINE: f64 = 0.35;
+
+/// `--baseline` floor for the machine-relative ratios (packed/merged
+/// tok-rate, batched-serve speedup, incremental-decode speedup). Ratios
+/// divide out the hardware, so 0.5x of the recorded value is already a
+/// structural regression, not noise.
+const MIN_RATIO_VS_BASELINE: f64 = 0.5;
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -57,17 +73,48 @@ fn main() {
         ("smoke", Json::Bool(smoke)),
         ("cores", Json::num(cores as f64)),
     ];
+    let mut regressions: Vec<String> = Vec::new();
     if let Some(bp) = &baseline_path {
-        let cur = get_path(&native, &["backends", "packed", "tokens_per_sec"]);
-        match load_baseline_packed_toks(bp) {
-            Some(prev) if prev > 0.0 => {
-                let cur = cur.unwrap_or(0.0);
-                let speedup = cur / prev;
-                println!("packed tok/s vs baseline {bp}: {cur:.0} / {prev:.0} = {speedup:.2}x");
-                root.push(("packed_speedup_vs_baseline", Json::num(speedup)));
-                root.push(("baseline_packed_tokens_per_sec", Json::num(prev)));
+        match std::fs::read_to_string(bp).ok().and_then(|t| Json::parse(&t).ok()) {
+            Some(base) => {
+                check_vs_baseline(
+                    "packed tok/s",
+                    "packed_speedup_vs_baseline",
+                    get_path(&native, &["backends", "packed", "tokens_per_sec"]),
+                    get_path(&base, &["native_backends", "backends", "packed", "tokens_per_sec"]),
+                    MIN_TOKS_VS_BASELINE,
+                    &mut root,
+                    &mut regressions,
+                );
+                check_vs_baseline(
+                    "packed/merged ratio",
+                    "packed_vs_merged_vs_baseline",
+                    get_path(&native, &["packed_vs_merged_ratio"]),
+                    get_path(&base, &["native_backends", "packed_vs_merged_ratio"]),
+                    MIN_RATIO_VS_BASELINE,
+                    &mut root,
+                    &mut regressions,
+                );
+                check_vs_baseline(
+                    "serve speedup",
+                    "serve_speedup_vs_baseline",
+                    get_path(&serve, &["speedup"]),
+                    get_path(&base, &["serve_loop", "speedup"]),
+                    MIN_RATIO_VS_BASELINE,
+                    &mut root,
+                    &mut regressions,
+                );
+                check_vs_baseline(
+                    "decode speedup",
+                    "decode_speedup_vs_baseline",
+                    get_path(&decode, &["speedup"]),
+                    get_path(&base, &["decode", "speedup"]),
+                    MIN_RATIO_VS_BASELINE,
+                    &mut root,
+                    &mut regressions,
+                );
             }
-            _ => eprintln!("could not read packed tok/s from baseline {bp}; skipping compare"),
+            None => eprintln!("could not parse baseline {bp}; skipping compare"),
         }
     }
     root.push(("native_backends", native));
@@ -81,6 +128,14 @@ fn main() {
             .unwrap_or_else(|e| panic!("writing perf record {path}: {e}"));
         println!("perf record written to {path}");
     }
+
+    // fail AFTER the record is on disk, so CI still uploads the artifact
+    // that shows what regressed
+    assert!(
+        regressions.is_empty(),
+        "perf regression vs baseline:\n  {}",
+        regressions.join("\n  ")
+    );
 
     if smoke {
         println!("--smoke: skipping PJRT section");
@@ -122,10 +177,34 @@ fn get_path(j: &Json, path: &[&str]) -> Option<f64> {
     cur.as_f64()
 }
 
-fn load_baseline_packed_toks(path: &str) -> Option<f64> {
-    let text = std::fs::read_to_string(path).ok()?;
-    let j = Json::parse(&text).ok()?;
-    get_path(&j, &["native_backends", "backends", "packed", "tokens_per_sec"])
+/// Compare one metric against the committed baseline: print the ratio,
+/// record it in the JSON root, and queue a failure when it falls below
+/// `floor`. Missing values on either side skip the check with a note
+/// (old baselines predate some metrics) instead of failing the run.
+fn check_vs_baseline(
+    label: &str,
+    key: &'static str,
+    cur: Option<f64>,
+    prev: Option<f64>,
+    floor: f64,
+    root: &mut Vec<(&'static str, Json)>,
+    regressions: &mut Vec<String>,
+) {
+    let (Some(cur), Some(prev)) = (cur, prev) else {
+        eprintln!("baseline compare: {label} missing on one side; skipping");
+        return;
+    };
+    if prev <= 0.0 {
+        return;
+    }
+    let ratio = cur / prev;
+    println!("{label} vs baseline: {cur:.2} / {prev:.2} = {ratio:.2}x (floor {floor})");
+    root.push((key, Json::num(ratio)));
+    if ratio < floor {
+        regressions.push(format!(
+            "{label} fell to {ratio:.2}x of baseline ({cur:.2} vs {prev:.2}, floor {floor})"
+        ));
+    }
 }
 
 /// Geometry for the native-engine section: big enough that weight
@@ -272,7 +351,7 @@ fn bench_serve_loop(smoke: bool) -> Json {
     );
 
     let n_requests = if smoke { 12 } else { 64 };
-    let probe = probe_throughput(scorer, n_requests, 8, 0x5e7e).expect("serve probe");
+    let probe = probe_throughput(scorer.clone(), n_requests, 8, 0x5e7e).expect("serve probe");
     assert_eq!(probe.summary.requests as usize, n_requests, "serve loop lost requests");
     println!(
         "serve_loop[packed]: per-sequence {:.0} tok/s, batched {:.0} tok/s, \
@@ -294,6 +373,53 @@ fn bench_serve_loop(smoke: bool) -> Json {
             probe.speedup()
         );
     }
+    // arena-residency segment: run a burst of generations through the
+    // engine on an undersized-but-sufficient paged arena and record the
+    // block gauges the serve path now exports (kv_blocks_peak /
+    // preemptions / per-slot resident bytes)
+    let kv_block = (dims.seq / 4).max(1);
+    let worst_blocks = dims.seq.div_ceil(kv_block);
+    let max_active = 4usize;
+    let engine = Engine::start_shared(
+        scorer,
+        EngineConfig {
+            max_batch: 8,
+            queue_capacity: 16,
+            max_active,
+            prefill_chunk: kv_block,
+            kv_block,
+            // roughly half the worst-case demand of `max_active` full
+            // windows: generations pack by actual residency, not by slot
+            arena_blocks: 2 * worst_blocks + 1,
+        },
+    );
+    let client = engine.client();
+    let n_gens = 6usize;
+    let prompt_len = (dims.seq / 4).max(1);
+    let max_new = dims.seq / 2;
+    let mut grng = Rng::seed(0x6e9e);
+    let mut pending = Vec::new();
+    for _ in 0..n_gens {
+        let prompt: Vec<u32> = (0..prompt_len).map(|_| grng.below(dims.vocab) as u32).collect();
+        pending.push(client.generate(prompt, SamplingParams::greedy(max_new)).expect("submit"));
+    }
+    for p in pending {
+        p.wait().expect("generation");
+    }
+    let summary = engine.shutdown();
+    assert_eq!(summary.gen_requests, n_gens as f64, "engine lost generations");
+    assert_eq!(summary.errors, 0.0, "engine generation errored");
+    let resident_per_slot = summary.kv_bytes_peak / max_active as f64;
+    println!(
+        "serve_arena[packed]: {n_gens} generations on {} blocks (worst-case {worst_blocks} \
+         per gen): KV peak {:.0} B / {:.0} blocks ({resident_per_slot:.0} B per active slot), \
+         {} preemptions",
+        2 * worst_blocks + 1,
+        summary.kv_bytes_peak,
+        summary.kv_blocks_peak,
+        summary.preemptions
+    );
+
     let gflops = probe.summary.kernel_gflops_p50.map(Json::num).unwrap_or(Json::Null);
     Json::obj(vec![
         ("requests", Json::num(n_requests as f64)),
@@ -303,6 +429,12 @@ fn bench_serve_loop(smoke: bool) -> Json {
         ("speedup", Json::num(probe.speedup())),
         ("mean_occupancy", Json::num(probe.summary.mean_occupancy)),
         ("kernel_gflops_p50", gflops),
+        ("gen_requests", Json::num(summary.gen_requests)),
+        ("gen_tokens", Json::num(summary.gen_tokens)),
+        ("kv_bytes_peak", Json::num(summary.kv_bytes_peak)),
+        ("kv_blocks_peak", Json::num(summary.kv_blocks_peak)),
+        ("kv_resident_bytes_per_slot", Json::num(resident_per_slot)),
+        ("preemptions", Json::num(summary.preemptions)),
     ])
 }
 
@@ -335,6 +467,13 @@ fn bench_decode(smoke: bool) -> Json {
         probe.full_tok_per_sec(),
         probe.speedup()
     );
+    println!(
+        "decode KV residency: {} B resident ({:.1} B per generated token; \
+         full-window capacity {} B)",
+        probe.kv_resident_bytes,
+        probe.kv_bytes_per_gen_token(),
+        probe.kv_capacity_bytes
+    );
     // the >= 3x acceptance claim needs real cores and the full geometry;
     // smoke/CI boxes only check the two decode paths agree
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -353,6 +492,9 @@ fn bench_decode(smoke: bool) -> Json {
         ("incremental_tok_per_sec", Json::num(probe.incremental_tok_per_sec())),
         ("full_recompute_tok_per_sec", Json::num(probe.full_tok_per_sec())),
         ("speedup", Json::num(probe.speedup())),
+        ("kv_resident_bytes", Json::num(probe.kv_resident_bytes as f64)),
+        ("kv_capacity_bytes", Json::num(probe.kv_capacity_bytes as f64)),
+        ("kv_bytes_per_gen_token", Json::num(probe.kv_bytes_per_gen_token())),
     ])
 }
 

@@ -145,8 +145,16 @@ pub struct ServeSummary {
     pub prefill_tokens: f64,
     /// fused prefill/decode scheduler steps executed
     pub decode_steps: f64,
-    /// high-water mark of resident KV-cache bytes
+    /// high-water mark of resident KV-cache bytes — *blocks in use*
+    /// across the active generations, not the full-capacity worst case
     pub kv_bytes_peak: f64,
+    /// high-water mark of KV arena blocks held by active generations
+    pub kv_blocks_peak: f64,
+    /// low-water mark companion: free arena blocks at the last sample
+    pub kv_blocks_free: f64,
+    /// generations evicted from the arena (later resumed bit-exact via
+    /// replay prefill)
+    pub preemptions: f64,
     /// median compute rate of the quantized linears across timed
     /// forwards (GFLOP/s over `ModelDims::linear_flops_per_token` —
     /// the `serve.kernel_gflops` series; `None` until a forward ran)
@@ -185,6 +193,9 @@ impl ServeSummary {
             prefill_tokens: m.counter("serve.prefill_tokens"),
             decode_steps: m.counter("serve.decode_steps"),
             kv_bytes_peak: m.gauge_peak("serve.kv_bytes"),
+            kv_blocks_peak: m.gauge_peak("serve.kv_blocks_used"),
+            kv_blocks_free: m.gauge("serve.kv_blocks_free"),
+            preemptions: m.counter("serve.preemptions"),
             kernel_gflops_p50: m.percentile("serve.kernel_gflops", 0.5),
         }
     }
@@ -222,12 +233,15 @@ impl std::fmt::Display for ServeSummary {
             write!(
                 f,
                 "; decode: {} generations, {} tokens over {} scheduler steps \
-                 ({} prompt tokens prefilled, KV peak {:.1} KiB)",
+                 ({} prompt tokens prefilled, KV peak {:.1} KiB / {:.0} blocks, \
+                 {} preemptions)",
                 self.gen_requests,
                 self.gen_tokens,
                 self.decode_steps,
                 self.prefill_tokens,
-                self.kv_bytes_peak / 1024.0
+                self.kv_bytes_peak / 1024.0,
+                self.kv_blocks_peak,
+                self.preemptions
             )?;
         }
         Ok(())
@@ -341,6 +355,10 @@ pub struct DecodeProbe {
     pub prefill_secs: f64,
     /// wall seconds: the incremental single-token decode steps
     pub step_secs: f64,
+    /// KV bytes resident at the end of the decode (blocks actually held)
+    pub kv_resident_bytes: usize,
+    /// KV bytes a full-window cache would hold (the pre-paged constant)
+    pub kv_capacity_bytes: usize,
 }
 
 impl DecodeProbe {
@@ -365,6 +383,13 @@ impl DecodeProbe {
 
     pub fn prefill_tok_per_sec(&self) -> f64 {
         self.prompt_tokens as f64 / self.prefill_secs.max(1e-12)
+    }
+
+    /// Resident KV bytes amortized per generated token — the paged
+    /// memory cost of decode, reported so the paged-vs-contiguous win is
+    /// a number in the bench record rather than a claim.
+    pub fn kv_bytes_per_gen_token(&self) -> f64 {
+        self.kv_resident_bytes as f64 / self.gen_tokens.max(1) as f64
     }
 }
 
@@ -414,6 +439,8 @@ pub fn probe_decode(
         lps.push(lp);
     }
     let step_secs = t0.elapsed().as_secs_f64();
+    let kv_resident_bytes = cache.bytes();
+    let kv_capacity_bytes = cache.capacity_bytes();
 
     ensure!(
         toks == full_toks,
@@ -428,6 +455,8 @@ pub fn probe_decode(
         full_secs,
         prefill_secs,
         step_secs,
+        kv_resident_bytes,
+        kv_capacity_bytes,
     })
 }
 

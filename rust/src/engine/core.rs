@@ -11,9 +11,13 @@
 //!    generations park in their own queue, score traffic behind them is
 //!    *not* head-of-line blocked while every decode slot is full;
 //! 2. **promote** — move waiting generations into free decode slots
-//!    (at most [`EngineConfig::max_active`] resident KV caches — the
-//!    placement constraint a multi-replica [`super::Dispatch`] policy
-//!    balances);
+//!    (at most [`EngineConfig::max_active`] resident sequences),
+//!    resuming preempted generations ahead of fresh admissions. Every
+//!    candidate is gated on the replica's [`KvArena`] having blocks for
+//!    its next prefill chunk beyond what the already-active set needs
+//!    for its own next step (promotion never forces an eviction) —
+//!    residency is priced at blocks *actually held*, not `max_active ×`
+//!    the full-window worst case;
 //! 3. **score** — one coalesced `score_batch` over up to
 //!    [`EngineConfig::max_batch`] queued scoring requests (plus any
 //!    choice-scoring jobs, which prefix-reuse backends run with one
@@ -25,12 +29,19 @@
 //!    forwards, so a long prompt cannot stall decode steps (or newly
 //!    admitted traffic) behind one monolithic prefill — and because
 //!    every kernel in the forward is row-independent, chunked prefill
-//!    is bitwise identical to the one-shot prefill.
+//!    is bitwise identical to the one-shot prefill. If the step's block
+//!    growth would overrun the arena, the scheduler first **preempts**
+//!    the longest generation (ties broken toward the least replay
+//!    progress, so an eviction never destroys the replay closest to
+//!    sampling) — its blocks return to the pool and it later resumes by
+//!    replaying `prompt ++ sampled` through chunked prefill, which is
+//!    bit-exact with never having been evicted.
 //!
 //! Sampled tokens stream to [`TokenStream`] subscribers the moment they
 //! are committed; the final [`Generated`] answer arrives on the
 //! request's [`Pending`].
 
+use std::cmp::Reverse;
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
@@ -43,7 +54,7 @@ use crate::coordinator::serve::ServeSummary;
 use crate::coordinator::Metrics;
 use crate::eval::scorer::{check_input, check_seq};
 use crate::eval::Scorer;
-use crate::model::kv::KvCache;
+use crate::model::kv::{KvArena, KvCache, DEFAULT_BLOCK_POSITIONS};
 use crate::model::ModelDims;
 use crate::tensor::Rng;
 
@@ -68,11 +79,30 @@ pub struct EngineConfig {
     /// chunks of this many tokens, interleaved with decode steps of the
     /// other active sequences (`0` = unchunked single-shot prefill).
     pub prefill_chunk: usize,
+    /// Positions per KV arena block (`0` = the
+    /// [`crate::model::kv::DEFAULT_BLOCK_POSITIONS`] default). Smaller
+    /// blocks track actual residency more tightly at the cost of more
+    /// block-table entries per sequence.
+    pub kv_block: usize,
+    /// Total blocks in the per-replica KV arena (`0` = auto: enough for
+    /// `max_active` full-window sequences — the pre-paged worst case, so
+    /// preemption never triggers). Sizing the arena *below* the worst
+    /// case is the point of paging: short-sequence traffic packs more
+    /// concurrent decodes into the same bytes, and the scheduler preempts
+    /// (evict + bit-exact re-prefill) on the rare burst that overflows.
+    pub arena_blocks: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { max_batch: 8, queue_capacity: 32, max_active: 8, prefill_chunk: 32 }
+        EngineConfig {
+            max_batch: 8,
+            queue_capacity: 32,
+            max_active: 8,
+            prefill_chunk: 32,
+            kv_block: 0,
+            arena_blocks: 0,
+        }
     }
 }
 
@@ -286,14 +316,26 @@ struct GenJob {
     stream: Option<Sender<TokenEvent>>,
 }
 
-/// One resident generation: its KV cache, prefill progress, and the
-/// tokens sampled so far (the last one not yet fed back).
+/// One resident generation: its KV cache (a block table over the
+/// replica's shared [`KvArena`]), prefill progress, and the tokens
+/// sampled so far (the last one not yet fed back).
 struct ActiveGen {
     cache: KvCache,
+    /// the original request prompt (kept so a preemption can rebuild the
+    /// replay prefix)
     prompt: Vec<u32>,
-    /// prompt positions already in the cache; the prompt is fully
-    /// prefilled (and decoding has begun) once `done == prompt.len()`
+    /// the token prefix currently being prefilled: the prompt for a
+    /// fresh generation, `prompt ++ tokens[..k-1]` when resuming after a
+    /// preemption (everything the evicted cache held)
+    prefill: Vec<u32>,
+    /// prefill positions already in the cache; decoding (has) begun once
+    /// `done == prefill.len()`
     done: usize,
+    /// sample from the last prefill row once prefill completes? True for
+    /// a fresh prompt; false on resume-after-preemption, where the token
+    /// after the replayed prefix was already sampled (it is
+    /// `tokens.last()`, waiting to be fed back).
+    sample_after_prefill: bool,
     tokens: Vec<u32>,
     logps: Vec<f32>,
     params: SamplingParams,
@@ -304,12 +346,14 @@ struct ActiveGen {
 }
 
 impl ActiveGen {
-    fn admit(g: GenJob, dims: &ModelDims) -> ActiveGen {
+    fn admit(g: GenJob, arena: &Arc<KvArena>) -> ActiveGen {
         let rng = g.params.rng();
         ActiveGen {
-            cache: KvCache::new(dims),
+            cache: arena.new_cache(),
+            prefill: g.prompt.clone(),
             prompt: g.prompt,
             done: 0,
+            sample_after_prefill: true,
             tokens: Vec::new(),
             logps: Vec::new(),
             params: g.params,
@@ -318,6 +362,36 @@ impl ActiveGen {
             resp: g.resp,
             stream: g.stream,
         }
+    }
+
+    /// Tokens the next scheduler step will feed for this sequence: the
+    /// next prefill chunk, or one decode token.
+    fn next_feed(&self, chunk: usize) -> usize {
+        if self.done < self.prefill.len() {
+            self.done.saturating_add(chunk).min(self.prefill.len()) - self.done
+        } else {
+            1
+        }
+    }
+
+    /// Evict this generation from the arena: free every block and reset
+    /// prefill state so the sequence later resumes by replaying
+    /// `prompt ++ tokens[..k-1]` through chunked prefill. Chunked prefill
+    /// is bitwise identical to the uninterrupted forward and the sampling
+    /// RNG / logps / stream are untouched, so a resumed generation is
+    /// bit-exact with one that was never preempted.
+    fn preempt(&mut self) {
+        self.cache.clear();
+        self.prefill = self.prompt.clone();
+        if let Some((_, fed)) = self.tokens.split_last() {
+            // the last sampled token was never fed back: it is replayed
+            // by the decode step after the prefix prefill, not here
+            self.prefill.extend_from_slice(fed);
+            self.sample_after_prefill = false;
+        } else {
+            self.sample_after_prefill = true;
+        }
+        self.done = 0;
     }
 
     /// Commit one sampled token: record it, stream it.
@@ -355,6 +429,20 @@ fn finish_gen(a: ActiveGen, metrics: &Metrics) {
     let _ = a
         .resp
         .send(Ok(Response::Generated(Generated { tokens: a.tokens, logps: a.logps })));
+}
+
+/// Blocks the active set must pull from the arena to advance one fused
+/// step: each sequence appends [`ActiveGen::next_feed`] positions, and
+/// growth inside a block the sequence already holds costs nothing.
+fn step_block_need(arena: &KvArena, active: &[ActiveGen], chunk: usize) -> usize {
+    active
+        .iter()
+        .map(|a| {
+            arena
+                .blocks_for(a.cache.len() + a.next_feed(chunk))
+                .saturating_sub(a.cache.blocks_held())
+        })
+        .sum()
 }
 
 /// Admission validation for a `Choices` request (window + vocabulary),
@@ -397,9 +485,24 @@ fn engine_loop(
     // activation row spends in the quantized linears + LM head
     let flops_per_row = dims.linear_flops_per_token() as f64;
 
+    // the replica's KV block arena: every active generation draws its
+    // blocks here, so admission and scheduling price requests at blocks
+    // *actually held* instead of max_active × full-window
+    let kv_block = if cfg.kv_block == 0 { DEFAULT_BLOCK_POSITIONS } else { cfg.kv_block };
+    let kv_block = kv_block.clamp(1, dims.seq.max(1));
+    let arena_blocks = if cfg.arena_blocks == 0 {
+        max_active * dims.seq.div_ceil(kv_block)
+    } else {
+        cfg.arena_blocks.max(1)
+    };
+    let arena = KvArena::new(&dims, kv_block, arena_blocks);
+
     let mut score_q: VecDeque<ScoreJob> = VecDeque::new();
     let mut gen_wait: VecDeque<GenJob> = VecDeque::new();
     let mut active: Vec<ActiveGen> = Vec::new();
+    // generations evicted from the arena, waiting to resume via replay
+    // prefill; always resumed ahead of fresh `gen_wait` admissions
+    let mut preempted: VecDeque<ActiveGen> = VecDeque::new();
     // one-slot parking spot for a drained message whose target queue is
     // full: intake pauses (bounded memory) without the full queue of one
     // request kind blocking admission of the other kind
@@ -467,6 +570,17 @@ fn engine_loop(
                             dims.seq
                         );
                     }
+                    // residency-priced admission: a generation that could
+                    // never fit the arena even running alone is rejected
+                    // up front instead of deadlocking the decode slots
+                    let worst = arena.blocks_for(prompt.len() + params.max_new.saturating_sub(1));
+                    if worst > arena.max_blocks() {
+                        bail!(
+                            "generation would hold {worst} KV block(s) at its longest but \
+                             the arena has only {} — raise arena_blocks or shorten the request",
+                            arena.max_blocks()
+                        );
+                    }
                     Ok(())
                 })();
                 match admitted {
@@ -524,7 +638,11 @@ fn engine_loop(
             }
         }
         if !shutting_down {
-            if stash.is_none() && score_q.is_empty() && gen_wait.is_empty() && active.is_empty()
+            if stash.is_none()
+                && score_q.is_empty()
+                && gen_wait.is_empty()
+                && active.is_empty()
+                && preempted.is_empty()
             {
                 // completely idle: block for the next message
                 match rx.recv() {
@@ -560,18 +678,45 @@ fn engine_loop(
         }
 
         // ---- promote waiting generations into free decode slots --------
+        // preempted generations resume first (they were admitted before
+        // anything still in gen_wait), and every candidate is gated on
+        // the arena covering its next prefill chunk *on top of* the
+        // blocks the already-active set needs for its own next step.
+        // Without that reservation a just-promoted resume (holding zero
+        // blocks) could force the eviction loop to kick out an
+        // established generation, and with several replaying sequences
+        // that rotation can repeat forever without anyone sampling. A
+        // gated resume also blocks fresh admissions behind it, so
+        // eviction can never starve a preempted sequence.
         while active.len() < max_active {
-            match gen_wait.pop_front() {
-                Some(g) => active.push(ActiveGen::admit(g, &dims)),
+            let reserved = step_block_need(&arena, &active, chunk);
+            if let Some(p) = preempted.front() {
+                if reserved + arena.blocks_for(p.next_feed(chunk)) > arena.blocks_free() {
+                    break;
+                }
+                active.push(preempted.pop_front().expect("front observed"));
+                continue;
+            }
+            match gen_wait.front() {
+                Some(g) => {
+                    let first = g.prompt.len().min(chunk);
+                    if reserved + arena.blocks_for(first) > arena.blocks_free() {
+                        break;
+                    }
+                    let g = gen_wait.pop_front().expect("front observed");
+                    active.push(ActiveGen::admit(g, &arena));
+                }
                 None => break,
             }
         }
-        metrics.gauge_set("serve.gen_backlog", gen_wait.len() as f64);
+        metrics.gauge_set("serve.gen_backlog", (gen_wait.len() + preempted.len()) as f64);
         metrics.gauge_set("serve.active_decodes", active.len() as f64);
         metrics.gauge_set(
             "serve.kv_bytes",
             active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
         );
+        metrics.gauge_set("serve.kv_blocks_used", arena.blocks_in_use() as f64);
+        metrics.gauge_set("serve.kv_blocks_free", arena.blocks_free() as f64);
 
         // ---- one coalesced scoring batch -------------------------------
         if !score_q.is_empty() {
@@ -665,15 +810,55 @@ fn engine_loop(
             }
         }
 
+        // ---- residency: make this step's block growth fit the arena ----
+        // When the growth every active sequence needs this step exceeds
+        // the free pool, evict the longest generation — most sampled
+        // tokens, ties broken toward the LEAST replay progress (smallest
+        // resident cache, frequently a just-promoted resume that holds
+        // nothing yet and loses nothing). Breaking ties toward the
+        // largest cache instead would destroy the most-complete replay
+        // each round, which livelocks once several tied sequences are
+        // replaying: each round's survivor finishes its replay only to
+        // be evicted before it can sample. With least-progress ties the
+        // most-complete replay always survives to sample, and a strictly
+        // longest victim has by definition sampled since it last tied,
+        // so tokens keep committing between evictions and every finite
+        // workload drains. The victim's blocks return to the arena and
+        // it parks in `preempted` to resume via replay prefill.
+        while !active.is_empty() {
+            let need = step_block_need(&arena, &active, chunk);
+            if need <= arena.blocks_free() {
+                break;
+            }
+            if active.len() == 1 {
+                // nothing left to evict: this request alone cannot fit
+                // (defensive — admission bounds worst-case residency, so
+                // a real scorer never lands here)
+                let a = active.pop().expect("non-empty active set");
+                metrics.incr("serve.errors");
+                let _ = a.resp.send(Err(anyhow!(
+                    "KV arena exhausted: the generation needs more blocks than the arena holds"
+                )));
+                break;
+            }
+            let vi = (0..active.len())
+                .max_by_key(|&i| (active[i].tokens.len(), Reverse(active[i].cache.len())))
+                .expect("non-empty active set");
+            let mut v = active.swap_remove(vi);
+            v.preempt();
+            metrics.incr("serve.preemptions");
+            preempted.push_back(v);
+        }
+
         // ---- one fused prefill-chunk / decode step over active ---------
         if !active.is_empty() {
             let mut news: Vec<Vec<u32>> = Vec::with_capacity(active.len());
             let mut prefill_rows = 0usize;
             let mut decode_rows = 0usize;
             for a in &active {
-                if a.done < a.prompt.len() {
-                    let end = (a.done + chunk).min(a.prompt.len());
-                    news.push(a.prompt[a.done..end].to_vec());
+                if a.done < a.prefill.len() {
+                    let end = a.done.saturating_add(chunk).min(a.prefill.len());
+                    news.push(a.prefill[a.done..end].to_vec());
                     prefill_rows += end - a.done;
                 } else {
                     news.push(vec![*a.tokens.last().expect("decoding sequence has a token")]);
@@ -696,11 +881,14 @@ fn engine_loop(
                     metrics.add("serve.decode_tokens", decode_rows as f64);
                     for (i, a) in active.iter_mut().enumerate() {
                         let n = news[i].len();
-                        if a.done < a.prompt.len() {
+                        if a.done < a.prefill.len() {
                             a.done += n;
-                            if a.done == a.prompt.len() {
+                            if a.done == a.prefill.len() && a.sample_after_prefill {
                                 // prompt complete: the first token samples
-                                // from the last prompt position's logits
+                                // from the last prompt position's logits.
+                                // (On a post-preemption replay that token
+                                // was already sampled — `tokens.last()` —
+                                // so the resume goes straight to decode.)
                                 let (tok, lp) =
                                     sample_token(lgs[i].row(n - 1), &a.params, &mut a.rng);
                                 a.push(tok, lp);
@@ -734,6 +922,9 @@ fn engine_loop(
                 "serve.kv_bytes",
                 active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
             );
+            metrics.gauge_set("serve.kv_blocks_used", arena.blocks_in_use() as f64);
+            metrics.gauge_set("serve.kv_blocks_free", arena.blocks_free() as f64);
+            metrics.gauge_set("serve.gen_backlog", (gen_wait.len() + preempted.len()) as f64);
         }
 
         if shutting_down
@@ -741,6 +932,7 @@ fn engine_loop(
             && score_q.is_empty()
             && gen_wait.is_empty()
             && active.is_empty()
+            && preempted.is_empty()
         {
             break;
         }

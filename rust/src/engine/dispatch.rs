@@ -4,9 +4,9 @@
 //! worker means running several loops and deciding, per request, which
 //! replica admits it. [`Dispatch`] is that decision point —
 //! [`super::Engine::start_sharded`] routes every submission through it.
-//! Per-replica KV residency (`KvCache::bytes × max_active`) is the
-//! placement constraint a smarter policy would balance; [`RoundRobin`]
-//! is the baseline that ignores it.
+//! Per-replica KV residency (blocks actually held in the replica's
+//! `KvArena`) is the placement constraint a smarter policy would
+//! balance; [`RoundRobin`] is the baseline that ignores it.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -10,13 +10,17 @@
 //!     Choices{..}     ├────▶│   Dispatch picks          │
 //!     Generate{..}    │     │   the replica)            ▼ promote while
 //!       + Sampling-   │     │                      decode slots free
-//!         Params      │     │                      (≤ max_active KV)
+//!         Params      │     │                      (≤ max_active seqs,
+//!                     │     │                       preempted resume
+//!                     │     │                       first, gated on
+//!                     │     │                       free KvArena blocks)
 //!                     │     ├ score: one coalesced score_batch
 //!   Pending<Response> │     │   (≤ max_batch requests per round)
 //!     .wait()         ◀─────┤ step: one fused cache_forward_batch —
 //!     .wait_timeout() │     │   decode seqs feed their last token,
 //!   TokenStream ◀─────┘     │   prefilling seqs feed the next
-//!     (per-token events)    │   prefill_chunk prompt tokens
+//!     (per-token events)    │   prefill_chunk tokens; arena overflow
+//!                           │   preempts the longest generation
 //!                           └ repeat — new traffic admits BETWEEN steps
 //! ```
 //!
@@ -26,8 +30,9 @@
 //! monopolizing an iteration. Backends declare capabilities once via
 //! [`EngineCaps`] (see [`crate::eval::Scorer::caps`]) instead of being
 //! probed per-capability; [`Dispatch`] is the placement seam for
-//! multi-replica serving, with per-replica KV residency
-//! (`max_active × KvCache::bytes`) as the constraint.
+//! multi-replica serving, with per-replica KV residency (blocks held in
+//! the replica's [`crate::model::KvArena`] — not the
+//! `max_active × full-window` worst case) as the constraint.
 //!
 //! The legacy [`crate::coordinator::serve::ServeClient`] verbs survive
 //! as deprecated shims over [`EngineClient`].

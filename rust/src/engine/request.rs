@@ -22,7 +22,10 @@ pub enum Request {
     /// Generate up to `params.max_new` tokens from `prompt` under the
     /// sampling configuration. Answered with [`Response::Generated`];
     /// submit via [`super::EngineClient::generate_stream`] to also
-    /// receive each token as it is sampled.
+    /// receive each token as it is sampled. Scheduling is transparent to
+    /// the caller: a generation preempted from the KV arena under
+    /// memory pressure resumes bit-exact, with the same [`Pending`] /
+    /// [`TokenStream`] and no token replayed or dropped.
     Generate { prompt: Vec<u32>, params: SamplingParams },
 }
 

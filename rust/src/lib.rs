@@ -129,10 +129,12 @@
 //! `*_naive` test references (vectorized == naive ≤1e-5; LUT decode ==
 //! shift/mask bitwise), and `cargo bench --bench bench_runtime --
 //! --json <path>` emits the machine-readable perf record (tok/s,
-//! per-kernel GFLOP/s, speedup ratios; `BENCH_PR5.json` in CI) with the
+//! per-kernel GFLOP/s, speedup ratios; `BENCH_PR6.json` in CI) with the
 //! live `serve.kernel_gflops` series feeding the serve summaries.
+//! CI gates the record against the committed `BENCH_BASELINE.json`
+//! (absolute packed tok/s plus the machine-relative speedup ratios).
 //!
-//! ## KV cache: incremental decode + prefix reuse
+//! ## KV cache: paged arena + incremental decode + prefix reuse
 //!
 //! Attention used to recompute the whole O(S²) causal triangle per
 //! request. [`model::kv::KvCache`] stores each layer's rotated-K / V rows
@@ -145,29 +147,49 @@
 //!   prefill (once)                   decode (per token)
 //!   tokens[0..P] ──▶ forward ──┐     last tok ──▶ forward (1 row/linear)
 //!                              ▼                      │
-//!              KvCache: per layer, rotated K + V      │ argmax / logp
-//!              [n_heads, seq, head_dim] planes   ◀────┘ appended
+//!              KvCache: block table over a shared     │ argmax / logp
+//!              KvArena (fixed-size position blocks,   │ appended
+//!              rotated K + V head-major planes)  ◀────┘
 //!                              │
 //!   score_choices: truncate(P) ├──▶ choice A suffix  (cache reuse:
 //!   between choices — prompt   ├──▶ choice B suffix   prompt forwarded
 //!   prefilled exactly once     └──▶ ...               once per item)
 //! ```
 //!
+//! Since PR 6 the cache storage is **paged**: an engine-owned
+//! [`model::kv::KvArena`] hands out fixed-size position blocks
+//! (`EngineConfig::kv_block`) from one recycled pool, and each
+//! [`model::kv::KvCache`] is just a block table over it. Attention walks
+//! the table in ascending-position order with the same per-row reduction
+//! order as a contiguous buffer, so paged logits are **bitwise
+//! identical** to the contiguous path (`tests/kv_cache.rs` pins this).
+//! A standalone `KvCache::new` gets a private full-window arena, so
+//! non-engine callers are unchanged.
+//!
 //! The engine schedules decode traffic over the same cache machinery
 //! ([`engine::EngineClient::generate`]): admitted prompts enter the KV
 //! cache in `prefill_chunk` slices, then every active sequence advances
 //! **one token per scheduler step** — each step is a single fused
 //! `[Σ newᵢ, d_model]` forward mixing prefill chunks and decode tokens,
-//! so the packed group-tile dequant keeps amortizing. At most
-//! `EngineConfig::max_active` KV caches are resident per replica (the
-//! placement constraint the [`engine::Dispatch`] seam balances across
-//! replicas); excess generations wait in their own queue so score
-//! traffic is never head-of-line blocked behind them. Latency p50/p95,
-//! queue-depth, KV-residency, and gen-backlog gauges land in
-//! [`coordinator::Metrics`]; `rilq serve-bench` and `cargo bench --bench
-//! bench_runtime` report prefill-vs-incremental tok/s, and
-//! `tests/kv_cache.rs` + `tests/engine_api.rs` pin incremental ==
-//! full-forward logits and engine greedy == `greedy_decode`.
+//! so the packed group-tile dequant keeps amortizing. Admission prices a
+//! generation at the blocks it *actually holds*, not its worst case, so
+//! short generations pack beyond `EngineConfig::max_active`'s worst-case
+//! budget; when the arena runs dry mid-decode the scheduler **preempts**
+//! the longest generation, ties broken toward the least replay progress
+//! (frees its blocks, replays it later via bit-exact chunked re-prefill
+//! — resumed output is bitwise identical to an uninterrupted run).
+//! Preempted resumes are promoted ahead of fresh admissions — gated so
+//! promotion never forces an eviction — nothing starves, and score
+//! traffic is never
+//! head-of-line blocked behind generations. Latency p50/p95,
+//! queue-depth, KV block/byte residency (`serve.kv_bytes`,
+//! `serve.kv_blocks_free`), preemption counts, and gen-backlog gauges
+//! land in [`coordinator::Metrics`]; `rilq serve-bench` and `cargo bench
+//! --bench bench_runtime` report prefill-vs-incremental tok/s and
+//! bytes-per-generated-token, and `tests/kv_cache.rs` +
+//! `tests/engine_api.rs` + `tests/serve_loop.rs` pin incremental ==
+//! full-forward logits, engine greedy == `greedy_decode`, and
+//! preempt→resume bitwise parity.
 
 // Clippy style-lint allowances for the numeric kernels live in
 // Cargo.toml's `[lints.clippy]` table so they cover tests/benches too.

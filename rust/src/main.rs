@@ -257,6 +257,13 @@ fn serve_bench(args: &Args) -> Result<()> {
         "decode speedup: {:.2}x (prefill + incremental steps vs quadratic recompute)",
         dprobe.speedup()
     );
+    println!(
+        "decode KV residency: {} B resident ({:.1} B per generated token; \
+         full-window capacity {} B)",
+        dprobe.kv_resident_bytes,
+        dprobe.kv_bytes_per_gen_token(),
+        dprobe.kv_capacity_bytes
+    );
 
     // sampling/streaming section: generation traffic through the typed
     // engine API, with a seeded-determinism cross-check
@@ -270,13 +277,21 @@ fn serve_bench(args: &Args) -> Result<()> {
             seed: Some(0xa11ce),
             stop: Vec::new(),
         };
+        // --max-active / --arena-blocks / --kv-block size the decode slots
+        // and the paged KV arena; an arena below `max_active` worst-case
+        // sequences exercises the preemption path under real traffic
+        let max_active = args.opt_usize("max-active")?.unwrap_or(max_batch).max(1);
+        let arena_blocks = args.opt_usize("arena-blocks")?.unwrap_or(0);
+        let kv_block = args.opt_usize("kv-block")?.unwrap_or(0);
         let engine = Engine::start_shared(
             scorer.clone(),
             EngineConfig {
                 max_batch,
                 queue_capacity: max_batch * 2,
-                max_active: max_batch,
+                max_active,
                 prefill_chunk: (seq / 4).max(1),
+                kv_block,
+                arena_blocks,
             },
         );
         let client = engine.client();
@@ -315,6 +330,15 @@ fn serve_bench(args: &Args) -> Result<()> {
             n_tokens as f64 / secs.max(1e-12)
         );
         println!("  {summary}");
+        // CI runs the smoke geometry with an arena sized below the
+        // concurrent worst case and asserts the eviction path actually
+        // ran (a preemption-free pass would silently stop covering it)
+        if args.flag("expect-preemption") && summary.preemptions < 1.0 {
+            return Err(anyhow!(
+                "--expect-preemption: the arena never evicted a generation \
+                 (arena_blocks={arena_blocks}, kv_block={kv_block})"
+            ));
+        }
     }
     Ok(())
 }
@@ -335,7 +359,8 @@ USAGE:
                                       merged = adapter-merged dense (parity oracle)
   rilq serve-bench [--backend={dense|packed|merged} --bits=2 --batch=8
                     --requests=64 --seq=64 --layers=4 --rank=8 --gen=N
-                    --sample --stream --smoke]
+                    --max-active=N --arena-blocks=N --kv-block=N
+                    --sample --stream --expect-preemption --smoke]
                                       native engine serving benchmark:
                                       per-sequence vs coalesced ragged
                                       batches on one BackendScorer, a
@@ -345,7 +370,14 @@ USAGE:
                                       length), and with --sample/--stream a
                                       sampled (T/top-k/top-p, seeded) or
                                       token-streamed generation section
-                                      through the typed Engine API;
+                                      through the typed Engine API.
+                                      --max-active sizes the decode slots,
+                                      --kv-block/--arena-blocks the paged
+                                      KV arena (0 = auto worst case); an
+                                      undersized arena exercises eviction
+                                      + bit-exact resume, and
+                                      --expect-preemption fails the run if
+                                      no eviction happened;
                                       --smoke shrinks geometry for CI
                                       (PJRT-free; no artifacts needed)
   rilq inspect                        artifact / config inventory

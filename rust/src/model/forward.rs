@@ -138,25 +138,28 @@ pub fn apply_rope(x: &mut Mat, hd: usize) {
 }
 
 /// The shared causal-attention row kernel: `new` query rows at absolute
-/// positions `past..past+new` attend over `past+new` key/value rows held
-/// in head-major planes (`[n_heads, stride, head_dim]` — a [`KvCache`]
-/// layer, or a transient buffer built by [`attention`]). K rows are
-/// already rotated; Q rows are rotated here into one small scratch reused
-/// across heads — no per-head matrix gathers are allocated.
+/// positions `past..past+new` attend over `past+new` key/value rows
+/// presented as ordered **segments** — for each head, `segs_per_head`
+/// consecutive `(k, v)` slice pairs of whole `head_dim` rows covering
+/// ascending positions (a paged [`KvCache`]'s blocks via
+/// `KvCache::layer_segments`, or one transient full-sequence segment per
+/// head built by [`attention`]). K rows are already rotated; Q rows are
+/// rotated here into one small scratch reused across heads — no per-head
+/// matrix gathers are allocated.
 ///
-/// Per-row math (score loop order, max-subtracted softmax, the `w == 0`
-/// skip) is shared between the full and incremental paths, and the
-/// Q·K dots / weighted-V accumulations run on the 8-wide unrolled
-/// [`kernels::dot`] / [`kernels::axpy`] primitives — whose per-row
-/// reduction order is fixed (see `tensor::kernels`) — so full and
-/// incremental forwards produce bitwise-identical rows.
+/// Per-row math (ascending-position score loop, max-subtracted softmax,
+/// the `w == 0` skip) is independent of how positions are cut into
+/// segments, and the Q·K dots / weighted-V accumulations run on the
+/// 8-wide unrolled [`kernels::dot`] / [`kernels::axpy`] primitives —
+/// whose per-row reduction order is fixed (see `tensor::kernels`) — so
+/// paged, contiguous, full, and incremental forwards all produce
+/// bitwise-identical rows.
 fn attend_cached(
     dims: &ModelDims,
     rope: &RopeTable,
     q: &Mat,
-    kbuf: &[f32],
-    vbuf: &[f32],
-    stride: usize,
+    segs: &[(&[f32], &[f32])],
+    segs_per_head: usize,
     past: usize,
     out: &mut Mat,
 ) {
@@ -170,33 +173,48 @@ fn attend_cached(
     let mut scores: Vec<f32> = Vec::with_capacity(past + new);
     for head in 0..h {
         let hoff = head * hd;
-        let khead = &kbuf[head * stride * hd..];
-        let vhead = &vbuf[head * stride * hd..];
+        let hsegs = &segs[head * segs_per_head..(head + 1) * segs_per_head];
         for i in 0..new {
             let pos = past + i;
             qh.copy_from_slice(&q.row(i)[hoff..hoff + hd]);
             rope.rotate(&mut qh, pos);
-            // causal: position pos attends to 0..=pos
+            // causal: position pos attends to 0..=pos, walking the
+            // segments in ascending-position order
             scores.clear();
             scores.resize(pos + 1, 0.0);
             let mut maxs = f32::NEG_INFINITY;
-            for (j, sc) in scores.iter_mut().enumerate() {
-                let krow = &khead[j * hd..j * hd + hd];
-                *sc = kernels::dot(&qh, krow) * scale;
-                maxs = maxs.max(*sc);
+            let mut j = 0usize;
+            'kseg: for (ks, _) in hsegs {
+                for krow in ks.chunks_exact(hd) {
+                    if j > pos {
+                        break 'kseg;
+                    }
+                    let sc = kernels::dot(&qh, krow) * scale;
+                    scores[j] = sc;
+                    maxs = maxs.max(sc);
+                    j += 1;
+                }
             }
+            debug_assert!(j > pos, "kv segments shorter than attended span");
             let mut denom = 0.0f32;
             for sc in &mut scores {
                 *sc = (*sc - maxs).exp();
                 denom += *sc;
             }
             let orow = &mut out.row_mut(i)[hoff..hoff + hd];
-            for (j, &sc) in scores.iter().enumerate() {
-                let w = sc / denom;
-                if w == 0.0 {
-                    continue;
+            let mut j = 0usize;
+            'vseg: for (_, vs) in hsegs {
+                for vrow in vs.chunks_exact(hd) {
+                    if j > pos {
+                        break 'vseg;
+                    }
+                    let w = scores[j] / denom;
+                    j += 1;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    kernels::axpy(w, vrow, orow);
                 }
-                kernels::axpy(w, &vhead[j * hd..j * hd + hd], orow);
             }
         }
     }
@@ -204,7 +222,7 @@ fn attend_cached(
 
 /// Causal multi-head attention over `[S, d]` projections (no cache): K is
 /// rotated once into a transient head-major buffer, then the shared
-/// kernel runs with `past == 0`.
+/// kernel runs with `past == 0` and one full-sequence segment per head.
 fn attention(dims: &ModelDims, rope: &RopeTable, q: &Mat, k: &Mat, v: &Mat) -> Mat {
     let s = q.rows();
     let (h, hd) = (dims.n_heads, dims.head_dim());
@@ -220,8 +238,14 @@ fn attention(dims: &ModelDims, rope: &RopeTable, q: &Mat, k: &Mat, v: &Mat) -> M
             vbuf[off..off + hd].copy_from_slice(&vrow[head * hd..(head + 1) * hd]);
         }
     }
+    let segs: Vec<(&[f32], &[f32])> = (0..h)
+        .map(|head| {
+            let o = head * s * hd;
+            (&kbuf[o..o + s * hd], &vbuf[o..o + s * hd])
+        })
+        .collect();
     let mut out = Mat::zeros(s, dims.d_model);
-    attend_cached(dims, rope, q, &kbuf, &vbuf, s, 0, &mut out);
+    attend_cached(dims, rope, q, &segs, 1, 0, &mut out);
     out
 }
 
@@ -400,6 +424,9 @@ pub fn forward_trace_with_cache(
     if n == 0 {
         return Ok(Mat::zeros(0, dims.vocab));
     }
+    // take the arena blocks for the new positions up front: an `Err`
+    // (arena exhausted) leaves the cache untouched
+    cache.reserve(n)?;
     let fam = |name: &str| LINEARS.iter().position(|&nm| nm == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
     let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
@@ -414,16 +441,8 @@ pub fn forward_trace_with_cache(
         let v = w.linears[iv][l].forward(&x1);
         cache.extend_layer(l, &rope, &k, &v, 0, n);
         let mut att = Mat::zeros(n, dims.d_model);
-        attend_cached(
-            dims,
-            &rope,
-            &q,
-            cache.layer_k(l),
-            cache.layer_v(l),
-            cache.capacity(),
-            past,
-            &mut att,
-        );
+        let segs = cache.layer_segments(l);
+        attend_cached(dims, &rope, &q, &segs, cache.blocks_held(), past, &mut att);
         h = h.add(&w.linears[io][l].forward(&att));
         let x2 = rmsnorm(&h, &w.ln2[l]);
         let mut g = w.linears[ig][l].forward(&x2);
@@ -472,9 +491,10 @@ pub fn forward_prefill_chunked(
     chunk: usize,
 ) -> Result<Mat> {
     ensure!(chunk >= 1, "prefill chunk size must be at least 1 token");
-    // validate the whole prompt up front so an `Err` never leaves the
-    // cache partially extended
+    // validate the whole prompt and reserve all its arena blocks up
+    // front so an `Err` never leaves the cache partially extended
     check_cache_step(dims, cache, tokens, 0)?;
+    cache.reserve(tokens.len())?;
     let mut out = Mat::zeros(tokens.len(), dims.vocab);
     let mut done = 0usize;
     while done < tokens.len() {
@@ -511,6 +531,17 @@ pub fn forward_batch_with_cache(
     );
     for (i, (seq, cache)) in news.iter().zip(caches.iter()).enumerate() {
         check_cache_step(dims, cache, seq, i)?;
+    }
+    // reserve every sequence's arena blocks before touching any cache;
+    // if one reservation fails, hand back what the earlier ones took so
+    // the `Err` leaves every cache (and the arena) unchanged
+    for i in 0..news.len() {
+        if let Err(e) = caches[i].reserve(news[i].len()) {
+            for c in caches[..i].iter_mut() {
+                c.release_uncommitted();
+            }
+            bail!("sequence {i}: {e}");
+        }
     }
     let fam = |name: &str| LINEARS.iter().position(|&nm| nm == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
@@ -551,16 +582,8 @@ pub fn forward_batch_with_cache(
             cache.extend_layer(l, &rope, &k, &v, offsets[si], n);
             let qb = q.block(offsets[si], 0, n, d);
             let mut ab = Mat::zeros(n, d);
-            attend_cached(
-                dims,
-                &rope,
-                &qb,
-                cache.layer_k(l),
-                cache.layer_v(l),
-                cache.capacity(),
-                past,
-                &mut ab,
-            );
+            let segs = cache.layer_segments(l);
+            attend_cached(dims, &rope, &qb, &segs, cache.blocks_held(), past, &mut ab);
             att.set_block(offsets[si], 0, &ab);
         }
         h = h.add(&w.linears[io][l].forward(&att));

@@ -1,4 +1,5 @@
-//! Per-sequence KV cache and the shared RoPE angle table.
+//! Per-sequence KV cache over a shared block arena, plus the shared RoPE
+//! angle table.
 //!
 //! The serving forward historically recomputed full causal attention over
 //! the whole sequence for every request — O(S²) work to score one more
@@ -10,19 +11,41 @@
 //! channel-pair) per head per layer) into one table shared across heads,
 //! layers, and sequences.
 //!
-//! Cache layout is head-major per layer: `[n_heads, capacity, head_dim]`,
-//! so the attention inner loop streams contiguous `head_dim`-float rows
-//! exactly like the old per-head gather copies did — without the copies.
-//! K rows are stored *already rotated* (a row's rotation depends only on
-//! its own absolute position, which never changes as the sequence grows).
+//! # Paged storage
 //!
-//! [`KvCache::truncate`] rolls the cache back to a shorter prefix, which
-//! is what makes shared-prompt scoring cheap: `mc_accuracy` prefills the
-//! prompt once, scores one choice's suffix, truncates back to the prompt,
-//! and scores the next choice — bitwise-stable across choices because
-//! truncation restores the exact buffer state.
+//! Storage is *paged* (the PagedAttention insight, CPU-side): a
+//! [`KvArena`] owns a bounded pool of fixed-size **position blocks** —
+//! [`KvArena::block_size`] positions × per-layer head-major K/V planes —
+//! and each [`KvCache`] is a block table over that pool, growing one
+//! block at a time via [`KvCache::reserve`] as the sequence extends. A
+//! cache therefore pays only for the positions it actually holds
+//! ([`KvCache::bytes`] is blocks-in-use, not the worst-case window), so a
+//! scheduler can admit sequences against *actual* residency and reclaim
+//! blocks the moment a sequence finishes, truncates, or is preempted.
+//! [`KvCache::new`] builds a solo single-owner arena sized for the full
+//! window, preserving the old "one cache, full capacity" behavior for
+//! offline scoring; the engine shares one arena across every active
+//! sequence via [`KvArena::new_cache`].
+//!
+//! Within a block, each layer's planes are head-major
+//! `[n_heads, block_size, head_dim]`, so the attention inner loop still
+//! streams contiguous `head_dim`-float rows exactly like the contiguous
+//! cache did — the block walk only changes *where* consecutive rows
+//! live, never the per-row reduction order, which keeps paged attention
+//! bitwise identical to the contiguous path. K rows are stored *already
+//! rotated* (a row's rotation depends only on its own absolute position,
+//! which never changes as the sequence grows).
+//!
+//! [`KvCache::truncate`] rolls the cache back to a shorter prefix
+//! (returning now-unused whole blocks to the arena), which is what makes
+//! shared-prompt scoring cheap: `mc_accuracy` prefills the prompt once,
+//! scores one choice's suffix, truncates back to the prompt, and scores
+//! the next choice — bitwise-stable across choices because every row is
+//! fully rewritten before it is ever read back.
 
 use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
 
 use super::ModelDims;
 use crate::tensor::Mat;
@@ -97,37 +120,177 @@ impl RopeTable {
     }
 }
 
-/// Growable per-sequence key/value cache: for each layer, the rotated K
-/// and raw V projections of every position seen so far. Storage is
-/// allocated once at construction (`capacity == dims.seq`), so append and
-/// truncate never reallocate — `bytes()` is the constant resident
-/// footprint a serving scheduler accounts against.
-pub struct KvCache {
-    d_model: usize,
-    n_layers: usize,
-    n_heads: usize,
-    head_dim: usize,
-    capacity: usize,
-    len: usize,
-    /// per layer, head-major `[n_heads, capacity, head_dim]`
+/// Default positions per arena block. 32 positions keeps the block small
+/// enough that short sequences waste little (< one block of slack per
+/// sequence) while each (head, block) K/V segment is still a long
+/// contiguous run for the attention kernel.
+pub const DEFAULT_BLOCK_POSITIONS: usize = 32;
+
+/// One fixed-size arena block: for every layer, a rotated-K and a raw-V
+/// plane of `block_size` positions in head-major layout
+/// `[n_heads, block_size, head_dim]`. Blocks are owned storage that moves
+/// between the arena free pool and a cache's block table; contents are
+/// *not* cleared on free — every position is fully overwritten by
+/// `extend_layer` before attention ever reads it.
+pub(crate) struct KvBlock {
+    /// per layer, head-major `[n_heads, block_size, head_dim]`
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
 
-impl KvCache {
-    /// Empty cache with room for `dims.seq` positions.
-    pub fn new(dims: &ModelDims) -> KvCache {
-        let size = dims.seq * dims.d_model;
-        KvCache {
+struct ArenaState {
+    free: Vec<KvBlock>,
+    /// blocks materialized so far (free + in use); bounded by
+    /// `max_blocks`, and the bound the no-leak test pins
+    created: usize,
+    in_use: usize,
+}
+
+/// Shared bounded pool of KV position blocks for one model geometry.
+///
+/// The arena is the residency authority for a serving engine: it hands
+/// out blocks ([`KvCache::reserve`]) until `max_blocks` are in use, and
+/// takes them back when caches truncate, clear, or drop. Allocation is
+/// all-or-nothing under one lock, so concurrent callers can never
+/// observe a partially granted reservation. Freed blocks are recycled
+/// (stale contents are safe — see [`KvBlock`]), so steady-state serving
+/// allocates no new storage.
+pub struct KvArena {
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    /// per-sequence position window (`dims.seq`)
+    window: usize,
+    block_size: usize,
+    max_blocks: usize,
+    inner: Mutex<ArenaState>,
+}
+
+impl KvArena {
+    /// Arena for `max_blocks` blocks of `block_size` positions each.
+    /// `block_size` is clamped to `1..=dims.seq`; blocks are materialized
+    /// lazily on first use and recycled thereafter.
+    pub fn new(dims: &ModelDims, block_size: usize, max_blocks: usize) -> Arc<KvArena> {
+        let bs = block_size.clamp(1, dims.seq.max(1));
+        Arc::new(KvArena {
             d_model: dims.d_model,
             n_layers: dims.n_layers,
             n_heads: dims.n_heads,
             head_dim: dims.head_dim(),
-            capacity: dims.seq,
-            len: 0,
-            k: (0..dims.n_layers).map(|_| vec![0.0; size]).collect(),
-            v: (0..dims.n_layers).map(|_| vec![0.0; size]).collect(),
+            window: dims.seq,
+            block_size: bs,
+            max_blocks,
+            inner: Mutex::new(ArenaState { free: Vec::new(), created: 0, in_use: 0 }),
+        })
+    }
+
+    /// An empty cache drawing its blocks from this arena.
+    pub fn new_cache(self: &Arc<Self>) -> KvCache {
+        KvCache { arena: self.clone(), blocks: Vec::new(), len: 0 }
+    }
+
+    /// Positions per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Total blocks this arena may hand out.
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    /// Blocks currently held by caches.
+    pub fn blocks_in_use(&self) -> usize {
+        self.inner.lock().unwrap().in_use
+    }
+
+    /// Blocks still available for reservation.
+    pub fn blocks_free(&self) -> usize {
+        self.max_blocks - self.blocks_in_use()
+    }
+
+    /// Blocks materialized over the arena's lifetime — stays put once
+    /// steady-state reuse kicks in (the no-leak pin).
+    pub fn blocks_created(&self) -> usize {
+        self.inner.lock().unwrap().created
+    }
+
+    /// Resident bytes of one block (all layers, K and V planes).
+    pub fn block_bytes(&self) -> usize {
+        4 * self.n_layers * 2 * self.block_size * self.d_model
+    }
+
+    /// Blocks needed to hold `positions` cached positions.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    fn fresh_block(&self) -> KvBlock {
+        let plane = self.n_heads * self.block_size * self.head_dim;
+        KvBlock {
+            k: (0..self.n_layers).map(|_| vec![0.0; plane]).collect(),
+            v: (0..self.n_layers).map(|_| vec![0.0; plane]).collect(),
         }
+    }
+
+    /// Take `n` blocks, all or nothing: `None` leaves the arena unchanged.
+    fn alloc_n(&self, n: usize) -> Option<Vec<KvBlock>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.in_use + n > self.max_blocks {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = match g.free.pop() {
+                Some(b) => b,
+                None => {
+                    g.created += 1;
+                    self.fresh_block()
+                }
+            };
+            out.push(b);
+        }
+        g.in_use += n;
+        Some(out)
+    }
+
+    fn free_blocks(&self, blocks: Vec<KvBlock>) {
+        if blocks.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.in_use -= blocks.len();
+        g.free.extend(blocks);
+    }
+}
+
+/// Growable per-sequence key/value cache: for each layer, the rotated K
+/// and raw V projections of every position seen so far, stored as a
+/// table of [`KvArena`] blocks. [`KvCache::bytes`] is the *blocks-in-use*
+/// resident footprint — the number a residency-priced scheduler accounts
+/// against — and grows by one [`KvArena::block_bytes`] step per
+/// [`KvArena::block_size`] positions.
+pub struct KvCache {
+    arena: Arc<KvArena>,
+    blocks: Vec<KvBlock>,
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache with room for `dims.seq` positions, backed by its own
+    /// single-owner arena (block size [`DEFAULT_BLOCK_POSITIONS`], enough
+    /// blocks for the full window) — reservation within the window can
+    /// never fail, matching the old contiguous-cache behavior for
+    /// offline scoring and solo decode.
+    pub fn new(dims: &ModelDims) -> KvCache {
+        let bs = DEFAULT_BLOCK_POSITIONS.clamp(1, dims.seq.max(1));
+        KvArena::new(dims, bs, dims.seq.div_ceil(bs)).new_cache()
+    }
+
+    /// The arena this cache draws blocks from.
+    pub fn arena(&self) -> &Arc<KvArena> {
+        &self.arena
     }
 
     /// Cached positions.
@@ -141,45 +304,100 @@ impl KvCache {
 
     /// Maximum positions this cache can hold (`dims.seq` at build time).
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.arena.window
     }
 
     /// Positions still available before the window is full.
     pub fn remaining(&self) -> usize {
-        self.capacity - self.len
+        self.arena.window - self.len
+    }
+
+    /// Arena blocks currently held by this cache.
+    pub fn blocks_held(&self) -> usize {
+        self.blocks.len()
     }
 
     /// True when the cache was built for this model geometry.
     pub fn matches(&self, dims: &ModelDims) -> bool {
-        self.d_model == dims.d_model
-            && self.n_layers == dims.n_layers
-            && self.n_heads == dims.n_heads
-            && self.capacity == dims.seq
+        self.arena.d_model == dims.d_model
+            && self.arena.n_layers == dims.n_layers
+            && self.arena.n_heads == dims.n_heads
+            && self.arena.window == dims.seq
+    }
+
+    /// Ensure blocks are held for `n_new` more positions, drawing from
+    /// the arena. All-or-nothing: `Err` (arena exhausted) leaves both the
+    /// cache and the arena unchanged. Returns the number of blocks newly
+    /// taken (0 when the held blocks already cover the growth).
+    pub fn reserve(&mut self, n_new: usize) -> Result<usize> {
+        let needed = self.arena.blocks_for(self.len + n_new);
+        if needed <= self.blocks.len() {
+            return Ok(0);
+        }
+        let add = needed - self.blocks.len();
+        match self.arena.alloc_n(add) {
+            Some(blocks) => {
+                self.blocks.extend(blocks);
+                Ok(add)
+            }
+            None => bail!(
+                "KV arena exhausted: need {add} more block(s) for {n_new} new position(s), \
+                 {} of {} free",
+                self.arena.blocks_free(),
+                self.arena.max_blocks
+            ),
+        }
+    }
+
+    /// Return any blocks not needed to hold the committed `len` positions
+    /// to the arena (undo of a [`KvCache::reserve`] that was never
+    /// committed — the batched forward's error path).
+    pub(crate) fn release_uncommitted(&mut self) {
+        let keep = self.arena.blocks_for(self.len);
+        if self.blocks.len() > keep {
+            let excess = self.blocks.split_off(keep);
+            self.arena.free_blocks(excess);
+        }
     }
 
     /// Roll back to a shorter prefix (`n <= len`). Rows past `n` are
-    /// logically discarded; the next append overwrites them, so replaying
-    /// the same suffix reproduces bitwise-identical state.
+    /// logically discarded and whole blocks past the prefix return to the
+    /// arena; the next append overwrites every surviving stale row before
+    /// it is read, so replaying the same suffix reproduces
+    /// bitwise-identical state.
     pub fn truncate(&mut self, n: usize) {
         assert!(n <= self.len, "truncate({n}) past cache length {}", self.len);
         self.len = n;
+        self.release_uncommitted();
     }
 
+    /// Drop every cached position and return all blocks to the arena.
     pub fn clear(&mut self) {
         self.len = 0;
+        let blocks = std::mem::take(&mut self.blocks);
+        self.arena.free_blocks(blocks);
     }
 
-    /// Resident memory of the cache buffers in bytes (constant — the
-    /// full-capacity K and V planes of every layer).
+    /// Resident memory actually held right now, in bytes: blocks in use ×
+    /// [`KvArena::block_bytes`]. Grows and shrinks with the sequence —
+    /// this is the number `serve.kv_bytes` tracks.
     pub fn bytes(&self) -> usize {
-        4 * (self.n_layers * 2 * self.capacity * self.d_model)
+        self.blocks.len() * self.arena.block_bytes()
+    }
+
+    /// Worst-case resident bytes if the cache grew to the full window —
+    /// the old constant `bytes()` the pre-paged scheduler priced
+    /// admission with.
+    pub fn capacity_bytes(&self) -> usize {
+        self.arena.blocks_for(self.arena.window) * self.arena.block_bytes()
     }
 
     /// Append `n` new rows (taken from `k`/`v` starting at row `r0`) to
     /// one layer's planes at positions `len..len+n`, rotating K by each
-    /// row's absolute position. Every layer of a forward step appends
-    /// with the *same* base position; [`KvCache::commit`] advances `len`
-    /// once after all layers ran.
+    /// row's absolute position. The caller must have
+    /// [`KvCache::reserve`]d the growth. Every layer of a forward step
+    /// appends with the *same* base position; [`KvCache::commit`]
+    /// advances `len` once after all layers ran.
     pub(crate) fn extend_layer(
         &mut self,
         layer: usize,
@@ -189,16 +407,22 @@ impl KvCache {
         r0: usize,
         n: usize,
     ) {
-        debug_assert!(self.len + n <= self.capacity, "kv cache overflow");
-        let (hd, cap) = (self.head_dim, self.capacity);
-        let kb = &mut self.k[layer];
-        let vb = &mut self.v[layer];
+        debug_assert!(self.len + n <= self.arena.window, "kv cache overflow");
+        debug_assert!(
+            self.arena.blocks_for(self.len + n) <= self.blocks.len(),
+            "kv cache append without reserve"
+        );
+        let (hd, bs) = (self.arena.head_dim, self.arena.block_size);
         for i in 0..n {
             let pos = self.len + i;
+            let block = &mut self.blocks[pos / bs];
+            let row = pos % bs;
+            let kb = &mut block.k[layer];
+            let vb = &mut block.v[layer];
             let krow = k.row(r0 + i);
             let vrow = v.row(r0 + i);
-            for h in 0..self.n_heads {
-                let off = (h * cap + pos) * hd;
+            for h in 0..self.arena.n_heads {
+                let off = (h * bs + row) * hd;
                 kb[off..off + hd].copy_from_slice(&krow[h * hd..(h + 1) * hd]);
                 rope.rotate(&mut kb[off..off + hd], pos);
                 vb[off..off + hd].copy_from_slice(&vrow[h * hd..(h + 1) * hd]);
@@ -208,18 +432,34 @@ impl KvCache {
 
     /// Advance the cached length after every layer appended its rows.
     pub(crate) fn commit(&mut self, n: usize) {
-        debug_assert!(self.len + n <= self.capacity);
+        debug_assert!(self.len + n <= self.arena.window);
         self.len += n;
     }
 
-    /// One layer's rotated-K plane (`[n_heads, capacity, head_dim]`).
-    pub(crate) fn layer_k(&self, layer: usize) -> &[f32] {
-        &self.k[layer]
+    /// One layer's K/V row segments over every held block, grouped
+    /// head-major then ascending position: for each head, each block
+    /// contributes one `(k, v)` pair of [`KvArena::block_size`] whole
+    /// `head_dim` rows ([`KvCache::blocks_held`] segments per head).
+    /// Rows beyond the valid length are garbage the attention kernel
+    /// never reads (it stops at the causal bound).
+    pub(crate) fn layer_segments(&self, layer: usize) -> Vec<(&[f32], &[f32])> {
+        let (hd, bs) = (self.arena.head_dim, self.arena.block_size);
+        let seg = bs * hd;
+        let mut out = Vec::with_capacity(self.arena.n_heads * self.blocks.len());
+        for h in 0..self.arena.n_heads {
+            let o = h * seg;
+            for b in &self.blocks {
+                out.push((&b.k[layer][o..o + seg], &b.v[layer][o..o + seg]));
+            }
+        }
+        out
     }
+}
 
-    /// One layer's V plane (`[n_heads, capacity, head_dim]`).
-    pub(crate) fn layer_v(&self, layer: usize) -> &[f32] {
-        &self.v[layer]
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        let blocks = std::mem::take(&mut self.blocks);
+        self.arena.free_blocks(blocks);
     }
 }
 
@@ -278,22 +518,72 @@ mod tests {
         assert_eq!(c.capacity(), d.seq);
         assert_eq!(c.remaining(), d.seq);
         assert!(c.matches(&d));
+        // an empty cache holds no blocks: zero resident bytes
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.capacity_bytes(), 4 * 2 * d.n_layers * d.seq * d.d_model);
         // append 3 rows to every layer, then commit
         let rope = RopeTable::new(d.seq, d.head_dim());
         let k = Mat::full(3, d.d_model, 1.0);
         let v = Mat::full(3, d.d_model, 2.0);
+        c.reserve(3).unwrap();
         for l in 0..d.n_layers {
             c.extend_layer(l, &rope, &k, &v, 0, 3);
         }
         c.commit(3);
         assert_eq!(c.len(), 3);
         assert_eq!(c.remaining(), d.seq - 3);
+        // bytes is blocks-in-use (seq 12 fits one default-size block here)
+        assert_eq!(c.bytes(), c.blocks_held() * c.arena().block_bytes());
+        assert!(c.bytes() > 0 && c.bytes() <= c.capacity_bytes());
         c.truncate(1);
         assert_eq!(c.len(), 1);
         c.clear();
         assert!(c.is_empty());
-        // bytes is the constant full-capacity footprint
-        assert_eq!(c.bytes(), 4 * 2 * d.n_layers * d.seq * d.d_model);
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn arena_alloc_is_all_or_nothing_and_blocks_are_recycled() {
+        let d = dims();
+        // 3 blocks of 4 positions: window 12, deliberately tight
+        let arena = KvArena::new(&d, 4, 3);
+        assert_eq!(arena.block_size(), 4);
+        assert_eq!(arena.blocks_for(0), 0);
+        assert_eq!(arena.blocks_for(1), 1);
+        assert_eq!(arena.blocks_for(4), 1);
+        assert_eq!(arena.blocks_for(5), 2);
+
+        let mut a = arena.new_cache();
+        let mut b = arena.new_cache();
+        a.reserve(8).unwrap(); // 2 blocks
+        assert_eq!(a.blocks_held(), 2);
+        assert_eq!(arena.blocks_free(), 1);
+        // b wants 2 blocks but only 1 is free: Err, nothing granted
+        let err = b.reserve(8).unwrap_err();
+        assert!(format!("{err}").contains("arena exhausted"), "{err}");
+        assert_eq!(b.blocks_held(), 0);
+        assert_eq!(arena.blocks_free(), 1);
+        // the single free block is still grantable
+        b.reserve(4).unwrap();
+        assert_eq!(arena.blocks_free(), 0);
+
+        // freeing via truncate/clear/drop returns blocks for reuse
+        b.clear();
+        assert_eq!(arena.blocks_free(), 1);
+        drop(a);
+        assert_eq!(arena.blocks_free(), 3);
+        assert_eq!(arena.blocks_in_use(), 0);
+        // churn more caches through: no new blocks beyond the 3 created
+        let created = arena.blocks_created();
+        for _ in 0..5 {
+            let mut c = arena.new_cache();
+            c.reserve(12).unwrap();
+            c.commit(12);
+            c.truncate(3);
+            assert_eq!(c.blocks_held(), 1);
+        }
+        assert_eq!(arena.blocks_created(), created);
+        assert!(created <= 3);
     }
 
     #[test]

@@ -9,9 +9,10 @@
 //!   don't need PJRT);
 //! * [`backend`] — the linear execution engine ([`backend::LinearBackend`]):
 //!   dense, adapter-merged, or fused packed-2-bit + LoRA serving form;
-//! * [`kv`] — per-sequence KV cache + shared RoPE table: incremental
-//!   decode ([`forward::forward_step`]) and shared-prompt prefix reuse
-//!   without quadratic recompute;
+//! * [`kv`] — per-sequence KV cache over a shared block arena
+//!   ([`kv::KvArena`]) + shared RoPE table: incremental decode
+//!   ([`forward::forward_step`]) and shared-prompt prefix reuse without
+//!   quadratic recompute, with residency paid per block actually held;
 //! * [`weights`] — binary checkpoint IO for run caching.
 
 pub mod backend;
@@ -20,7 +21,7 @@ pub mod kv;
 pub mod weights;
 
 pub use backend::{BackendKind, LinearBackend};
-pub use kv::{KvCache, RopeTable};
+pub use kv::{KvArena, KvCache, RopeTable};
 
 use anyhow::{anyhow, Result};
 

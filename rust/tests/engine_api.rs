@@ -43,7 +43,13 @@ fn scorer(kind: BackendKind, seed: u64) -> Arc<BackendScorer> {
 fn engine_over(sc: Arc<BackendScorer>, prefill_chunk: usize) -> Engine {
     Engine::start_shared(
         sc,
-        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 4, prefill_chunk },
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 4,
+            prefill_chunk,
+            ..EngineConfig::default()
+        },
     )
 }
 

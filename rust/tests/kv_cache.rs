@@ -9,7 +9,7 @@ use anyhow::Result;
 use rilq::eval::{greedy_decode, greedy_decode_recompute, mc_accuracy, BackendScorer, Scorer};
 use rilq::model::backend::{student_backends, BackendKind};
 use rilq::model::forward::{forward_step, forward_trace, forward_trace_with_cache};
-use rilq::model::{KvCache, ModelDims, StudentWeights, TeacherParams};
+use rilq::model::{KvArena, KvCache, ModelDims, StudentWeights, TeacherParams};
 use rilq::quant::{by_name, CalibCtx};
 use rilq::tensor::Rng;
 
@@ -324,6 +324,110 @@ fn greedy_decode_cached_matches_recompute() {
     // over-window budgets err instead of panicking
     let err = greedy_decode(&sc, &prompt, d.seq).unwrap_err();
     assert!(format!("{err}").contains("window"), "{err}");
+}
+
+/// Tentpole acceptance: the paged attention walk over small arena
+/// blocks is *bitwise* identical to the contiguous single-block cache —
+/// including attention spans that straddle block boundaries (3-position
+/// blocks never align with the prefix lengths used here).
+#[test]
+fn paged_cache_is_bitwise_identical_to_contiguous() {
+    let d = dims();
+    let (teacher, _) = student(&d, 76);
+    let view = teacher.view();
+    let mut rng = Rng::seed(77);
+    let tokens: Vec<u32> = (0..d.seq).map(|_| rng.below(d.vocab) as u32).collect();
+    let prefix = 7usize; // prefill alone crosses two block boundaries
+
+    // contiguous oracle: the default solo cache holds the full window in
+    // one block, so its K/V planes are exactly the pre-paging layout
+    let mut solo = KvCache::new(&d);
+    let prefill = forward_trace_with_cache(&d, &view, &tokens[..prefix], &mut solo).unwrap();
+    let mut want: Vec<Vec<f32>> = (0..prefix).map(|r| prefill.row(r).to_vec()).collect();
+    for &t in &tokens[prefix..] {
+        want.push(forward_step(&d, &view, t, &mut solo).unwrap());
+    }
+    assert_eq!(solo.blocks_held(), 1, "the solo cache must be a single block");
+
+    let arena = KvArena::new(&d, 3, d.seq.div_ceil(3));
+    let mut paged = arena.new_cache();
+    let prefill = forward_trace_with_cache(&d, &view, &tokens[..prefix], &mut paged).unwrap();
+    let mut got: Vec<Vec<f32>> = (0..prefix).map(|r| prefill.row(r).to_vec()).collect();
+    for &t in &tokens[prefix..] {
+        got.push(forward_step(&d, &view, t, &mut paged).unwrap());
+    }
+    assert_eq!(paged.blocks_held(), d.seq.div_ceil(3));
+
+    for (pos, (g, w)) in got.iter().zip(&want).enumerate() {
+        for (i, (a, b)) in g.iter().zip(w).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "pos {pos}, logit {i}: paged {a} vs contiguous {b} — not bitwise"
+            );
+        }
+    }
+}
+
+/// The engine's fused batch step over paged caches drawing from one
+/// shared arena (interleaved block allocation) is bitwise identical to
+/// the same step over contiguous solo caches — and a batch that
+/// exhausts the arena errs cleanly, leaving every cache and the arena
+/// untouched.
+#[test]
+fn batched_paged_step_is_bitwise_identical_to_contiguous() {
+    let sc = packed_scorer(78);
+    let d = sc.dims().clone();
+    let mut rng = Rng::seed(79);
+    let prompts: Vec<Vec<u32>> = [5usize, 2, 9]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+    let suffixes: Vec<Vec<u32>> = [3usize, 2, 4]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+
+    let run = |caches: &mut Vec<KvCache>| {
+        {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            sc.cache_forward_batch(&prompts, &mut refs).unwrap();
+        }
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        sc.cache_forward_batch(&suffixes, &mut refs).unwrap()
+    };
+
+    let mut solo: Vec<KvCache> = prompts.iter().map(|_| sc.new_cache()).collect();
+    let want = run(&mut solo);
+
+    // 2-position blocks, all three sequences interleaving one pool
+    let arena = KvArena::new(&d, 2, 3 * d.seq.div_ceil(2));
+    let mut paged: Vec<KvCache> = prompts.iter().map(|_| arena.new_cache()).collect();
+    let got = run(&mut paged);
+
+    for (si, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "sequence {si}: paged batch step not bitwise ({x} vs {y})"
+            );
+        }
+    }
+
+    // arena exhaustion inside a batch: Err names the sequence, and the
+    // all-or-nothing reservation leaves every cache (and the pool) as it
+    // was — no leaked blocks, no partially extended cache
+    let tight = KvArena::new(&d, 2, 2);
+    let mut a = tight.new_cache();
+    let mut b = tight.new_cache();
+    let mut refs: Vec<&mut KvCache> = vec![&mut a, &mut b];
+    let err = sc
+        .cache_forward_batch(&[vec![1], vec![1, 2, 3, 4]], &mut refs)
+        .unwrap_err();
+    assert!(format!("{err}").contains("sequence 1"), "{err}");
+    assert!(format!("{err}").contains("arena exhausted"), "{err}");
+    assert_eq!((a.len(), b.len()), (0, 0));
+    assert_eq!(tight.blocks_in_use(), 0, "failed batch leaked arena blocks");
 }
 
 /// A scorer drives an empty-choice list and single-choice lists through

@@ -16,7 +16,7 @@ use rilq::engine::{Engine, EngineCaps, EngineConfig, RoundRobin, SamplingParams}
 use rilq::eval::{greedy_decode, BackendScorer, Scorer};
 use rilq::model::backend::BackendKind;
 use rilq::model::kv::KvCache;
-use rilq::model::{ModelDims, StudentWeights, TeacherParams};
+use rilq::model::{KvArena, ModelDims, StudentWeights, TeacherParams};
 use rilq::quant::{by_name, CalibCtx};
 use rilq::tensor::{Mat, Rng};
 
@@ -34,7 +34,7 @@ fn dims() -> ModelDims {
     }
 }
 
-fn packed_scorer(seed: u64) -> Arc<BackendScorer> {
+fn backend_scorer(kind: BackendKind, seed: u64) -> Arc<BackendScorer> {
     let d = dims();
     let mut rng = Rng::seed(seed);
     let teacher = TeacherParams::init(&d, &mut rng);
@@ -42,7 +42,11 @@ fn packed_scorer(seed: u64) -> Arc<BackendScorer> {
     let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
         CalibCtx::default()
     });
-    Arc::new(BackendScorer::new(&d, &teacher, &student, None, BackendKind::Packed).unwrap())
+    Arc::new(BackendScorer::new(&d, &teacher, &student, None, kind).unwrap())
+}
+
+fn packed_scorer(seed: u64) -> Arc<BackendScorer> {
+    backend_scorer(BackendKind::Packed, seed)
 }
 
 /// Ragged mix from several client threads: every request answered with
@@ -64,7 +68,13 @@ fn ragged_mix_every_request_answered_no_pad_waste() {
 
     let engine = Engine::start_shared(
         scorer.clone(),
-        EngineConfig { max_batch: 4, queue_capacity: 8, max_active: 4, prefill_chunk: 8 },
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 8,
+            max_active: 4,
+            prefill_chunk: 8,
+            ..EngineConfig::default()
+        },
     );
     // 3 client threads, 4 requests each
     let answers: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
@@ -203,7 +213,13 @@ fn queued_requests_coalesce_up_to_max_batch() {
     let gate = Arc::new(GateScorer::new(dims()));
     let engine = Engine::start_shared(
         gate.clone(),
-        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 4, prefill_chunk: 8 },
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 4,
+            prefill_chunk: 8,
+            ..EngineConfig::default()
+        },
     );
     let client = engine.client();
 
@@ -260,7 +276,13 @@ fn shutdown_drains_queued_requests() {
     let mut rng = Rng::seed(46);
     let engine = Engine::start_shared(
         scorer,
-        EngineConfig { max_batch: 2, queue_capacity: 16, max_active: 2, prefill_chunk: 8 },
+        EngineConfig {
+            max_batch: 2,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 8,
+            ..EngineConfig::default()
+        },
     );
     let client = engine.client();
     let pendings: Vec<_> = (0..6)
@@ -301,7 +323,13 @@ fn generate_requests_match_single_stream_decode() {
     // the one-shot prefill bitwise
     let engine = Engine::start_shared(
         scorer.clone(),
-        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 2, prefill_chunk: 3 },
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 3,
+            ..EngineConfig::default()
+        },
     );
     let client = engine.client();
     let pendings: Vec<_> = prompts
@@ -331,13 +359,19 @@ fn generate_requests_match_single_stream_decode() {
     );
     assert!(summary.decode_steps > 0.0);
     assert!(summary.kv_bytes_peak > 0.0, "KV residency gauge never moved");
-    // cache-capacity accounting: never more than max_active caches resident
-    let cache_bytes = scorer.new_cache().bytes() as f64;
+    // residency accounting: the gauge now tracks arena blocks actually
+    // held, which can never exceed max_active full-window caches
+    let cap_bytes = scorer.new_cache().capacity_bytes() as f64;
     assert!(
-        summary.kv_bytes_peak <= 2.0 * cache_bytes + 0.5,
-        "kv peak {} exceeds max_active * per-cache bytes {}",
+        summary.kv_bytes_peak <= 2.0 * cap_bytes + 0.5,
+        "kv peak {} exceeds max_active * full-window capacity {}",
         summary.kv_bytes_peak,
-        2.0 * cache_bytes
+        2.0 * cap_bytes
+    );
+    assert!(summary.kv_blocks_peak > 0.0, "block gauge never moved");
+    assert_eq!(
+        summary.preemptions, 0.0,
+        "auto-sized arena fits max_active worst-case sequences — nothing to evict"
     );
     assert!(summary.latency_p95_secs.unwrap() >= summary.latency_p50_secs.unwrap());
     assert!(summary.latency_p50_secs.unwrap() >= 0.0);
@@ -422,7 +456,13 @@ fn score_completes_while_long_generation_holds_decode_slots() {
     let fake = Arc::new(StepScorer::new(d));
     let engine = Engine::start_shared(
         fake.clone(),
-        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 1, prefill_chunk: 4 },
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 1,
+            prefill_chunk: 4,
+            ..EngineConfig::default()
+        },
     );
     let client = engine.client();
 
@@ -463,7 +503,13 @@ fn over_window_generation_errs_alone() {
     let mut rng = Rng::seed(50);
     let engine = Engine::start_shared(
         scorer.clone(),
-        EngineConfig { max_batch: 4, queue_capacity: 16, max_active: 2, prefill_chunk: 8 },
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 8,
+            ..EngineConfig::default()
+        },
     );
     let client = engine.client();
 
@@ -584,4 +630,262 @@ fn deprecated_serve_client_shims_still_serve() {
     let summary = server.shutdown();
     assert_eq!(summary.requests, 2.0);
     assert_eq!(summary.gen_requests, 1.0);
+}
+
+/// Gate wrapper over a real backend scorer: delegates every verb, but
+/// the fused decode step blocks until released and records how many
+/// sequences each step carried — tests pin scheduler concurrency
+/// deterministically while the forwards stay real (arena blocks are
+/// actually held).
+struct GatedScorer {
+    inner: Arc<BackendScorer>,
+    state: Mutex<GatedState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GatedState {
+    open: bool,
+    entered: usize,
+    step_widths: Vec<usize>,
+}
+
+impl GatedScorer {
+    fn new(inner: Arc<BackendScorer>) -> GatedScorer {
+        GatedScorer { inner, state: Mutex::new(GatedState::default()), cv: Condvar::new() }
+    }
+
+    fn wait_entered(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.entered < n {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        self.state.lock().unwrap().open = true;
+        self.cv.notify_all();
+    }
+
+    fn step_widths(&self) -> Vec<usize> {
+        self.state.lock().unwrap().step_widths.clone()
+    }
+}
+
+impl Scorer for GatedScorer {
+    fn dims(&self) -> &ModelDims {
+        self.inner.dims()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        self.inner.caps()
+    }
+
+    fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        self.inner.score_batch(batch)
+    }
+
+    fn cache_forward_batch(
+        &self,
+        news: &[Vec<u32>],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Mat>> {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.entered += 1;
+            st.step_widths.push(news.len());
+            self.cv.notify_all();
+            while !st.open {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+        self.inner.cache_forward_batch(news, caches)
+    }
+}
+
+/// Tentpole acceptance: paging lifts decode concurrency from the worst
+/// case to actual residency. The arena holds 2 full-window sequences
+/// (8 blocks of 4 positions against seq 16), yet 4 short generations —
+/// one block each at their longest — decode concurrently in a single
+/// fused step, and the `serve.kv_bytes` gauge tracks blocks in use, far
+/// below the old `max_active × full-window` accounting.
+#[test]
+fn short_generations_pack_beyond_worst_case_concurrency() {
+    let scorer = packed_scorer(55);
+    let d = scorer.dims().clone();
+    let gated = Arc::new(GatedScorer::new(scorer.clone()));
+    let mut rng = Rng::seed(56);
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|_| (0..2).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+    let max_new = 3usize;
+    let want: Vec<_> = prompts
+        .iter()
+        .map(|p| greedy_decode(scorer.as_ref(), p, max_new).unwrap())
+        .collect();
+
+    let engine = Engine::start_shared(
+        gated.clone(),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 4,
+            prefill_chunk: 8,
+            kv_block: 4,
+            arena_blocks: 8,
+        },
+    );
+    let client = engine.client();
+    // the first generation reaches the (gated) fused step and blocks
+    // there; the rest queue while the loop is inside the forward, so the
+    // next scheduler round promotes all of them at once
+    let first = client.generate(prompts[0].clone(), SamplingParams::greedy(max_new)).unwrap();
+    gated.wait_entered(1);
+    let rest: Vec<_> = prompts[1..]
+        .iter()
+        .map(|p| client.generate(p.clone(), SamplingParams::greedy(max_new)).unwrap())
+        .collect();
+    gated.open();
+    let mut answers = vec![first.wait().unwrap()];
+    answers.extend(rest.into_iter().map(|p| p.wait().unwrap()));
+    drop(client);
+    let summary = engine.shutdown();
+
+    for (k, (got, (toks, _))) in answers.iter().zip(&want).enumerate() {
+        assert_eq!(&got.tokens, toks, "request {k}: decode diverged");
+    }
+    assert!(
+        gated.step_widths().iter().any(|&w| w == 4),
+        "4 generations never shared one fused step: {:?}",
+        gated.step_widths()
+    );
+    let arena = KvArena::new(&d, 4, 8);
+    assert!(summary.kv_blocks_peak >= 4.0, "each resident decode holds at least one block");
+    assert!(summary.kv_blocks_peak <= 8.0, "block gauge exceeded the arena");
+    assert!(
+        summary.kv_bytes_peak <= 8.0 * arena.block_bytes() as f64,
+        "kv_bytes must track blocks in use, bounded by the arena"
+    );
+    assert!(
+        summary.kv_bytes_peak < 4.0 * scorer.new_cache().capacity_bytes() as f64,
+        "kv_bytes gauge still prices residency at the full-window worst case"
+    );
+    assert_eq!(summary.preemptions, 0.0, "one block per sequence fits — nothing to evict");
+    assert_eq!(summary.errors, 0.0);
+}
+
+/// Tentpole acceptance: a generation evicted from the arena under
+/// memory pressure resumes bit-exact — tokens and logps equal the
+/// uninterrupted `greedy_decode` on every backend, the preemption
+/// counter proves evictions actually happened, and score traffic
+/// submitted while the arena thrashes is still served between steps.
+#[test]
+fn preempted_generation_resumes_bitwise_identical_on_every_backend() {
+    for kind in BackendKind::ALL {
+        let scorer = backend_scorer(kind, 57);
+        let d = scorer.dims().clone();
+        let gated = Arc::new(GatedScorer::new(scorer.clone()));
+        let mut rng = Rng::seed(58);
+        let prompts: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..4).map(|_| rng.below(d.vocab) as u32).collect())
+            .collect();
+        let max_new = 8usize;
+        let want: Vec<_> = prompts
+            .iter()
+            .map(|p| greedy_decode(scorer.as_ref(), p, max_new).unwrap())
+            .collect();
+        let score_seq: Vec<u32> = (0..6).map(|_| rng.below(d.vocab) as u32).collect();
+
+        // each generation peaks at 11 positions = 3 blocks of 4; a
+        // 4-block arena cannot hold both at their longest, so the
+        // scheduler must evict one mid-decode and replay it later
+        let engine = Engine::start_shared(
+            gated.clone(),
+            EngineConfig {
+                max_batch: 4,
+                queue_capacity: 16,
+                max_active: 2,
+                prefill_chunk: 2,
+                kv_block: 4,
+                arena_blocks: 4,
+            },
+        );
+        let client = engine.client();
+        let p0 = client.generate(prompts[0].clone(), SamplingParams::greedy(max_new)).unwrap();
+        gated.wait_entered(1); // gen 0 is inside its first prefill chunk
+        let p1 = client.generate(prompts[1].clone(), SamplingParams::greedy(max_new)).unwrap();
+        gated.open();
+        let p_score = client.score(score_seq).unwrap();
+        let logp = p_score
+            .wait_timeout(Duration::from_secs(30))
+            .expect("score request starved while the arena was under pressure");
+        assert_eq!(logp.len(), 5);
+        let answers = [p0.wait().unwrap(), p1.wait().unwrap()];
+        drop(client);
+        let summary = engine.shutdown();
+
+        assert!(
+            summary.preemptions >= 1.0,
+            "[{kind:?}] the undersized arena never forced an eviction"
+        );
+        for (k, (got, (toks, lps))) in answers.iter().zip(&want).enumerate() {
+            assert_eq!(
+                &got.tokens, toks,
+                "[{kind:?}] request {k}: tokens diverged after preemption"
+            );
+            assert_eq!(got.logps.len(), lps.len());
+            for (a, b) in got.logps.iter().zip(lps) {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "[{kind:?}] request {k}: logp not bitwise identical ({a} vs {b})"
+                );
+            }
+        }
+        assert_eq!(summary.gen_requests, 2.0);
+        assert_eq!(summary.errors, 0.0);
+    }
+}
+
+/// A generation whose worst-case residency cannot fit the arena even
+/// running alone is rejected at admission with a clear error — and the
+/// rejection starves nothing: a fitting generation and concurrent score
+/// traffic are served normally.
+#[test]
+fn over_arena_generation_errs_alone() {
+    let scorer = packed_scorer(59);
+    let d = scorer.dims().clone();
+    let mut rng = Rng::seed(60);
+    let engine = Engine::start_shared(
+        scorer.clone(),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            kv_block: 4,
+            arena_blocks: 2, // 8 positions total
+        },
+    );
+    let client = engine.client();
+    let prompt: Vec<u32> = (0..6).map(|_| rng.below(d.vocab) as u32).collect();
+    let score_seq: Vec<u32> = (0..9).map(|_| rng.below(d.vocab) as u32).collect();
+
+    // 6 prompt + 4 new - 1 = 9 positions = 3 blocks > the 2-block arena
+    // (but within the model window: only the arena check can reject it)
+    let p_over = client.generate(prompt.clone(), SamplingParams::greedy(4)).unwrap();
+    // 6 + 3 - 1 = 8 positions = exactly the 2 blocks the arena holds
+    let p_fit = client.generate(prompt.clone(), SamplingParams::greedy(3)).unwrap();
+    let p_score = client.score(score_seq).unwrap();
+
+    let err = p_over.wait().unwrap_err();
+    assert!(format!("{err}").contains("arena"), "{err}");
+    let (want_toks, _) = greedy_decode(scorer.as_ref(), &prompt, 3).unwrap();
+    assert_eq!(p_fit.wait().unwrap().tokens, want_toks);
+    assert_eq!(p_score.wait().unwrap().len(), 8);
+
+    drop(client);
+    let summary = engine.shutdown();
+    assert_eq!(summary.errors, 1.0);
+    assert_eq!(summary.gen_requests, 1.0);
+    assert_eq!(summary.requests, 1.0);
 }
