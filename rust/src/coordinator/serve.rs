@@ -18,6 +18,10 @@
 //! * [`probe_throughput`] / [`probe_decode`] — the shared measurement
 //!   harnesses behind `rilq serve-bench` and `bench_runtime`.
 
+// R1 no-panic serving surface (see the invariant catalog in the crate
+// docs); test modules are excused via clippy.toml.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -281,6 +285,8 @@ impl ServeProbe {
 /// answers (logp parity vs the sequential path) and the token counters
 /// (forwarded tokens == Σ request lengths — no PAD-dummy waste) before
 /// reporting throughput.
+// lint: allow(indexing) — `requests` has `n_requests.max(1) >= 1` entries, so
+// the warmup slice `[..1]` is always in bounds
 pub fn probe_throughput(
     scorer: Arc<BackendScorer>,
     n_requests: usize,

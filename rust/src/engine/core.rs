@@ -134,14 +134,25 @@ impl EngineClient {
         stream: Option<Sender<TokenEvent>>,
     ) -> Result<Receiver<Result<Response>>> {
         let (resp, rx) = channel();
+        if self.txs.is_empty() {
+            return Err(anyhow!("engine stopped"));
+        }
         self.metrics.gauge_add("serve.queue_depth", 1.0);
         let replica = self.dispatch.route(&req, self.txs.len()) % self.txs.len();
-        let sent = self.txs[replica].send(Msg::Sub(Submission {
-            req,
-            enqueued: Instant::now(),
-            resp,
-            stream,
-        }));
+        // `route % len` keeps the replica in range, but a miscounting
+        // Dispatch impl must surface as a refused submission, not a panic
+        let sent = match self.txs.get(replica) {
+            Some(tx) => tx.send(Msg::Sub(Submission {
+                req,
+                enqueued: Instant::now(),
+                resp,
+                stream,
+            })),
+            None => {
+                self.metrics.gauge_add("serve.queue_depth", -1.0);
+                return Err(anyhow!("engine stopped"));
+            }
+        };
         if sent.is_err() {
             self.metrics.gauge_add("serve.queue_depth", -1.0);
             return Err(anyhow!("engine stopped"));
@@ -225,6 +236,7 @@ impl Engine {
         cfg: EngineConfig,
         dispatch: Arc<dyn Dispatch>,
     ) -> Engine {
+        // lint: allow(panic) — construction-time contract, before any request exists
         assert!(!scorers.is_empty(), "engine needs at least one scorer replica");
         let metrics = Arc::new(Metrics::new());
         let mut txs = Vec::with_capacity(scorers.len());
@@ -233,10 +245,12 @@ impl Engine {
             let (tx, rx) = sync_channel(cfg.queue_capacity.max(1));
             let m = metrics.clone();
             let c = cfg.clone();
+            #[allow(clippy::expect_used)]
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rilq-engine-{i}"))
                     .spawn(move || engine_loop(scorer, rx, c, m))
+                    // lint: allow(panic) — construction-time: the process cannot serve without its scheduler threads
                     .expect("spawn engine loop"),
             );
             txs.push(tx);
@@ -246,7 +260,9 @@ impl Engine {
 
     pub fn client(&self) -> EngineClient {
         EngineClient {
-            txs: self.txs.as_ref().expect("engine running").clone(),
+            // `txs` is only `None` mid-drop; a client minted then gets the
+            // empty set and every submission answers `Err("engine stopped")`
+            txs: self.txs.clone().unwrap_or_default(),
             dispatch: self.dispatch.clone(),
             metrics: self.metrics.clone(),
         }
@@ -466,6 +482,9 @@ fn validate_choices(dims: &ModelDims, prompt: &[u32], choices: &[Vec<u32>]) -> R
     Ok(())
 }
 
+// lint: allow(indexing) — every subscript in the loop is bounded by `active`
+// (`news`/`lgs`/`refs` are rebuilt 1:1 from it each step, so `[i]` shares its
+// range) or is a prefill range clamped with `.min(prefill.len())`
 fn engine_loop(
     scorer: Arc<dyn Scorer + Send + Sync>,
     rx: Receiver<Msg>,
@@ -694,7 +713,9 @@ fn engine_loop(
                 if reserved + arena.blocks_for(p.next_feed(chunk)) > arena.blocks_free() {
                     break;
                 }
-                active.push(preempted.pop_front().expect("front observed"));
+                if let Some(p) = preempted.pop_front() {
+                    active.push(p);
+                }
                 continue;
             }
             match gen_wait.front() {
@@ -703,8 +724,9 @@ fn engine_loop(
                     if reserved + arena.blocks_for(first) > arena.blocks_free() {
                         break;
                     }
-                    let g = gen_wait.pop_front().expect("front observed");
-                    active.push(ActiveGen::admit(g, &arena));
+                    if let Some(g) = gen_wait.pop_front() {
+                        active.push(ActiveGen::admit(g, &arena));
+                    }
                 }
                 None => break,
             }
@@ -834,16 +856,19 @@ fn engine_loop(
                 // nothing left to evict: this request alone cannot fit
                 // (defensive — admission bounds worst-case residency, so
                 // a real scorer never lands here)
-                let a = active.pop().expect("non-empty active set");
-                metrics.incr("serve.errors");
-                let _ = a.resp.send(Err(anyhow!(
-                    "KV arena exhausted: the generation needs more blocks than the arena holds"
-                )));
+                if let Some(a) = active.pop() {
+                    metrics.incr("serve.errors");
+                    let _ = a.resp.send(Err(anyhow!(
+                        "KV arena exhausted: the generation needs more blocks than the arena holds"
+                    )));
+                }
                 break;
             }
-            let vi = (0..active.len())
+            let Some(vi) = (0..active.len())
                 .max_by_key(|&i| (active[i].tokens.len(), Reverse(active[i].cache.len())))
-                .expect("non-empty active set");
+            else {
+                break;
+            };
             let mut v = active.swap_remove(vi);
             v.preempt();
             metrics.incr("serve.preemptions");
@@ -861,6 +886,9 @@ fn engine_loop(
                     news.push(a.prefill[a.done..end].to_vec());
                     prefill_rows += end - a.done;
                 } else {
+                    // lint: allow(panic) — invariant: a sequence only reaches decode after its
+                    // first token was sampled at prefill completion (or replayed on resume)
+                    #[allow(clippy::expect_used)]
                     news.push(vec![*a.tokens.last().expect("decoding sequence has a token")]);
                     decode_rows += 1;
                 }

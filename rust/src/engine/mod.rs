@@ -37,6 +37,11 @@
 //! The legacy [`crate::coordinator::serve::ServeClient`] verbs survive
 //! as deprecated shims over [`EngineClient`].
 
+// The serving surface answers `Err`, it does not die: R1 of the invariant
+// catalog (see the crate docs), statically backed by clippy on top of the
+// rilq-lint pass. Test modules are excused via clippy.toml.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod caps;
 pub mod core;
 pub mod dispatch;

@@ -98,6 +98,7 @@ impl SamplingParams {
 /// wins** (strict `>` comparison scanning ids in ascending order), so
 /// greedy decoding with `seed: None` reproduces exactly — across runs,
 /// backends, and batch compositions.
+// lint: allow(indexing) — `best` is always a prior enumerate index of `row`
 pub fn argmax_logp(row: &[f32]) -> (u32, f32) {
     let mut best = 0usize;
     for (i, &v) in row.iter().enumerate().skip(1) {
@@ -120,6 +121,9 @@ pub fn argmax_logp(row: &[f32]) -> (u32, f32) {
 /// id, mirroring [`argmax_logp`]), truncated to `top_k`, then to the
 /// smallest prefix whose softmax mass reaches `top_p`, and the token is
 /// drawn from the renormalized remainder.
+// lint: allow(indexing) — `ids` holds indices of `row` by construction and is
+// only ever truncated; `sample_weighted` returns an index into `probs`, which
+// stays the same length as `ids`
 pub fn sample_token(row: &[f32], params: &SamplingParams, rng: &mut Rng) -> (u32, f32) {
     if params.is_greedy() {
         return argmax_logp(row);

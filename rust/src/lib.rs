@@ -190,6 +190,47 @@
 //! `tests/engine_api.rs` + `tests/serve_loop.rs` pin incremental ==
 //! full-forward logits, engine greedy == `greedy_decode`, and
 //! preempt→resume bitwise parity.
+//!
+//! ## Invariant catalog (enforced by `rilq-lint`)
+//!
+//! Five repo-wide invariants are machine-checked by the zero-dependency
+//! workspace linter at `tools/rilq-lint` (`cargo run -p rilq-lint`,
+//! blocking in CI; `cargo test -p rilq-lint` runs its fixture suite and
+//! a self-check that this tree is clean):
+//!
+//! * **R1 — no-panic serving surface.** `engine/`, `coordinator/serve.rs`,
+//!   `model/forward.rs`, `model/kv.rs` and `model/backend.rs` may not
+//!   `unwrap`/`expect`/`panic!`/`assert!` or index slices directly: a
+//!   malformed request must answer `Err`, never kill a scheduler thread.
+//!   `debug_assert!` is exempt, as is `.unwrap()` directly on `lock()`
+//!   (a poisoned mutex means a sibling thread already panicked — the
+//!   PR 2 no-poison convention).
+//! * **R2 — bitwise-pin guard.** `tensor/kernels.rs`, `tensor/mat.rs`
+//!   and `model/backend.rs` may not introduce `mul_add`, iterator
+//!   `.sum()`/`.fold(`, or `par_*` reductions: every hot kernel keeps a
+//!   fixed per-row reduction order so row bits never depend on chunking
+//!   or threading. Every pin comment must name a test that exists.
+//! * **R3 — hot-loop allocation.** Functions annotated as hot may not
+//!   call `Vec::new`/`vec!`/`to_vec`/`clone`/`Mat::from_fn`; scratch is
+//!   thread-local and reused (`PACKED_SCRATCH`, `ATTN_SCRATCH`).
+//! * **R4 — lock discipline.** A mutex guard may not live across a
+//!   forward/backend call: scorer calls run lock-free or the engine
+//!   serializes on the slowest request.
+//! * **R5 — unsafe audit.** Every `unsafe` block carries a `SAFETY:`
+//!   comment within the six preceding lines, and
+//!   `#![deny(unsafe_op_in_unsafe_fn)]` holds crate-wide.
+//!
+//! Annotation grammar (all comments; the linter only reads comments that
+//! *start* with the marker, so this prose is inert): a line-level
+//! `lint: allow(panic) — <reason>` on or directly above the line it
+//! excuses; a function-level `lint: allow(indexing) — <reason>` or
+//! `lint: hot — <reason>` directly above the `fn` it governs (attributes
+//! and doc lines may intervene); `bitwise-pin: <test_name>, ...` above a
+//! kernel names the tests pinning its bit-exactness; `lint:
+//! allow(reduce) — <reason>` excuses one diagnostics-only reduction.
+//! A reason is mandatory — `allow(...)` without one is itself an error.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 // Clippy style-lint allowances for the numeric kernels live in
 // Cargo.toml's `[lints.clippy]` table so they cover tests/benches too.

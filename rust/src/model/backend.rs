@@ -161,8 +161,11 @@ pub struct DenseLinear {
 impl DenseLinear {
     pub fn new(w: Mat, lora: Option<(Mat, Mat)>) -> DenseLinear {
         if let Some((a, b)) = &lora {
+            // lint: allow(panic) — construction-time shape contract
             assert_eq!(a.rows(), w.rows(), "A rows must match d_in");
+            // lint: allow(panic) — construction-time shape contract
             assert_eq!(b.rows(), w.cols(), "B rows must match d_out");
+            // lint: allow(panic) — construction-time shape contract
             assert_eq!(a.cols(), b.cols(), "A/B rank mismatch");
         }
         DenseLinear { w, lora }
@@ -293,6 +296,7 @@ fn shared_byte_luts(codebook: &[f32], bits: u8) -> Arc<Vec<[f32; 256]>> {
 /// Build the per-lane byte→value dequant LUTs for a scalar codebook.
 /// 2-bit: 4 lanes × 256; 4-bit: 2 lanes × 256; 3-bit (one code per
 /// byte): 1 lane whose live entries are the 8-entry codebook itself.
+// lint: allow(indexing) — the lane mask keeps `code < 2^bits <= codebook.len()`
 fn build_byte_luts(codebook: &[f32], bits: u8) -> Vec<[f32; 256]> {
     let lanes = codes_per_byte(bits);
     let mask = (1usize << bits) - 1;
@@ -327,10 +331,14 @@ impl PackedLoraLinear {
     /// Pack a scalar-codebook quantized tensor into the serving form.
     pub fn from_quantized(q: &QuantizedTensor, lora: Option<(Mat, Mat)>) -> PackedLoraLinear {
         if let Some((a, b)) = &lora {
+            // lint: allow(panic) — construction-time shape contract
             assert_eq!(a.rows(), q.d_in, "A rows must match d_in");
+            // lint: allow(panic) — construction-time shape contract
             assert_eq!(b.rows(), q.d_out, "B rows must match d_out");
+            // lint: allow(panic) — construction-time shape contract
             assert_eq!(a.cols(), b.cols(), "A/B rank mismatch");
         }
+        // lint: allow(panic) — construction-time shape contract
         assert_eq!(q.scales.rows(), q.n_groups(), "scales/groups mismatch");
         PackedLoraLinear {
             packed: q.pack(),
@@ -359,6 +367,11 @@ impl PackedLoraLinear {
     /// divisible by the packing factor) fall back to lane-at-a-time
     /// lookups of the same tables, so both paths stay **bitwise** the
     /// shift/mask reference ([`Self::decode_group_naive`], pinned below).
+    // bitwise-pin: lut_decode_is_bitwise_shift_mask_decode
+    // lint: hot — per-group dequant on the decode path; writes only into
+    // the caller's tile
+    // lint: allow(indexing) — row/lane offsets are bounded by the packed
+    // geometry (r1 <= d_in, lane < codes_per_byte, byte indexes a [_; 256])
     fn decode_group(&self, r0: usize, r1: usize, tile: &mut [f32]) {
         let d_out = self.d_out;
         let data = &self.packed.data;
@@ -469,6 +482,10 @@ impl PackedLoraLinear {
     /// layers — single-row decode steps no longer pay a fresh `Vec`
     /// per chunk. The per-group factorization
     /// `y += s_g·Σ x_i·cb[code] + z_g·Σ x_i` is unchanged.
+    // bitwise-pin: packed_matches_dequant_dense, kernel_rows_are_chunk_invariant_bitwise
+    // lint: hot — the packed serving kernel; scratch is thread-local
+    // lint: allow(indexing) — group/row offsets are bounded by the packed
+    // geometry (r1 <= d_in <= xrow.len(), tile/out sized by the caller)
     fn forward_rows(&self, x: &Mat, t0: usize, t1: usize, out: &mut [f32]) {
         if t0 == t1 {
             return;
@@ -521,6 +538,8 @@ impl LinearBackend for PackedLoraLinear {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
+        // lint: allow(panic) — activation geometry is fixed by the model
+        // dims the caller validated at admission
         assert_eq!(x.cols(), self.d_in, "packed forward shape mismatch");
         let t = x.rows();
         let workers = suggested_workers(t * self.d_in * self.d_out);
@@ -587,6 +606,7 @@ pub fn student_backends(
 
 /// Total resident weight memory of a built execution engine.
 pub fn model_weight_bytes(linears: &[Vec<Box<dyn LinearBackend>>]) -> usize {
+    // lint: allow(reduce) — usize byte count: exact, order-insensitive
     linears.iter().flatten().map(|b| b.weight_bytes()).sum()
 }
 

@@ -5,6 +5,8 @@
 //! numerical oracle for the AOT artifacts (integration tests compare the
 //! two to ~1e-3) and as a PJRT-free evaluation path for quantizer studies.
 
+use std::cell::RefCell;
+
 use anyhow::{bail, ensure, Result};
 
 use crate::tensor::{kernels, Mat};
@@ -109,6 +111,7 @@ impl TeacherParams {
     }
 }
 
+// lint: allow(indexing) — column loop is bounded by the row length
 fn rmsnorm(x: &Mat, g: &[f32]) -> Mat {
     let mut out = Mat::zeros(x.rows(), x.cols());
     for r in 0..x.rows() {
@@ -130,11 +133,22 @@ fn silu(x: f32) -> f32 {
 /// RoPE rotation applied in place on a `[S, hd]` head slice, position =
 /// row index. Kept for unit tests / external callers; the forward paths
 /// use the shared [`RopeTable`] directly.
+// lint: allow(indexing) — `hd <= cols` is the documented contract of this helper
 pub fn apply_rope(x: &mut Mat, hd: usize) {
     let rope = RopeTable::shared(x.rows().max(1), hd);
     for s in 0..x.rows() {
         rope.rotate(&mut x.row_mut(s)[..hd], s);
     }
+}
+
+thread_local! {
+    // Attention scratch reused across calls/layers/heads: the rotated query
+    // head (`head_dim` wide) and the per-position score row. Both are fully
+    // overwritten before every use (`copy_from_slice` / `clear`+`resize`),
+    // so reuse cannot change any computed bit, and `attend_cached` never
+    // re-enters itself on a thread, so the borrow is exclusive.
+    static ATTN_SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
 }
 
 /// The shared causal-attention row kernel: `new` query rows at absolute
@@ -154,6 +168,9 @@ pub fn apply_rope(x: &mut Mat, hd: usize) {
 /// whose per-row reduction order is fixed (see `tensor::kernels`) — so
 /// paged, contiguous, full, and incremental forwards all produce
 /// bitwise-identical rows.
+// lint: hot — the per-token attention kernel; all scratch is thread-local
+// lint: allow(indexing) — head offsets and score positions are loop-bounded
+// by construction (j <= pos < scores.len(), hoff+hd <= cols)
 fn attend_cached(
     dims: &ModelDims,
     rope: &RopeTable,
@@ -169,60 +186,65 @@ fn attend_cached(
     }
     let (h, hd) = (dims.n_heads, dims.head_dim());
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut qh = vec![0.0f32; hd];
-    let mut scores: Vec<f32> = Vec::with_capacity(past + new);
-    for head in 0..h {
-        let hoff = head * hd;
-        let hsegs = &segs[head * segs_per_head..(head + 1) * segs_per_head];
-        for i in 0..new {
-            let pos = past + i;
-            qh.copy_from_slice(&q.row(i)[hoff..hoff + hd]);
-            rope.rotate(&mut qh, pos);
-            // causal: position pos attends to 0..=pos, walking the
-            // segments in ascending-position order
-            scores.clear();
-            scores.resize(pos + 1, 0.0);
-            let mut maxs = f32::NEG_INFINITY;
-            let mut j = 0usize;
-            'kseg: for (ks, _) in hsegs {
-                for krow in ks.chunks_exact(hd) {
-                    if j > pos {
-                        break 'kseg;
+    ATTN_SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let (qh, scores) = &mut *scratch;
+        qh.clear();
+        qh.resize(hd, 0.0);
+        for head in 0..h {
+            let hoff = head * hd;
+            let hsegs = &segs[head * segs_per_head..(head + 1) * segs_per_head];
+            for i in 0..new {
+                let pos = past + i;
+                qh.copy_from_slice(&q.row(i)[hoff..hoff + hd]);
+                rope.rotate(qh, pos);
+                // causal: position pos attends to 0..=pos, walking the
+                // segments in ascending-position order
+                scores.clear();
+                scores.resize(pos + 1, 0.0);
+                let mut maxs = f32::NEG_INFINITY;
+                let mut j = 0usize;
+                'kseg: for (ks, _) in hsegs {
+                    for krow in ks.chunks_exact(hd) {
+                        if j > pos {
+                            break 'kseg;
+                        }
+                        let sc = kernels::dot(qh, krow) * scale;
+                        scores[j] = sc;
+                        maxs = maxs.max(sc);
+                        j += 1;
                     }
-                    let sc = kernels::dot(&qh, krow) * scale;
-                    scores[j] = sc;
-                    maxs = maxs.max(sc);
-                    j += 1;
                 }
-            }
-            debug_assert!(j > pos, "kv segments shorter than attended span");
-            let mut denom = 0.0f32;
-            for sc in &mut scores {
-                *sc = (*sc - maxs).exp();
-                denom += *sc;
-            }
-            let orow = &mut out.row_mut(i)[hoff..hoff + hd];
-            let mut j = 0usize;
-            'vseg: for (_, vs) in hsegs {
-                for vrow in vs.chunks_exact(hd) {
-                    if j > pos {
-                        break 'vseg;
+                debug_assert!(j > pos, "kv segments shorter than attended span");
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                let orow = &mut out.row_mut(i)[hoff..hoff + hd];
+                let mut j = 0usize;
+                'vseg: for (_, vs) in hsegs {
+                    for vrow in vs.chunks_exact(hd) {
+                        if j > pos {
+                            break 'vseg;
+                        }
+                        let w = scores[j] / denom;
+                        j += 1;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        kernels::axpy(w, vrow, orow);
                     }
-                    let w = scores[j] / denom;
-                    j += 1;
-                    if w == 0.0 {
-                        continue;
-                    }
-                    kernels::axpy(w, vrow, orow);
                 }
             }
         }
-    }
+    });
 }
 
 /// Causal multi-head attention over `[S, d]` projections (no cache): K is
 /// rotated once into a transient head-major buffer, then the shared
 /// kernel runs with `past == 0` and one full-sequence segment per head.
+// lint: allow(indexing) — head-major offsets are loop-bounded by the buffer size
 fn attention(dims: &ModelDims, rope: &RopeTable, q: &Mat, k: &Mat, v: &Mat) -> Mat {
     let s = q.rows();
     let (h, hd) = (dims.n_heads, dims.head_dim());
@@ -250,9 +272,14 @@ fn attention(dims: &ModelDims, rope: &RopeTable, q: &Mat, k: &Mat, v: &Mat) -> M
 }
 
 /// Forward one token sequence through a weight view, capturing activations.
+// lint: allow(indexing) — family/layer/row indices are loop-bounded over
+// shapes fixed at model construction
 pub fn forward_trace(dims: &ModelDims, w: &WeightView<'_>, tokens: &[u32]) -> Trace {
     let s = tokens.len();
+    // lint: allow(panic) — calibration entry point; serving callers validate
+    // via Scorer::check_seq before any forward (doc contract)
     assert!(s <= dims.seq, "sequence longer than model seq");
+    // lint: allow(panic) — membership in the static LINEARS table
     let fam = |name: &str| LINEARS.iter().position(|&n| n == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
     let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
@@ -304,13 +331,18 @@ pub fn forward_trace(dims: &ModelDims, w: &WeightView<'_>, tokens: &[u32]) -> Tr
 ///
 /// Panics if a sequence exceeds `dims.seq`; serving-path callers
 /// validate first and surface `Err` (see `eval::Scorer::score_all`).
+// lint: allow(indexing) — per-sequence offsets are accumulated from the
+// input lengths; family/layer indices are loop-bounded
 pub fn forward_trace_batch(dims: &ModelDims, w: &WeightView<'_>, seqs: &[Vec<u32>]) -> Vec<Mat> {
     if seqs.is_empty() {
         return Vec::new();
     }
     for s in seqs {
+        // lint: allow(panic) — doc contract above: serving callers validate
+        // and surface Err before reaching this batch entry point
         assert!(s.len() <= dims.seq, "sequence longer than model seq");
     }
+    // lint: allow(panic) — membership in the static LINEARS table
     let fam = |name: &str| LINEARS.iter().position(|&n| n == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
     let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
@@ -413,6 +445,8 @@ fn check_cache_step(
 /// for a 0-token suffix, cache untouched). Errs — never panics — when
 /// the step would overflow the model window, a token id is out of
 /// vocabulary, or the cache was built for a different geometry.
+// lint: allow(indexing) — token rows validated by check_cache_step; family
+// and layer indices are loop-bounded
 pub fn forward_trace_with_cache(
     dims: &ModelDims,
     w: &WeightView<'_>,
@@ -427,6 +461,7 @@ pub fn forward_trace_with_cache(
     // take the arena blocks for the new positions up front: an `Err`
     // (arena exhausted) leaves the cache untouched
     cache.reserve(n)?;
+    // lint: allow(panic) — membership in the static LINEARS table
     let fam = |name: &str| LINEARS.iter().position(|&nm| nm == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
     let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
@@ -483,6 +518,7 @@ pub fn forward_step(
 /// the one-shot greedy decode end-to-end in `tests/engine_api.rs`. If
 /// chunk-boundary semantics ever change, change both (and the tests
 /// will catch a drift).
+// lint: allow(indexing) — chunk bounds are clamped to tokens.len()
 pub fn forward_prefill_chunked(
     dims: &ModelDims,
     w: &WeightView<'_>,
@@ -517,6 +553,8 @@ pub fn forward_prefill_chunked(
 /// All sequences are validated before any cache is touched, so an `Err`
 /// (whose message names the offending sequence index) leaves every cache
 /// unchanged.
+// lint: allow(indexing) — news/caches lengths are checked equal up front;
+// offsets are accumulated from the input lengths
 pub fn forward_batch_with_cache(
     dims: &ModelDims,
     w: &WeightView<'_>,
@@ -543,6 +581,7 @@ pub fn forward_batch_with_cache(
             bail!("sequence {i}: {e}");
         }
     }
+    // lint: allow(panic) — membership in the static LINEARS table
     let fam = |name: &str| LINEARS.iter().position(|&nm| nm == name).unwrap();
     let (iq, ik, iv, io) = (fam("wq"), fam("wk"), fam("wv"), fam("wo"));
     let (ig, iu, id) = (fam("wg"), fam("wu"), fam("wd"));
@@ -609,6 +648,8 @@ pub fn forward_batch_with_cache(
 /// Log-prob of one token under a single `[V]` logits row
 /// (max-subtracted log-sum-exp — the same math [`token_logp`] applies
 /// per position, so prefix-reuse scoring matches it bitwise).
+// lint: allow(indexing) — token ids are vocabulary-validated at admission
+// (check_cache_step / Scorer::check_seq) before any scoring reaches here
 pub fn row_logp(row: &[f32], token: u32) -> f32 {
     let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     let lse: f32 = row.iter().map(|&v| (v - maxv).exp()).sum::<f32>().ln() + maxv;
@@ -617,6 +658,7 @@ pub fn row_logp(row: &[f32], token: u32) -> f32 {
 
 /// Log-prob of the realized next token at each position: `[S-1]`
 /// (empty for sequences of fewer than two tokens).
+// lint: allow(indexing) — pos+1 < s by the loop bound
 pub fn token_logp(logits: &Mat, tokens: &[u32]) -> Vec<f32> {
     let s = tokens.len();
     if s < 2 {
@@ -649,6 +691,8 @@ impl CalibStats {
     /// Run the teacher over calibration sequences, accumulating per-linear
     /// input statistics. `keep_rows` bounds the stored sample rows per
     /// linear (Hessian cost is O(d_in²) regardless).
+    // lint: allow(indexing) — offline calibration path; family/layer indices
+    // are loop-bounded over LINEARS and n_layers
     pub fn collect(
         dims: &ModelDims,
         params: &TeacherParams,

@@ -105,6 +105,8 @@ impl RopeTable {
 
     /// Rotate one `[head_dim]` slice in place for absolute position `pos`
     /// ((even, odd) channel-pair layout, matching the python model).
+    // lint: allow(indexing) — 2k+1 < head_dim and base+k < table length by
+    // the debug-checked geometry (half = head_dim/2, pos < max_pos)
     #[inline]
     pub fn rotate(&self, head: &mut [f32], pos: usize) {
         debug_assert!(pos < self.max_pos, "position {} outside rope table", pos);
@@ -366,6 +368,9 @@ impl KvCache {
     /// it is read, so replaying the same suffix reproduces
     /// bitwise-identical state.
     pub fn truncate(&mut self, n: usize) {
+        // lint: allow(panic) — caller contract (n <= len), pinned by the
+        // should_panic unit test below; engine callers truncate to their
+        // own recorded prefix lengths
         assert!(n <= self.len, "truncate({n}) past cache length {}", self.len);
         self.len = n;
         self.release_uncommitted();
@@ -398,6 +403,8 @@ impl KvCache {
     /// [`KvCache::reserve`]d the growth. Every layer of a forward step
     /// appends with the *same* base position; [`KvCache::commit`]
     /// advances `len` once after all layers ran.
+    // lint: allow(indexing) — block/row offsets are bounded by the
+    // debug-checked reserve contract (blocks_for(len+n) <= blocks.len())
     pub(crate) fn extend_layer(
         &mut self,
         layer: usize,
@@ -442,6 +449,8 @@ impl KvCache {
     /// `head_dim` rows ([`KvCache::blocks_held`] segments per head).
     /// Rows beyond the valid length are garbage the attention kernel
     /// never reads (it stops at the causal bound).
+    // lint: allow(indexing) — layer < n_layers and o+seg <= plane length by
+    // arena construction
     pub(crate) fn layer_segments(&self, layer: usize) -> Vec<(&[f32], &[f32])> {
         let (hd, bs) = (self.arena.head_dim, self.arena.block_size);
         let seg = bs * hd;

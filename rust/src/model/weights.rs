@@ -53,6 +53,10 @@ impl TensorFile {
                 w.write_all(&(d as u64).to_le_bytes())?;
             }
             // bulk write of the f32 payload
+            // SAFETY: reinterprets an initialized, live `&[f32]` as bytes:
+            // every f32 bit pattern is a valid u8 sequence, f32's alignment
+            // (4) satisfies u8's (1), and len*4 is the exact byte span of
+            // the borrowed buffer. The borrow outlives the write call.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
             };

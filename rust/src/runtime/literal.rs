@@ -11,6 +11,10 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
     if n != data.len() {
         bail!("lit_f32: shape {:?} ({} elems) vs buffer {}", shape, n, data.len());
     }
+    // SAFETY: reinterprets the initialized, live `&[f32]` as bytes — every
+    // f32 bit pattern is a valid u8 sequence, alignment 4 satisfies u8's 1,
+    // and len*4 is the exact byte span. PJRT copies out of the borrow
+    // before this function returns.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
@@ -23,6 +27,8 @@ pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
     if n != data.len() {
         bail!("lit_i32: shape {:?} vs buffer {}", shape, data.len());
     }
+    // SAFETY: as in [`lit_f32`] — initialized `&[i32]` viewed as its exact
+    // byte span (alignment 4 → 1, len*4 bytes), copied out before return.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)

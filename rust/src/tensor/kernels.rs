@@ -62,6 +62,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// register-blocked micro-tile: `b` is loaded once per chunk and feeds
 /// four accumulator sets. Each returned value is **bitwise identical**
 /// to `dot(a_i, b)` (same per-row op sequence; see the module contract).
+// bitwise-pin: dot4_is_bitwise_four_dots
 #[inline]
 pub fn dot4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
     debug_assert!(a0.len() == b.len() && a1.len() == b.len());

@@ -20,6 +20,8 @@ const BJ: usize = 64;
 /// [`kernels::dot`]s, a row's value never depends on whether it ran in
 /// the 4-row block or the remainder loop — the invariance that keeps
 /// threaded/chunked/batched callers bit-identical per row.
+// bitwise-pin: kernel_rows_are_chunk_invariant_bitwise, threaded_matmul_matches_single_threaded
+// lint: hot — the register-blocked matmul inner tile; callers pre-pack panels
 #[allow(clippy::too_many_arguments)]
 fn micro_tile<'a>(
     a: &Mat,
@@ -402,6 +404,7 @@ impl Mat {
 
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f32 {
+        // lint: allow(reduce) — diagnostics-only metric; f64 accumulation, never on the bitwise-pinned path
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
     }
 
@@ -415,20 +418,24 @@ impl Mat {
                 let d = (a - b) as f64;
                 d * d
             })
+            // lint: allow(reduce) — diagnostics-only metric; f64 accumulation, never on the bitwise-pinned path
             .sum::<f64>()
             .sqrt() as f32
     }
 
     /// Largest absolute entry.
     pub fn abs_max(&self) -> f32 {
+        // lint: allow(reduce) — max is an order-insensitive lattice fold; result is bit-exact regardless of order
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
     pub fn min(&self) -> f32 {
+        // lint: allow(reduce) — min is an order-insensitive lattice fold; result is bit-exact regardless of order
         self.data.iter().copied().fold(f32::INFINITY, f32::min)
     }
 
     pub fn max(&self) -> f32 {
+        // lint: allow(reduce) — max is an order-insensitive lattice fold; result is bit-exact regardless of order
         self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
     }
 
@@ -437,6 +444,7 @@ impl Mat {
         if self.data.is_empty() {
             return 0.0;
         }
+        // lint: allow(reduce) — diagnostics-only statistic; f64 accumulation, never on the bitwise-pinned path
         (self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64) as f32
     }
 

@@ -1,0 +1,8 @@
+// The annotated form of the R1 fixture: every panic path carries a lint
+// annotation with a reason, so the serving-surface scope accepts it.
+// lint: allow(indexing) — i is caller-bounded in this fixture
+pub fn lookup(v: &[u32], i: usize) -> u32 {
+    // lint: allow(panic) — fixture invariant: v is non-empty by contract
+    let first = v.first().unwrap();
+    v[i] + first
+}

@@ -1,0 +1,8 @@
+// Known-bad R1 fixture: unwrap, assert!, and direct indexing on a file
+// linted under the serving-surface scope (the unit test labels this file
+// `engine/fixture.rs`). Lexed by the linter, never compiled.
+pub fn lookup(v: &[u32], i: usize) -> u32 {
+    let first = v.first().unwrap();
+    assert!(i > 0);
+    v[i] + first
+}

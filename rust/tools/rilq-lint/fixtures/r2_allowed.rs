@@ -1,0 +1,8 @@
+// The annotated form of the R2 fixture: the reduce is explicitly allowed
+// with a reason (exact integer arithmetic) and the pin names a test the
+// unit test registers as existing.
+// bitwise-pin: dot4_is_bitwise_four_dots
+pub fn total_bytes(xs: &[usize]) -> usize {
+    // lint: allow(reduce) — usize accumulation is exact and order-free
+    xs.iter().sum()
+}

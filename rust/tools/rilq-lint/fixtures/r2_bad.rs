@@ -1,0 +1,6 @@
+// Known-bad R2 fixture: mul_add and an iterator sum inside a file linted
+// under the bitwise-pin scope (labelled `tensor/kernels.rs` by the test).
+// Either can silently change a pinned reduction order.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.mul_add(*y, 0.0)).sum()
+}

@@ -1,0 +1,10 @@
+// Known-bad R2 fixture: the pin cites a test that exists nowhere in
+// rust/tests/** or any #[cfg(test)] module.
+// bitwise-pin: no_such_test_anywhere
+pub fn pinned(a: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for v in a {
+        acc += v;
+    }
+    acc
+}

@@ -1,0 +1,8 @@
+// The clean form of the R3 fixture: a hot function that only writes
+// through caller-provided buffers.
+// lint: hot
+pub fn accumulate(acc: &mut [f32], x: &[f32]) {
+    for (a, v) in acc.iter_mut().zip(x) {
+        *a += v;
+    }
+}

@@ -1,0 +1,7 @@
+// Known-bad R3 fixture: a `lint: hot` function that allocates twice.
+// lint: hot
+pub fn gather(rows: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    out.extend_from_slice(rows);
+    out.to_vec()
+}

@@ -1,0 +1,9 @@
+// Known-bad R4 fixture: the arena mutex guard is still live when the code
+// calls into the forward path — compute under a scheduler lock.
+pub fn step(arena: &Arena, backend: &B, x: &Mat) -> Mat {
+    let mut g = arena.inner.lock().unwrap();
+    g.push(1);
+    let y = backend.forward(x);
+    drop(g);
+    y
+}

@@ -1,0 +1,7 @@
+// The audited form of the R5 fixture: the unsafe block carries a SAFETY
+// comment within the six-line window.
+pub fn reinterpret(data: &[f32]) -> &[u8] {
+    // SAFETY: every f32 bit pattern is a valid byte sequence; the pointer
+    // is derived from a live slice and the length is its exact byte span.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}

@@ -1,0 +1,5 @@
+// Known-bad R5 fixture: an unsafe block with no SAFETY comment anywhere
+// in the six preceding lines.
+pub fn reinterpret(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}

@@ -1,0 +1,1052 @@
+//! `rilq-lint` — the workspace invariant checker.
+//!
+//! The repo's correctness story rests on conventions that rustc cannot see:
+//! fixed-reduction-order kernels, panic-free serving paths, zero-alloc hot
+//! loops, audited `unsafe`. This crate turns them into machine-checked rules
+//! over `rust/src/**` (see the "Invariant catalog" section in the root
+//! crate's `lib.rs` for the human-facing write-up):
+//!
+//! * **R1 — no-panic serving surface.** `unwrap`/`expect`/`panic!`/`assert!`/
+//!   `unreachable!`/direct slice indexing are forbidden in `engine/`,
+//!   `coordinator/serve.rs`, `model/forward.rs`, `model/kv.rs`, and
+//!   `model/backend.rs`. `.lock().unwrap()` is exempt by design: a poisoned
+//!   mutex means a sibling thread already panicked mid-mutation, and
+//!   propagating is the only sound move (the PR 2 no-poison convention).
+//!   `debug_assert!` is exempt (compiled out of release serving builds).
+//! * **R2 — bitwise-pin guard.** `tensor/kernels.rs`, `tensor/mat.rs`, and
+//!   `model/backend.rs` may not use `mul_add`, iterator `.sum()`/`.fold(`,
+//!   or `par_*` reductions — any of these can silently change a pinned
+//!   reduction order. Every `bitwise-pin:` comment must name tests that
+//!   exist (cross-referenced against `rust/tests/**` and `#[cfg(test)]`
+//!   modules).
+//! * **R3 — hot-loop allocation lint.** Functions annotated `lint: hot` may
+//!   not call `Vec::new`/`vec!`/`.to_vec(`/`.clone(`/`from_fn(`.
+//! * **R4 — lock discipline.** A mutex guard binding (`let g = ...lock()`)
+//!   may not span a call into forward/backend/scorer functions — a textual
+//!   scope check that keeps the `KvArena` mutex out of compute.
+//! * **R5 — unsafe audit.** Every `unsafe` occurrence needs a `SAFETY:`
+//!   comment on the same line or within the six preceding lines.
+//!
+//! The lexer is deliberately small and hand-rolled (zero dependencies, same
+//! offline discipline as the vendored crates): it splits each line into
+//! (code, comment) while tracking string/char/raw-string literals and nested
+//! block comments, blanks literal contents out of the code text, and skips
+//! `#[cfg(test)]` regions by brace depth. It is a *linter*, not a parser:
+//! the rules are textual and the escape hatch is an annotation with a
+//! mandatory reason, reviewed like any other code.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Which invariant a [`Diagnostic`] violates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// No-panic serving surface.
+    R1,
+    /// Bitwise-pin guard (fixed reduction order + pins name real tests).
+    R2,
+    /// Hot-loop allocation lint.
+    R3,
+    /// Lock discipline (no guard spanning a forward/backend call).
+    R4,
+    /// Unsafe audit (`SAFETY:` comments).
+    R5,
+    /// Malformed annotation (unknown kind, missing reason, dangling).
+    Ann,
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Rule::R1 => "R1 no-panic",
+            Rule::R2 => "R2 bitwise-pin",
+            Rule::R3 => "R3 hot-alloc",
+            Rule::R4 => "R4 lock-discipline",
+            Rule::R5 => "R5 unsafe-audit",
+            Rule::Ann => "annotation",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One finding, formatted as `file:line: rule — message`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} — {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Render a diagnostic list, one per line.
+pub fn render(diags: &[Diagnostic]) -> String {
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&d.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: split source into per-line (code, comment), literals blanked.
+// ---------------------------------------------------------------------------
+
+/// One physical source line after lexing. `code` has string/char literal
+/// contents replaced by spaces; `comment` holds the text of any `//` or
+/// `/* */` comment overlapping the line.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum LexState {
+    Code,
+    LineComment,
+    /// Nested block comment depth.
+    Block(u32),
+    Str,
+    /// Raw string with N `#` delimiters.
+    RawStr(u32),
+}
+
+/// Lex `src` into per-line (code, comment) pairs.
+pub fn lex(src: &str) -> Vec<Line> {
+    let b: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = LexState::Code;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if st == LexState::LineComment {
+                st = LexState::Code;
+            }
+            lines.push(Line { code: std::mem::take(&mut code), comment: std::mem::take(&mut comment) });
+            i += 1;
+            continue;
+        }
+        match st {
+            LexState::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = LexState::LineComment;
+                    comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = LexState::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push(' ');
+                    st = LexState::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_word(&b, i) {
+                    if let Some((hashes, skip)) = raw_str_hashes(&b, i) {
+                        code.push(' ');
+                        st = LexState::RawStr(hashes);
+                        i += skip;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    i = lex_quote(&b, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            LexState::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            LexState::Block(d) => {
+                let next = b.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if d == 1 { LexState::Code } else { LexState::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = LexState::Block(d + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' {
+                    // a `\<newline>` continuation must leave the newline for
+                    // the line accounting above, or every continuation shifts
+                    // all later diagnostics up a line
+                    if b.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    st = LexState::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr(h) => {
+                if c == '"' && (0..h as usize).all(|k| b.get(i + 1 + k) == Some(&'#')) {
+                    st = LexState::Code;
+                    i += 1 + h as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment });
+    }
+    lines
+}
+
+fn prev_is_word(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_' || b[i - 1] == '"')
+}
+
+/// If position `i` starts a *raw* string opener (`r"`, `r#"`, `br"`, ...),
+/// return (hash count, chars to skip past the opening quote). Plain byte
+/// strings (`b"..."`) are handled by the escape-aware [`LexState::Str`].
+fn raw_str_hashes(b: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Handle a `'` in code position: a char literal (consumed, blanked) or a
+/// lifetime (left in the code text). Returns the next index.
+fn lex_quote(b: &[char], i: usize, code: &mut String) -> usize {
+    if b.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: '\n', '\\', '\'', '\x41', '\u{..}'.
+        let mut j = i + 2;
+        match b.get(j) {
+            Some('x') => j += 3,
+            Some('u') => {
+                while j < b.len() && b[j] != '}' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            _ => j += 1,
+        }
+        // b[j] should now be the closing quote.
+        code.push(' ');
+        j + 1
+    } else if b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\'') {
+        // Plain char literal 'a'.
+        code.push(' ');
+        i + 3
+    } else {
+        // Lifetime or loop label: keep the tick, lex the rest as code.
+        code.push('\'');
+        i + 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token helpers.
+// ---------------------------------------------------------------------------
+
+fn is_word_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of `pat` in `code` where word-char pattern ends sit on word
+/// boundaries (so `assert!` does not match inside `debug_assert!`).
+fn token_positions(code: &str, pat: &str) -> Vec<usize> {
+    let cb = code.as_bytes();
+    let pb = pat.as_bytes();
+    let mut out = Vec::new();
+    if pb.is_empty() {
+        return out;
+    }
+    let mut start = 0usize;
+    while let Some(off) = code[start..].find(pat) {
+        let i = start + off;
+        let pre_ok = !is_word_byte(pb[0]) || i == 0 || !is_word_byte(cb[i - 1]);
+        let end = i + pb.len();
+        let post_ok = !is_word_byte(pb[pb.len() - 1]) || end >= cb.len() || !is_word_byte(cb[end]);
+        if pre_ok && post_ok {
+            out.push(i);
+        }
+        start = i + 1;
+    }
+    out
+}
+
+fn has_token(code: &str, pat: &str) -> bool {
+    !token_positions(code, pat).is_empty()
+}
+
+/// Direct slice/array indexing: a `[` immediately preceded by an identifier
+/// char, `)`, or `]` (excludes macros `vec![`, attributes `#[`, types
+/// `&[f32]`, and generics `<[T]>`).
+fn has_direct_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    for i in 1..b.len() {
+        if b[i] == b'[' {
+            let p = b[i - 1];
+            if is_word_byte(p) || p == b')' || p == b']' {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Name of the first function declared on this line, if any.
+fn fn_name(code: &str) -> Option<String> {
+    let i = *token_positions(code, "fn").first()?;
+    let rest = code[i + 2..].trim_start();
+    let name: String =
+        rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Annotation grammar.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ann {
+    Hot,
+    AllowPanic,
+    AllowIndexing,
+    AllowReduce,
+}
+
+/// Strip comment markers/leading decoration so annotation detection only
+/// fires on comments that *start* with the marker (doc prose that mentions
+/// the grammar mid-sentence stays inert).
+fn stripped_comment(comment: &str) -> &str {
+    comment.trim_start_matches(['/', '!', '*', ' '])
+}
+
+/// Parse a `lint:` annotation comment. `None` when the comment is not an
+/// annotation; `Some(Err(..))` for a malformed one.
+fn parse_ann(stripped: &str) -> Option<Result<Ann, String>> {
+    let rest = stripped.strip_prefix("lint:")?.trim_start();
+    if let Some(after) = rest.strip_prefix("hot") {
+        if after.is_empty() || !after.starts_with(|c: char| c.is_ascii_alphanumeric() || c == '_') {
+            return Some(Ok(Ann::Hot));
+        }
+    }
+    for (pat, ann) in [
+        ("allow(panic)", Ann::AllowPanic),
+        ("allow(indexing)", Ann::AllowIndexing),
+        ("allow(reduce)", Ann::AllowReduce),
+    ] {
+        if let Some(after) = rest.strip_prefix(pat) {
+            let reason = after.trim_start_matches([' ', '\u{2014}', '-', ':']).trim();
+            if reason.is_empty() {
+                return Some(Err(format!("`lint: {pat}` requires a reason after the kind")));
+            }
+            return Some(Ok(ann));
+        }
+    }
+    Some(Err(format!("unknown lint annotation `lint: {rest}`")))
+}
+
+/// Parse a `bitwise-pin:` comment into the test names it cites. `None` when
+/// the comment is not a pin; `Some(Err(..))` when the pin names nothing.
+fn parse_pin(stripped: &str) -> Option<Result<Vec<String>, String>> {
+    let rest = stripped.strip_prefix("bitwise-pin:")?;
+    let mut names = Vec::new();
+    for tok in rest.split([',', ' ', '\t']).filter(|t| !t.is_empty()) {
+        if tok.bytes().all(is_word_byte) {
+            names.push(tok.to_string());
+        } else {
+            break; // trailing prose after the name list
+        }
+    }
+    if names.is_empty() {
+        Some(Err("`bitwise-pin:` names no test".to_string()))
+    } else {
+        Some(Ok(names))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File classification.
+// ---------------------------------------------------------------------------
+
+fn norm(label: &str) -> String {
+    label.replace('\\', "/")
+}
+
+/// Files on the no-panic serving surface (R1).
+fn in_r1_scope(label: &str) -> bool {
+    let p = norm(label);
+    p.starts_with("engine/")
+        || p.contains("/engine/")
+        || p.ends_with("coordinator/serve.rs")
+        || p.ends_with("model/forward.rs")
+        || p.ends_with("model/kv.rs")
+        || p.ends_with("model/backend.rs")
+}
+
+/// Files under the bitwise-pin reduction-order guard (R2).
+fn in_r2_scope(label: &str) -> bool {
+    let p = norm(label);
+    p.ends_with("tensor/kernels.rs") || p.ends_with("tensor/mat.rs") || p.ends_with("model/backend.rs")
+}
+
+// ---------------------------------------------------------------------------
+// Pattern tables.
+// ---------------------------------------------------------------------------
+
+/// R1: panicking constructs (token, human label). `.unwrap()` gets special
+/// handling for the `.lock().unwrap()` poisoned-mutex exemption.
+const PANIC_TOKENS: [(&str, &str); 6] = [
+    (".unwrap()", "`.unwrap()`"),
+    (".expect(", "`.expect(..)`"),
+    ("panic!", "`panic!`"),
+    ("assert!", "`assert!`"),
+    ("assert_eq!", "`assert_eq!`"),
+    ("unreachable!", "`unreachable!`"),
+];
+
+/// R2: reduction-order hazards.
+const REDUCE_TOKENS: [&str; 7] =
+    ["mul_add", ".sum()", ".sum::<", ".fold(", "par_iter", "into_par_iter", "par_chunks"];
+
+/// R3: allocation calls banned inside `lint: hot` functions.
+const ALLOC_TOKENS: [&str; 5] = ["Vec::new", "vec!", ".to_vec(", ".clone(", "from_fn("];
+
+/// R4: compute entry points a live mutex guard must not reach.
+const FORWARD_TOKENS: [&str; 10] = [
+    ".forward(",
+    "forward_trace",
+    "forward_step",
+    "forward_batch",
+    "forward_prefill",
+    "cache_forward",
+    "attend_cached(",
+    "score_batch(",
+    "score_all(",
+    "score_choices(",
+];
+
+// ---------------------------------------------------------------------------
+// Test-name collection (for bitwise-pin cross-referencing).
+// ---------------------------------------------------------------------------
+
+/// Collect `#[test]` function names across `(label, source)` pairs —
+/// `rust/tests/**` and every `#[cfg(test)]` module alike.
+pub fn collect_test_names(sources: &[(String, String)]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for (_, src) in sources {
+        let mut armed = false;
+        for ln in lex(src) {
+            let ct = ln.code.trim();
+            if ct.is_empty() {
+                continue;
+            }
+            if ct.contains("#[test]") {
+                armed = true;
+                continue;
+            }
+            if armed {
+                if ct.starts_with("#[") || ct.starts_with("#![") {
+                    continue; // e.g. #[should_panic] between #[test] and fn
+                }
+                if let Some(name) = fn_name(ct) {
+                    names.insert(name);
+                }
+                armed = false;
+            }
+        }
+    }
+    names
+}
+
+// ---------------------------------------------------------------------------
+// The rule engine.
+// ---------------------------------------------------------------------------
+
+struct FnCtx {
+    body_depth: i32,
+    hot: bool,
+    allow_indexing: bool,
+}
+
+struct Guard {
+    name: String,
+    depth: i32,
+    line: usize,
+    reported: bool,
+}
+
+/// Lint one file. `label` is the path relative to the crate root (used for
+/// rule scoping and diagnostics); `tests` is the known-test-name universe
+/// for `bitwise-pin:` validation.
+pub fn lint_file(label: &str, src: &str, tests: &BTreeSet<String>) -> Vec<Diagnostic> {
+    let lines = lex(src);
+    let r1 = in_r1_scope(label);
+    let r2 = in_r2_scope(label);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut depth: i32 = 0;
+    // (armed_at_depth, entered_body)
+    let mut test_skip: Option<(i32, bool)> = None;
+    let mut pending_hot = false;
+    let mut pending_allow_idx = false;
+    let mut pending_ann_line = 0usize;
+    let mut carried_panic = false;
+    let mut carried_reduce = false;
+    let mut fn_stack: Vec<FnCtx> = Vec::new();
+    // (hot, allow_indexing): a `fn` seen, waiting for its opening brace.
+    let mut pending_fn: Option<(bool, bool)> = None;
+    let mut guards: Vec<Guard> = Vec::new();
+
+    for (idx, ln) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = ln.code.as_str();
+        let code_trim = code.trim();
+        let opens = code.matches('{').count() as i32;
+        let closes = code.matches('}').count() as i32;
+        let depth_end = depth + opens - closes;
+        let is_blank = code_trim.is_empty();
+        let is_attr = code_trim.starts_with("#[") || code_trim.starts_with("#![");
+
+        // ---- #[cfg(test)] region skipping -------------------------------
+        if let Some((d, entered)) = test_skip {
+            if !entered {
+                if depth_end > d {
+                    test_skip = Some((d, true));
+                } else if code_trim.ends_with(';') {
+                    test_skip = None; // attribute landed on a braceless item
+                }
+            }
+            if let Some((d, true)) = test_skip {
+                if depth_end <= d {
+                    test_skip = None;
+                }
+                depth = depth_end;
+                continue;
+            }
+            if test_skip.is_some() {
+                depth = depth_end;
+                continue;
+            }
+        }
+        if code.contains("#[cfg(test)]") && !code_trim.ends_with(';') {
+            test_skip = Some((depth, false));
+            if depth_end > depth {
+                test_skip = Some((depth, true));
+            }
+            depth = depth_end;
+            continue;
+        }
+
+        // ---- annotations ------------------------------------------------
+        let sc = stripped_comment(&ln.comment);
+        let mut allow_panic = carried_panic;
+        let mut allow_reduce = carried_reduce;
+        if !is_blank && !is_attr {
+            carried_panic = false;
+            carried_reduce = false;
+        }
+        match parse_ann(sc) {
+            Some(Err(msg)) => {
+                diags.push(Diagnostic {
+                    file: label.to_string(),
+                    line: lineno,
+                    rule: Rule::Ann,
+                    message: msg,
+                });
+            }
+            Some(Ok(Ann::Hot)) => {
+                pending_hot = true;
+                pending_ann_line = lineno;
+            }
+            Some(Ok(Ann::AllowIndexing)) => {
+                pending_allow_idx = true;
+                pending_ann_line = lineno;
+            }
+            Some(Ok(Ann::AllowPanic)) => {
+                allow_panic = true;
+                if is_blank || is_attr {
+                    carried_panic = true;
+                }
+            }
+            Some(Ok(Ann::AllowReduce)) => {
+                allow_reduce = true;
+                if is_blank || is_attr {
+                    carried_reduce = true;
+                }
+            }
+            None => {}
+        }
+        match parse_pin(sc) {
+            Some(Err(msg)) => {
+                diags.push(Diagnostic {
+                    file: label.to_string(),
+                    line: lineno,
+                    rule: Rule::Ann,
+                    message: msg,
+                });
+            }
+            Some(Ok(names)) => {
+                for name in names {
+                    if !tests.contains(&name) {
+                        diags.push(Diagnostic {
+                            file: label.to_string(),
+                            line: lineno,
+                            rule: Rule::R2,
+                            message: format!(
+                                "`bitwise-pin: {name}` names no known test \
+                                 (checked rust/tests/** and #[cfg(test)] modules)"
+                            ),
+                        });
+                    }
+                }
+            }
+            None => {}
+        }
+
+        // ---- attach function-level annotations --------------------------
+        if !is_blank && !is_attr {
+            if has_token(code, "fn") {
+                pending_fn = Some((pending_hot, pending_allow_idx));
+                pending_hot = false;
+                pending_allow_idx = false;
+            } else if pending_hot || pending_allow_idx {
+                diags.push(Diagnostic {
+                    file: label.to_string(),
+                    line: pending_ann_line,
+                    rule: Rule::Ann,
+                    message: "function-level `lint:` annotation does not precede a function"
+                        .to_string(),
+                });
+                pending_hot = false;
+                pending_allow_idx = false;
+            }
+        }
+        if let Some((hot, allow_idx)) = pending_fn {
+            if opens > 0 {
+                fn_stack.push(FnCtx { body_depth: depth + 1, hot, allow_indexing: allow_idx });
+                pending_fn = None;
+            } else if code_trim.ends_with(';') {
+                pending_fn = None; // trait method declaration, no body
+            }
+        }
+
+        // ---- R1: no-panic serving surface --------------------------------
+        if r1 && !is_blank {
+            for (tok, human) in PANIC_TOKENS {
+                let hits = token_positions(code, tok);
+                if hits.is_empty() {
+                    continue;
+                }
+                let exempt = tok == ".unwrap()"
+                    && hits.iter().all(|&i| code[..i].ends_with("lock()"));
+                if exempt || allow_panic {
+                    continue;
+                }
+                diags.push(Diagnostic {
+                    file: label.to_string(),
+                    line: lineno,
+                    rule: Rule::R1,
+                    message: format!(
+                        "{human} on the serving surface — return Err or annotate \
+                         `// lint: allow(panic) — <reason>`"
+                    ),
+                });
+            }
+            let fn_allows_idx = fn_stack.iter().any(|f| f.allow_indexing);
+            if has_direct_index(code) && !allow_panic && !fn_allows_idx {
+                diags.push(Diagnostic {
+                    file: label.to_string(),
+                    line: lineno,
+                    rule: Rule::R1,
+                    message: "direct slice indexing on the serving surface — use a checked \
+                              accessor or annotate `// lint: allow(indexing) — <reason>` on \
+                              the function"
+                        .to_string(),
+                });
+            }
+        }
+
+        // ---- R2: bitwise-pin guard ---------------------------------------
+        if r2 && !is_blank && !allow_reduce {
+            for tok in REDUCE_TOKENS {
+                if has_token(code, tok) {
+                    diags.push(Diagnostic {
+                        file: label.to_string(),
+                        line: lineno,
+                        rule: Rule::R2,
+                        message: format!(
+                            "`{tok}` can change a pinned reduction order — use the fixed-order \
+                             kernels or annotate `// lint: allow(reduce) — <reason>`"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // ---- R3: hot-loop allocations ------------------------------------
+        if fn_stack.iter().any(|f| f.hot) && !is_blank {
+            for tok in ALLOC_TOKENS {
+                if has_token(code, tok) {
+                    diags.push(Diagnostic {
+                        file: label.to_string(),
+                        line: lineno,
+                        rule: Rule::R3,
+                        message: format!(
+                            "`{tok}` allocates inside a `lint: hot` function — reuse \
+                             thread-local scratch instead"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // ---- R4: lock discipline -----------------------------------------
+        if !is_blank {
+            // New guard binding on this line?
+            if code.contains(".lock()") {
+                if let Some(name) = guard_binding_name(code) {
+                    guards.push(Guard { name, depth: depth_end, line: lineno, reported: false });
+                }
+            }
+            if !guards.is_empty() {
+                let crosses = FORWARD_TOKENS.iter().find(|tok| has_token(code, tok));
+                if let Some(tok) = crosses {
+                    for g in guards.iter_mut().filter(|g| !g.reported) {
+                        diags.push(Diagnostic {
+                            file: label.to_string(),
+                            line: lineno,
+                            rule: Rule::R4,
+                            message: format!(
+                                "mutex guard `{}` (taken on line {}) is live across `{tok}` — \
+                                 drop the guard before entering compute",
+                                g.name, g.line
+                            ),
+                        });
+                        g.reported = true;
+                    }
+                }
+                // Explicit early drop releases the guard.
+                guards.retain(|g| !has_token(code, &format!("drop({})", g.name)));
+            }
+        }
+
+        // ---- R5: unsafe audit --------------------------------------------
+        if !is_blank && has_token(code, "unsafe") {
+            let mut ok = ln.comment.contains("SAFETY:");
+            for back in 1..=6 {
+                if ok || back > idx {
+                    break;
+                }
+                ok = lines[idx - back].comment.contains("SAFETY:");
+            }
+            if !ok {
+                diags.push(Diagnostic {
+                    file: label.to_string(),
+                    line: lineno,
+                    rule: Rule::R5,
+                    message: "`unsafe` without a `// SAFETY:` comment on the preceding lines"
+                        .to_string(),
+                });
+            }
+        }
+
+        // ---- scope bookkeeping -------------------------------------------
+        while fn_stack.last().is_some_and(|f| f.body_depth > depth_end) {
+            fn_stack.pop();
+        }
+        guards.retain(|g| depth_end >= g.depth);
+        depth = depth_end;
+    }
+    diags
+}
+
+/// Extract the binding name from `let [mut] NAME = ....lock()...`, if the
+/// line creates a named guard (a `.lock()` used as a temporary is dropped at
+/// the end of its statement and never becomes a guard).
+fn guard_binding_name(code: &str) -> Option<String> {
+    let i = *token_positions(code, "let").first()?;
+    let mut rest = code[i + 3..].trim_start();
+    if let Some(r) = rest.strip_prefix("mut ") {
+        rest = r.trim_start();
+    }
+    let name: String =
+        rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    if name.is_empty() || name.starts_with(|c: char| c.is_ascii_uppercase()) {
+        // Pattern bindings (`let Ok(g) = ...`) are out of scope for the
+        // textual check; none exist on the lock paths today.
+        return None;
+    }
+    Some(name)
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking.
+// ---------------------------------------------------------------------------
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint `<root>/src/**` against the R1–R5 catalog, cross-referencing
+/// `bitwise-pin:` names against tests found in both `<root>/src/**` and
+/// `<root>/tests/**`. `root` is the crate root holding `src/` (i.e. `rust/`).
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut src_files = Vec::new();
+    walk(&root.join("src"), &mut src_files)?;
+    let mut test_files = Vec::new();
+    let tests_dir = root.join("tests");
+    if tests_dir.is_dir() {
+        walk(&tests_dir, &mut test_files)?;
+    }
+    let n_src = src_files.len();
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for p in src_files.iter().chain(test_files.iter()) {
+        let label = p
+            .strip_prefix(root)
+            .map(|r| norm(&r.to_string_lossy()))
+            .unwrap_or_else(|_| norm(&p.to_string_lossy()));
+        sources.push((label, fs::read_to_string(p)?));
+    }
+    let tests = collect_test_names(&sources);
+    let mut diags = Vec::new();
+    for (label, src) in sources.iter().take(n_src) {
+        diags.extend(lint_file(label, src, &tests));
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(diags)
+}
+
+// ---------------------------------------------------------------------------
+// Tests: each bad fixture trips exactly its rule; allowed forms pass.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(label: &str, src: &str, tests: &[&str]) -> Vec<Diagnostic> {
+        let set: BTreeSet<String> = tests.iter().map(|s| s.to_string()).collect();
+        lint_file(label, src, &set)
+    }
+
+    fn rules(diags: &[Diagnostic]) -> BTreeSet<Rule> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn r1_fixture_trips_only_r1() {
+        let d = lint("engine/fixture.rs", include_str!("../fixtures/r1_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected R1 findings");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R1]), "{}", render(&d));
+        // unwrap + assert! + indexing all reported
+        assert!(d.len() >= 3, "{}", render(&d));
+    }
+
+    #[test]
+    fn r1_allowed_fixture_is_clean() {
+        let d = lint("engine/fixture.rs", include_str!("../fixtures/r1_allowed.rs"), &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r1_lock_unwrap_is_exempt() {
+        let src = "fn f(m: &M) -> usize {\n    m.inner.lock().unwrap().len()\n}\n";
+        let d = lint("engine/fixture.rs", src, &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r1_does_not_apply_outside_the_serving_surface() {
+        let d = lint("quant/fixture.rs", include_str!("../fixtures/r1_bad.rs"), &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r2_fixture_trips_only_r2() {
+        let d = lint("tensor/kernels.rs", include_str!("../fixtures/r2_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected R2 findings");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R2]), "{}", render(&d));
+        assert!(d.len() >= 2, "mul_add and .sum() both reported: {}", render(&d));
+    }
+
+    #[test]
+    fn r2_unknown_pin_is_reported() {
+        let d = lint("tensor/kernels.rs", include_str!("../fixtures/r2_pin_unknown.rs"), &[]);
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R2]), "{}", render(&d));
+    }
+
+    #[test]
+    fn r2_known_pin_and_allowed_reduce_pass() {
+        let d = lint(
+            "tensor/kernels.rs",
+            include_str!("../fixtures/r2_allowed.rs"),
+            &["dot4_is_bitwise_four_dots"],
+        );
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r3_fixture_trips_only_r3() {
+        let d = lint("quant/fixture.rs", include_str!("../fixtures/r3_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected R3 findings");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R3]), "{}", render(&d));
+        assert!(d.len() >= 2, "Vec::new and to_vec both reported: {}", render(&d));
+    }
+
+    #[test]
+    fn r3_allowed_fixture_is_clean() {
+        let d = lint("quant/fixture.rs", include_str!("../fixtures/r3_allowed.rs"), &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r3_only_applies_inside_hot_functions() {
+        let src = "pub fn cold() -> Vec<f32> {\n    let v = Vec::new();\n    v\n}\n";
+        let d = lint("quant/fixture.rs", src, &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r4_fixture_trips_only_r4() {
+        let d = lint("quant/fixture.rs", include_str!("../fixtures/r4_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected an R4 finding");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R4]), "{}", render(&d));
+    }
+
+    #[test]
+    fn r4_allowed_fixture_is_clean() {
+        let d = lint("quant/fixture.rs", include_str!("../fixtures/r4_allowed.rs"), &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r5_fixture_trips_only_r5() {
+        let d = lint("quant/fixture.rs", include_str!("../fixtures/r5_bad.rs"), &[]);
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R5]), "{}", render(&d));
+    }
+
+    #[test]
+    fn r5_allowed_fixture_is_clean() {
+        let d = lint("quant/fixture.rs", include_str!("../fixtures/r5_allowed.rs"), &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn lexer_ignores_strings_and_comments() {
+        let src = "fn f() {\n    // calls unwrap() and panic! in prose\n    \
+                   let s = \"x.unwrap() assert! v[i] unsafe\";\n    \
+                   let r = r#\"panic! w[j]\"#;\n    let _ = (s, r);\n}\n";
+        let d = lint("engine/fixture.rs", src, &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn lexer_handles_char_literals_and_lifetimes() {
+        let lines = lex("fn g<'a>(x: &'a [u8]) -> u8 {\n    let c = '[';\n    x.first().copied().unwrap_or(c as u8)\n}\n");
+        assert!(lines[1].code.contains("let c ="));
+        assert!(!lines[1].code.contains('['), "char literal must be blanked: {:?}", lines[1].code);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_skipped() {
+        let src = "pub fn ok() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    \
+                   fn t() {\n        let v = vec![1];\n        assert_eq!(v[0], 1);\n        \
+                   v.first().unwrap();\n    }\n}\n";
+        let d = lint("engine/fixture.rs", src, &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn test_names_are_collected_from_cfg_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn my_pinned_test() {}\n    \
+                   #[test]\n    #[should_panic]\n    fn other_test() {}\n}\n"
+            .to_string();
+        let names = collect_test_names(&[("x.rs".to_string(), src)]);
+        assert!(names.contains("my_pinned_test"));
+        assert!(names.contains("other_test"));
+    }
+
+    #[test]
+    fn annotation_without_reason_is_malformed() {
+        let src = "fn f(v: &[u32]) -> u32 {\n    // lint: allow(panic)\n    v.first().copied().unwrap_or(0)\n}\n";
+        let d = lint("engine/fixture.rs", src, &[]);
+        assert_eq!(rules(&d), BTreeSet::from([Rule::Ann]), "{}", render(&d));
+    }
+
+    #[test]
+    fn dangling_hot_annotation_is_malformed() {
+        let src = "// lint: hot\nstatic X: u32 = 0;\n";
+        let d = lint("quant/fixture.rs", src, &[]);
+        assert_eq!(rules(&d), BTreeSet::from([Rule::Ann]), "{}", render(&d));
+    }
+
+    #[test]
+    fn doc_prose_mentioning_the_grammar_is_inert() {
+        let src = "//! Functions annotated `// lint: hot` may not allocate; pins use\n\
+                   //! `// bitwise-pin: <test_name>` comments.\npub fn ok() {}\n";
+        let d = lint("quant/fixture.rs", src, &[]);
+        assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn string_continuations_do_not_shift_line_numbers() {
+        // a `\<newline>` inside a string literal continues it on the next
+        // source line; the lexer must still emit one entry per source line
+        // or every diagnostic after the continuation points one line high
+        let src = "fn f(e: &str) -> String {\n    format!(\n        \"a long message \\\n         split over lines: {e}\"\n    )\n}\nfn g(v: &[u32]) -> u32 {\n    v.first().copied().unwrap()\n}\n";
+        let d = lint("engine/fixture.rs", src, &[]);
+        assert_eq!(d.len(), 1, "{}", render(&d));
+        assert_eq!(d[0].line, 8, "unwrap is on source line 8: {}", render(&d));
+    }
+}

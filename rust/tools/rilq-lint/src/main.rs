@@ -1,0 +1,33 @@
+//! CLI entry point: `cargo run -p rilq-lint [crate-root]`.
+//!
+//! Lints `<root>/src/**` against the R1–R5 invariant catalog and exits
+//! nonzero on any finding. With no argument the root defaults to the main
+//! `rilq` crate two levels up from this tool (i.e. `rust/`), so the CI
+//! invocation is just `cargo run -p rilq-lint`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args_os()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(".."));
+    match rilq_lint::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("rilq-lint: cannot walk {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+        Ok(diags) if diags.is_empty() => {
+            println!("rilq-lint: clean — R1–R5 hold across {}", root.join("src").display());
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!("rilq-lint: {} violation(s)", diags.len());
+            ExitCode::FAILURE
+        }
+    }
+}

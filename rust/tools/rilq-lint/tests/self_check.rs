@@ -1,0 +1,14 @@
+//! The shipped tree must be lint-clean: this is the same check CI runs via
+//! `cargo run -p rilq-lint`, expressed as a test so `cargo test -p rilq-lint`
+//! is self-contained.
+
+#[test]
+fn shipped_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let diags = rilq_lint::lint_tree(&root).expect("walk rust/src");
+    assert!(
+        diags.is_empty(),
+        "rust/src violates the R1-R5 invariant catalog:\n{}",
+        rilq_lint::render(&diags)
+    );
+}
