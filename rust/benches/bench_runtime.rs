@@ -391,6 +391,7 @@ fn bench_serve_loop(smoke: bool) -> Json {
             // roughly half the worst-case demand of `max_active` full
             // windows: generations pack by actual residency, not by slot
             arena_blocks: 2 * worst_blocks + 1,
+            ..EngineConfig::default()
         },
     );
     let client = engine.client();

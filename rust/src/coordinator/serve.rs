@@ -163,6 +163,17 @@ pub struct ServeSummary {
     /// forwards (GFLOP/s over `ModelDims::linear_flops_per_token` —
     /// the `serve.kernel_gflops` series; `None` until a forward ran)
     pub kernel_gflops_p50: Option<f64>,
+    /// queued requests shed at a deadline before costing any forward
+    pub shed: f64,
+    /// requests abandoned by the caller (`Pending::cancel` or drop)
+    pub cancelled: f64,
+    /// scorer-fault retries (local re-queues and peer failovers)
+    pub retries: f64,
+    /// generations aborted mid-decode by an expired deadline
+    pub deadline_aborts: f64,
+    /// routable replicas at the last health change (fleet size while
+    /// everything is healthy)
+    pub replicas_healthy: f64,
 }
 
 impl ServeSummary {
@@ -201,6 +212,11 @@ impl ServeSummary {
             kv_blocks_free: m.gauge("serve.kv_blocks_free"),
             preemptions: m.counter("serve.preemptions"),
             kernel_gflops_p50: m.percentile("serve.kernel_gflops", 0.5),
+            shed: m.counter("serve.shed"),
+            cancelled: m.counter("serve.cancelled"),
+            retries: m.counter("serve.retries"),
+            deadline_aborts: m.counter("serve.deadline_aborts"),
+            replicas_healthy: m.gauge("serve.replicas_healthy"),
         }
     }
 }
@@ -247,6 +263,18 @@ impl std::fmt::Display for ServeSummary {
                 self.kv_blocks_peak,
                 self.preemptions
             )?;
+        }
+        // fault-tolerance counters only appear once something fired, so
+        // the steady-state summary line stays unchanged
+        if self.shed + self.cancelled + self.retries + self.deadline_aborts > 0.0 {
+            write!(
+                f,
+                "; faults: {} shed, {} cancelled, {} retries, {} deadline aborts",
+                self.shed, self.cancelled, self.retries, self.deadline_aborts
+            )?;
+        }
+        if self.replicas_healthy > 0.0 {
+            write!(f, ", {:.0} replicas healthy", self.replicas_healthy)?;
         }
         Ok(())
     }
@@ -497,6 +525,44 @@ mod tests {
         assert_eq!(s.kernel_gflops_p50, Some(12.5));
         let text = format!("{s}");
         assert!(text.contains("kernel 12.50 GFLOP/s"), "{text}");
+    }
+
+    #[test]
+    fn summary_zero_fault_counters_stay_quiet() {
+        // a fault-free run reads exactly like it did before the
+        // fault-tolerance layer existed: no "faults:" clause at all
+        let m = Metrics::new();
+        let s = ServeSummary::from_metrics(&m);
+        assert_eq!(s.shed, 0.0);
+        assert_eq!(s.cancelled, 0.0);
+        assert_eq!(s.retries, 0.0);
+        assert_eq!(s.deadline_aborts, 0.0);
+        assert_eq!(s.replicas_healthy, 0.0);
+        let text = format!("{s}");
+        assert!(!text.contains("faults:"), "{text}");
+        assert!(!text.contains("replicas healthy"), "{text}");
+    }
+
+    #[test]
+    fn summary_surfaces_fault_tolerance_counters() {
+        let m = Metrics::new();
+        m.incr("serve.shed");
+        m.add("serve.cancelled", 2.0);
+        m.add("serve.retries", 3.0);
+        m.incr("serve.deadline_aborts");
+        m.gauge_set("serve.replicas_healthy", 2.0);
+        let s = ServeSummary::from_metrics(&m);
+        assert_eq!(s.shed, 1.0);
+        assert_eq!(s.cancelled, 2.0);
+        assert_eq!(s.retries, 3.0);
+        assert_eq!(s.deadline_aborts, 1.0);
+        assert_eq!(s.replicas_healthy, 2.0);
+        let text = format!("{s}");
+        assert!(
+            text.contains("faults: 1 shed, 2 cancelled, 3 retries, 1 deadline aborts"),
+            "{text}"
+        );
+        assert!(text.contains("2 replicas healthy"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Deterministic fault injection for serving tests (`ChaosScorer`).
+//!
+//! Test support only: wraps any [`Scorer`] and injects faults — `Err`
+//! returns, delays, or panics — at scheduled forward-call ordinals, so
+//! the fault-tolerance suite (`tests/chaos_serving.rs`, `serve-bench
+//! --chaos`) can prove the engine's invariants under failure: every
+//! pending request resolves, KV arena blocks drain to zero, and
+//! retried work is bitwise-identical to a fault-free run.
+//!
+//! The schedule is either hand-placed ([`ChaosScorer::with_fault`]) or
+//! derived from a seed ([`ChaosScorer::seeded`]); both are fully
+//! deterministic, so a failing chaos run reproduces exactly.
+//!
+//! The injected `panic!` below is the **only sanctioned panic source on
+//! the serving path** (see the invariant catalog in `lib.rs`): it
+//! exists precisely to exercise the engine's catch-unwind supervision,
+//! and is annotated for rilq-lint R1 accordingly.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::scorer::Scorer;
+use crate::model::kv::KvCache;
+use crate::model::ModelDims;
+use crate::tensor::{Mat, Rng};
+
+use super::caps::EngineCaps;
+
+/// One injected failure mode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// The scorer call returns `Err` (transient failure; retryable).
+    Err,
+    /// The scorer call succeeds after sleeping this long (latency
+    /// fault; trips deadlines without corrupting results).
+    Delay(Duration),
+    /// The scorer call panics (crash fault; the engine's supervision
+    /// must catch it and mark the replica unhealthy).
+    Panic,
+}
+
+/// A [`Scorer`] wrapper that injects [`Fault`]s at scheduled call
+/// ordinals. Calls are counted across *all* scoring entry points
+/// (`score_batch`, `score_choices`, `cache_forward`,
+/// `cache_forward_batch`); the first call is ordinal 1. Unscheduled
+/// calls delegate untouched, so results that do come back are exactly
+/// the inner scorer's.
+pub struct ChaosScorer<S> {
+    inner: S,
+    calls: AtomicUsize,
+    injected: AtomicUsize,
+    schedule: Mutex<BTreeMap<usize, Fault>>,
+}
+
+impl<S> ChaosScorer<S> {
+    /// Wrap `inner` with an empty fault schedule.
+    pub fn new(inner: S) -> ChaosScorer<S> {
+        ChaosScorer {
+            inner,
+            calls: AtomicUsize::new(0),
+            injected: AtomicUsize::new(0),
+            schedule: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Schedule `fault` at the `nth` scorer call (1-based). Later
+    /// entries for the same ordinal replace earlier ones.
+    pub fn with_fault(self, nth: usize, fault: Fault) -> ChaosScorer<S> {
+        {
+            let mut sched = self.schedule.lock().unwrap_or_else(|e| e.into_inner());
+            sched.insert(nth.max(1), fault);
+        }
+        self
+    }
+
+    /// Derive `n_faults` scheduled faults from `seed`, at distinct call
+    /// ordinals in `1..=window`. Fault kinds alternate between `Err`
+    /// and short `Delay`s; when `with_panics` is set every third fault
+    /// is a `Panic` instead (only sensible with ≥ 2 replicas — a
+    /// single-replica fleet has nowhere to fail over to).
+    pub fn seeded(self, seed: u64, n_faults: usize, window: usize, with_panics: bool) -> Self {
+        let mut rng = Rng::seed(seed);
+        let window = window.max(1);
+        {
+            let mut sched = self.schedule.lock().unwrap_or_else(|e| e.into_inner());
+            let mut placed = 0usize;
+            // Bounded draw budget: distinct-ordinal placement can stall
+            // when n_faults approaches window.
+            for draw in 0..(n_faults * 16).max(16) {
+                if placed >= n_faults {
+                    break;
+                }
+                let nth = (rng.next_u32() as usize) % window + 1;
+                if sched.contains_key(&nth) {
+                    continue;
+                }
+                let fault = if with_panics && placed % 3 == 2 {
+                    Fault::Panic
+                } else if draw % 2 == 0 {
+                    Fault::Err
+                } else {
+                    Fault::Delay(Duration::from_millis(1 + (rng.next_u32() % 5) as u64))
+                };
+                sched.insert(nth, fault);
+                placed += 1;
+            }
+        }
+        self
+    }
+
+    /// Total scorer calls observed so far (including faulted ones).
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::Acquire)
+    }
+
+    /// How many scheduled faults have fired.
+    pub fn injected(&self) -> usize {
+        self.injected.load(Ordering::Acquire)
+    }
+
+    /// The remaining (unfired) schedule, ordered by call ordinal — lets
+    /// tests pin that seeding is deterministic.
+    pub fn schedule(&self) -> Vec<(usize, Fault)> {
+        let sched = self.schedule.lock().unwrap_or_else(|e| e.into_inner());
+        sched.iter().map(|(&n, &f)| (n, f)).collect()
+    }
+
+    /// Count this call and fire its scheduled fault, if any.
+    fn faulted(&self) -> Result<()> {
+        let call = self.calls.fetch_add(1, Ordering::AcqRel) + 1;
+        let fault = {
+            let mut sched = self.schedule.lock().unwrap_or_else(|e| e.into_inner());
+            sched.remove(&call)
+        };
+        match fault {
+            None => Ok(()),
+            Some(Fault::Delay(d)) => {
+                self.injected.fetch_add(1, Ordering::AcqRel);
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(Fault::Err) => {
+                self.injected.fetch_add(1, Ordering::AcqRel);
+                Err(anyhow!("chaos: injected fault at call {call}"))
+            }
+            Some(Fault::Panic) => {
+                self.injected.fetch_add(1, Ordering::AcqRel);
+                // lint: allow(panic) — deliberate injected crash; test-support code whose whole
+                // purpose is to exercise the engine's catch-unwind supervision (see module docs)
+                panic!("chaos: injected panic at call {call}")
+            }
+        }
+    }
+}
+
+impl<S: Scorer> Scorer for ChaosScorer<S> {
+    fn dims(&self) -> &ModelDims {
+        self.inner.dims()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        self.inner.caps()
+    }
+
+    fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        self.faulted()?;
+        self.inner.score_batch(batch)
+    }
+
+    fn score_choices(&self, prompt: &[u32], choices: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        self.faulted()?;
+        self.inner.score_choices(prompt, choices)
+    }
+
+    fn cache_forward(&self, new_tokens: &[u32], cache: &mut KvCache) -> Result<Mat> {
+        self.faulted()?;
+        self.inner.cache_forward(new_tokens, cache)
+    }
+
+    fn cache_forward_batch(
+        &self,
+        news: &[Vec<u32>],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Mat>> {
+        self.faulted()?;
+        self.inner.cache_forward_batch(news, caches)
+    }
+    // score_all is left at its trait default so chunked scoring routes
+    // through the counted score_batch above.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal deterministic inner scorer: echoes sequence lengths.
+    struct Echo {
+        dims: ModelDims,
+    }
+
+    impl Echo {
+        fn new() -> Echo {
+            Echo {
+                dims: ModelDims {
+                    name: "echo".into(),
+                    d_model: 4,
+                    n_layers: 1,
+                    n_heads: 1,
+                    d_ff: 8,
+                    vocab: 16,
+                    seq: 8,
+                    batch: 2,
+                    group_size: 4,
+                },
+            }
+        }
+    }
+
+    impl Scorer for Echo {
+        fn dims(&self) -> &ModelDims {
+            &self.dims
+        }
+
+        fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(batch.iter().map(|t| vec![-(t.len() as f32); t.len().saturating_sub(1)]).collect())
+        }
+    }
+
+    #[test]
+    fn unscheduled_calls_delegate_untouched() {
+        let c = ChaosScorer::new(Echo::new());
+        let out = c.score_batch(&[vec![1, 2, 3]]).unwrap();
+        assert_eq!(out, vec![vec![-3.0, -3.0]]);
+        assert_eq!(c.calls(), 1);
+        assert_eq!(c.injected(), 0);
+    }
+
+    #[test]
+    fn scheduled_err_fires_once_at_its_ordinal() {
+        let c = ChaosScorer::new(Echo::new()).with_fault(2, Fault::Err);
+        assert!(c.score_batch(&[vec![1, 2]]).is_ok());
+        let err = c.score_batch(&[vec![1, 2]]).unwrap_err();
+        assert!(format!("{err}").contains("chaos: injected fault at call 2"), "{err}");
+        assert!(c.score_batch(&[vec![1, 2]]).is_ok(), "fault is consumed, call 3 is clean");
+        assert_eq!(c.injected(), 1);
+        assert!(c.schedule().is_empty());
+    }
+
+    #[test]
+    fn delay_fault_returns_the_real_answer() {
+        let c = ChaosScorer::new(Echo::new()).with_fault(1, Fault::Delay(Duration::from_millis(1)));
+        let out = c.score_batch(&[vec![1, 2, 3]]).unwrap();
+        assert_eq!(out, vec![vec![-3.0, -3.0]]);
+        assert_eq!(c.injected(), 1);
+    }
+
+    #[test]
+    fn panic_fault_panics_with_the_chaos_marker() {
+        let c = ChaosScorer::new(Echo::new()).with_fault(1, Fault::Panic);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = c.score_batch(&[vec![1, 2]]);
+        }));
+        let payload = caught.unwrap_err();
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("chaos: injected panic at call 1"), "{msg}");
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic_and_windowed() {
+        let a = ChaosScorer::new(Echo::new()).seeded(0x5eed, 4, 16, true);
+        let b = ChaosScorer::new(Echo::new()).seeded(0x5eed, 4, 16, true);
+        assert_eq!(a.schedule(), b.schedule());
+        assert_eq!(a.schedule().len(), 4);
+        assert!(a.schedule().iter().all(|&(n, _)| (1..=16).contains(&n)));
+        assert!(
+            a.schedule().iter().any(|&(_, f)| f == Fault::Panic),
+            "with_panics schedules at least one panic: {:?}",
+            a.schedule()
+        );
+        let no_panics = ChaosScorer::new(Echo::new()).seeded(0x5eed, 4, 16, false);
+        assert!(no_panics.schedule().iter().all(|&(_, f)| f != Fault::Panic));
+    }
+}

@@ -1,8 +1,9 @@
 //! The request-lifecycle engine: typed admission, two-queue scheduling,
-//! chunked prefill, lockstep decode, and streaming delivery.
+//! chunked prefill, lockstep decode, streaming delivery, and the
+//! fault-tolerance layer (deadlines, cancellation, replica failover).
 //!
-//! One [`Engine`] owns one loop thread per scorer replica. Each loop
-//! iteration is one scheduler round:
+//! One [`Engine`] owns one supervised loop thread per scorer replica.
+//! Each loop iteration is one scheduler round:
 //!
 //! 1. **intake** — drain the bounded submission channel into two
 //!    internal queues (score/choices work vs. generations waiting for a
@@ -10,7 +11,12 @@
 //!    answered immediately without touching the model. Because waiting
 //!    generations park in their own queue, score traffic behind them is
 //!    *not* head-of-line blocked while every decode slot is full;
-//! 2. **promote** — move waiting generations into free decode slots
+//! 2. **reap** — shed cancelled or deadline-expired work before it
+//!    costs a forward: queued jobs past their deadline are answered
+//!    `Err` without ever reaching the model, an abandoned or expired
+//!    generation is aborted at this step boundary and its arena blocks
+//!    freed (see [`Pending::cancel`] and [`SubmitOptions::deadline`]);
+//! 3. **promote** — move waiting generations into free decode slots
 //!    (at most [`EngineConfig::max_active`] resident sequences),
 //!    resuming preempted generations ahead of fresh admissions. Every
 //!    candidate is gated on the replica's [`KvArena`] having blocks for
@@ -18,11 +24,11 @@
 //!    for its own next step (promotion never forces an eviction) —
 //!    residency is priced at blocks *actually held*, not `max_active ×`
 //!    the full-window worst case;
-//! 3. **score** — one coalesced `score_batch` over up to
+//! 4. **score** — one coalesced `score_batch` over up to
 //!    [`EngineConfig::max_batch`] queued scoring requests (plus any
 //!    choice-scoring jobs, which prefix-reuse backends run with one
 //!    prompt prefill each);
-//! 4. **step** — one fused forward over every active generation: decode
+//! 5. **step** — one fused forward over every active generation: decode
 //!    sequences contribute their last sampled token, sequences still
 //!    prefilling contribute their next [`EngineConfig::prefill_chunk`]
 //!    prompt tokens. Chunking bounds the rows any single iteration
@@ -37,16 +43,38 @@
 //!    replaying `prompt ++ sampled` through chunked prefill, which is
 //!    bit-exact with never having been evicted.
 //!
+//! **Failure handling.** Every scorer call runs under a catch-unwind
+//! guard, so a panicking or erring scorer never kills the loop thread:
+//! the fault is recorded in the fleet's shared [`HealthView`] (a panic
+//! marks the replica unhealthy immediately; plain `Err`s after
+//! [`EngineConfig::unhealthy_after`] consecutive failures), and the
+//! affected work is retried with bounded exponential backoff
+//! ([`EngineConfig::max_retries`] / [`EngineConfig::retry_backoff`]).
+//! Score/Choices jobs are idempotent and simply re-queue — locally
+//! while the replica stays healthy, otherwise handed to a healthy peer
+//! over the same submission channels. A mid-decode generation first
+//! preempts (freeing its blocks; a torn half-appended cache is cleared
+//! wholesale, so arena accounting stays exact) and then either resumes
+//! locally or fails over to a peer via [`Msg::Resume`], carrying the
+//! prompt, the sampled-so-far tokens, and the live RNG state — the
+//! PR-6 replay path, so a failed-over generation is bitwise identical
+//! to one that never saw a fault (replicas serve identical weights).
+//! Work that exhausts its retry budget, and work that no healthy
+//! replica can take, resolves `Err`; a [`Pending`] never hangs.
+//!
 //! Sampled tokens stream to [`TokenStream`] subscribers the moment they
 //! are committed; the final [`Generated`] answer arrives on the
 //! request's [`Pending`].
 
 use std::cmp::Reverse;
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -59,7 +87,10 @@ use crate::model::ModelDims;
 use crate::tensor::Rng;
 
 use super::dispatch::{Dispatch, RoundRobin};
-use super::request::{Generated, Pending, Request, Response, TokenEvent, TokenStream};
+use super::health::HealthView;
+use super::request::{
+    CancelCell, Generated, Pending, Request, Response, SubmitOptions, TokenEvent, TokenStream,
+};
 use super::sampling::{sample_token, SamplingParams};
 
 /// Engine scheduling knobs.
@@ -91,6 +122,27 @@ pub struct EngineConfig {
     /// concurrent decodes into the same bytes, and the scheduler preempts
     /// (evict + bit-exact re-prefill) on the rare burst that overflows.
     pub arena_blocks: usize,
+    /// Deadline applied to every submission that does not carry its own
+    /// [`SubmitOptions::deadline`] (`None` = no default deadline).
+    /// Expired queued work is shed with `Err` before any forward; an
+    /// expired generation is aborted at the next step boundary and its
+    /// arena blocks freed.
+    pub default_deadline: Option<Duration>,
+    /// Retry budget per request for scorer faults (`Err` returns and
+    /// caught panics). Score/Choices retries re-run the idempotent
+    /// forward; a generation retry resumes via the bit-exact replay
+    /// path. `0` disables retries: the first fault resolves the
+    /// request `Err`.
+    pub max_retries: usize,
+    /// Consecutive scorer `Err`s before the replica is marked unhealthy
+    /// in the fleet's [`HealthView`] (a caught panic marks it
+    /// immediately). Values below 1 behave as 1.
+    pub unhealthy_after: usize,
+    /// Base retry backoff: attempt `n` waits `retry_backoff · 2^(n-1)`,
+    /// capped at 100ms (`Duration::ZERO` disables the wait). The sleep
+    /// happens on the engine loop between rounds, so it also rate-limits
+    /// how fast a persistently failing scorer is re-asked.
+    pub retry_backoff: Duration,
 }
 
 impl Default for EngineConfig {
@@ -102,20 +154,57 @@ impl Default for EngineConfig {
             prefill_chunk: 32,
             kv_block: 0,
             arena_blocks: 0,
+            default_deadline: None,
+            max_retries: 2,
+            unhealthy_after: 3,
+            retry_backoff: Duration::from_millis(1),
         }
+    }
+}
+
+/// Reply plumbing + bookkeeping shared by every job kind: when it was
+/// submitted, when it must be answered by, how often it has been
+/// retried, the out-of-band cancellation cell, and the response sender.
+struct JobMeta {
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    retries: usize,
+    cancel: Arc<CancelCell>,
+    resp: Sender<Result<Response>>,
+}
+
+impl JobMeta {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
 /// One submission: the typed request plus its reply plumbing.
 struct Submission {
     req: Request,
-    enqueued: Instant,
-    resp: Sender<Result<Response>>,
+    meta: JobMeta,
+    stream: Option<Sender<TokenEvent>>,
+}
+
+/// A generation failing over between replicas: everything needed to
+/// resume it bit-exact on the receiver — the prompt, the sampled-so-far
+/// tokens/logps, and the live RNG state. The receiver rebuilds the KV
+/// prefix via the PR-6 replay path (chunked prefill of
+/// `prompt ++ tokens[..k-1]`), which is bitwise identical to never
+/// having moved, provided the replicas serve identical weights.
+struct ResumeGen {
+    prompt: Vec<u32>,
+    tokens: Vec<u32>,
+    logps: Vec<f32>,
+    params: SamplingParams,
+    rng: Rng,
+    meta: JobMeta,
     stream: Option<Sender<TokenEvent>>,
 }
 
 enum Msg {
     Sub(Submission),
+    Resume(Box<ResumeGen>),
     Shutdown,
 }
 
@@ -125,6 +214,8 @@ pub struct EngineClient {
     txs: Vec<SyncSender<Msg>>,
     dispatch: Arc<dyn Dispatch>,
     metrics: Arc<Metrics>,
+    health: Arc<HealthView>,
+    default_deadline: Option<Duration>,
 }
 
 impl EngineClient {
@@ -132,22 +223,32 @@ impl EngineClient {
         &self,
         req: Request,
         stream: Option<Sender<TokenEvent>>,
-    ) -> Result<Receiver<Result<Response>>> {
+        opts: &SubmitOptions,
+    ) -> Result<(Receiver<Result<Response>>, Arc<CancelCell>)> {
         let (resp, rx) = channel();
         if self.txs.is_empty() {
             return Err(anyhow!("engine stopped"));
         }
+        // the Dispatch return value is a hint: an out-of-range or
+        // unhealthy index re-routes to the next healthy replica instead
+        // of being silently %-clamped into a slot whose loop may be dead
+        let hint = self.dispatch.route(&req, &self.health);
+        let replica = if hint < self.txs.len() && self.health.is_healthy(hint) {
+            hint
+        } else {
+            self.health
+                .next_healthy(hint % self.txs.len())
+                .ok_or_else(|| anyhow!("engine has no healthy replica to take this request"))?
+        };
+        let now = Instant::now();
+        let deadline =
+            opts.deadline.or(self.default_deadline).and_then(|d| now.checked_add(d));
+        let cancel = Arc::new(CancelCell::default());
+        let meta =
+            JobMeta { enqueued: now, deadline, retries: 0, cancel: cancel.clone(), resp };
         self.metrics.gauge_add("serve.queue_depth", 1.0);
-        let replica = self.dispatch.route(&req, self.txs.len()) % self.txs.len();
-        // `route % len` keeps the replica in range, but a miscounting
-        // Dispatch impl must surface as a refused submission, not a panic
         let sent = match self.txs.get(replica) {
-            Some(tx) => tx.send(Msg::Sub(Submission {
-                req,
-                enqueued: Instant::now(),
-                resp,
-                stream,
-            })),
+            Some(tx) => tx.send(Msg::Sub(Submission { req, meta, stream })),
             None => {
                 self.metrics.gauge_add("serve.queue_depth", -1.0);
                 return Err(anyhow!("engine stopped"));
@@ -157,19 +258,34 @@ impl EngineClient {
             self.metrics.gauge_add("serve.queue_depth", -1.0);
             return Err(anyhow!("engine stopped"));
         }
-        Ok(rx)
+        Ok((rx, cancel))
     }
 
     /// Submit any [`Request`]; blocks while the bounded queue is full
     /// (backpressure), errs once the engine has shut down.
     pub fn submit(&self, req: Request) -> Result<Pending<Response>> {
-        Ok(Pending::new(self.submit_raw(req, None)?, Ok))
+        self.submit_with(req, &SubmitOptions::default())
+    }
+
+    /// [`EngineClient::submit`] with explicit per-request options.
+    pub fn submit_with(&self, req: Request, opts: &SubmitOptions) -> Result<Pending<Response>> {
+        let (rx, cancel) = self.submit_raw(req, None, opts)?;
+        Ok(Pending::new(rx, cancel, Ok))
     }
 
     /// Enqueue a sequence for scoring.
     pub fn score(&self, tokens: Vec<u32>) -> Result<Pending<Vec<f32>>> {
-        let rx = self.submit_raw(Request::Score { tokens }, None)?;
-        Ok(Pending::new(rx, Response::into_scored))
+        self.score_with(tokens, &SubmitOptions::default())
+    }
+
+    /// [`EngineClient::score`] with explicit per-request options.
+    pub fn score_with(
+        &self,
+        tokens: Vec<u32>,
+        opts: &SubmitOptions,
+    ) -> Result<Pending<Vec<f32>>> {
+        let (rx, cancel) = self.submit_raw(Request::Score { tokens }, None, opts)?;
+        Ok(Pending::new(rx, cancel, Response::into_scored))
     }
 
     /// Enqueue choice scoring: per-choice log-probs of each candidate
@@ -179,15 +295,37 @@ impl EngineClient {
         prompt: Vec<u32>,
         choices: Vec<Vec<u32>>,
     ) -> Result<Pending<Vec<Vec<f32>>>> {
-        let rx = self.submit_raw(Request::Choices { prompt, choices }, None)?;
-        Ok(Pending::new(rx, Response::into_choices))
+        self.choices_with(prompt, choices, &SubmitOptions::default())
+    }
+
+    /// [`EngineClient::choices`] with explicit per-request options.
+    pub fn choices_with(
+        &self,
+        prompt: Vec<u32>,
+        choices: Vec<Vec<u32>>,
+        opts: &SubmitOptions,
+    ) -> Result<Pending<Vec<Vec<f32>>>> {
+        let (rx, cancel) =
+            self.submit_raw(Request::Choices { prompt, choices }, None, opts)?;
+        Ok(Pending::new(rx, cancel, Response::into_choices))
     }
 
     /// Enqueue a generation under `params` (greedy when
     /// `params.temperature == 0`).
     pub fn generate(&self, prompt: Vec<u32>, params: SamplingParams) -> Result<Pending<Generated>> {
-        let rx = self.submit_raw(Request::Generate { prompt, params }, None)?;
-        Ok(Pending::new(rx, Response::into_generated))
+        self.generate_with(prompt, params, &SubmitOptions::default())
+    }
+
+    /// [`EngineClient::generate`] with explicit per-request options.
+    pub fn generate_with(
+        &self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        opts: &SubmitOptions,
+    ) -> Result<Pending<Generated>> {
+        let (rx, cancel) =
+            self.submit_raw(Request::Generate { prompt, params }, None, opts)?;
+        Ok(Pending::new(rx, cancel, Response::into_generated))
     }
 
     /// Like [`EngineClient::generate`], but also deliver each token the
@@ -199,21 +337,36 @@ impl EngineClient {
         prompt: Vec<u32>,
         params: SamplingParams,
     ) -> Result<(TokenStream, Pending<Generated>)> {
+        self.generate_stream_with(prompt, params, &SubmitOptions::default())
+    }
+
+    /// [`EngineClient::generate_stream`] with explicit per-request
+    /// options.
+    pub fn generate_stream_with(
+        &self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        opts: &SubmitOptions,
+    ) -> Result<(TokenStream, Pending<Generated>)> {
         let (tx, rx) = channel();
-        let resp = self.submit_raw(Request::Generate { prompt, params }, Some(tx))?;
-        Ok((TokenStream { rx }, Pending::new(resp, Response::into_generated)))
+        let (resp, cancel) =
+            self.submit_raw(Request::Generate { prompt, params }, Some(tx), opts)?;
+        Ok((TokenStream { rx }, Pending::new(resp, cancel, Response::into_generated)))
     }
 }
 
-/// The running engine: one scheduler loop per scorer replica, a shared
-/// metrics sink, and a [`Dispatch`] policy placing submissions.
-/// Dropping the engine initiates shutdown: requests already queued are
-/// drained and answered, later submissions err.
+/// The running engine: one supervised scheduler loop per scorer replica,
+/// a shared metrics sink, a fleet [`HealthView`], and a [`Dispatch`]
+/// policy placing submissions. Dropping the engine initiates shutdown:
+/// requests already queued are drained and answered, later submissions
+/// err.
 pub struct Engine {
     txs: Option<Vec<SyncSender<Msg>>>,
     workers: Vec<JoinHandle<()>>,
     dispatch: Arc<dyn Dispatch>,
     metrics: Arc<Metrics>,
+    health: Arc<HealthView>,
+    arenas: Vec<Arc<KvArena>>,
     cfg: EngineConfig,
 }
 
@@ -228,9 +381,13 @@ impl Engine {
         Engine::start_sharded(vec![scorer], cfg, Arc::new(RoundRobin::new()))
     }
 
-    /// Spawn one scheduler loop per scorer replica, routing submissions
-    /// through `dispatch`. All replicas share one metrics sink, so
-    /// [`Engine::summary`] aggregates the fleet.
+    /// Spawn one supervised scheduler loop per scorer replica, routing
+    /// submissions through `dispatch`. All replicas share one metrics
+    /// sink, so [`Engine::summary`] aggregates the fleet — and one
+    /// [`HealthView`], so routing and peer-failover skip replicas whose
+    /// loop died or whose scorer keeps failing. Failover assumes the
+    /// replicas serve identical weights (the bitwise-resume guarantee is
+    /// meaningless otherwise).
     pub fn start_sharded(
         scorers: Vec<Arc<dyn Scorer + Send + Sync>>,
         cfg: EngineConfig,
@@ -239,23 +396,41 @@ impl Engine {
         // lint: allow(panic) — construction-time contract, before any request exists
         assert!(!scorers.is_empty(), "engine needs at least one scorer replica");
         let metrics = Arc::new(Metrics::new());
+        let health = Arc::new(HealthView::new(scorers.len()));
+        metrics.gauge_set("serve.replicas_healthy", scorers.len() as f64);
+        // all channels exist before any loop spawns, so every replica
+        // holds a sender to every peer (its failover targets)
         let mut txs = Vec::with_capacity(scorers.len());
-        let mut workers = Vec::with_capacity(scorers.len());
-        for (i, scorer) in scorers.into_iter().enumerate() {
+        let mut rxs = Vec::with_capacity(scorers.len());
+        for _ in 0..scorers.len() {
             let (tx, rx) = sync_channel(cfg.queue_capacity.max(1));
-            let m = metrics.clone();
-            let c = cfg.clone();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let mut arenas = Vec::with_capacity(scorers.len());
+        let mut workers = Vec::with_capacity(scorers.len());
+        for (i, (scorer, rx)) in scorers.into_iter().zip(rxs).enumerate() {
+            let arena = build_arena(&cfg, scorer.dims());
+            arenas.push(arena.clone());
+            let ctx = ReplicaCtx {
+                scorer,
+                cfg: cfg.clone(),
+                metrics: metrics.clone(),
+                arena,
+                health: health.clone(),
+                peers: txs.clone(),
+                index: i,
+            };
             #[allow(clippy::expect_used)]
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rilq-engine-{i}"))
-                    .spawn(move || engine_loop(scorer, rx, c, m))
+                    .spawn(move || supervised_loop(ctx, rx))
                     // lint: allow(panic) — construction-time: the process cannot serve without its scheduler threads
                     .expect("spawn engine loop"),
             );
-            txs.push(tx);
         }
-        Engine { txs: Some(txs), workers, dispatch, metrics, cfg }
+        Engine { txs: Some(txs), workers, dispatch, metrics, health, arenas, cfg }
     }
 
     pub fn client(&self) -> EngineClient {
@@ -265,6 +440,8 @@ impl Engine {
             txs: self.txs.clone().unwrap_or_default(),
             dispatch: self.dispatch.clone(),
             metrics: self.metrics.clone(),
+            health: self.health.clone(),
+            default_deadline: self.cfg.default_deadline,
         }
     }
 
@@ -278,6 +455,19 @@ impl Engine {
 
     pub fn n_replicas(&self) -> usize {
         self.txs.as_ref().map(Vec::len).unwrap_or(0)
+    }
+
+    /// The fleet's shared health registry (clone survives shutdown, so
+    /// tests can assert post-drain replica state).
+    pub fn health(&self) -> Arc<HealthView> {
+        self.health.clone()
+    }
+
+    /// The per-replica KV arenas, indexed like the scorer replicas.
+    /// Cloning an entry keeps it alive past [`Engine::shutdown`] — the
+    /// drain invariant `blocks_in_use() == 0` is assertable there.
+    pub fn arenas(&self) -> &[Arc<KvArena>] {
+        &self.arenas
     }
 
     /// Snapshot of the throughput/latency counters.
@@ -312,23 +502,100 @@ impl Drop for Engine {
     }
 }
 
+/// Size a replica's KV arena from the config (same policy the loop used
+/// before arenas moved out to [`Engine::arenas`]): `kv_block == 0`
+/// takes the library default, `arena_blocks == 0` auto-sizes to the
+/// pre-paged worst case.
+fn build_arena(cfg: &EngineConfig, dims: &ModelDims) -> Arc<KvArena> {
+    let max_active = cfg.max_active.max(1);
+    let kv_block = if cfg.kv_block == 0 { DEFAULT_BLOCK_POSITIONS } else { cfg.kv_block };
+    let kv_block = kv_block.clamp(1, dims.seq.max(1));
+    let arena_blocks = if cfg.arena_blocks == 0 {
+        max_active * dims.seq.div_ceil(kv_block)
+    } else {
+        cfg.arena_blocks.max(1)
+    };
+    KvArena::new(dims, kv_block, arena_blocks)
+}
+
+/// Everything one replica's loop needs, bundled for the spawn.
+struct ReplicaCtx {
+    scorer: Arc<dyn Scorer + Send + Sync>,
+    cfg: EngineConfig,
+    metrics: Arc<Metrics>,
+    arena: Arc<KvArena>,
+    health: Arc<HealthView>,
+    /// senders to every replica (self included): the failover targets
+    peers: Vec<SyncSender<Msg>>,
+    index: usize,
+}
+
+/// Drop guard around one replica loop: a panic that somehow escapes the
+/// per-call catch-unwind guards (or fires between them) still marks the
+/// replica unhealthy on thread unwind, so the fleet stops routing to a
+/// slot nobody serves. The dying loop's queued messages drop with the
+/// thread, resolving their `Pending`s `Err` via the dropped senders.
+struct Sentinel {
+    health: Arc<HealthView>,
+    metrics: Arc<Metrics>,
+    index: usize,
+}
+
+impl Drop for Sentinel {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.health.mark_unhealthy(self.index);
+            self.metrics
+                .gauge_set("serve.replicas_healthy", self.health.healthy_count() as f64);
+        }
+    }
+}
+
+fn supervised_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
+    let _sentinel =
+        Sentinel { health: ctx.health.clone(), metrics: ctx.metrics.clone(), index: ctx.index };
+    engine_loop(ctx, rx);
+}
+
 /// A queued scoring-side job (plain score or choice scoring).
 enum ScoreJob {
-    Plain { tokens: Vec<u32>, enqueued: Instant, resp: Sender<Result<Response>> },
-    Choices {
-        prompt: Vec<u32>,
-        choices: Vec<Vec<u32>>,
-        enqueued: Instant,
-        resp: Sender<Result<Response>>,
-    },
+    Plain { tokens: Vec<u32>, meta: JobMeta },
+    Choices { prompt: Vec<u32>, choices: Vec<Vec<u32>>, meta: JobMeta },
+}
+
+impl ScoreJob {
+    fn meta(&self) -> &JobMeta {
+        match self {
+            ScoreJob::Plain { meta, .. } | ScoreJob::Choices { meta, .. } => meta,
+        }
+    }
+
+    fn meta_mut(&mut self) -> &mut JobMeta {
+        match self {
+            ScoreJob::Plain { meta, .. } | ScoreJob::Choices { meta, .. } => meta,
+        }
+    }
+
+    /// Back into the wire form, for handing the job to a peer replica.
+    fn into_parts(self) -> (Request, JobMeta) {
+        match self {
+            ScoreJob::Plain { tokens, meta } => (Request::Score { tokens }, meta),
+            ScoreJob::Choices { prompt, choices, meta } => {
+                (Request::Choices { prompt, choices }, meta)
+            }
+        }
+    }
+
+    fn into_meta(self) -> JobMeta {
+        self.into_parts().1
+    }
 }
 
 /// A validated generation waiting for a decode slot.
 struct GenJob {
     prompt: Vec<u32>,
     params: SamplingParams,
-    enqueued: Instant,
-    resp: Sender<Result<Response>>,
+    meta: JobMeta,
     stream: Option<Sender<TokenEvent>>,
 }
 
@@ -356,8 +623,7 @@ struct ActiveGen {
     logps: Vec<f32>,
     params: SamplingParams,
     rng: Rng,
-    enqueued: Instant,
-    resp: Sender<Result<Response>>,
+    meta: JobMeta,
     stream: Option<Sender<TokenEvent>>,
 }
 
@@ -374,10 +640,32 @@ impl ActiveGen {
             logps: Vec::new(),
             params: g.params,
             rng,
-            enqueued: g.enqueued,
-            resp: g.resp,
+            meta: g.meta,
             stream: g.stream,
         }
+    }
+
+    /// Rebuild a generation that failed over from a peer replica: fresh
+    /// cache, then [`ActiveGen::preempt`] derives the replay prefix —
+    /// the single source of truth for resume state, so a failover
+    /// continues bit-exact just like a local preemption.
+    fn resume(r: ResumeGen, arena: &Arc<KvArena>) -> ActiveGen {
+        let ResumeGen { prompt, tokens, logps, params, rng, meta, stream } = r;
+        let mut a = ActiveGen {
+            cache: arena.new_cache(),
+            prefill: Vec::new(),
+            prompt,
+            done: 0,
+            sample_after_prefill: true,
+            tokens,
+            logps,
+            params,
+            rng,
+            meta,
+            stream,
+        };
+        a.preempt();
+        a
     }
 
     /// Tokens the next scheduler step will feed for this sequence: the
@@ -441,8 +729,9 @@ fn observe_gflops(metrics: &Metrics, rows: usize, flops_per_row: f64, secs: f64)
 fn finish_gen(a: ActiveGen, metrics: &Metrics) {
     metrics.add("serve.gen_requests", 1.0);
     metrics.add("serve.gen_tokens", a.tokens.len() as f64);
-    metrics.observe("serve.latency_secs", a.enqueued.elapsed().as_secs_f64());
+    metrics.observe("serve.latency_secs", a.meta.enqueued.elapsed().as_secs_f64());
     let _ = a
+        .meta
         .resp
         .send(Ok(Response::Generated(Generated { tokens: a.tokens, logps: a.logps })));
 }
@@ -482,15 +771,212 @@ fn validate_choices(dims: &ModelDims, prompt: &[u32], choices: &[Vec<u32>]) -> R
     Ok(())
 }
 
+/// Run one scorer call under a catch-unwind guard: a panicking scorer
+/// becomes `(Err, true)` instead of killing the loop thread. The bool
+/// distinguishes a crash (immediate unhealthy) from a plain `Err`
+/// (counted against [`EngineConfig::unhealthy_after`]). Any state the
+/// closure touched (KV caches mid-append) is presumed torn — callers
+/// preempt/clear before reuse, which is what makes the unwind-safety
+/// assertion sound.
+fn catch_fault<T>(f: impl FnOnce() -> Result<T>) -> (Result<T>, bool) {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => (r, false),
+        Err(payload) => {
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            (Err(anyhow!("scorer panicked: {what}")), true)
+        }
+    }
+}
+
+/// The loop-local slice of fleet state the retry/failover helpers need.
+struct FleetCtx<'a> {
+    cfg: &'a EngineConfig,
+    metrics: &'a Metrics,
+    health: &'a HealthView,
+    peers: &'a [SyncSender<Msg>],
+    index: usize,
+}
+
+/// Record a scorer fault against this replica's health: a caught panic
+/// marks it unhealthy immediately, a plain `Err` counts toward the
+/// consecutive-error threshold.
+fn record_fault(fleet: &FleetCtx, panicked: bool) {
+    if panicked {
+        fleet.health.mark_unhealthy(fleet.index);
+    } else {
+        fleet.health.record_err(fleet.index, fleet.cfg.unhealthy_after);
+    }
+    fleet.metrics.gauge_set("serve.replicas_healthy", fleet.health.healthy_count() as f64);
+}
+
+/// Terminal failure: count it and resolve the caller's `Pending`.
+fn fail_request(meta: JobMeta, metrics: &Metrics, msg: &str) {
+    metrics.incr("serve.errors");
+    let _ = meta.resp.send(Err(anyhow!("{msg}")));
+}
+
+/// Exponential retry backoff: attempt `n` waits `base · 2^(n-1)`,
+/// capped at 100ms. Sleeping on the loop thread is deliberate — it also
+/// rate-limits how fast a persistently failing scorer is re-asked.
+fn backoff(cfg: &EngineConfig, attempt: usize) {
+    if cfg.retry_backoff.is_zero() {
+        return;
+    }
+    let factor = 1u32 << attempt.saturating_sub(1).min(6) as u32;
+    std::thread::sleep((cfg.retry_backoff * factor).min(Duration::from_millis(100)));
+}
+
+/// Hand a message to a healthy peer replica, walking the fleet from the
+/// slot after ours. `try_send` only: a blocking cross-send between two
+/// mutually-failing replicas could deadlock both loops, so a peer whose
+/// queue is full is simply skipped. Returns the message when no healthy
+/// peer could take it.
+fn send_to_peer(fleet: &FleetCtx, msg: Msg) -> std::result::Result<(), Msg> {
+    let n = fleet.peers.len();
+    let mut msg = msg;
+    for k in 1..n {
+        let i = (fleet.index + k) % n;
+        if !fleet.health.is_healthy(i) {
+            continue;
+        }
+        let Some(tx) = fleet.peers.get(i) else { continue };
+        match tx.try_send(msg) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => msg = m,
+        }
+    }
+    Err(msg)
+}
+
+/// Retry an idempotent Score/Choices job after a scorer fault: back
+/// onto the local queue while this replica is still healthy, otherwise
+/// over to a healthy peer. Exhausted budgets and peerless fleets
+/// resolve the request `Err`.
+fn retry_score_job(
+    mut job: ScoreJob,
+    err: &str,
+    score_q: &mut VecDeque<ScoreJob>,
+    fleet: &FleetCtx,
+) {
+    if job.meta().retries >= fleet.cfg.max_retries {
+        fail_request(job.into_meta(), fleet.metrics, &format!("{err} (retries exhausted)"));
+        return;
+    }
+    job.meta_mut().retries += 1;
+    fleet.metrics.incr("serve.retries");
+    backoff(fleet.cfg, job.meta().retries);
+    if fleet.health.is_healthy(fleet.index) {
+        score_q.push_back(job);
+        return;
+    }
+    let (req, meta) = job.into_parts();
+    fleet.metrics.gauge_add("serve.queue_depth", 1.0);
+    match send_to_peer(fleet, Msg::Sub(Submission { req, meta, stream: None })) {
+        Ok(()) => {}
+        Err(Msg::Sub(sub)) => {
+            fleet.metrics.gauge_add("serve.queue_depth", -1.0);
+            fail_request(
+                sub.meta,
+                fleet.metrics,
+                &format!("{err} (no healthy replica could take the retry)"),
+            );
+        }
+        // send_to_peer returns exactly the message it was handed
+        Err(_) => {}
+    }
+}
+
+/// Retry a generation after a scorer fault. The caller has already
+/// preempted it (blocks freed, replay prefix rebuilt), so retrying is
+/// the PR-6 resume path: locally via the preempted queue while this
+/// replica is healthy, otherwise failing over to a peer with the full
+/// replay state ([`Msg::Resume`]).
+fn retry_gen(mut a: ActiveGen, err: &str, preempted: &mut VecDeque<ActiveGen>, fleet: &FleetCtx) {
+    if a.meta.retries >= fleet.cfg.max_retries {
+        fail_request(a.meta, fleet.metrics, &format!("{err} (retries exhausted)"));
+        return;
+    }
+    a.meta.retries += 1;
+    fleet.metrics.incr("serve.retries");
+    backoff(fleet.cfg, a.meta.retries);
+    if fleet.health.is_healthy(fleet.index) {
+        preempted.push_back(a);
+        return;
+    }
+    let ActiveGen { prompt, tokens, logps, params, rng, meta, stream, .. } = a;
+    fleet.metrics.gauge_add("serve.queue_depth", 1.0);
+    let resume = Box::new(ResumeGen { prompt, tokens, logps, params, rng, meta, stream });
+    match send_to_peer(fleet, Msg::Resume(resume)) {
+        Ok(()) => {}
+        Err(Msg::Resume(r)) => {
+            fleet.metrics.gauge_add("serve.queue_depth", -1.0);
+            fail_request(
+                r.meta,
+                fleet.metrics,
+                &format!("{err} (no healthy replica could take the failover)"),
+            );
+        }
+        // send_to_peer returns exactly the message it was handed
+        Err(_) => {}
+    }
+}
+
+/// What the reap pass decides about one job at a step boundary.
+enum Verdict {
+    Live,
+    Cancelled,
+    Expired,
+}
+
+fn reap_verdict(meta: &JobMeta, now: Instant) -> Verdict {
+    if meta.cancel.abandoned() {
+        Verdict::Cancelled
+    } else if meta.expired(now) {
+        Verdict::Expired
+    } else {
+        Verdict::Live
+    }
+}
+
+fn deadline_err(meta: &JobMeta) -> anyhow::Error {
+    anyhow!(
+        "deadline expired {:?} after submission (request shed before any forward)",
+        meta.enqueued.elapsed()
+    )
+}
+
+/// Answer a reaped generation (active or preempted — decode has begun,
+/// so an expiry here is a mid-generation abort, not a queue shed).
+/// Dropping the `ActiveGen` returns its arena blocks.
+fn abort_gen(a: ActiveGen, verdict: Verdict, metrics: &Metrics) {
+    match verdict {
+        Verdict::Live => {}
+        Verdict::Cancelled => {
+            metrics.incr("serve.cancelled");
+            let _ = a.meta.resp.send(Err(anyhow!(
+                "request cancelled after {} sampled token(s)",
+                a.tokens.len()
+            )));
+        }
+        Verdict::Expired => {
+            metrics.incr("serve.deadline_aborts");
+            let _ = a.meta.resp.send(Err(anyhow!(
+                "deadline expired mid-generation after {} sampled token(s)",
+                a.tokens.len()
+            )));
+        }
+    }
+}
+
 // lint: allow(indexing) — every subscript in the loop is bounded by `active`
 // (`news`/`lgs`/`refs` are rebuilt 1:1 from it each step, so `[i]` shares its
 // range) or is a prefill range clamped with `.min(prefill.len())`
-fn engine_loop(
-    scorer: Arc<dyn Scorer + Send + Sync>,
-    rx: Receiver<Msg>,
-    cfg: EngineConfig,
-    metrics: Arc<Metrics>,
-) {
+fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
+    let ReplicaCtx { scorer, cfg, metrics, arena, health, peers, index } = ctx;
     let max_batch = cfg.max_batch.max(1);
     let max_active = cfg.max_active.max(1);
     // the scoring queue must hold at least a full batch, or a small
@@ -503,18 +989,8 @@ fn engine_loop(
     // numerator of the serve.kernel_gflops observation series: FLOPs one
     // activation row spends in the quantized linears + LM head
     let flops_per_row = dims.linear_flops_per_token() as f64;
-
-    // the replica's KV block arena: every active generation draws its
-    // blocks here, so admission and scheduling price requests at blocks
-    // *actually held* instead of max_active × full-window
-    let kv_block = if cfg.kv_block == 0 { DEFAULT_BLOCK_POSITIONS } else { cfg.kv_block };
-    let kv_block = kv_block.clamp(1, dims.seq.max(1));
-    let arena_blocks = if cfg.arena_blocks == 0 {
-        max_active * dims.seq.div_ceil(kv_block)
-    } else {
-        cfg.arena_blocks.max(1)
-    };
-    let arena = KvArena::new(&dims, kv_block, arena_blocks);
+    let fleet =
+        FleetCtx { cfg: &cfg, metrics: &metrics, health: &health, peers: &peers, index };
 
     let mut score_q: VecDeque<ScoreJob> = VecDeque::new();
     let mut gen_wait: VecDeque<GenJob> = VecDeque::new();
@@ -535,35 +1011,55 @@ fn engine_loop(
     // Admit one message: malformed requests (over-window, out-of-vocab,
     // no cache support, generation past the window, bad sampling params)
     // are answered without touching the model — and without poisoning
-    // anything already queued. Returns false on the shutdown sentinel.
+    // anything already queued. Cancelled or already-expired submissions
+    // are shed here, before any queue time. Returns false on the
+    // shutdown sentinel.
     let admit = |msg: Msg,
                  score_q: &mut VecDeque<ScoreJob>,
-                 gen_wait: &mut VecDeque<GenJob>|
+                 gen_wait: &mut VecDeque<GenJob>,
+                 preempted: &mut VecDeque<ActiveGen>|
      -> bool {
         let sub = match msg {
             Msg::Shutdown => return false,
+            Msg::Resume(r) => {
+                // a generation failing over from a peer: rebuild it on
+                // this replica's arena and park it for promotion (the
+                // replay prefix makes the continuation bit-exact)
+                metrics.gauge_add("serve.queue_depth", -1.0);
+                preempted.push_back(ActiveGen::resume(*r, &arena));
+                return true;
+            }
             Msg::Sub(sub) => sub,
         };
         metrics.gauge_add("serve.queue_depth", -1.0);
-        let Submission { req, enqueued, resp, stream } = sub;
+        let Submission { req, meta, stream } = sub;
+        if meta.cancel.abandoned() {
+            metrics.incr("serve.cancelled");
+            let _ = meta.resp.send(Err(anyhow!("request cancelled before admission")));
+            return true;
+        }
+        if meta.expired(Instant::now()) {
+            metrics.incr("serve.shed");
+            let e = deadline_err(&meta);
+            let _ = meta.resp.send(Err(e));
+            return true;
+        }
         match req {
             Request::Score { tokens } => {
                 match check_input(&dims, std::slice::from_ref(&tokens)) {
-                    Ok(()) => score_q.push_back(ScoreJob::Plain { tokens, enqueued, resp }),
+                    Ok(()) => score_q.push_back(ScoreJob::Plain { tokens, meta }),
                     Err(e) => {
                         metrics.incr("serve.errors");
-                        let _ = resp.send(Err(e));
+                        let _ = meta.resp.send(Err(e));
                     }
                 }
             }
             Request::Choices { prompt, choices } => {
                 match validate_choices(&dims, &prompt, &choices) {
-                    Ok(()) => {
-                        score_q.push_back(ScoreJob::Choices { prompt, choices, enqueued, resp })
-                    }
+                    Ok(()) => score_q.push_back(ScoreJob::Choices { prompt, choices, meta }),
                     Err(e) => {
                         metrics.incr("serve.errors");
-                        let _ = resp.send(Err(e));
+                        let _ = meta.resp.send(Err(e));
                     }
                 }
             }
@@ -605,19 +1101,20 @@ fn engine_loop(
                 match admitted {
                     Err(e) => {
                         metrics.incr("serve.errors");
-                        let _ = resp.send(Err(e));
+                        let _ = meta.resp.send(Err(e));
                     }
                     Ok(()) if params.max_new == 0 => {
                         // nothing to decode: answer immediately (the
                         // dropped stream sender ends any TokenStream)
                         metrics.add("serve.gen_requests", 1.0);
-                        metrics.observe("serve.latency_secs", enqueued.elapsed().as_secs_f64());
-                        let _ = resp.send(Ok(Response::Generated(Generated {
+                        metrics
+                            .observe("serve.latency_secs", meta.enqueued.elapsed().as_secs_f64());
+                        let _ = meta.resp.send(Ok(Response::Generated(Generated {
                             tokens: Vec::new(),
                             logps: Vec::new(),
                         })));
                     }
-                    Ok(()) => gen_wait.push_back(GenJob { prompt, params, enqueued, resp, stream }),
+                    Ok(()) => gen_wait.push_back(GenJob { prompt, params, meta, stream }),
                 }
             }
         }
@@ -628,13 +1125,17 @@ fn engine_loop(
     // full), or an immediate answer via `admit`. The single copy of the
     // routing policy, shared by stash re-admission and fresh intake.
     // Returns false on the shutdown sentinel (which is never stashed).
+    // A Resume bypasses the queue caps: it is bounded by the sending
+    // replica's own max_active, and stalling it would strand a
+    // generation that already holds sampled tokens.
     let offer = |msg: Msg,
                  score_q: &mut VecDeque<ScoreJob>,
                  gen_wait: &mut VecDeque<GenJob>,
+                 preempted: &mut VecDeque<ActiveGen>,
                  stash: &mut Option<Msg>|
      -> bool {
         let full = match &msg {
-            Msg::Shutdown => false,
+            Msg::Shutdown | Msg::Resume(_) => false,
             m if wants_gen(m) => gen_wait.len() >= gen_cap,
             _ => score_q.len() >= score_cap,
         };
@@ -642,7 +1143,7 @@ fn engine_loop(
             *stash = Some(msg);
             true
         } else {
-            admit(msg, score_q, gen_wait)
+            admit(msg, score_q, gen_wait, preempted)
         }
     };
 
@@ -652,7 +1153,7 @@ fn engine_loop(
         // room (this runs even while shutting down: the stashed request
         // was submitted before the sentinel and must still be answered)
         if let Some(msg) = stash.take() {
-            if !offer(msg, &mut score_q, &mut gen_wait, &mut stash) {
+            if !offer(msg, &mut score_q, &mut gen_wait, &mut preempted, &mut stash) {
                 shutting_down = true;
             }
         }
@@ -666,7 +1167,7 @@ fn engine_loop(
                 // completely idle: block for the next message
                 match rx.recv() {
                     Ok(msg) => {
-                        if !admit(msg, &mut score_q, &mut gen_wait) {
+                        if !admit(msg, &mut score_q, &mut gen_wait, &mut preempted) {
                             shutting_down = true;
                         }
                     }
@@ -683,7 +1184,7 @@ fn engine_loop(
             while !shutting_down && stash.is_none() {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        if !offer(msg, &mut score_q, &mut gen_wait, &mut stash) {
+                        if !offer(msg, &mut score_q, &mut gen_wait, &mut preempted, &mut stash) {
                             shutting_down = true;
                         }
                     }
@@ -693,6 +1194,60 @@ fn engine_loop(
                         break;
                     }
                 }
+            }
+        }
+
+        // ---- reap: shed cancelled/expired work at the step boundary ----
+        // Queued jobs answer without ever costing a forward (serve.shed);
+        // generations whose decode already began abort here, the only
+        // place their KV blocks can be safely returned
+        // (serve.deadline_aborts / serve.cancelled). The rotations are
+        // order-preserving, so reaping never reorders the queues.
+        let now = Instant::now();
+        for _ in 0..score_q.len() {
+            let Some(job) = score_q.pop_front() else { break };
+            match reap_verdict(job.meta(), now) {
+                Verdict::Live => score_q.push_back(job),
+                Verdict::Cancelled => {
+                    metrics.incr("serve.cancelled");
+                    let meta = job.into_meta();
+                    let _ = meta.resp.send(Err(anyhow!("request cancelled while queued")));
+                }
+                Verdict::Expired => {
+                    metrics.incr("serve.shed");
+                    let meta = job.into_meta();
+                    let e = deadline_err(&meta);
+                    let _ = meta.resp.send(Err(e));
+                }
+            }
+        }
+        for _ in 0..gen_wait.len() {
+            let Some(g) = gen_wait.pop_front() else { break };
+            match reap_verdict(&g.meta, now) {
+                Verdict::Live => gen_wait.push_back(g),
+                Verdict::Cancelled => {
+                    metrics.incr("serve.cancelled");
+                    let _ = g.meta.resp.send(Err(anyhow!("request cancelled while queued")));
+                }
+                Verdict::Expired => {
+                    metrics.incr("serve.shed");
+                    let e = deadline_err(&g.meta);
+                    let _ = g.meta.resp.send(Err(e));
+                }
+            }
+        }
+        for _ in 0..preempted.len() {
+            let Some(p) = preempted.pop_front() else { break };
+            match reap_verdict(&p.meta, now) {
+                Verdict::Live => preempted.push_back(p),
+                v => abort_gen(p, v, &metrics),
+            }
+        }
+        let mut i = 0;
+        while i < active.len() {
+            match reap_verdict(&active[i].meta, now) {
+                Verdict::Live => i += 1,
+                v => abort_gen(active.swap_remove(i), v, &metrics),
             }
         }
 
@@ -744,30 +1299,30 @@ fn engine_loop(
         if !score_q.is_empty() {
             let take = score_q.len().min(max_batch);
             let jobs: Vec<ScoreJob> = score_q.drain(..take).collect();
-            let mut plain: Vec<(Vec<u32>, Instant, Sender<Result<Response>>)> = Vec::new();
-            let mut choice_jobs = Vec::new();
+            let mut plain: Vec<(Vec<u32>, JobMeta)> = Vec::new();
+            let mut choice_jobs: Vec<(Vec<u32>, Vec<Vec<u32>>, JobMeta)> = Vec::new();
             for j in jobs {
                 match j {
-                    ScoreJob::Plain { tokens, enqueued, resp } => {
-                        plain.push((tokens, enqueued, resp))
-                    }
-                    ScoreJob::Choices { prompt, choices, enqueued, resp } => {
-                        choice_jobs.push((prompt, choices, enqueued, resp))
+                    ScoreJob::Plain { tokens, meta } => plain.push((tokens, meta)),
+                    ScoreJob::Choices { prompt, choices, meta } => {
+                        choice_jobs.push((prompt, choices, meta))
                     }
                 }
             }
             if !plain.is_empty() {
                 let batch: Vec<Vec<u32>> =
-                    plain.iter_mut().map(|(t, _, _)| std::mem::take(t)).collect();
+                    plain.iter_mut().map(|(t, _)| std::mem::take(t)).collect();
                 let n_tokens: usize = batch.iter().map(Vec::len).sum();
                 let t0 = Instant::now();
-                let scored = if caps.fixed_geometry {
-                    // the HLO path needs exact [batch, seq] geometry;
-                    // score_all pads and chunks for it
-                    scorer.score_all(&batch)
-                } else {
-                    scorer.score_batch(&batch)
-                };
+                let (scored, panicked) = catch_fault(|| {
+                    if caps.fixed_geometry {
+                        // the HLO path needs exact [batch, seq] geometry;
+                        // score_all pads and chunks for it
+                        scorer.score_all(&batch)
+                    } else {
+                        scorer.score_batch(&batch)
+                    }
+                });
                 let fsecs = t0.elapsed().as_secs_f64();
                 metrics.timer_add("serve.forward", fsecs);
                 // kernel_gflops measures the native micro-kernels only:
@@ -779,25 +1334,33 @@ fn engine_loop(
                 }
                 match scored {
                     Ok(outs) => {
+                        health.record_ok(index);
                         metrics.incr("serve.batches");
                         metrics.add("serve.requests", plain.len() as f64);
                         metrics.add("serve.tokens", n_tokens as f64);
-                        for ((_, enq, resp), out) in plain.into_iter().zip(outs) {
-                            metrics.observe("serve.latency_secs", enq.elapsed().as_secs_f64());
-                            let _ = resp.send(Ok(Response::Scored(out)));
+                        for ((_, meta), out) in plain.into_iter().zip(outs) {
+                            let waited = meta.enqueued.elapsed().as_secs_f64();
+                            metrics.observe("serve.latency_secs", waited);
+                            let _ = meta.resp.send(Ok(Response::Scored(out)));
                         }
                     }
                     Err(e) => {
-                        // batch-level failure: answer every member, keep serving
-                        metrics.add("serve.errors", plain.len() as f64);
+                        // batch-level fault: retry every member (their
+                        // tokens come back out of the batch we built)
+                        record_fault(&fleet, panicked);
                         let msg = format!("{e:#}");
-                        for (_, _, resp) in plain {
-                            let _ = resp.send(Err(anyhow!("{msg}")));
+                        for ((_, meta), tokens) in plain.into_iter().zip(batch) {
+                            retry_score_job(
+                                ScoreJob::Plain { tokens, meta },
+                                &msg,
+                                &mut score_q,
+                                &fleet,
+                            );
                         }
                     }
                 }
             }
-            for (prompt, choices, enq, resp) in choice_jobs {
+            for (prompt, choices, meta) in choice_jobs {
                 // timed under its own key: serve.forward backs the
                 // tokens_per_sec summary, whose numerator counts only
                 // plain-score tokens
@@ -811,7 +1374,7 @@ fn engine_loop(
                     choices.iter().map(|c| prompt.len() + c.len()).sum()
                 };
                 let t0 = Instant::now();
-                let scored = scorer.score_choices(&prompt, &choices);
+                let (scored, panicked) = catch_fault(|| scorer.score_choices(&prompt, &choices));
                 let csecs = t0.elapsed().as_secs_f64();
                 metrics.timer_add("serve.choice_forward", csecs);
                 if !caps.fixed_geometry {
@@ -819,14 +1382,22 @@ fn engine_loop(
                 }
                 match scored {
                     Ok(out) => {
+                        health.record_ok(index);
                         metrics.add("serve.choice_requests", 1.0);
                         metrics.add("serve.choice_tokens", choice_tokens as f64);
-                        metrics.observe("serve.latency_secs", enq.elapsed().as_secs_f64());
-                        let _ = resp.send(Ok(Response::Choices(out)));
+                        let waited = meta.enqueued.elapsed().as_secs_f64();
+                        metrics.observe("serve.latency_secs", waited);
+                        let _ = meta.resp.send(Ok(Response::Choices(out)));
                     }
                     Err(e) => {
-                        metrics.incr("serve.errors");
-                        let _ = resp.send(Err(e));
+                        record_fault(&fleet, panicked);
+                        let msg = format!("{e:#}");
+                        retry_score_job(
+                            ScoreJob::Choices { prompt, choices, meta },
+                            &msg,
+                            &mut score_q,
+                            &fleet,
+                        );
                     }
                 }
             }
@@ -857,10 +1428,11 @@ fn engine_loop(
                 // (defensive — admission bounds worst-case residency, so
                 // a real scorer never lands here)
                 if let Some(a) = active.pop() {
-                    metrics.incr("serve.errors");
-                    let _ = a.resp.send(Err(anyhow!(
-                        "KV arena exhausted: the generation needs more blocks than the arena holds"
-                    )));
+                    fail_request(
+                        a.meta,
+                        &metrics,
+                        "KV arena exhausted: the generation needs more blocks than the arena holds",
+                    );
                 }
                 break;
             }
@@ -894,16 +1466,17 @@ fn engine_loop(
                 }
             }
             let t0 = Instant::now();
-            let scored = {
+            let (scored, panicked) = {
                 let mut refs: Vec<&mut KvCache> =
                     active.iter_mut().map(|a| &mut a.cache).collect();
-                scorer.cache_forward_batch(&news, &mut refs)
+                catch_fault(|| scorer.cache_forward_batch(&news, &mut refs))
             };
             let dsecs = t0.elapsed().as_secs_f64();
             metrics.timer_add("serve.decode_step", dsecs);
             observe_gflops(&metrics, prefill_rows + decode_rows, flops_per_row, dsecs);
             match scored {
                 Ok(lgs) => {
+                    health.record_ok(index);
                     metrics.incr("serve.decode_steps");
                     metrics.add("serve.prefill_tokens", prefill_rows as f64);
                     metrics.add("serve.decode_tokens", decode_rows as f64);
@@ -936,12 +1509,16 @@ fn engine_loop(
                     }
                 }
                 Err(e) => {
-                    // step-level failure: answer every active sequence,
-                    // free their caches, keep serving
-                    metrics.add("serve.errors", active.len() as f64);
+                    // step-level fault: the caches may be torn mid-append,
+                    // so every active generation preempts (wholesale clear
+                    // keeps arena accounting exact, and the replay prefix
+                    // is rebuilt from prompt + sampled tokens) and then
+                    // retries — locally, or onto a healthy peer
+                    record_fault(&fleet, panicked);
                     let msg = format!("{e:#}");
-                    for a in active.drain(..) {
-                        let _ = a.resp.send(Err(anyhow!("{msg}")));
+                    for mut a in active.drain(..) {
+                        a.preempt();
+                        retry_gen(a, &msg, &mut preempted, &fleet);
                     }
                 }
             }
@@ -967,4 +1544,6 @@ fn engine_loop(
     }
     // loop exit: any messages still queued were submitted after shutdown
     // began; dropping their response senders errs the callers' `wait()`.
+    // (Retried work re-enters the queues with a bounded budget and
+    // failovers hand off via try_send, so the drain always terminates.)
 }

@@ -7,20 +7,31 @@
 //! Per-replica KV residency (blocks actually held in the replica's
 //! `KvArena`) is the placement constraint a smarter policy would
 //! balance; [`RoundRobin`] is the baseline that ignores it.
+//!
+//! Routing is health-aware: policies see the fleet's [`HealthView`] and
+//! should avoid unhealthy replicas themselves, but the return value is
+//! only a *hint*. The caller re-routes an out-of-range or unhealthy hint
+//! to the next healthy replica (it never silently `%`-clamps, which
+//! could land a request on a dead loop), and refuses the submission
+//! when no replica is healthy.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::health::HealthView;
 use super::request::Request;
 
-/// Route a request to one of `n_replicas` engine loops. Implementations
-/// must be cheap and thread-safe — every submission calls this once.
-/// Out-of-range returns are clamped by the caller (`% n_replicas`).
+/// Route a request to one replica of the fleet described by `health`.
+/// Implementations must be cheap and thread-safe — every submission
+/// calls this once. Prefer a healthy replica; the return value is a
+/// hint that the caller validates and re-routes if stale.
 pub trait Dispatch: Send + Sync {
-    fn route(&self, req: &Request, n_replicas: usize) -> usize;
+    fn route(&self, req: &Request, health: &HealthView) -> usize;
 }
 
-/// Baseline placement: rotate submissions across replicas regardless of
-/// request kind or replica load.
+/// Baseline placement: rotate submissions across healthy replicas
+/// regardless of request kind or replica load. Unhealthy replicas are
+/// skipped (the rotation hint advances past them to the next healthy
+/// slot).
 #[derive(Default)]
 pub struct RoundRobin {
     next: AtomicUsize,
@@ -33,8 +44,10 @@ impl RoundRobin {
 }
 
 impl Dispatch for RoundRobin {
-    fn route(&self, _req: &Request, n_replicas: usize) -> usize {
-        self.next.fetch_add(1, Ordering::Relaxed) % n_replicas.max(1)
+    fn route(&self, _req: &Request, health: &HealthView) -> usize {
+        let n = health.n_replicas().max(1);
+        let hint = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        health.next_healthy(hint).unwrap_or(hint)
     }
 }
 
@@ -46,10 +59,22 @@ mod tests {
     fn round_robin_cycles_replicas() {
         let rr = RoundRobin::new();
         let req = Request::Score { tokens: vec![1] };
-        let got: Vec<usize> = (0..6).map(|_| rr.route(&req, 3)).collect();
+        let h = HealthView::new(3);
+        let got: Vec<usize> = (0..6).map(|_| rr.route(&req, &h)).collect();
         assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
-        // degenerate replica counts never panic
-        assert_eq!(rr.route(&req, 1), 0);
-        assert_eq!(rr.route(&req, 0), 0);
+        // degenerate fleets never panic
+        assert_eq!(rr.route(&req, &HealthView::new(1)), 0);
+        assert_eq!(rr.route(&req, &HealthView::new(0)), 0);
+    }
+
+    #[test]
+    fn round_robin_skips_unhealthy_replicas() {
+        let rr = RoundRobin::new();
+        let req = Request::Score { tokens: vec![1] };
+        let h = HealthView::new(3);
+        h.mark_unhealthy(1);
+        let got: Vec<usize> = (0..6).map(|_| rr.route(&req, &h)).collect();
+        assert_eq!(got, vec![0, 2, 2, 0, 2, 2], "hint 1 advances to the next healthy slot");
+        assert!(!got.contains(&1));
     }
 }

@@ -1,0 +1,147 @@
+//! Shared replica-health registry for sharded serving.
+//!
+//! One [`HealthView`] is shared between every engine loop, the
+//! [`super::EngineClient`], and the [`super::Dispatch`] policy. Each
+//! loop records the outcome of its scorer calls; a loop whose scorer
+//! panics (caught at the call site) or returns
+//! [`super::EngineConfig::unhealthy_after`] consecutive errors marks its
+//! replica unhealthy, and routing skips it from then on.
+//!
+//! Health is **sticky**: there is no automatic self-healing, because a
+//! replica whose scorer panicked or persistently errs is presumed to
+//! hold corrupted state (a torn KV append, poisoned weights). A
+//! successful call resets the consecutive-error counter of a replica
+//! that is still healthy, so sporadic faults below the threshold never
+//! trip it.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Liveness record for one replica.
+#[derive(Debug)]
+struct ReplicaHealth {
+    healthy: AtomicBool,
+    consecutive_errors: AtomicUsize,
+}
+
+impl ReplicaHealth {
+    fn new() -> ReplicaHealth {
+        ReplicaHealth { healthy: AtomicBool::new(true), consecutive_errors: AtomicUsize::new(0) }
+    }
+}
+
+/// Fleet-wide health: one entry per replica, shared via `Arc` between
+/// the engine loops, the client, and the dispatch policy.
+#[derive(Debug)]
+pub struct HealthView {
+    replicas: Vec<ReplicaHealth>,
+}
+
+impl HealthView {
+    /// A view over `n` replicas, all initially healthy.
+    pub fn new(n: usize) -> HealthView {
+        HealthView { replicas: (0..n).map(|_| ReplicaHealth::new()).collect() }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Whether replica `i` is routable. Out-of-range indices are
+    /// unhealthy by definition (a stale [`super::Dispatch`] hint).
+    pub fn is_healthy(&self, i: usize) -> bool {
+        self.replicas.get(i).map(|r| r.healthy.load(Ordering::Acquire)).unwrap_or(false)
+    }
+
+    /// How many replicas are currently routable.
+    pub fn healthy_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.healthy.load(Ordering::Acquire)).count()
+    }
+
+    /// Permanently remove replica `i` from routing (sticky — see the
+    /// module docs for why there is no way back).
+    pub fn mark_unhealthy(&self, i: usize) {
+        if let Some(r) = self.replicas.get(i) {
+            r.healthy.store(false, Ordering::Release);
+        }
+    }
+
+    /// A successful scorer call on replica `i`: forgive prior sporadic
+    /// errors (resets the consecutive-error counter; never revives an
+    /// unhealthy replica).
+    pub(crate) fn record_ok(&self, i: usize) {
+        if let Some(r) = self.replicas.get(i) {
+            r.consecutive_errors.store(0, Ordering::Release);
+        }
+    }
+
+    /// A failed scorer call on replica `i`. Marks the replica unhealthy
+    /// once `unhealthy_after` consecutive calls have failed; returns
+    /// whether the replica is still healthy afterwards.
+    pub(crate) fn record_err(&self, i: usize, unhealthy_after: usize) -> bool {
+        let Some(r) = self.replicas.get(i) else { return false };
+        let errs = r.consecutive_errors.fetch_add(1, Ordering::AcqRel) + 1;
+        if errs >= unhealthy_after.max(1) {
+            r.healthy.store(false, Ordering::Release);
+        }
+        r.healthy.load(Ordering::Acquire)
+    }
+
+    /// The first healthy replica at or after `from` (wrapping), or
+    /// `None` when the whole fleet is down.
+    pub fn next_healthy(&self, from: usize) -> Option<usize> {
+        let n = self.replicas.len();
+        if n == 0 {
+            return None;
+        }
+        (0..n).map(|k| (from + k) % n).find(|&i| self.is_healthy(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_view_is_fully_healthy() {
+        let h = HealthView::new(3);
+        assert_eq!(h.n_replicas(), 3);
+        assert_eq!(h.healthy_count(), 3);
+        assert!(h.is_healthy(0) && h.is_healthy(1) && h.is_healthy(2));
+        assert!(!h.is_healthy(3), "out-of-range indices are unhealthy");
+        assert_eq!(h.next_healthy(1), Some(1));
+    }
+
+    #[test]
+    fn mark_unhealthy_is_sticky_and_skipped_by_next_healthy() {
+        let h = HealthView::new(3);
+        h.mark_unhealthy(1);
+        assert!(!h.is_healthy(1));
+        assert_eq!(h.healthy_count(), 2);
+        assert_eq!(h.next_healthy(1), Some(2));
+        assert_eq!(h.next_healthy(3), Some(0), "scan wraps");
+        // an ok on an unhealthy replica does not revive it
+        h.record_ok(1);
+        assert!(!h.is_healthy(1));
+    }
+
+    #[test]
+    fn consecutive_errors_trip_the_threshold_and_ok_resets_it() {
+        let h = HealthView::new(1);
+        assert!(h.record_err(0, 3));
+        assert!(h.record_err(0, 3));
+        h.record_ok(0); // forgiven: counter back to zero
+        assert!(h.record_err(0, 3));
+        assert!(h.record_err(0, 3));
+        assert!(!h.record_err(0, 3), "third consecutive error trips");
+        assert!(!h.is_healthy(0));
+        assert_eq!(h.next_healthy(0), None);
+    }
+
+    #[test]
+    fn empty_fleet_has_no_healthy_replica() {
+        let h = HealthView::new(0);
+        assert_eq!(h.healthy_count(), 0);
+        assert_eq!(h.next_healthy(0), None);
+        assert!(!h.record_err(0, 1), "out-of-range record_err reports unhealthy");
+    }
+}

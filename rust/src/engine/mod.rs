@@ -3,25 +3,38 @@
 //! programs against.
 //!
 //! ```text
-//!   EngineClient            Engine (one loop per scorer replica)
+//!   EngineClient            Engine (one supervised loop per replica)
 //!   ────────────            ───────────────────────────────────────────
 //!   submit(Request) ──┐     ┌ intake ── validate ──┬─▶ score/choices q
 //!     Score{..}       │     │  (bounded channel,   └─▶ gen waiting q
-//!     Choices{..}     ├────▶│   Dispatch picks          │
-//!     Generate{..}    │     │   the replica)            ▼ promote while
-//!       + Sampling-   │     │                      decode slots free
-//!         Params      │     │                      (≤ max_active seqs,
-//!                     │     │                       preempted resume
-//!                     │     │                       first, gated on
-//!                     │     │                       free KvArena blocks)
-//!                     │     ├ score: one coalesced score_batch
-//!   Pending<Response> │     │   (≤ max_batch requests per round)
-//!     .wait()         ◀─────┤ step: one fused cache_forward_batch —
-//!     .wait_timeout() │     │   decode seqs feed their last token,
-//!   TokenStream ◀─────┘     │   prefilling seqs feed the next
-//!     (per-token events)    │   prefill_chunk tokens; arena overflow
+//!     Choices{..}     ├────▶│   Dispatch hints,         │
+//!     Generate{..}    │     │   client re-routes        ▼ reap: shed
+//!       + Sampling-   │     │   past unhealthy      cancelled/expired
+//!         Params      │     │   replicas)           work, free blocks
+//!       + Submit-     │     │                           │
+//!         Options     │     │                           ▼ promote while
+//!       (deadline)    │     │                      decode slots free
+//!                     │     │                      (≤ max_active seqs,
+//!   Pending<Response> │     │                       preempted resume
+//!     .wait()         ◀─────┤                       first, gated on
+//!     .wait_timeout() │     │                       free KvArena blocks)
+//!     .cancel()       │     ├ score: one coalesced score_batch
+//!     (drop ⇒ abandon)│     │   (≤ max_batch requests per round)
+//!   TokenStream ◀─────┘     │ step: one fused cache_forward_batch —
+//!     (per-token events)    │   decode seqs feed their last token,
+//!                           │   prefilling seqs feed the next
+//!                           │   prefill_chunk tokens; arena overflow
 //!                           │   preempts the longest generation
 //!                           └ repeat — new traffic admits BETWEEN steps
+//!
+//!   supervision/failover (per fleet, shared HealthView):
+//!   ┌ every scorer call runs under catch-unwind; a panic marks the
+//!   │ replica unhealthy at once, persistent Errs after unhealthy_after
+//!   ├ faulted Score/Choices retry with bounded backoff — locally, or
+//!   │ onto a healthy peer (idempotent re-run)
+//!   ├ faulted generations preempt (blocks freed) and resume via the
+//!   │ bit-exact replay path — locally, or failing over with Msg::Resume
+//!   └ routing + retries skip unhealthy replicas; none left ⇒ Err
 //! ```
 //!
 //! The scheduler round structure is what kills head-of-line blocking:
@@ -34,22 +47,38 @@
 //! the replica's [`crate::model::KvArena`] — not the
 //! `max_active × full-window` worst case) as the constraint.
 //!
+//! Fault tolerance is part of the same lifecycle: requests carry
+//! optional deadlines ([`SubmitOptions`]), a [`Pending`] can be
+//! cancelled (or simply dropped) to abandon its request, replica health
+//! lives in a shared [`HealthView`] consulted by routing and failover,
+//! and the deterministic [`ChaosScorer`] fault injector drives the
+//! chaos suite that proves no `Pending` ever hangs and the KV arena
+//! always drains.
+//!
 //! The legacy [`crate::coordinator::serve::ServeClient`] verbs survive
 //! as deprecated shims over [`EngineClient`].
 
 // The serving surface answers `Err`, it does not die: R1 of the invariant
 // catalog (see the crate docs), statically backed by clippy on top of the
-// rilq-lint pass. Test modules are excused via clippy.toml.
+// rilq-lint pass. Test modules are excused via clippy.toml. The one
+// sanctioned panic source on this path is the injected `ChaosScorer`
+// crash — which exists to prove the catch-unwind supervision works.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod caps;
+pub mod chaos;
 pub mod core;
 pub mod dispatch;
+pub mod health;
 pub mod request;
 pub mod sampling;
 
 pub use self::caps::EngineCaps;
+pub use self::chaos::{ChaosScorer, Fault};
 pub use self::core::{Engine, EngineClient, EngineConfig};
 pub use self::dispatch::{Dispatch, RoundRobin};
-pub use self::request::{Generated, Pending, Request, Response, TokenEvent, TokenStream};
+pub use self::health::HealthView;
+pub use self::request::{
+    Generated, Pending, Request, Response, SubmitOptions, TokenEvent, TokenStream,
+};
 pub use self::sampling::{argmax_logp, sample_token, SamplingParams, DEFAULT_SAMPLING_SEED};

@@ -2,7 +2,9 @@
 //! what comes back ([`Response`] through a [`Pending`] handle), and the
 //! incremental token channel ([`TokenStream`]) for generation.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -68,19 +70,91 @@ impl Response {
     }
 }
 
+/// Per-submission options beyond the request payload itself. Every
+/// plain submitter uses the default; the `*_with` variants
+/// ([`super::EngineClient::score_with`] / … ) take an explicit one.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SubmitOptions {
+    /// Answer-by budget, measured from submission. `None` falls back to
+    /// [`super::EngineConfig::default_deadline`]. Expired queued work is
+    /// shed with `Err` before it costs a forward; an expired generation
+    /// is aborted at the next step boundary and its KV arena blocks
+    /// freed.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOptions {
+    pub fn with_deadline(deadline: Duration) -> SubmitOptions {
+        SubmitOptions { deadline: Some(deadline) }
+    }
+}
+
+/// Shared liveness cell between a [`Pending`] handle and the engine loop
+/// serving its request. An mpsc sender cannot observe receiver
+/// disconnection without sending, so abandonment travels out-of-band:
+/// [`Pending::cancel`] and [`Pending`]'s `Drop` both flip it here, and
+/// the loop polls it at admission and at every scheduler round — an
+/// abandoned generation stops holding a decode slot and KV blocks at the
+/// next step boundary instead of decoding to completion.
+#[derive(Debug, Default)]
+pub(crate) struct CancelCell {
+    cancelled: AtomicBool,
+    dropped: AtomicBool,
+}
+
+impl CancelCell {
+    pub(crate) fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    pub(crate) fn mark_dropped(&self) {
+        self.dropped.store(true, Ordering::Release);
+    }
+
+    pub(crate) fn cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Cancelled or no longer awaited — either way the engine stops
+    /// spending forwards (and KV blocks) on the request.
+    pub(crate) fn abandoned(&self) -> bool {
+        self.cancelled() || self.dropped.load(Ordering::Acquire)
+    }
+}
+
 /// A submitted request's pending answer (one-shot). The typed
 /// convenience submitters ([`super::EngineClient::score`] /
 /// [`super::EngineClient::generate`] / …) return a `Pending` already
 /// projected to their payload type; [`super::EngineClient::submit`]
 /// returns `Pending<Response>`.
+///
+/// Dropping an unresolved `Pending` abandons the request: the engine
+/// notices at its next scheduler round and sheds the queued work (or
+/// aborts the in-flight generation, returning its arena blocks) instead
+/// of computing an answer nobody will read.
 pub struct Pending<T = Vec<f32>> {
     rx: Receiver<Result<Response>>,
     project: fn(Response) -> Result<T>,
+    cancel: Arc<CancelCell>,
 }
 
 impl<T> Pending<T> {
-    pub(crate) fn new(rx: Receiver<Result<Response>>, project: fn(Response) -> Result<T>) -> Self {
-        Pending { rx, project }
+    pub(crate) fn new(
+        rx: Receiver<Result<Response>>,
+        cancel: Arc<CancelCell>,
+        project: fn(Response) -> Result<T>,
+    ) -> Self {
+        Pending { rx, project, cancel }
+    }
+
+    /// Best-effort cancellation: ask the engine to abandon this request.
+    /// Queued work is shed without a forward; an in-flight generation is
+    /// aborted at the next step boundary and its KV blocks freed. The
+    /// handle stays valid — [`Pending::wait`] resolves with the
+    /// cancellation `Err` (or with `Ok` when the answer raced the
+    /// cancel and won).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
     }
 
     /// Block until the engine answers, or the per-request error.
@@ -105,6 +179,14 @@ impl<T> Pending<T> {
                 Err(anyhow!("engine shut down before answering this request"))
             }
         }
+    }
+}
+
+impl<T> Drop for Pending<T> {
+    /// Dropping the handle abandons the request (a request that already
+    /// resolved is unaffected — the engine no longer tracks it).
+    fn drop(&mut self) {
+        self.cancel.mark_dropped();
     }
 }
 
@@ -148,11 +230,18 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    fn pending<T>(
+        rx: Receiver<Result<Response>>,
+        project: fn(Response) -> Result<T>,
+    ) -> Pending<T> {
+        Pending::new(rx, Arc::new(CancelCell::default()), project)
+    }
+
     #[test]
     fn pending_projects_the_matching_variant() {
         let (tx, rx) = channel();
         tx.send(Ok(Response::Scored(vec![-1.0, -2.0]))).unwrap();
-        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        let p: Pending<Vec<f32>> = pending(rx, Response::into_scored);
         assert_eq!(p.wait().unwrap(), vec![-1.0, -2.0]);
     }
 
@@ -160,14 +249,14 @@ mod tests {
     fn pending_rejects_a_mismatched_variant() {
         let (tx, rx) = channel();
         tx.send(Ok(Response::Choices(vec![]))).unwrap();
-        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        let p: Pending<Vec<f32>> = pending(rx, Response::into_scored);
         assert!(p.wait().is_err());
     }
 
     #[test]
     fn wait_timeout_fails_fast_and_leaves_the_handle_usable() {
         let (tx, rx) = channel();
-        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        let p: Pending<Vec<f32>> = pending(rx, Response::into_scored);
         let err = p.wait_timeout(Duration::from_millis(10)).unwrap_err();
         assert!(format!("{err}").contains("within"), "{err}");
         // the answer can still be collected after a timeout
@@ -179,9 +268,26 @@ mod tests {
     fn dropped_sender_reports_shutdown() {
         let (tx, rx) = channel::<Result<Response>>();
         drop(tx);
-        let p: Pending<Vec<f32>> = Pending::new(rx, Response::into_scored);
+        let p: Pending<Vec<f32>> = pending(rx, Response::into_scored);
         let err = p.wait().unwrap_err();
         assert!(format!("{err}").contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn cancel_and_drop_both_mark_the_shared_cell() {
+        let (_tx, rx) = channel::<Result<Response>>();
+        let cell = Arc::new(CancelCell::default());
+        let p: Pending<Vec<f32>> = Pending::new(rx, cell.clone(), Response::into_scored);
+        assert!(!cell.abandoned() && !cell.cancelled());
+        p.cancel();
+        assert!(cell.cancelled() && cell.abandoned());
+        // dropping the handle flips the out-of-band abandonment flag the
+        // engine loop polls (an mpsc sender can't see the receiver go)
+        let (_tx2, rx2) = channel::<Result<Response>>();
+        let cell2 = Arc::new(CancelCell::default());
+        let p2: Pending<Vec<f32>> = Pending::new(rx2, cell2.clone(), Response::into_scored);
+        drop(p2);
+        assert!(cell2.abandoned() && !cell2.cancelled());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Scorer implementations.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
@@ -154,6 +155,47 @@ pub trait Scorer {
             i += n;
         }
         Ok(out)
+    }
+}
+
+/// A shared scorer handle scores like the scorer it wraps. This lets one
+/// set of weights serve several consumers at once — e.g. an
+/// `Arc<BackendScorer>` driving the engine through a fault-injecting
+/// [`crate::engine::ChaosScorer`] while a second clone of the same `Arc`
+/// produces the fault-free baseline the chaos suite compares against
+/// bitwise. Every method forwards (defaults included), so a wrapped
+/// scorer's overrides are never shadowed by the trait defaults.
+impl<S: Scorer + ?Sized> Scorer for Arc<S> {
+    fn dims(&self) -> &ModelDims {
+        (**self).dims()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        (**self).caps()
+    }
+
+    fn score_batch(&self, batch: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        (**self).score_batch(batch)
+    }
+
+    fn cache_forward(&self, new_tokens: &[u32], cache: &mut KvCache) -> Result<Mat> {
+        (**self).cache_forward(new_tokens, cache)
+    }
+
+    fn cache_forward_batch(
+        &self,
+        news: &[Vec<u32>],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Mat>> {
+        (**self).cache_forward_batch(news, caches)
+    }
+
+    fn score_choices(&self, prompt: &[u32], choices: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        (**self).score_choices(prompt, choices)
+    }
+
+    fn score_all(&self, seqs: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        (**self).score_all(seqs)
     }
 }
 

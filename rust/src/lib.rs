@@ -102,6 +102,32 @@
 //! (PJRT-free); `tests/serve_loop.rs` pins the loop's semantics and
 //! `tests/backend_parity.rs` pins batched == per-sequence logits.
 //!
+//! Since PR 8 the lifecycle is **fault-tolerant**. Every submission can
+//! carry a deadline ([`engine::SubmitOptions`], or
+//! `EngineConfig::default_deadline` fleet-wide): expired queued work is
+//! shed with `Err` before any forward, and an expired generation is
+//! aborted at the next step boundary with its arena blocks freed. A
+//! [`engine::Pending`] can be cancelled explicitly (`Pending::cancel`)
+//! or just dropped — both abort the request at the next boundary, so an
+//! abandoned client never leaks KV residency. Each replica loop runs
+//! **supervised**: scorer calls are wrapped in `catch_unwind`, a panic
+//! (or `EngineConfig::unhealthy_after` consecutive `Err`s) marks the
+//! replica unhealthy in the shared [`engine::HealthView`] — sticky, no
+//! self-healing — and [`engine::Dispatch`] hints are validated against
+//! it, re-routing instead of %-clamping into a dead slot. Idempotent
+//! Score/Choices work retries with bounded exponential backoff
+//! (`EngineConfig::max_retries`) onto healthy replicas; an in-flight
+//! generation **fails over** through the PR 6 replay path, so the
+//! resumed output is bitwise-identical to a run that never crashed
+//! (identical weights across replicas assumed). The deterministic
+//! fault-injection harness [`engine::ChaosScorer`] drives
+//! `tests/chaos_serving.rs`, which pins the three serving invariants:
+//! every `Pending` resolves, `KvArena::blocks_in_use` drains to zero,
+//! and fault-surviving answers are bitwise-identical to fault-free runs.
+//! Shed/cancel/retry/abort counts surface as `serve.shed`,
+//! `serve.cancelled`, `serve.retries`, `serve.deadline_aborts` and the
+//! `serve.replicas_healthy` gauge in the serve summaries.
+//!
 //! ## Micro-kernel layer (the FLOP path)
 //!
 //! Below the backends sits one vectorized primitive set,
@@ -204,7 +230,12 @@
 //!   malformed request must answer `Err`, never kill a scheduler thread.
 //!   `debug_assert!` is exempt, as is `.unwrap()` directly on `lock()`
 //!   (a poisoned mutex means a sibling thread already panicked — the
-//!   PR 2 no-poison convention).
+//!   PR 2 no-poison convention). The one *sanctioned* panic source on
+//!   the serving path is the annotated injected panic in
+//!   `engine/chaos.rs` ([`engine::ChaosScorer`]): it exists precisely
+//!   to prove the supervision layer survives a crashing scorer, and the
+//!   engine's `catch_unwind` guard is what keeps R1's promise when it
+//!   fires.
 //! * **R2 — bitwise-pin guard.** `tensor/kernels.rs`, `tensor/mat.rs`
 //!   and `model/backend.rs` may not introduce `mul_add`, iterator
 //!   `.sum()`/`.fold(`, or `par_*` reductions: every hot kernel keeps a

@@ -19,8 +19,8 @@ use anyhow::{anyhow, Result};
 
 use rilq::cli::Args;
 use rilq::coordinator::{probe_decode, probe_throughput};
-use rilq::engine::{Engine, EngineConfig, SamplingParams, TokenEvent};
-use rilq::eval::BackendScorer;
+use rilq::engine::{ChaosScorer, Engine, EngineConfig, Fault, SamplingParams, TokenEvent};
+use rilq::eval::{BackendScorer, Scorer};
 use rilq::experiments::pipeline::Lab;
 use rilq::experiments::{catalog, run_experiment};
 use rilq::lqec::AdapterSet;
@@ -292,6 +292,7 @@ fn serve_bench(args: &Args) -> Result<()> {
                 prefill_chunk: (seq / 4).max(1),
                 kv_block,
                 arena_blocks,
+                ..EngineConfig::default()
             },
         );
         let client = engine.client();
@@ -340,6 +341,78 @@ fn serve_bench(args: &Args) -> Result<()> {
             ));
         }
     }
+
+    // chaos section: the same engine under deterministic fault injection
+    // (seeded Errs + delays at scheduled forward ordinals). Proves the
+    // fault-tolerance invariants on real weights: every request resolves,
+    // retried scores are bitwise-identical to the fault-free forward, and
+    // --expect-retries gates CI on the retry path actually firing.
+    if args.flag("chaos") || args.flag("expect-retries") {
+        let chaos = ChaosScorer::new(scorer.clone())
+            // call 1 always faults, so --expect-retries is deterministic
+            .with_fault(1, Fault::Err)
+            .seeded(0xc4a05, 4, 24, false);
+        let engine = Engine::start_shared(
+            std::sync::Arc::new(chaos),
+            EngineConfig {
+                max_batch,
+                queue_capacity: max_batch * 2,
+                prefill_chunk: (seq / 4).max(1),
+                // single replica: never retire the only scorer over
+                // transient injected errors — retry through them instead
+                unhealthy_after: usize::MAX,
+                ..EngineConfig::default()
+            },
+        );
+        let client = engine.client();
+        let mut rng = Rng::seed(0xc4a0);
+        let reqs: Vec<Vec<u32>> = (0..8)
+            .map(|_| (0..prompt_len.max(2)).map(|_| rng.below(dims.vocab) as u32).collect())
+            .collect();
+        let pendings: Vec<_> =
+            reqs.iter().map(|t| client.score(t.clone())).collect::<Result<Vec<_>>>()?;
+        let gens: Vec<_> = reqs[..2]
+            .iter()
+            .map(|p| client.generate(p.clone(), SamplingParams::greedy(gen.min(4))))
+            .collect::<Result<Vec<_>>>()?;
+        let budget = std::time::Duration::from_secs(60);
+        let mut unresolved = 0usize;
+        for (t, p) in reqs.iter().zip(pendings) {
+            match p.wait_timeout(budget) {
+                Ok(out) => {
+                    let clean = scorer.score_batch(std::slice::from_ref(t))?;
+                    let same = clean[0].len() == out.len()
+                        && clean[0].iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !same {
+                        return Err(anyhow!(
+                            "chaos: a retried score diverged from the fault-free forward"
+                        ));
+                    }
+                }
+                // a resolved Err (retries exhausted) satisfies the
+                // invariant; only a hang does not
+                Err(e) if format!("{e}").contains("within") => unresolved += 1,
+                Err(_) => {}
+            }
+        }
+        for g in gens {
+            if let Err(e) = g.wait_timeout(budget) {
+                if format!("{e}").contains("within") {
+                    unresolved += 1;
+                }
+            }
+        }
+        let summary = engine.shutdown();
+        println!("chaos serve (seeded faults): {summary}");
+        if unresolved > 0 {
+            return Err(anyhow!("chaos: {unresolved} request(s) never resolved"));
+        }
+        if args.flag("expect-retries") && summary.retries < 1.0 {
+            return Err(anyhow!(
+                "--expect-retries: no injected fault was retried (summary: {summary})"
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -360,7 +433,8 @@ USAGE:
   rilq serve-bench [--backend={dense|packed|merged} --bits=2 --batch=8
                     --requests=64 --seq=64 --layers=4 --rank=8 --gen=N
                     --max-active=N --arena-blocks=N --kv-block=N
-                    --sample --stream --expect-preemption --smoke]
+                    --sample --stream --expect-preemption
+                    --chaos --expect-retries --smoke]
                                       native engine serving benchmark:
                                       per-sequence vs coalesced ragged
                                       batches on one BackendScorer, a
@@ -378,6 +452,14 @@ USAGE:
                                       + bit-exact resume, and
                                       --expect-preemption fails the run if
                                       no eviction happened;
+                                      --chaos re-runs the engine under
+                                      seeded fault injection (scheduled
+                                      Errs/delays) and verifies every
+                                      request resolves with retried scores
+                                      bitwise-equal to the clean forward;
+                                      --expect-retries (implies --chaos)
+                                      additionally fails the run if no
+                                      fault was retried;
                                       --smoke shrinks geometry for CI
                                       (PJRT-free; no artifacts needed)
   rilq inspect                        artifact / config inventory

@@ -6,13 +6,24 @@
 //! traffic is admitted *between* decode iterations (no head-of-line
 //! blocking behind full decode slots), `wait_timeout` fails fast on a
 //! wedged worker, and the deprecated `ServeClient` shims still serve.
+//!
+//! Fault-tolerance lifecycle (deadlines, cancellation, failover) is
+//! covered here too: a dropped or cancelled `Pending` aborts its
+//! generation and frees its arena blocks, expired work is shed or
+//! aborted at step boundaries, shutdown under a mixed burst resolves
+//! every `Pending` with zero blocks leaked, and a stale `Dispatch` hint
+//! re-routes to a healthy replica instead of being %-clamped. Injected
+//! scorer faults live in `tests/chaos_serving.rs`.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 use rilq::coordinator::{ServeConfig, Server};
-use rilq::engine::{Engine, EngineCaps, EngineConfig, RoundRobin, SamplingParams};
+use rilq::engine::{
+    Dispatch, Engine, EngineCaps, EngineConfig, HealthView, Request, RoundRobin, SamplingParams,
+    SubmitOptions,
+};
 use rilq::eval::{greedy_decode, BackendScorer, Scorer};
 use rilq::model::backend::BackendKind;
 use rilq::model::kv::KvCache;
@@ -615,7 +626,13 @@ fn deprecated_serve_client_shims_still_serve() {
 
     let server = Server::start_shared(
         scorer,
-        ServeConfig { max_batch: 4, queue_capacity: 8, max_active: 2, prefill_chunk: 4 },
+        ServeConfig {
+            max_batch: 4,
+            queue_capacity: 8,
+            max_active: 2,
+            prefill_chunk: 4,
+            ..ServeConfig::default()
+        },
     );
     let client = server.client();
     let got = client.score(seq.clone()).unwrap();
@@ -733,6 +750,7 @@ fn short_generations_pack_beyond_worst_case_concurrency() {
             prefill_chunk: 8,
             kv_block: 4,
             arena_blocks: 8,
+            ..EngineConfig::default()
         },
     );
     let client = engine.client();
@@ -808,6 +826,7 @@ fn preempted_generation_resumes_bitwise_identical_on_every_backend() {
                 prefill_chunk: 2,
                 kv_block: 4,
                 arena_blocks: 4,
+                ..EngineConfig::default()
             },
         );
         let client = engine.client();
@@ -864,6 +883,7 @@ fn over_arena_generation_errs_alone() {
             prefill_chunk: 4,
             kv_block: 4,
             arena_blocks: 2, // 8 positions total
+            ..EngineConfig::default()
         },
     );
     let client = engine.client();
@@ -888,4 +908,258 @@ fn over_arena_generation_errs_alone() {
     assert_eq!(summary.errors, 1.0);
     assert_eq!(summary.gen_requests, 1.0);
     assert_eq!(summary.requests, 1.0);
+}
+
+/// Spin until `ok` holds (the engine loop aborts abandoned work at its
+/// next step boundary, not synchronously with the drop/cancel).
+fn poll_until(budget: Duration, mut ok: impl FnMut() -> bool) -> bool {
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < budget {
+        if ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    ok()
+}
+
+/// Regression (orphaned-generation leak): dropping a `Pending` mid-decode
+/// must abort the generation at the next step boundary and return its
+/// arena blocks — not let it decode to completion (or worse, hold KV
+/// blocks forever) computing an answer nobody will read.
+#[test]
+fn dropped_pending_aborts_the_generation_and_frees_its_blocks() {
+    let scorer = packed_scorer(61);
+    let gated = Arc::new(GatedScorer::new(scorer));
+    let engine = Engine::start_shared(
+        gated.clone(),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            ..EngineConfig::default()
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+    let p = client.generate(vec![1, 2, 3, 4], SamplingParams::greedy(8)).unwrap();
+    gated.wait_entered(1); // the prefill step is in flight, blocks are held
+    assert!(arena.blocks_in_use() > 0, "the prefill step must hold arena blocks");
+    drop(p); // abandon: the loop sees it at the next reap, before step 2
+    gated.open();
+    assert!(
+        poll_until(Duration::from_secs(10), || arena.blocks_in_use() == 0),
+        "abandoned generation still holds {} arena block(s)",
+        arena.blocks_in_use()
+    );
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(summary.cancelled >= 1.0, "serve.cancelled never counted the abandoned request");
+    assert_eq!(summary.gen_requests, 0.0, "the abandoned generation must not finish");
+    assert_eq!(arena.blocks_in_use(), 0);
+}
+
+/// `Pending::cancel` aborts a mid-decode generation at the next step
+/// boundary: the handle resolves with the cancellation `Err` and the
+/// generation's arena blocks return to the pool.
+#[test]
+fn pending_cancel_aborts_mid_decode() {
+    let scorer = packed_scorer(62);
+    let gated = Arc::new(GatedScorer::new(scorer));
+    let engine = Engine::start_shared(
+        gated.clone(),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            ..EngineConfig::default()
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+    let p = client.generate(vec![1, 2, 3, 4], SamplingParams::greedy(8)).unwrap();
+    gated.wait_entered(1);
+    p.cancel();
+    gated.open();
+    let err = p.wait().unwrap_err();
+    assert!(format!("{err}").contains("cancelled"), "{err}");
+    assert!(
+        poll_until(Duration::from_secs(10), || arena.blocks_in_use() == 0),
+        "cancelled generation still holds {} arena block(s)",
+        arena.blocks_in_use()
+    );
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(summary.cancelled >= 1.0);
+    assert_eq!(summary.gen_requests, 0.0);
+}
+
+/// A queued score request whose deadline expires before the loop reaches
+/// it is shed with `Err` — it never costs a forward (`serve.shed`), and
+/// traffic around it is unaffected.
+#[test]
+fn queued_score_past_deadline_is_shed() {
+    let gate = Arc::new(GateScorer::new(dims()));
+    let engine = Engine::start_shared(gate.clone(), EngineConfig::default());
+    let client = engine.client();
+    let p0 = client.score(vec![1, 2, 3]).unwrap();
+    gate.wait_entered(1); // the loop is wedged inside p0's forward
+    let doomed = client
+        .score_with(vec![1, 2, 3, 4], &SubmitOptions::with_deadline(Duration::from_millis(10)))
+        .unwrap();
+    let fine = client.score(vec![1, 2, 3, 4]).unwrap();
+    std::thread::sleep(Duration::from_millis(40)); // the deadline passes in queue
+    gate.open();
+    assert_eq!(p0.wait().unwrap().len(), 2);
+    let err = doomed.wait().unwrap_err();
+    assert!(format!("{err}").contains("deadline expired"), "{err}");
+    assert_eq!(fine.wait().unwrap().len(), 3, "deadline-free neighbor must be served");
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(summary.shed >= 1.0, "serve.shed never counted the expired request");
+    // shed is not an admission error: the request was well-formed
+    assert_eq!(summary.errors, 0.0);
+    // the doomed request's tokens were never forwarded
+    let sizes = gate.batch_sizes();
+    assert_eq!(sizes.iter().sum::<usize>(), 2, "the shed request reached the scorer: {sizes:?}");
+}
+
+/// `EngineConfig::default_deadline` applies to every submission without
+/// its own deadline, and a generation it expires mid-decode is aborted
+/// at the step boundary (`serve.deadline_aborts`), freeing its blocks.
+#[test]
+fn default_deadline_aborts_generation_mid_decode() {
+    let scorer = packed_scorer(63);
+    let gated = Arc::new(GatedScorer::new(scorer));
+    let engine = Engine::start_shared(
+        gated.clone(),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            default_deadline: Some(Duration::from_millis(40)),
+            ..EngineConfig::default()
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+    // prompt fits one prefill chunk: step 1 completes prefill AND samples
+    // the first token, so decode has begun when the deadline expires
+    let p = client.generate(vec![1, 2, 3, 4], SamplingParams::greedy(8)).unwrap();
+    gated.wait_entered(1);
+    std::thread::sleep(Duration::from_millis(80)); // deadline passes mid-step
+    gated.open();
+    let err = p.wait().unwrap_err();
+    assert!(format!("{err}").contains("deadline expired mid-generation"), "{err}");
+    assert!(
+        poll_until(Duration::from_secs(10), || arena.blocks_in_use() == 0),
+        "deadline-aborted generation still holds {} arena block(s)",
+        arena.blocks_in_use()
+    );
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(summary.deadline_aborts >= 1.0, "serve.deadline_aborts never counted the abort");
+    assert_eq!(summary.gen_requests, 0.0);
+}
+
+/// Shutdown under load: a mixed Score/Generate burst with shutdown
+/// racing mid-decode still resolves every `Pending` (Ok from the drain —
+/// never a hang) and returns every KV arena block, on every backend.
+#[test]
+fn shutdown_under_load_resolves_every_pending_across_backends() {
+    for kind in BackendKind::ALL {
+        let scorer = backend_scorer(kind, 64);
+        let d = scorer.dims().clone();
+        let mut rng = Rng::seed(65);
+        let engine = Engine::start_shared(
+            scorer,
+            EngineConfig {
+                max_batch: 4,
+                queue_capacity: 16,
+                max_active: 2,
+                prefill_chunk: 2,
+                kv_block: 4,
+                arena_blocks: 4, // undersized: preemption can race shutdown too
+                ..EngineConfig::default()
+            },
+        );
+        let arenas: Vec<_> = engine.arenas().to_vec();
+        let client = engine.client();
+        let scores: Vec<_> = (0..6)
+            .map(|_| {
+                let s: Vec<u32> = (0..8).map(|_| rng.below(d.vocab) as u32).collect();
+                client.score(s).unwrap()
+            })
+            .collect();
+        let gens: Vec<_> = (0..4)
+            .map(|_| {
+                let p: Vec<u32> = (0..4).map(|_| rng.below(d.vocab) as u32).collect();
+                client.generate(p, SamplingParams::greedy(6)).unwrap()
+            })
+            .collect();
+        // the sentinel queues behind the burst: everything already
+        // submitted must drain to an answer before the loops exit
+        let summary = engine.shutdown();
+        for (k, p) in scores.into_iter().enumerate() {
+            let got = p
+                .wait_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("[{kind:?}] score {k} unresolved: {e}"));
+            assert_eq!(got.len(), 7);
+        }
+        for (k, g) in gens.into_iter().enumerate() {
+            let got = g
+                .wait_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("[{kind:?}] generation {k} unresolved: {e}"));
+            assert_eq!(got.tokens.len(), 6);
+        }
+        for (i, a) in arenas.iter().enumerate() {
+            assert_eq!(
+                a.blocks_in_use(),
+                0,
+                "[{kind:?}] replica {i} leaked arena blocks through shutdown"
+            );
+        }
+        assert_eq!(summary.errors, 0.0, "[{kind:?}] the drain answered something Err");
+    }
+}
+
+/// A dispatch policy that always returns the same hint — out of range or
+/// pointing at an unhealthy replica — exercising the client's re-route
+/// path (the fix for the old `route(..) % txs.len()` silent clamp).
+struct Sticky(usize);
+
+impl Dispatch for Sticky {
+    fn route(&self, _req: &Request, _health: &HealthView) -> usize {
+        self.0
+    }
+}
+
+/// A stale or out-of-range `Dispatch` hint is re-routed to a healthy
+/// replica instead of being %-clamped into a slot that may be dead; with
+/// no healthy replica left, submission refuses with a clear error.
+#[test]
+fn stale_dispatch_hint_reroutes_to_a_healthy_replica() {
+    let a = packed_scorer(66);
+    let b = packed_scorer(66); // same seed => identical weights
+    let want = a.score_all(&[vec![1, 2, 3]]).unwrap();
+    let replicas: Vec<Arc<dyn Scorer + Send + Sync>> = vec![a, b];
+    // hint 7 is out of range for a 2-replica fleet on every submission
+    let engine = Engine::start_sharded(replicas, EngineConfig::default(), Arc::new(Sticky(7)));
+    let health = engine.health();
+    let client = engine.client();
+    let got = client.score(vec![1, 2, 3]).unwrap().wait().unwrap();
+    assert_eq!(got.len(), want[0].len(), "out-of-range hint must re-route, not clamp");
+    // 7 % 2 = 1 would be the old clamp target; with replica 1 unhealthy
+    // the submission must land on replica 0 instead
+    health.mark_unhealthy(1);
+    assert_eq!(client.score(vec![1, 2, 3]).unwrap().wait().unwrap().len(), want[0].len());
+    // no healthy replica left: refuse at submission, don't enqueue into
+    // a fleet that can never answer
+    health.mark_unhealthy(0);
+    let err = client.score(vec![1, 2, 3]).unwrap_err();
+    assert!(format!("{err}").contains("no healthy replica"), "{err}");
+    engine.shutdown();
 }

@@ -13,6 +13,11 @@
 //!   mutex means a sibling thread already panicked mid-mutation, and
 //!   propagating is the only sound move (the PR 2 no-poison convention).
 //!   `debug_assert!` is exempt (compiled out of release serving builds).
+//!   The annotated injected panic in `engine/chaos.rs` (`ChaosScorer`, the
+//!   PR 8 fault-injection harness) is the one sanctioned panic source on
+//!   the serving path — it exists to exercise the engine's `catch_unwind`
+//!   supervision and carries a `lint: allow(panic)` like any other excused
+//!   line.
 //! * **R2 — bitwise-pin guard.** `tensor/kernels.rs`, `tensor/mat.rs`, and
 //!   `model/backend.rs` may not use `mul_add`, iterator `.sum()`/`.fold(`,
 //!   or `par_*` reductions — any of these can silently change a pinned
