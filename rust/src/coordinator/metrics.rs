@@ -2,6 +2,13 @@
 //! level gauges (with high-water marks), and raw observation series
 //! (for latency percentiles), rendered to JSON for EXPERIMENTS.md §Perf
 //! accounting and the serve-loop summaries.
+//!
+//! The sink is string-keyed by convention, not schema: the engine's
+//! serving series all live under `serve.*` (e.g. the cross-request
+//! prefix-cache set — `serve.prefix_hits` / `serve.prefix_misses` /
+//! `serve.prefix_tokens_saved` / `serve.prefix_evictions` counters and
+//! the `serve.kv_blocks_pinned` gauge) and are aggregated into
+//! [`crate::coordinator::serve::ServeSummary`] by name.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -159,6 +159,21 @@ pub struct ServeSummary {
     /// generations evicted from the arena (later resumed bit-exact via
     /// replay prefill)
     pub preemptions: f64,
+    /// Generate admissions whose prompt matched a cached prefix in the
+    /// cross-request [`crate::engine::PrefixIndex`]
+    pub prefix_hits: f64,
+    /// Generate admissions that found no cached prefix
+    pub prefix_misses: f64,
+    /// prompt tokens *not* forwarded because their KV blocks were
+    /// attached from the prefix cache (the PR-3 `rows_forwarded` idiom,
+    /// now fleet-wide)
+    pub prefix_tokens_saved: f64,
+    /// whole cached-prefix entries' blocks released under arena pressure
+    /// (always before any generation is preempted)
+    pub prefix_evictions: f64,
+    /// KV arena blocks currently held by the prefix index (0 after a
+    /// clean shutdown — the refcount-leak canary)
+    pub kv_blocks_pinned: f64,
     /// median compute rate of the quantized linears across timed
     /// forwards (GFLOP/s over `ModelDims::linear_flops_per_token` —
     /// the `serve.kernel_gflops` series; `None` until a forward ran)
@@ -211,6 +226,11 @@ impl ServeSummary {
             kv_blocks_peak: m.gauge_peak("serve.kv_blocks_used"),
             kv_blocks_free: m.gauge("serve.kv_blocks_free"),
             preemptions: m.counter("serve.preemptions"),
+            prefix_hits: m.counter("serve.prefix_hits"),
+            prefix_misses: m.counter("serve.prefix_misses"),
+            prefix_tokens_saved: m.counter("serve.prefix_tokens_saved"),
+            prefix_evictions: m.counter("serve.prefix_evictions"),
+            kv_blocks_pinned: m.gauge("serve.kv_blocks_pinned"),
             kernel_gflops_p50: m.percentile("serve.kernel_gflops", 0.5),
             shed: m.counter("serve.shed"),
             cancelled: m.counter("serve.cancelled"),
@@ -262,6 +282,20 @@ impl std::fmt::Display for ServeSummary {
                 self.kv_bytes_peak / 1024.0,
                 self.kv_blocks_peak,
                 self.preemptions
+            )?;
+        }
+        // the prefix-cache clause only appears once the index saw
+        // traffic, so cache-off (or all-cold) runs read as before
+        if self.prefix_hits + self.prefix_misses > 0.0 {
+            write!(
+                f,
+                "; prefix cache: {} hits / {} misses, {} tokens saved, \
+                 {} evictions, {:.0} blocks pinned",
+                self.prefix_hits,
+                self.prefix_misses,
+                self.prefix_tokens_saved,
+                self.prefix_evictions,
+                self.kv_blocks_pinned
             )?;
         }
         // fault-tolerance counters only appear once something fired, so
@@ -563,6 +597,34 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("2 replicas healthy"), "{text}");
+    }
+
+    #[test]
+    fn summary_surfaces_prefix_cache_counters_only_when_traffic_fired() {
+        // silent while the index saw no admissions (cache off, or no
+        // Generate traffic at all) — the steady-state line is unchanged
+        let m = Metrics::new();
+        let quiet = format!("{}", ServeSummary::from_metrics(&m));
+        assert!(!quiet.contains("prefix cache:"), "{quiet}");
+        m.add("serve.prefix_hits", 3.0);
+        m.incr("serve.prefix_misses");
+        m.add("serve.prefix_tokens_saved", 24.0);
+        m.add("serve.prefix_evictions", 2.0);
+        m.gauge_set("serve.kv_blocks_pinned", 5.0);
+        let s = ServeSummary::from_metrics(&m);
+        assert_eq!(s.prefix_hits, 3.0);
+        assert_eq!(s.prefix_misses, 1.0);
+        assert_eq!(s.prefix_tokens_saved, 24.0);
+        assert_eq!(s.prefix_evictions, 2.0);
+        assert_eq!(s.kv_blocks_pinned, 5.0);
+        let text = format!("{s}");
+        assert!(
+            text.contains(
+                "prefix cache: 3 hits / 1 misses, 24 tokens saved, \
+                 2 evictions, 5 blocks pinned"
+            ),
+            "{text}"
+        );
     }
 
     #[test]

@@ -88,6 +88,7 @@ use crate::tensor::Rng;
 
 use super::dispatch::{Dispatch, RoundRobin};
 use super::health::HealthView;
+use super::prefix::PrefixIndex;
 use super::request::{
     CancelCell, Generated, Pending, Request, Response, SubmitOptions, TokenEvent, TokenStream,
 };
@@ -143,6 +144,13 @@ pub struct EngineConfig {
     /// happens on the engine loop between rounds, so it also rate-limits
     /// how fast a persistently failing scorer is re-asked.
     pub retry_backoff: Duration,
+    /// Keep a cross-request radix prefix index
+    /// ([`crate::engine::PrefixIndex`]) over committed KV blocks, so a
+    /// prompt sharing a block-aligned prefix with earlier traffic
+    /// attaches the cached blocks and prefills only its suffix (bitwise
+    /// identical to a cold prefill). Costs nothing when no prefix ever
+    /// repeats; disable to reserve every arena block for live sequences.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -158,6 +166,7 @@ impl Default for EngineConfig {
             max_retries: 2,
             unhealthy_after: 3,
             retry_backoff: Duration::from_millis(1),
+            prefix_cache: true,
         }
     }
 }
@@ -726,7 +735,21 @@ fn observe_gflops(metrics: &Metrics, rows: usize, flops_per_row: f64, secs: f64)
     }
 }
 
-fn finish_gen(a: ActiveGen, metrics: &Metrics) {
+/// Answer a finished generation and publish its committed KV prefix
+/// (prompt ++ sampled tokens actually fed back, whole blocks only) into
+/// the prefix index for cross-request reuse. Publication retains the
+/// blocks *before* the cache drops, so the handoff never releases a
+/// block another request is about to attach.
+fn finish_gen(a: ActiveGen, metrics: &Metrics, prefix: &mut Option<PrefixIndex>) {
+    if let Some(ix) = prefix.as_mut() {
+        // cache position i holds the K/V of (prompt ++ tokens)[i]; the
+        // final sampled token was never fed back, so it is not cached
+        let committed = a.cache.len();
+        let mut seq = a.prompt.clone();
+        seq.extend_from_slice(&a.tokens);
+        seq.truncate(committed);
+        ix.insert(&seq, &a.cache);
+    }
     metrics.add("serve.gen_requests", 1.0);
     metrics.add("serve.gen_tokens", a.tokens.len() as f64);
     metrics.observe("serve.latency_secs", a.meta.enqueued.elapsed().as_secs_f64());
@@ -734,6 +757,55 @@ fn finish_gen(a: ActiveGen, metrics: &Metrics) {
         .meta
         .resp
         .send(Ok(Response::Generated(Generated { tokens: a.tokens, logps: a.logps })));
+}
+
+/// Attach the longest cached prefix of a just-promoted generation's
+/// prefill to its (empty) cache, advancing `done` past the attached
+/// rows. A generation that will sample from its last prefill row keeps
+/// at least one row to forward (`limit = len - 1`); a replay
+/// (`sample_after_prefill == false`) may attach the whole prefix.
+/// Hit/miss counters only move for fresh admissions — replays count
+/// their rows into `serve.prefix_tokens_saved` without skewing the hit
+/// rate.
+fn attach_cached_prefix(
+    prefix: &mut Option<PrefixIndex>,
+    a: &mut ActiveGen,
+    fresh: bool,
+    metrics: &Metrics,
+) {
+    let Some(ix) = prefix.as_mut() else {
+        return;
+    };
+    let limit = if a.sample_after_prefill {
+        a.prefill.len().saturating_sub(1)
+    } else {
+        a.prefill.len()
+    };
+    let matched = ix.attach(&a.prefill, limit, &mut a.cache);
+    if matched > 0 {
+        a.done = matched;
+        metrics.add("serve.prefix_tokens_saved", matched as f64);
+    }
+    if fresh {
+        metrics.incr(if matched > 0 { "serve.prefix_hits" } else { "serve.prefix_misses" });
+    }
+}
+
+/// Relieve arena pressure by evicting LRU *unpinned* prefix-index
+/// entries — always tried before a generation is preempted (and before
+/// promotion gives up on a candidate). Returns whether any block was
+/// actually freed; the caller re-evaluates pressure rather than trusting
+/// the count, since eviction is block-granular.
+fn try_index_evict(prefix: &mut Option<PrefixIndex>, deficit: usize, metrics: &Metrics) -> bool {
+    let Some(ix) = prefix.as_mut() else {
+        return false;
+    };
+    let freed = ix.evict_lru(deficit);
+    if freed > 0 {
+        metrics.add("serve.prefix_evictions", freed as f64);
+        return true;
+    }
+    false
 }
 
 /// Blocks the active set must pull from the arena to advance one fused
@@ -991,6 +1063,10 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
     let flops_per_row = dims.linear_flops_per_token() as f64;
     let fleet =
         FleetCtx { cfg: &cfg, metrics: &metrics, health: &health, peers: &peers, index };
+    // the cross-request prefix index: loop-local by design (no lock — see
+    // `engine::prefix`), holding refcounted pins on committed arena blocks
+    let mut prefix: Option<PrefixIndex> =
+        if cfg.prefix_cache { Some(PrefixIndex::new(arena.clone())) } else { None };
 
     let mut score_q: VecDeque<ScoreJob> = VecDeque::new();
     let mut gen_wait: VecDeque<GenJob> = VecDeque::new();
@@ -1262,25 +1338,57 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
         // that rotation can repeat forever without anyone sampling. A
         // gated resume also blocks fresh admissions behind it, so
         // eviction can never starve a preempted sequence.
+        // A candidate's first-step need is priced net of its prefix-index
+        // hit: attached blocks are already resident (sharing costs no
+        // capacity), so only the suffix chunk charges against the free
+        // pool. When a candidate still doesn't fit, LRU unpinned index
+        // entries are evicted and the gate re-evaluated before giving up.
         while active.len() < max_active {
             let reserved = step_block_need(&arena, &active, chunk);
             if let Some(p) = preempted.front() {
-                if reserved + arena.blocks_for(p.next_feed(chunk)) > arena.blocks_free() {
+                let limit = if p.sample_after_prefill {
+                    p.prefill.len().saturating_sub(1)
+                } else {
+                    p.prefill.len()
+                };
+                let matched = prefix.as_ref().map_or(0, |ix| ix.peek(&p.prefill, limit));
+                let feed = if matched < p.prefill.len() {
+                    matched.saturating_add(chunk).min(p.prefill.len()) - matched
+                } else {
+                    1
+                };
+                let need = arena.blocks_for(matched + feed) - arena.blocks_for(matched);
+                if reserved + need > arena.blocks_free() {
+                    let deficit = (reserved + need) - arena.blocks_free();
+                    if try_index_evict(&mut prefix, deficit, &metrics) {
+                        continue;
+                    }
                     break;
                 }
-                if let Some(p) = preempted.pop_front() {
+                if let Some(mut p) = preempted.pop_front() {
+                    attach_cached_prefix(&mut prefix, &mut p, false, &metrics);
                     active.push(p);
                 }
                 continue;
             }
             match gen_wait.front() {
                 Some(g) => {
-                    let first = g.prompt.len().min(chunk);
-                    if reserved + arena.blocks_for(first) > arena.blocks_free() {
+                    let matched = prefix
+                        .as_ref()
+                        .map_or(0, |ix| ix.peek(&g.prompt, g.prompt.len().saturating_sub(1)));
+                    let first = matched.saturating_add(chunk).min(g.prompt.len()) - matched;
+                    let need = arena.blocks_for(matched + first) - arena.blocks_for(matched);
+                    if reserved + need > arena.blocks_free() {
+                        let deficit = (reserved + need) - arena.blocks_free();
+                        if try_index_evict(&mut prefix, deficit, &metrics) {
+                            continue;
+                        }
                         break;
                     }
                     if let Some(g) = gen_wait.pop_front() {
-                        active.push(ActiveGen::admit(g, &arena));
+                        let mut a = ActiveGen::admit(g, &arena);
+                        attach_cached_prefix(&mut prefix, &mut a, true, &metrics);
+                        active.push(a);
                     }
                 }
                 None => break,
@@ -1294,6 +1402,10 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
         );
         metrics.gauge_set("serve.kv_blocks_used", arena.blocks_in_use() as f64);
         metrics.gauge_set("serve.kv_blocks_free", arena.blocks_free() as f64);
+        metrics.gauge_set(
+            "serve.kv_blocks_pinned",
+            prefix.as_ref().map_or(0, PrefixIndex::blocks_held) as f64,
+        );
 
         // ---- one coalesced scoring batch -------------------------------
         if !score_q.is_empty() {
@@ -1335,6 +1447,15 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                 match scored {
                     Ok(outs) => {
                         health.record_ok(index);
+                        // Score traffic needs logits at every position, so
+                        // it always full-forwards — but it still refreshes
+                        // the recency of any cached prefix it shares, so
+                        // hot shared prompts survive LRU eviction
+                        if let Some(ix) = prefix.as_mut() {
+                            for t in &batch {
+                                ix.touch(t);
+                            }
+                        }
                         metrics.incr("serve.batches");
                         metrics.add("serve.requests", plain.len() as f64);
                         metrics.add("serve.tokens", n_tokens as f64);
@@ -1383,6 +1504,9 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                 match scored {
                     Ok(out) => {
                         health.record_ok(index);
+                        if let Some(ix) = prefix.as_mut() {
+                            ix.touch(&prompt);
+                        }
                         metrics.add("serve.choice_requests", 1.0);
                         metrics.add("serve.choice_tokens", choice_tokens as f64);
                         let waited = meta.enqueued.elapsed().as_secs_f64();
@@ -1422,6 +1546,16 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
             let need = step_block_need(&arena, &active, chunk);
             if need <= arena.blocks_free() {
                 break;
+            }
+            // cached-but-idle prefixes are the cheapest residency to give
+            // up: evict LRU unpinned index entries and re-evaluate before
+            // any generation is preempted. (Pinned blocks — shared with a
+            // live cache — are skipped: releasing them frees nothing, and
+            // preemption itself never steals them; a preempted cache only
+            // drops its own holds, the index's pins keep the blocks
+            // resident.)
+            if try_index_evict(&mut prefix, need - arena.blocks_free(), &metrics) {
+                continue;
             }
             if active.len() == 1 {
                 // nothing left to evict: this request alone cannot fit
@@ -1484,6 +1618,16 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                         let n = news[i].len();
                         if a.done < a.prefill.len() {
                             a.done += n;
+                            if a.done == a.prefill.len() {
+                                // prefill complete: its whole committed
+                                // blocks become fleet-visible for
+                                // cross-request reuse right away (not only
+                                // at finish), so a concurrent shared-prompt
+                                // request can already attach them
+                                if let Some(ix) = prefix.as_mut() {
+                                    ix.insert(&a.prefill, &a.cache);
+                                }
+                            }
                             if a.done == a.prefill.len() && a.sample_after_prefill {
                                 // prompt complete: the first token samples
                                 // from the last prompt position's logits.
@@ -1502,7 +1646,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                     let mut i = 0;
                     while i < active.len() {
                         if active[i].finished() {
-                            finish_gen(active.swap_remove(i), &metrics);
+                            finish_gen(active.swap_remove(i), &metrics, &mut prefix);
                         } else {
                             i += 1;
                         }
@@ -1529,6 +1673,10 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
             );
             metrics.gauge_set("serve.kv_blocks_used", arena.blocks_in_use() as f64);
             metrics.gauge_set("serve.kv_blocks_free", arena.blocks_free() as f64);
+            metrics.gauge_set(
+                "serve.kv_blocks_pinned",
+                prefix.as_ref().map_or(0, PrefixIndex::blocks_held) as f64,
+            );
             metrics.gauge_set("serve.gen_backlog", (gen_wait.len() + preempted.len()) as f64);
         }
 
@@ -1546,4 +1694,12 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
     // began; dropping their response senders errs the callers' `wait()`.
     // (Retried work re-enters the queues with a bounded budget and
     // failovers hand off via try_send, so the drain always terminates.)
+    //
+    // The prefix index is the last block holder standing: dropping it
+    // releases every pinned block so the arena drains to zero and the
+    // "no refcount leaks after shutdown" invariant is observable.
+    drop(prefix);
+    metrics.gauge_set("serve.kv_blocks_pinned", 0.0);
+    metrics.gauge_set("serve.kv_blocks_used", arena.blocks_in_use() as f64);
+    metrics.gauge_set("serve.kv_blocks_free", arena.blocks_free() as f64);
 }

@@ -17,14 +17,23 @@
 //!                     │     │                      (≤ max_active seqs,
 //!   Pending<Response> │     │                       preempted resume
 //!     .wait()         ◀─────┤                       first, gated on
-//!     .wait_timeout() │     │                       free KvArena blocks)
-//!     .cancel()       │     ├ score: one coalesced score_batch
-//!     (drop ⇒ abandon)│     │   (≤ max_batch requests per round)
-//!   TokenStream ◀─────┘     │ step: one fused cache_forward_batch —
-//!     (per-token events)    │   decode seqs feed their last token,
+//!     .wait_timeout() │     │                       free KvArena blocks;
+//!     .cancel()       │     │                       prompts attach their
+//!     (drop ⇒ abandon)│     │                       longest PrefixIndex
+//!   TokenStream ◀─────┘     │                       hit — whole committed
+//!     (per-token events)    │                       blocks — and prefill
+//!                           │                       only the suffix)
+//!                           ├ score: one coalesced score_batch
+//!                           │   (≤ max_batch requests per round)
+//!                           │ step: one fused cache_forward_batch —
+//!                           │   decode seqs feed their last token,
 //!                           │   prefilling seqs feed the next
 //!                           │   prefill_chunk tokens; arena overflow
-//!                           │   preempts the longest generation
+//!                           │   evicts LRU unpinned PrefixIndex entries
+//!                           │   first, then preempts the longest
+//!                           │   generation; a finishing sequence
+//!                           │   publishes its committed blocks back
+//!                           │   into the index for the next request
 //!                           └ repeat — new traffic admits BETWEEN steps
 //!
 //!   supervision/failover (per fleet, shared HealthView):
@@ -46,6 +55,12 @@
 //! multi-replica serving, with per-replica KV residency (blocks held in
 //! the replica's [`crate::model::KvArena`] — not the
 //! `max_active × full-window` worst case) as the constraint.
+//!
+//! Cross-request KV reuse rides the same round structure: the loop owns
+//! a [`PrefixIndex`] — a block-granular radix trie over committed arena
+//! blocks — so shared system prompts prefill once fleet-wide and every
+//! later request attaches the cached prefix and forwards only its
+//! suffix (bitwise identical to a cold prefill; see `engine::prefix`).
 //!
 //! Fault tolerance is part of the same lifecycle: requests carry
 //! optional deadlines ([`SubmitOptions`]), a [`Pending`] can be
@@ -70,12 +85,14 @@ pub mod chaos;
 pub mod core;
 pub mod dispatch;
 pub mod health;
+pub mod prefix;
 pub mod request;
 pub mod sampling;
 
 pub use self::caps::EngineCaps;
 pub use self::chaos::{ChaosScorer, Fault};
 pub use self::core::{Engine, EngineClient, EngineConfig};
+pub use self::prefix::PrefixIndex;
 pub use self::dispatch::{Dispatch, RoundRobin};
 pub use self::health::HealthView;
 pub use self::request::{

@@ -1,0 +1,360 @@
+//! Cross-request radix prefix cache: fleet-wide KV reuse over the paged
+//! arena.
+//!
+//! Shared-prompt traffic (system prompts, few-shot headers) re-prefills
+//! the same token prefix on every request. PR 3's prefix reuse only
+//! lives *within* one `Choices` item; this index makes committed KV
+//! blocks reusable *across* requests: a token-id radix trie maps runs of
+//! committed positions to the [`KvArena`] blocks that already hold their
+//! K/V, so a new sequence attaches the longest cached prefix and
+//! chunk-prefills only the suffix.
+//!
+//! # Block-granular radix trie
+//!
+//! The trie's alphabet is whole blocks: every edge label is a run of
+//! `block_size` token ids per held block, children of a node differ in
+//! their first block, and splits happen only at block boundaries. That
+//! granularity is forced by correctness, not convenience — a partially
+//! filled boundary block cannot be shared (its tail rows would be
+//! clobbered by one holder while another reads), so the engine attaches
+//! whole blocks and re-prefills the remainder privately. Since a
+//! committed block's rotated-K/V planes are a pure function of the token
+//! prefix (chunked prefill is bitwise-pinned equal to one-shot), a
+//! cache-hit prefill produces logits `to_bits`-identical to a cold one.
+//!
+//! # Ownership and pinning
+//!
+//! The index holds one refcounted handle per block it publishes
+//! ([`KvArena::retain`]); attaching a prefix adds the sequence as
+//! another holder. A block is "pinned" while any live cache shares it
+//! (arena refcount > 1): [`PrefixIndex::evict_lru`] skips pinned blocks
+//! — releasing them would free no capacity — and frees the
+//! least-recently-used leaf's unpinned suffix first, so trie entries are
+//! always evicted *before* the scheduler's preemption path has to fire.
+//! Preemption itself never steals a pinned block: a preempted cache
+//! merely drops its own holds and the index's holds keep the blocks
+//! resident.
+//!
+//! # Locking discipline (R4)
+//!
+//! The index is deliberately **lock-free at this layer**: it is owned by
+//! one engine loop and touched only between scheduler phases, never from
+//! request threads. The only lock in play is the arena's own allocator
+//! mutex, confined inside `retain`/`release`/`handle_refs` — no guard
+//! here can span a forward call, which is exactly the R4 rule rilq-lint
+//! enforces for this file.
+
+use std::sync::Arc;
+
+use crate::model::kv::{KvArena, KvBlock, KvCache};
+
+/// One trie node: an edge label of whole-block token runs plus the
+/// blocks holding their committed K/V. `tokens.len()` is always
+/// `blocks.len() * block_size`; every held block appears in exactly one
+/// node, so the index's holder-count per block is exactly one.
+struct Node {
+    tokens: Vec<u32>,
+    blocks: Vec<Arc<KvBlock>>,
+    /// logical LRU stamp — larger is more recent
+    last_used: u64,
+    children: Vec<Node>,
+}
+
+/// First whole block of `child`'s label equals the first whole block of
+/// `rest` (false when either side is shorter than one block).
+fn first_block_matches(child: &Node, rest: &[u32], bs: usize) -> bool {
+    match (child.tokens.get(..bs), rest.get(..bs)) {
+        (Some(a), Some(b)) => a == b,
+        _ => false,
+    }
+}
+
+/// Number of whole blocks shared between `child`'s label and `rest`.
+fn matched_blocks(child: &Node, rest: &[u32], bs: usize) -> usize {
+    child
+        .tokens
+        .chunks(bs)
+        .zip(rest.chunks(bs))
+        .take_while(|(a, b)| a.len() == bs && b.len() == bs && a == b)
+        .count()
+}
+
+/// Radix index over committed KV block runs, keyed by token ids.
+///
+/// Owned by one engine loop (see the module docs for why there is no
+/// lock). All block ownership flows through the arena's refcounts:
+/// `insert` retains, `evict_lru` and `Drop` release, `attach` retains on
+/// behalf of the receiving cache — so "decrement exactly once per
+/// holder" is structural no matter how a sequence ends (finish, cancel,
+/// deadline abort, preemption, failover).
+pub struct PrefixIndex {
+    arena: Arc<KvArena>,
+    block_size: usize,
+    children: Vec<Node>,
+    clock: u64,
+    blocks_held: usize,
+}
+
+impl PrefixIndex {
+    /// Empty index over `arena`'s blocks.
+    pub fn new(arena: Arc<KvArena>) -> PrefixIndex {
+        let block_size = arena.block_size();
+        PrefixIndex { arena, block_size, children: Vec::new(), clock: 0, blocks_held: 0 }
+    }
+
+    /// Blocks currently pinned by the index (each counted once — a block
+    /// lives in exactly one node). This is the `serve.kv_blocks_pinned`
+    /// gauge.
+    pub fn blocks_held(&self) -> usize {
+        self.blocks_held
+    }
+
+    /// Nodes in the trie (diagnostics/tests).
+    pub fn node_count(&self) -> usize {
+        fn walk(nodes: &[Node]) -> usize {
+            nodes.iter().map(|n| 1 + walk(&n.children)).sum()
+        }
+        walk(&self.children)
+    }
+
+    /// Longest cached prefix of `tokens`, in positions, without touching
+    /// recency — block-granular and capped at `limit` positions (the
+    /// scheduler caps one position short of a full prompt so a sampling
+    /// prefill still forwards at least one row). Used to price a
+    /// candidate's first step before admission.
+    pub fn peek(&self, tokens: &[u32], limit: usize) -> usize {
+        let bs = self.block_size;
+        let mut budget = limit.min(tokens.len()) / bs;
+        let mut matched = 0usize;
+        let mut nodes = &self.children;
+        let mut rest = tokens;
+        while budget > 0 {
+            let Some(child) = nodes.iter().find(|c| first_block_matches(c, rest, bs)) else {
+                break;
+            };
+            let m = matched_blocks(child, rest, bs).min(budget);
+            matched += m;
+            budget -= m;
+            if m * bs < child.tokens.len() {
+                break; // partial edge match — usable, but nothing deeper
+            }
+            rest = rest.get(m * bs..).unwrap_or(&[]);
+            nodes = &child.children;
+        }
+        matched * bs
+    }
+
+    /// Attach the longest cached prefix of `tokens` (≤ `limit`
+    /// positions, whole blocks) to an **empty** `cache`, adding the
+    /// cache as a holder of every shared block. Returns the attached
+    /// position count (0 ⇒ cold miss, cache untouched). Touches the
+    /// matched path's recency.
+    pub fn attach(&mut self, tokens: &[u32], limit: usize, cache: &mut KvCache) -> usize {
+        let bs = self.block_size;
+        let mut budget = limit.min(tokens.len()) / bs;
+        if budget == 0 {
+            return 0;
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut picked: Vec<Arc<KvBlock>> = Vec::new();
+        let mut nodes = &mut self.children;
+        let mut rest = tokens;
+        while budget > 0 {
+            let Some(pos) = nodes.iter().position(|c| first_block_matches(c, rest, bs)) else {
+                break;
+            };
+            let Some(child) = nodes.get_mut(pos) else { break };
+            child.last_used = stamp;
+            let m = matched_blocks(child, rest, bs).min(budget);
+            picked.extend(child.blocks.iter().take(m).cloned());
+            budget -= m;
+            if budget == 0 || m * bs < child.tokens.len() {
+                break;
+            }
+            rest = rest.get(m * bs..).unwrap_or(&[]);
+            nodes = &mut child.children;
+        }
+        let n_blocks = picked.len();
+        if n_blocks == 0 {
+            return 0;
+        }
+        let retained = self.arena.retain(&picked);
+        cache.attach_prefix(retained, n_blocks * bs);
+        n_blocks * bs
+    }
+
+    /// Publish the committed prefix of `cache` (whole blocks only) under
+    /// its token sequence `tokens` (`tokens.len() <= cache.len()`,
+    /// position `i` of the cache holding the K/V of `tokens[i]`).
+    /// Descends the trie, splits edges at block boundaries, and retains
+    /// only blocks for paths not already present — an existing path's
+    /// blocks win, so re-inserting a known prefix is a recency touch.
+    pub fn insert(&mut self, tokens: &[u32], cache: &KvCache) {
+        let bs = self.block_size;
+        let handles = cache.block_handles();
+        let nb = (tokens.len().min(cache.len()) / bs).min(handles.len());
+        if nb == 0 {
+            return;
+        }
+        let mut rest_t = tokens.get(..nb * bs).unwrap_or(&[]);
+        let mut rest_b = handles.get(..nb).unwrap_or(&[]);
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut added = 0usize;
+        let mut nodes = &mut self.children;
+        loop {
+            let Some(pos) = nodes.iter().position(|c| first_block_matches(c, rest_t, bs)) else {
+                // nothing shares the next block: new leaf takes the rest
+                let blocks = self.arena.retain(rest_b);
+                added += blocks.len();
+                nodes.push(Node {
+                    tokens: rest_t.to_vec(),
+                    blocks,
+                    last_used: stamp,
+                    children: Vec::new(),
+                });
+                break;
+            };
+            let Some(child) = nodes.get_mut(pos) else { break };
+            let m = matched_blocks(child, rest_t, bs);
+            if m * bs < child.tokens.len() {
+                // split at the divergence boundary: the old tail becomes a
+                // grandchild keeping the child's pre-touch recency
+                let tail_tokens = child.tokens.split_off(m * bs);
+                let tail_blocks = child.blocks.split_off(m);
+                let tail_children = std::mem::take(&mut child.children);
+                child.children.push(Node {
+                    tokens: tail_tokens,
+                    blocks: tail_blocks,
+                    last_used: child.last_used,
+                    children: tail_children,
+                });
+            }
+            child.last_used = stamp;
+            if rest_t.len() > m * bs {
+                rest_t = rest_t.get(m * bs..).unwrap_or(&[]);
+                rest_b = rest_b.get(m..).unwrap_or(&[]);
+                nodes = &mut child.children;
+                continue;
+            }
+            break; // fully contained: pure recency touch
+        }
+        self.blocks_held += added;
+    }
+
+    /// Refresh the recency of the longest cached prefix of `tokens`
+    /// without attaching anything — how Score traffic (which needs
+    /// logits at every position and therefore always full-forwards)
+    /// still keeps hot shared prompts resident.
+    pub fn touch(&mut self, tokens: &[u32]) {
+        let bs = self.block_size;
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut nodes = &mut self.children;
+        let mut rest = tokens;
+        loop {
+            let Some(pos) = nodes.iter().position(|c| first_block_matches(c, rest, bs)) else {
+                break;
+            };
+            let Some(child) = nodes.get_mut(pos) else { break };
+            child.last_used = stamp;
+            let m = matched_blocks(child, rest, bs);
+            if m * bs < child.tokens.len() {
+                break;
+            }
+            rest = rest.get(m * bs..).unwrap_or(&[]);
+            nodes = &mut child.children;
+        }
+    }
+
+    /// Free at least `want` arena blocks if the trie can spare them,
+    /// least-recently-used leaves first; within a leaf only the unpinned
+    /// suffix (arena refcount 1 — no live cache shares it) is released.
+    /// Returns the number of blocks actually freed, possibly short of
+    /// `want` when everything left is pinned. The scheduler calls this
+    /// *before* resorting to preemption, so cached-but-idle prefixes are
+    /// always the first residency sacrificed.
+    pub fn evict_lru(&mut self, want: usize) -> usize {
+        let mut freed = 0usize;
+        let mut floor = 0u64;
+        while freed < want {
+            let Some(target) = min_leaf_stamp(&self.children, floor) else { break };
+            match evict_leaf(&mut self.children, &self.arena, self.block_size, target) {
+                Some(f) if f > 0 => {
+                    freed += f;
+                    // a removed leaf can expose an older parent as a new
+                    // evictable leaf: restart the stamp scan from the bottom
+                    floor = 0;
+                }
+                _ => floor = target.saturating_add(1), // pinned leaf: skip past it
+            }
+        }
+        self.blocks_held -= freed;
+        freed
+    }
+}
+
+/// Smallest `last_used` over all leaves with stamp ≥ `floor`.
+fn min_leaf_stamp(nodes: &[Node], floor: u64) -> Option<u64> {
+    let mut best: Option<u64> = None;
+    for n in nodes {
+        let cand = if n.children.is_empty() {
+            (n.last_used >= floor).then_some(n.last_used)
+        } else {
+            min_leaf_stamp(&n.children, floor)
+        };
+        if let Some(v) = cand {
+            best = Some(best.map_or(v, |b| b.min(v)));
+        }
+    }
+    best
+}
+
+/// Find the leaf stamped `target` and release its unpinned block suffix;
+/// a fully-released leaf is removed from its parent. `Some(freed)` once
+/// the leaf was found (freed may be 0 when every block is pinned),
+/// `None` when no leaf in this subtree carries the stamp.
+fn evict_leaf(nodes: &mut Vec<Node>, arena: &KvArena, bs: usize, target: u64) -> Option<usize> {
+    for i in 0..nodes.len() {
+        let Some(n) = nodes.get_mut(i) else { break };
+        if n.children.is_empty() {
+            if n.last_used != target {
+                continue;
+            }
+            let mut keep = n.blocks.len();
+            while keep > 0
+                && n.blocks.get(keep - 1).is_some_and(|b| arena.handle_refs(b) == 1)
+            {
+                keep -= 1;
+            }
+            let dropped = n.blocks.split_off(keep);
+            let freed = dropped.len();
+            arena.release(dropped);
+            n.tokens.truncate(keep * bs);
+            if keep == 0 {
+                nodes.swap_remove(i); // sibling order is not meaningful
+            }
+            return Some(freed);
+        }
+        if let Some(freed) = evict_leaf(&mut n.children, arena, bs, target) {
+            return Some(freed);
+        }
+    }
+    None
+}
+
+impl Drop for PrefixIndex {
+    /// Release every held block back to the arena (shared blocks stay
+    /// resident for the caches still holding them). Dropping the index at
+    /// engine-loop exit is what lets `blocks_in_use` drain to zero after
+    /// shutdown.
+    fn drop(&mut self) {
+        let mut stack = std::mem::take(&mut self.children);
+        while let Some(mut n) = stack.pop() {
+            stack.append(&mut n.children);
+            self.arena.release(std::mem::take(&mut n.blocks));
+        }
+        self.blocks_held = 0;
+    }
+}

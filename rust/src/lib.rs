@@ -217,6 +217,44 @@
 //! full-forward logits, engine greedy == `greedy_decode`, and
 //! preempt→resume bitwise parity.
 //!
+//! Since PR 9 KV reuse is **cross-request**: each replica keeps a
+//! [`engine::PrefixIndex`] — a token-id radix trie whose alphabet is
+//! whole committed arena blocks — so later requests sharing a prompt
+//! prefix (system prompts, few-shot preambles) attach the cached blocks
+//! instead of re-prefilling them:
+//!
+//! ```text
+//!              PrefixIndex (per replica, block-granular radix trie)
+//!              ┌───────────────────────────────────────────────────┐
+//!   finish ──▶ │ [sys prompt........][few-shot]      refcounted    │
+//!   insert     │        ├─[user A suffix]           Arc<KvBlock>   │
+//!              │        └─[user B suffix]           (arena refs)   │
+//!              └───────────────────────────────────────────────────┘
+//!   admit(prompt) ──▶ longest block-aligned match ──▶ KvCache starts
+//!                     (attach pins blocks: refs+1)    mid-prompt; only
+//!                                                     the suffix
+//!                                                     chunk-prefills
+//! ```
+//!
+//! Sharing is copy-on-write at the tail: only *whole* committed blocks
+//! are ever shared (the partially-filled boundary block is re-prefilled
+//! privately), appends go into freshly reserved sole-owner blocks, and
+//! `Arc::get_mut` backstops the invariant. Because committed block
+//! planes are a pure function of the token prefix and `attend_cached`
+//! walks blocks in ascending-position order, a cache-hit prefill is
+//! **bitwise identical** to a cold one (`tests/prefix_cache.rs` pins
+//! this across all three backends). Under arena pressure the scheduler
+//! reclaims **unpinned index entries (LRU) before preempting any live
+//! decode**, and eviction skips blocks an active cache still pins.
+//! Hit/miss/saved-token counters (`serve.prefix_hits`,
+//! `serve.prefix_misses`, `serve.prefix_tokens_saved`,
+//! `serve.prefix_evictions`) and the `serve.kv_blocks_pinned` gauge
+//! land in the serve summaries; `rilq serve-bench --shared-prefix=N`
+//! drives a shared-prompt workload and asserts the cache fired — with
+//! `--chaos`, under injected faults too (every abort/failover path
+//! releases its shared pins exactly once, so the arena still drains to
+//! zero).
+//!
 //! ## Invariant catalog (enforced by `rilq-lint`)
 //!
 //! Five repo-wide invariants are machine-checked by the zero-dependency

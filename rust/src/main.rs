@@ -8,7 +8,7 @@
 //!                    [--backend={dense|packed|merged}]
 //!                                   quantize+compensate+evaluate one cell
 //! rilq serve-bench [--backend=packed --batch=8 --requests=64 --seq=64
-//!                   --gen=N --sample --stream --smoke]
+//!                   --gen=N --sample --stream --shared-prefix=N --smoke]
 //!                                   request-lifecycle engine benchmark:
 //!                                   continuous batching, KV-cache decode,
 //!                                   sampling + streaming (native, PJRT-free)
@@ -413,6 +413,160 @@ fn serve_bench(args: &Args) -> Result<()> {
             ));
         }
     }
+
+    // shared-prefix section: cross-request KV reuse through the radix
+    // prefix index (--chaos re-runs the same workload under injected
+    // faults — the cache must stay bitwise-invisible through retries)
+    if let Some(shared) = args.opt_usize("shared-prefix")? {
+        if shared > 0 {
+            shared_prefix_bench(args, &scorer, &dims, shared, gen)?;
+        }
+    }
+    Ok(())
+}
+
+/// The `--shared-prefix=<n>` serve-bench section: a seeded request mix
+/// sharing an n-token system prompt, answered through the engine's
+/// cross-request radix prefix cache. The first request prefills the
+/// shared prompt cold and publishes its committed blocks; every later
+/// shared request attaches them and forwards only its own suffix. Each
+/// generation is cross-checked **bitwise** against the quadratic
+/// full-recompute decode, and the run fails unless prefix hits fired,
+/// tokens were actually saved, and zero pinned blocks survive shutdown
+/// (the refcount-leak canary). With `--chaos` the same workload repeats
+/// under seeded fault injection.
+// lint: allow(indexing) — `modes` is a fixed 1- or 2-element literal
+fn shared_prefix_bench(
+    args: &Args,
+    scorer: &std::sync::Arc<BackendScorer>,
+    dims: &ModelDims,
+    shared: usize,
+    gen: usize,
+) -> Result<()> {
+    use rilq::eval::scorer::greedy_decode_recompute;
+    let seq = dims.seq;
+    if shared + 2 > seq {
+        return Err(anyhow!(
+            "--shared-prefix={shared} leaves no room for a request suffix \
+             in the model window of {seq}"
+        ));
+    }
+    // whole blocks are the sharing unit: the shared prompt must span at
+    // least one block or there is nothing to reuse
+    let kv_block = match args.opt_usize("kv-block")? {
+        Some(n) if n > 0 => n,
+        _ => 4.min(shared),
+    };
+    if shared < kv_block {
+        return Err(anyhow!(
+            "--shared-prefix={shared} is below the KV block size {kv_block}: \
+             no whole block is shareable"
+        ));
+    }
+    let max_batch = args.opt_usize("batch")?.unwrap_or(8).max(1);
+    let prompt_len = shared + 2;
+    let max_new = gen.clamp(1, seq - prompt_len + 1);
+    let n_shared_reqs = 5usize;
+    let n_cold = 3usize;
+    let cfg = EngineConfig {
+        max_batch,
+        queue_capacity: (n_shared_reqs + n_cold + 1) * 2,
+        max_active: max_batch,
+        prefill_chunk: kv_block,
+        kv_block,
+        // single replica (chaos injects transient Errs): retry through
+        unhealthy_after: usize::MAX,
+        ..EngineConfig::default()
+    };
+
+    let modes: &[bool] = if args.flag("chaos") { &[false, true] } else { &[false] };
+    for &chaos in modes {
+        let engine = if chaos {
+            let cs = ChaosScorer::new(scorer.clone())
+                // call 1 always faults, so the retry assertion below is
+                // deterministic
+                .with_fault(1, Fault::Err)
+                .seeded(0x9afe, 4, 24, false);
+            Engine::start_shared(std::sync::Arc::new(cs), cfg.clone())
+        } else {
+            Engine::start_shared(scorer.clone(), cfg.clone())
+        };
+        // identical seeded workload in both modes
+        let mut rng = Rng::seed(0x5ea9);
+        let sys: Vec<u32> = (0..shared).map(|_| rng.below(dims.vocab) as u32).collect();
+        let suffix =
+            |rng: &mut Rng| -> Vec<u32> { (0..2).map(|_| rng.below(dims.vocab) as u32).collect() };
+        let warm: Vec<u32> = sys.iter().copied().chain(suffix(&mut rng)).collect();
+        let shared_reqs: Vec<Vec<u32>> = (0..n_shared_reqs)
+            .map(|_| sys.iter().copied().chain(suffix(&mut rng)).collect())
+            .collect();
+        let colds: Vec<Vec<u32>> = (0..n_cold)
+            .map(|_| (0..prompt_len).map(|_| rng.below(dims.vocab) as u32).collect())
+            .collect();
+
+        let client = engine.client();
+        let params = SamplingParams::greedy(max_new);
+        let t0 = std::time::Instant::now();
+        // the warm request prefills the shared prompt cold; completing
+        // its prefill publishes the committed blocks into the index, so
+        // it is awaited before the mixed shared/cold wave goes in
+        let got_warm = client.generate(warm.clone(), params.clone())?.wait()?;
+        let pendings: Vec<_> = shared_reqs
+            .iter()
+            .chain(&colds)
+            .map(|p| client.generate(p.clone(), params.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut answers = vec![(warm.clone(), got_warm)];
+        for (p, pend) in shared_reqs.iter().chain(&colds).zip(pendings) {
+            answers.push((p.clone(), pend.wait()?));
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let summary = engine.shutdown();
+        let tag = if chaos { " (chaos)" } else { "" };
+
+        // bitwise parity: a cache-hit generation must be
+        // indistinguishable from a cold one
+        for (prompt, got) in &answers {
+            let (toks, lps) = greedy_decode_recompute(scorer, prompt, max_new)?;
+            if got.tokens != toks
+                || got.logps.len() != lps.len()
+                || got.logps.iter().zip(&lps).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(anyhow!(
+                    "shared-prefix{tag}: a cached-prefix generation diverged \
+                     from the full-recompute decode"
+                ));
+            }
+        }
+        println!(
+            "shared-prefix{tag}: {} requests ({} sharing a {shared}-token \
+             system prompt, {n_cold} cold) in {secs:.3}s — bitwise equal \
+             to full recompute",
+            answers.len(),
+            n_shared_reqs + 1
+        );
+        println!("  {summary}");
+        if summary.prefix_hits < 1.0 || summary.prefix_tokens_saved < 1.0 {
+            return Err(anyhow!(
+                "--shared-prefix{tag}: the prefix cache never fired \
+                 ({} hits, {} tokens saved)",
+                summary.prefix_hits,
+                summary.prefix_tokens_saved
+            ));
+        }
+        if summary.kv_blocks_pinned != 0.0 {
+            return Err(anyhow!(
+                "--shared-prefix{tag}: {} KV blocks still pinned after \
+                 shutdown (prefix refcount leak)",
+                summary.kv_blocks_pinned
+            ));
+        }
+        if chaos && summary.retries < 1.0 {
+            return Err(anyhow!(
+                "--shared-prefix --chaos: no injected fault was retried"
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -434,6 +588,7 @@ USAGE:
                     --requests=64 --seq=64 --layers=4 --rank=8 --gen=N
                     --max-active=N --arena-blocks=N --kv-block=N
                     --sample --stream --expect-preemption
+                    --shared-prefix=N
                     --chaos --expect-retries --smoke]
                                       native engine serving benchmark:
                                       per-sequence vs coalesced ragged
@@ -452,6 +607,15 @@ USAGE:
                                       + bit-exact resume, and
                                       --expect-preemption fails the run if
                                       no eviction happened;
+                                      --shared-prefix=N runs a request mix
+                                      sharing an N-token system prompt
+                                      through the cross-request prefix
+                                      cache: later requests attach the
+                                      cached KV blocks and prefill only
+                                      their suffix (verified bitwise vs
+                                      full recompute; fails unless hits
+                                      fired, tokens were saved, and no
+                                      pinned block survives shutdown);
                                       --chaos re-runs the engine under
                                       seeded fault injection (scheduled
                                       Errs/delays) and verifies every

@@ -445,6 +445,20 @@ fn check_cache_step(
 /// for a 0-token suffix, cache untouched). Errs — never panics — when
 /// the step would overflow the model window, a token id is out of
 /// vocabulary, or the cache was built for a different geometry.
+///
+/// A "cold" cache here may already hold positions it never computed:
+/// the engine's cross-request prefix cache attaches runs of **whole
+/// committed blocks** from an earlier request of the same prompt (see
+/// `engine::prefix` and [`KvCache::attach_prefix`]). Because committed
+/// K/V planes are a pure function of the token prefix (chunked ==
+/// one-shot, K rotated by absolute position) and [`attend_cached`]
+/// walks segments by ascending absolute position regardless of block
+/// ownership, a suffix forward over an attached prefix is bitwise
+/// identical to re-prefilling the whole prompt. Any partially-filled
+/// boundary block is never shared — the tail past the last whole block
+/// is re-prefilled privately into freshly reserved blocks, so this
+/// function only ever appends into blocks the cache exclusively owns
+/// (copy-on-write, enforced by the arena's refcounts).
 // lint: allow(indexing) — token rows validated by check_cache_step; family
 // and layer indices are loop-bounded
 pub fn forward_trace_with_cache(

@@ -42,6 +42,25 @@
 //! scores one choice's suffix, truncates back to the prompt, and scores
 //! the next choice — bitwise-stable across choices because every row is
 //! fully rewritten before it is ever read back.
+//!
+//! # Block sharing and refcounts
+//!
+//! Blocks are handed out as [`Arc`] handles and the arena keeps a
+//! per-block reference count, so one committed block can back **many**
+//! sequences at once — the substrate of the cross-request prefix cache
+//! (`engine::prefix`). [`KvArena::retain`] adds a holder to an
+//! already-allocated block; every release path ([`KvCache::truncate`],
+//! [`KvCache::clear`], `Drop`, the prefix index evicting an entry) only
+//! *decrements*, and a block returns to the free pool exactly when the
+//! last holder lets go. Sharing is copy-on-write at the tail:
+//! [`KvCache::extend_layer`] refuses (panics, see below) to write a block
+//! it does not exclusively own, so a sequence extending a shared prefix
+//! must grow with freshly reserved private blocks — the engine attaches
+//! only *whole* shared blocks and re-prefills any partially-filled
+//! boundary privately, which is what keeps a cache-hit prefill bitwise
+//! identical to a cold one. Attaching a shared block costs no arena
+//! capacity: `blocks_in_use` counts *distinct* resident blocks, not
+//! holders.
 
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -130,22 +149,30 @@ pub const DEFAULT_BLOCK_POSITIONS: usize = 32;
 
 /// One fixed-size arena block: for every layer, a rotated-K and a raw-V
 /// plane of `block_size` positions in head-major layout
-/// `[n_heads, block_size, head_dim]`. Blocks are owned storage that moves
-/// between the arena free pool and a cache's block table; contents are
-/// *not* cleared on free — every position is fully overwritten by
-/// `extend_layer` before attention ever reads it.
+/// `[n_heads, block_size, head_dim]`. Blocks live behind [`Arc`] handles
+/// so a committed block can be shared by several caches and the prefix
+/// index at once; the arena tracks one refcount per block `id` and moves
+/// a block back to the free pool only when the last holder releases it.
+/// Contents are *not* cleared on free — every position is fully
+/// overwritten by `extend_layer` before attention ever reads it.
 pub(crate) struct KvBlock {
+    /// dense index into the arena's refcount table, assigned at creation
+    id: usize,
     /// per layer, head-major `[n_heads, block_size, head_dim]`
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
 
 struct ArenaState {
-    free: Vec<KvBlock>,
+    free: Vec<Arc<KvBlock>>,
     /// blocks materialized so far (free + in use); bounded by
     /// `max_blocks`, and the bound the no-leak test pins
     created: usize,
+    /// distinct blocks with refcount >= 1 (holders beyond the first are
+    /// residency-free: sharing a block never consumes arena capacity)
     in_use: usize,
+    /// per-block holder counts, indexed by `KvBlock::id`
+    refs: Vec<usize>,
 }
 
 /// Shared bounded pool of KV position blocks for one model geometry.
@@ -156,7 +183,8 @@ struct ArenaState {
 /// all-or-nothing under one lock, so concurrent callers can never
 /// observe a partially granted reservation. Freed blocks are recycled
 /// (stale contents are safe — see [`KvBlock`]), so steady-state serving
-/// allocates no new storage.
+/// allocates no new storage. Shared holders ([`KvArena::retain`]) only
+/// add refcount; a block is freed exactly once, by its last release.
 pub struct KvArena {
     d_model: usize,
     n_layers: usize,
@@ -183,7 +211,12 @@ impl KvArena {
             window: dims.seq,
             block_size: bs,
             max_blocks,
-            inner: Mutex::new(ArenaState { free: Vec::new(), created: 0, in_use: 0 }),
+            inner: Mutex::new(ArenaState {
+                free: Vec::new(),
+                created: 0,
+                in_use: 0,
+                refs: Vec::new(),
+            }),
         })
     }
 
@@ -202,7 +235,8 @@ impl KvArena {
         self.max_blocks
     }
 
-    /// Blocks currently held by caches.
+    /// Distinct blocks currently resident (held by at least one cache or
+    /// by the prefix index). Extra holders of a shared block don't count.
     pub fn blocks_in_use(&self) -> usize {
         self.inner.lock().unwrap().in_use
     }
@@ -228,16 +262,20 @@ impl KvArena {
         positions.div_ceil(self.block_size)
     }
 
-    fn fresh_block(&self) -> KvBlock {
+    fn fresh_block(&self, id: usize) -> KvBlock {
         let plane = self.n_heads * self.block_size * self.head_dim;
         KvBlock {
+            id,
             k: (0..self.n_layers).map(|_| vec![0.0; plane]).collect(),
             v: (0..self.n_layers).map(|_| vec![0.0; plane]).collect(),
         }
     }
 
     /// Take `n` blocks, all or nothing: `None` leaves the arena unchanged.
-    fn alloc_n(&self, n: usize) -> Option<Vec<KvBlock>> {
+    /// Each granted block starts with refcount 1 (the caller).
+    // lint: allow(indexing) — block ids are dense indices into `refs` by
+    // construction (id < created == refs.len())
+    fn alloc_n(&self, n: usize) -> Option<Vec<Arc<KvBlock>>> {
         let mut g = self.inner.lock().unwrap();
         if g.in_use + n > self.max_blocks {
             return None;
@@ -247,35 +285,82 @@ impl KvArena {
             let b = match g.free.pop() {
                 Some(b) => b,
                 None => {
+                    let id = g.created;
                     g.created += 1;
-                    self.fresh_block()
+                    g.refs.push(0);
+                    Arc::new(self.fresh_block(id))
                 }
             };
+            g.refs[b.id] = 1;
             out.push(b);
         }
         g.in_use += n;
         Some(out)
     }
 
-    fn free_blocks(&self, blocks: Vec<KvBlock>) {
+    /// Add one holder to each already-resident block and return the new
+    /// handles. Costs no arena capacity: the blocks are already counted
+    /// in `blocks_in_use`. This is how the prefix index pins committed
+    /// blocks and how a cache attaches a shared prefix.
+    // lint: allow(indexing) — block ids are dense indices into `refs` by
+    // construction (id < created == refs.len())
+    pub(crate) fn retain(&self, blocks: &[Arc<KvBlock>]) -> Vec<Arc<KvBlock>> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(blocks.len());
+        for b in blocks {
+            debug_assert!(g.refs[b.id] > 0, "retain of a non-resident block");
+            g.refs[b.id] += 1;
+            out.push(b.clone());
+        }
+        out
+    }
+
+    /// Drop one holder per handle. A block whose refcount reaches zero
+    /// returns to the free pool (its `Arc` then has a single strong
+    /// reference again, so the next allocator may write it); a block with
+    /// surviving holders stays resident, untouched. Every release path —
+    /// cache drop/clear/truncate, prefix-index eviction — funnels here,
+    /// which is what makes "decrement exactly once per holder"
+    /// structural.
+    // lint: allow(indexing) — block ids are dense indices into `refs` by
+    // construction (id < created == refs.len())
+    pub(crate) fn release(&self, blocks: Vec<Arc<KvBlock>>) {
         if blocks.is_empty() {
             return;
         }
         let mut g = self.inner.lock().unwrap();
-        g.in_use -= blocks.len();
-        g.free.extend(blocks);
+        for b in blocks {
+            debug_assert!(g.refs[b.id] > 0, "release of a non-resident block");
+            g.refs[b.id] -= 1;
+            if g.refs[b.id] == 0 {
+                g.in_use -= 1;
+                g.free.push(b);
+            }
+        }
+    }
+
+    /// Current holder count of one block handle. `1` means the caller is
+    /// the sole holder (the block is unpinned and evicting it would
+    /// actually free arena capacity); `> 1` means it is shared with a
+    /// live cache.
+    // lint: allow(indexing) — block ids are dense indices into `refs` by
+    // construction (id < created == refs.len())
+    pub(crate) fn handle_refs(&self, block: &Arc<KvBlock>) -> usize {
+        self.inner.lock().unwrap().refs[block.id]
     }
 }
 
 /// Growable per-sequence key/value cache: for each layer, the rotated K
 /// and raw V projections of every position seen so far, stored as a
-/// table of [`KvArena`] blocks. [`KvCache::bytes`] is the *blocks-in-use*
+/// table of [`KvArena`] blocks. [`KvCache::bytes`] is the *blocks-held*
 /// resident footprint — the number a residency-priced scheduler accounts
 /// against — and grows by one [`KvArena::block_bytes`] step per
-/// [`KvArena::block_size`] positions.
+/// [`KvArena::block_size`] positions. A cache may share whole committed
+/// blocks with other holders (see [`KvCache::attach_prefix`]); it only
+/// ever *writes* blocks it exclusively owns.
 pub struct KvCache {
     arena: Arc<KvArena>,
-    blocks: Vec<KvBlock>,
+    blocks: Vec<Arc<KvBlock>>,
     len: usize,
 }
 
@@ -351,22 +436,51 @@ impl KvCache {
         }
     }
 
+    /// Seed an **empty** cache with already-committed shared blocks
+    /// covering `positions` positions (a whole number of blocks — partial
+    /// boundary blocks are never shared; the engine re-prefills them
+    /// privately). The handles must already carry this holder's refcount
+    /// (come from [`KvArena::retain`]); attaching consumes no arena
+    /// capacity. Subsequent appends land in freshly reserved private
+    /// blocks, so the copy-on-write rule of [`KvCache::extend_layer`]
+    /// holds by construction.
+    pub(crate) fn attach_prefix(&mut self, blocks: Vec<Arc<KvBlock>>, positions: usize) {
+        debug_assert!(self.blocks.is_empty() && self.len == 0, "attach into a non-empty cache");
+        debug_assert_eq!(
+            positions,
+            blocks.len() * self.arena.block_size,
+            "attached prefix must be whole blocks"
+        );
+        debug_assert!(positions <= self.arena.window);
+        self.blocks = blocks;
+        self.len = positions;
+    }
+
+    /// The block handles backing this cache, in position order — what the
+    /// prefix index retains when a finished sequence's committed prefix
+    /// is published for reuse.
+    pub(crate) fn block_handles(&self) -> &[Arc<KvBlock>] {
+        &self.blocks
+    }
+
     /// Return any blocks not needed to hold the committed `len` positions
     /// to the arena (undo of a [`KvCache::reserve`] that was never
-    /// committed — the batched forward's error path).
+    /// committed — the batched forward's error path). Shared blocks are
+    /// merely released (refcount decrement), never clobbered.
     pub(crate) fn release_uncommitted(&mut self) {
         let keep = self.arena.blocks_for(self.len);
         if self.blocks.len() > keep {
             let excess = self.blocks.split_off(keep);
-            self.arena.free_blocks(excess);
+            self.arena.release(excess);
         }
     }
 
     /// Roll back to a shorter prefix (`n <= len`). Rows past `n` are
-    /// logically discarded and whole blocks past the prefix return to the
-    /// arena; the next append overwrites every surviving stale row before
-    /// it is read, so replaying the same suffix reproduces
-    /// bitwise-identical state.
+    /// logically discarded and whole blocks past the prefix are released
+    /// to the arena (a *decrement* — blocks also pinned by the prefix
+    /// index stay resident for other holders); the next append overwrites
+    /// every surviving stale row before it is read, so replaying the same
+    /// suffix reproduces bitwise-identical state.
     pub fn truncate(&mut self, n: usize) {
         // lint: allow(panic) — caller contract (n <= len), pinned by the
         // should_panic unit test below; engine callers truncate to their
@@ -376,16 +490,19 @@ impl KvCache {
         self.release_uncommitted();
     }
 
-    /// Drop every cached position and return all blocks to the arena.
+    /// Drop every cached position and release all held blocks (shared
+    /// ones stay resident for their other holders).
     pub fn clear(&mut self) {
         self.len = 0;
         let blocks = std::mem::take(&mut self.blocks);
-        self.arena.free_blocks(blocks);
+        self.arena.release(blocks);
     }
 
-    /// Resident memory actually held right now, in bytes: blocks in use ×
-    /// [`KvArena::block_bytes`]. Grows and shrinks with the sequence —
-    /// this is the number `serve.kv_bytes` tracks.
+    /// Resident memory held via this cache right now, in bytes: blocks
+    /// held × [`KvArena::block_bytes`]. Grows and shrinks with the
+    /// sequence — this is the number `serve.kv_bytes` tracks. (Blocks
+    /// shared with other holders are counted by each holder; the
+    /// deduplicated fleet number is `blocks_in_use × block_bytes`.)
     pub fn bytes(&self) -> usize {
         self.blocks.len() * self.arena.block_bytes()
     }
@@ -403,6 +520,12 @@ impl KvCache {
     /// [`KvCache::reserve`]d the growth. Every layer of a forward step
     /// appends with the *same* base position; [`KvCache::commit`]
     /// advances `len` once after all layers ran.
+    ///
+    /// Copy-on-write enforcement: a write targets `Arc::get_mut`, which
+    /// only yields the block when this cache is its sole holder. Shared
+    /// prefixes are attached whole-block ([`KvCache::attach_prefix`]) and
+    /// appends start past them in freshly reserved private blocks, so the
+    /// exclusive-ownership check holds on every correct path.
     // lint: allow(indexing) — block/row offsets are bounded by the
     // debug-checked reserve contract (blocks_for(len+n) <= blocks.len())
     pub(crate) fn extend_layer(
@@ -422,8 +545,15 @@ impl KvCache {
         let (hd, bs) = (self.arena.head_dim, self.arena.block_size);
         for i in 0..n {
             let pos = self.len + i;
-            let block = &mut self.blocks[pos / bs];
             let row = pos % bs;
+            let block = match Arc::get_mut(&mut self.blocks[pos / bs]) {
+                Some(b) => b,
+                // lint: allow(panic) — copy-on-write backstop: appends only
+                // target positions past the whole-block attach boundary, in
+                // freshly reserved sole-owner blocks; writing a shared block
+                // is a scheduler bug, not a servable state (should_panic test)
+                None => panic!("KV copy-on-write violation: append into shared block at {pos}"),
+            };
             let kb = &mut block.k[layer];
             let vb = &mut block.v[layer];
             let krow = k.row(r0 + i);
@@ -448,7 +578,8 @@ impl KvCache {
     /// contributes one `(k, v)` pair of [`KvArena::block_size`] whole
     /// `head_dim` rows ([`KvCache::blocks_held`] segments per head).
     /// Rows beyond the valid length are garbage the attention kernel
-    /// never reads (it stops at the causal bound).
+    /// never reads (it stops at the causal bound). Shared blocks read
+    /// exactly like private ones — attention never writes.
     // lint: allow(indexing) — layer < n_layers and o+seg <= plane length by
     // arena construction
     pub(crate) fn layer_segments(&self, layer: usize) -> Vec<(&[f32], &[f32])> {
@@ -468,7 +599,7 @@ impl KvCache {
 impl Drop for KvCache {
     fn drop(&mut self) {
         let blocks = std::mem::take(&mut self.blocks);
-        self.arena.free_blocks(blocks);
+        self.arena.release(blocks);
     }
 }
 
@@ -593,6 +724,106 @@ mod tests {
         }
         assert_eq!(arena.blocks_created(), created);
         assert!(created <= 3);
+    }
+
+    #[test]
+    fn shared_blocks_free_only_after_last_release() {
+        let d = dims();
+        let arena = KvArena::new(&d, 4, 3);
+        let mut a = arena.new_cache();
+        a.reserve(8).unwrap();
+        a.commit(8);
+        assert_eq!(arena.blocks_in_use(), 2);
+
+        // pin both committed blocks as a second holder (the prefix-index
+        // role): no extra arena capacity is consumed
+        let pinned = arena.retain(a.block_handles());
+        assert_eq!(arena.blocks_in_use(), 2);
+        assert_eq!(arena.handle_refs(&pinned[0]), 2);
+
+        // the first holder leaving keeps the blocks resident
+        drop(a);
+        assert_eq!(arena.blocks_in_use(), 2);
+        assert_eq!(arena.blocks_free(), 1);
+        assert_eq!(arena.handle_refs(&pinned[0]), 1);
+
+        // a newcomer can take the one truly free block, but not the two
+        // still pinned: the shared blocks are reused only after the LAST
+        // release
+        let mut c = arena.new_cache();
+        c.reserve(4).unwrap();
+        assert!(c.reserve(8).is_err());
+        arena.release(pinned);
+        assert_eq!(arena.blocks_in_use(), 1);
+        c.reserve(8).unwrap();
+        assert_eq!(arena.blocks_in_use(), 3);
+        // recycling, not growth: the churn stayed within the 3 ever created
+        assert!(arena.blocks_created() <= 3);
+    }
+
+    #[test]
+    fn attach_prefix_shares_committed_blocks_positionally() {
+        let d = dims();
+        let arena = KvArena::new(&d, 4, 4);
+        let rope = RopeTable::new(d.seq, d.head_dim());
+        let k = Mat::full(8, d.d_model, 1.0);
+        let v = Mat::full(8, d.d_model, 2.0);
+        let mut a = arena.new_cache();
+        a.reserve(8).unwrap();
+        for l in 0..d.n_layers {
+            a.extend_layer(l, &rope, &k, &v, 0, 8);
+        }
+        a.commit(8);
+
+        // attach the two committed whole blocks to a fresh cache
+        let shared = arena.retain(a.block_handles());
+        let mut b = arena.new_cache();
+        b.attach_prefix(shared, 8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(b.blocks_held(), 2);
+        assert_eq!(arena.blocks_in_use(), 2);
+        // both caches read identical bits from the shared planes
+        for l in 0..d.n_layers {
+            let sa = a.layer_segments(l);
+            let sb = b.layer_segments(l);
+            assert_eq!(sa.len(), sb.len());
+            for ((ka, va), (kb, vb)) in sa.iter().zip(sb.iter()) {
+                assert!(std::ptr::eq(*ka, *kb) && std::ptr::eq(*va, *vb));
+            }
+        }
+        // b grows past the shared prefix into its own private block
+        b.reserve(2).unwrap();
+        for l in 0..d.n_layers {
+            b.extend_layer(l, &rope, &k, &v, 0, 2);
+        }
+        b.commit(2);
+        assert_eq!(b.len(), 10);
+        assert_eq!(arena.blocks_in_use(), 3);
+        drop(b);
+        assert_eq!(arena.blocks_in_use(), 2);
+        drop(a);
+        assert_eq!(arena.blocks_in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-write")]
+    fn writing_a_shared_block_panics() {
+        let d = dims();
+        let arena = KvArena::new(&d, 4, 4);
+        let rope = RopeTable::new(d.seq, d.head_dim());
+        let k = Mat::full(4, d.d_model, 1.0);
+        let v = Mat::full(4, d.d_model, 2.0);
+        let mut a = arena.new_cache();
+        a.reserve(4).unwrap();
+        for l in 0..d.n_layers {
+            a.extend_layer(l, &rope, &k, &v, 0, 4);
+        }
+        a.commit(4);
+        let mut b = arena.new_cache();
+        b.attach_prefix(arena.retain(a.block_handles()), 4);
+        // roll b back INTO the shared block and try to append over it
+        b.truncate(2);
+        b.extend_layer(0, &rope, &k, &v, 0, 1);
     }
 
     #[test]

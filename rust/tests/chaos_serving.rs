@@ -6,7 +6,9 @@
 //!
 //! 1. **every `Pending` resolves** — Ok or Err, never a hang;
 //! 2. **the KV arena drains** — `blocks_in_use() == 0` once the traffic
-//!    is answered, faults and failovers included;
+//!    is answered, faults, failovers, and cross-request prefix-cache
+//!    pins included (every abort path releases shared blocks exactly
+//!    once);
 //! 3. **retried work is bitwise-identical to a fault-free run** — a
 //!    score that survived a retry, or a generation that failed over to a
 //!    peer replica mid-decode, returns exactly the tokens/logps of the
@@ -255,6 +257,111 @@ fn delay_faults_trip_deadlines() {
         "the expiry was counted neither as a shed nor as a mid-decode abort"
     );
     assert_eq!(arena.blocks_in_use(), 0, "the deadline abort leaked arena blocks");
+}
+
+/// Prefix cache under chaos (the PR-8 × prefix-index interaction):
+/// shared-prompt generations attach cached KV blocks while seeded `Err`
+/// faults force preempt/replay, one request is cancelled mid-flight and
+/// one arrives with an expired deadline — every surviving answer is
+/// bitwise identical to the fault-free decode, and after the drain the
+/// arena holds zero blocks and the index zero pins: every abort, retry,
+/// and cancellation path decremented its prefix refcounts exactly once.
+#[test]
+fn prefix_cache_survives_faults_cancellation_and_deadlines() {
+    let clean = packed_scorer(79);
+    let d = clean.dims().clone();
+    let chaos =
+        ChaosScorer::new(clean.clone()).with_fault(1, Fault::Err).seeded(0xca5e, 6, 20, false);
+    let engine = Engine::start_shared(
+        Arc::new(chaos),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            // 8-token shared system prompt = 2 whole blocks of 4
+            kv_block: 4,
+            max_retries: 12,
+            unhealthy_after: usize::MAX,
+            retry_backoff: Duration::from_millis(1),
+            ..EngineConfig::default()
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+    let mut rng = Rng::seed(80);
+    let sys: Vec<u32> = (0..8).map(|_| rng.below(d.vocab) as u32).collect();
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|_| {
+            let mut p = sys.clone();
+            p.extend((0..2).map(|_| rng.below(d.vocab) as u32));
+            p
+        })
+        .collect();
+    let max_new = 4usize;
+    let want: Vec<_> =
+        prompts.iter().map(|p| greedy_decode(clean.as_ref(), p, max_new).unwrap()).collect();
+
+    // warm the index: the first shared-prompt generation publishes the
+    // system prompt's committed blocks, retrying through call 1's
+    // scheduled fault on the way
+    let warm = client
+        .generate(prompts[0].clone(), SamplingParams::greedy(max_new))
+        .unwrap()
+        .wait_timeout(Duration::from_secs(60))
+        .expect("warm generation did not resolve under faults");
+    assert_eq!(&warm.tokens, &want[0].0, "warm decode diverged under faults");
+
+    // mixed abandonment wave, all sharing the cached prefix: one served,
+    // one cancelled mid-flight, one dead on arrival (expired deadline)
+    let live = client.generate(prompts[1].clone(), SamplingParams::greedy(max_new)).unwrap();
+    let doomed = client.generate(prompts[2].clone(), SamplingParams::greedy(max_new)).unwrap();
+    let expired = client
+        .generate_with(
+            prompts[3].clone(),
+            SamplingParams::greedy(max_new),
+            &SubmitOptions::with_deadline(Duration::from_millis(0)),
+        )
+        .unwrap();
+    doomed.cancel();
+    let got = live
+        .wait_timeout(Duration::from_secs(60))
+        .expect("shared-prefix generation did not resolve under faults");
+    assert_eq!(&got.tokens, &want[1].0, "cached-prefix decode diverged under faults");
+    assert_eq!(got.logps.len(), want[1].1.len());
+    for (a, b) in got.logps.iter().zip(&want[1].1) {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "cached-prefix logp not bitwise identical ({a} vs {b})"
+        );
+    }
+    let err = doomed
+        .wait_timeout(Duration::from_secs(60))
+        .expect_err("a cancelled generation must resolve Err");
+    assert!(format!("{err}").contains("cancelled"), "{err}");
+    let err = expired
+        .wait_timeout(Duration::from_secs(60))
+        .expect_err("an expired generation must resolve Err");
+    assert!(format!("{err}").contains("deadline"), "{err}");
+
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(summary.retries >= 1.0, "the scheduled call-1 fault was never retried");
+    assert!(summary.prefix_hits >= 1.0, "no shared prompt ever hit the index");
+    assert!(
+        summary.prefix_tokens_saved >= 8.0,
+        "the cached system prompt was re-prefilled: {} tokens saved",
+        summary.prefix_tokens_saved
+    );
+    assert!(summary.cancelled >= 1.0, "the cancellation was never counted");
+    assert!(
+        summary.shed + summary.deadline_aborts >= 1.0,
+        "the expired request was neither shed nor aborted"
+    );
+    // the load-bearing invariant: faults, cancellation, and deadline
+    // aborts all released their shared-block holds exactly once
+    assert_eq!(summary.kv_blocks_pinned, 0.0, "index pins survived the drain");
+    assert_eq!(arena.blocks_in_use(), 0, "faulted/cancelled traffic leaked arena blocks");
 }
 
 /// The harness itself is deterministic: the same seed yields the same

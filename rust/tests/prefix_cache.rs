@@ -1,0 +1,305 @@
+//! Integration tests for the cross-request radix prefix cache
+//! (`rilq::engine::prefix`): trie shape under insert / longest-match /
+//! node-split, LRU eviction ordering (oldest leaf first, pinned blocks
+//! skipped), refcount round-trips through the arena free list, the
+//! bitwise pin — prefill over an attached cached prefix produces
+//! logits identical (`to_bits`) to a cold prefill on every backend —
+//! and the engine-level scheduling contract that index eviction
+//! absorbs arena pressure before any decode is preempted.
+
+use std::sync::Arc;
+
+use rilq::engine::{Engine, EngineConfig, PrefixIndex, SamplingParams};
+use rilq::eval::{greedy_decode, BackendScorer, Scorer};
+use rilq::model::backend::BackendKind;
+use rilq::model::{KvArena, ModelDims, StudentWeights, TeacherParams};
+use rilq::quant::{by_name, CalibCtx};
+use rilq::tensor::Rng;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        name: "prefix".into(),
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 48,
+        seq: 16,
+        batch: 4,
+        group_size: 8,
+    }
+}
+
+fn backend_scorer(kind: BackendKind, seed: u64) -> Arc<BackendScorer> {
+    let d = dims();
+    let mut rng = Rng::seed(seed);
+    let teacher = TeacherParams::init(&d, &mut rng);
+    let quant = by_name("rtn", 2, d.group_size).unwrap();
+    let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
+        CalibCtx::default()
+    });
+    Arc::new(BackendScorer::new(&d, &teacher, &student, None, kind).unwrap())
+}
+
+fn packed_scorer(seed: u64) -> Arc<BackendScorer> {
+    backend_scorer(BackendKind::Packed, seed)
+}
+
+/// Insert, longest-match lookup, and boundary-only node splitting: a
+/// second sequence that shares the first two blocks of an existing
+/// three-block entry splits its edge at the block boundary (old tail
+/// becomes a grandchild), dedupes the shared blocks (the existing path
+/// wins), and re-inserting a contained sequence is a pure touch.
+#[test]
+fn insert_longest_match_and_node_split() {
+    let scorer = packed_scorer(90);
+    let d = dims();
+    let arena = KvArena::new(&d, 4, 6);
+    let mut ix = PrefixIndex::new(arena.clone());
+
+    // blocks [0 0 0 0][1 1 1 1][2 2 2 2]
+    let s1: Vec<u32> = (0..12).map(|i| (i / 4) as u32).collect();
+    // shares the first two blocks, diverges in the third
+    let mut s2 = s1[..8].to_vec();
+    s2.extend([9, 9, 9, 9]);
+
+    let mut ca = arena.new_cache();
+    scorer.cache_forward(&s1, &mut ca).unwrap();
+    ix.insert(&s1, &ca);
+    assert_eq!(ix.node_count(), 1, "one sequence is one edge");
+    assert_eq!(ix.blocks_held(), 3);
+
+    // longest-match is block-granular and respects the caller's limit
+    assert_eq!(ix.peek(&s1, 12), 12);
+    assert_eq!(ix.peek(&s1, 9), 8, "limit rounds down to whole blocks");
+    assert_eq!(ix.peek(&s1, 3), 0, "sub-block limit matches nothing");
+    assert_eq!(ix.peek(&s2, 12), 8, "partial edge match is usable");
+    assert_eq!(ix.peek(&[7, 7, 7, 7], 4), 0, "unknown first block");
+
+    let mut cb = arena.new_cache();
+    scorer.cache_forward(&s2, &mut cb).unwrap();
+    ix.insert(&s2, &cb);
+    // split at the 2-block boundary: shared edge + two one-block tails
+    assert_eq!(ix.node_count(), 3, "split must produce parent + two tails");
+    assert_eq!(ix.blocks_held(), 4, "shared blocks dedupe: only the divergent tail is new");
+    assert_eq!(ix.peek(&s1, 12), 12);
+    assert_eq!(ix.peek(&s2, 12), 12);
+
+    // re-inserting a fully contained sequence changes nothing
+    ix.insert(&s1, &ca);
+    assert_eq!(ix.node_count(), 3);
+    assert_eq!(ix.blocks_held(), 4);
+
+    // the index holds its blocks after every writer cache is gone:
+    // s1's three plus s2's divergent tail (its shared prefix blocks
+    // were duplicates and were freed with the cache)
+    drop(ca);
+    drop(cb);
+    assert_eq!(arena.blocks_in_use(), 4);
+    drop(ix);
+    assert_eq!(arena.blocks_in_use(), 0, "dropping the index must release every block");
+}
+
+/// LRU eviction takes the least-recently-used leaf first and never
+/// frees a block an attached cache still pins (arena refcount > 1);
+/// once the last outside holder releases, the same entry becomes
+/// evictable.
+#[test]
+fn evict_lru_prefers_oldest_and_skips_pinned() {
+    let scorer = packed_scorer(91);
+    let d = dims();
+    let arena = KvArena::new(&d, 4, 6);
+    let mut ix = PrefixIndex::new(arena.clone());
+
+    let s1: Vec<u32> = vec![1; 8];
+    let s2: Vec<u32> = vec![2; 8];
+    let mut ca = arena.new_cache();
+    scorer.cache_forward(&s1, &mut ca).unwrap();
+    ix.insert(&s1, &ca);
+    let mut cb = arena.new_cache();
+    scorer.cache_forward(&s2, &mut cb).unwrap();
+    ix.insert(&s2, &cb);
+    drop(ca);
+    drop(cb);
+    assert_eq!(ix.blocks_held(), 4);
+    assert_eq!(arena.blocks_in_use(), 4);
+
+    // attaching s1 refreshes its recency AND pins its blocks
+    let mut live = arena.new_cache();
+    assert_eq!(ix.attach(&s1, 8, &mut live), 8);
+    assert_eq!(live.len(), 8);
+
+    // under pressure the stale s2 leaf goes first — whole leaf, even
+    // though only one block was asked for
+    assert_eq!(ix.evict_lru(1), 2, "LRU leaf is released in full");
+    assert_eq!(ix.blocks_held(), 2);
+    assert_eq!(ix.peek(&s2, 8), 0, "evicted entry no longer matches");
+    assert_eq!(ix.peek(&s1, 8), 8, "recently attached entry survives");
+    assert_eq!(arena.blocks_in_use(), 2);
+
+    // everything left is pinned by the live cache: eviction frees nothing
+    assert_eq!(ix.evict_lru(10), 0, "pinned blocks must never be evicted");
+    assert_eq!(ix.blocks_held(), 2);
+    assert_eq!(ix.peek(&s1, 8), 8);
+
+    // the outside holder releases; the entry is evictable again
+    drop(live);
+    assert_eq!(ix.evict_lru(10), 2);
+    assert_eq!(ix.blocks_held(), 0);
+    assert_eq!(arena.blocks_in_use(), 0);
+}
+
+/// Refcount round-trip through the free list: index-held blocks are
+/// real residency (a newcomer cannot over-reserve past them), and an
+/// evicted block is recycled — not re-created — for the next writer.
+#[test]
+fn freed_shared_blocks_recycle_only_after_last_release() {
+    let scorer = packed_scorer(92);
+    let d = dims();
+    let arena = KvArena::new(&d, 4, 2); // exactly two blocks
+    let mut ix = PrefixIndex::new(arena.clone());
+
+    let s: Vec<u32> = vec![7; 8];
+    let mut ca = arena.new_cache();
+    scorer.cache_forward(&s, &mut ca).unwrap();
+    ix.insert(&s, &ca);
+    drop(ca);
+    assert_eq!(arena.blocks_in_use(), 2, "the index keeps the blocks resident");
+    let created = arena.blocks_created();
+
+    let mut c = arena.new_cache();
+    assert!(c.reserve(4).is_err(), "index-held blocks are not free capacity");
+
+    assert_eq!(ix.evict_lru(2), 2);
+    c.reserve(8).unwrap();
+    assert_eq!(arena.blocks_in_use(), 2);
+    assert_eq!(arena.blocks_created(), created, "freed blocks recycle, never re-allocate");
+}
+
+/// The bitwise pin behind all cross-request reuse: prefilling only the
+/// suffix over an attached cached prefix yields logits bitwise
+/// identical to a cold full-prompt prefill — on every backend, and
+/// whether the suffix is fed in one shot or chunked.
+#[test]
+fn cached_prefix_prefill_is_bitwise_identical_across_backends() {
+    for kind in BackendKind::ALL {
+        let scorer = backend_scorer(kind, 93);
+        let d = dims();
+        let arena = KvArena::new(&d, 4, 8);
+        let mut ix = PrefixIndex::new(arena.clone());
+        let mut rng = Rng::seed(94);
+        let prompt_a: Vec<u32> = (0..10).map(|_| rng.below(d.vocab) as u32).collect();
+        let mut prompt_b = prompt_a[..8].to_vec();
+        prompt_b.extend((0..4).map(|_| rng.below(d.vocab) as u32));
+
+        // publish prompt_a's whole blocks (10 tokens -> 2 of 4-pos blocks)
+        let mut ca = arena.new_cache();
+        scorer.cache_forward(&prompt_a, &mut ca).unwrap();
+        ix.insert(&prompt_a, &ca);
+        drop(ca);
+        assert_eq!(arena.blocks_in_use(), 2, "[{kind:?}] only whole blocks are published");
+
+        // cold baseline: full prefill of prompt_b in a fresh cache
+        let mut cc = arena.new_cache();
+        let lg_cold = scorer.cache_forward(&prompt_b, &mut cc).unwrap();
+        assert_eq!(lg_cold.rows(), 12);
+
+        // warm: attach the shared 8-token prefix, forward only the suffix
+        let mut cw = arena.new_cache();
+        assert_eq!(ix.attach(&prompt_b, prompt_b.len(), &mut cw), 8, "[{kind:?}]");
+        let lg_warm = scorer.cache_forward(&prompt_b[8..], &mut cw).unwrap();
+        assert_eq!(lg_warm.rows(), 4);
+        for i in 0..4 {
+            for (a, b) in lg_warm.row(i).iter().zip(lg_cold.row(8 + i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "[{kind:?}] warm suffix row {i} drifted");
+            }
+        }
+        assert_eq!(cw.len(), cc.len());
+
+        // chunked warm prefill (the engine feeds suffixes in chunks)
+        let mut cw2 = arena.new_cache();
+        assert_eq!(ix.attach(&prompt_b, prompt_b.len(), &mut cw2), 8);
+        let lg_c1 = scorer.cache_forward(&prompt_b[8..10], &mut cw2).unwrap();
+        let lg_c2 = scorer.cache_forward(&prompt_b[10..12], &mut cw2).unwrap();
+        for i in 0..2 {
+            for (a, b) in lg_c1.row(i).iter().zip(lg_cold.row(8 + i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "[{kind:?}] chunk 1 row {i} drifted");
+            }
+            for (a, b) in lg_c2.row(i).iter().zip(lg_cold.row(10 + i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "[{kind:?}] chunk 2 row {i} drifted");
+            }
+        }
+
+        drop(cc);
+        drop(cw);
+        drop(cw2);
+        drop(ix);
+        assert_eq!(arena.blocks_in_use(), 0, "[{kind:?}] blocks leaked");
+    }
+}
+
+/// Eviction-under-pressure ordering at the engine level: a finished
+/// generation leaves its prefix resident in the index; when later cold
+/// decodes need those blocks back, the scheduler reclaims them from
+/// the index (`serve.prefix_evictions`) instead of preempting a live
+/// decode — and the outputs stay bitwise greedy.
+#[test]
+fn trie_eviction_fires_before_preemption_under_pressure() {
+    let scorer = packed_scorer(95);
+    let warm_prompt: Vec<u32> = vec![5; 8];
+    let cold_a: Vec<u32> = vec![6; 8];
+    let cold_b: Vec<u32> = vec![7; 8];
+    let max_new = 5;
+    let want_warm = greedy_decode(scorer.as_ref(), &warm_prompt, 1).unwrap();
+    let want_a = greedy_decode(scorer.as_ref(), &cold_a, max_new).unwrap();
+    let want_b = greedy_decode(scorer.as_ref(), &cold_b, max_new).unwrap();
+
+    let engine = Engine::start_shared(
+        scorer.clone(),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            kv_block: 4,
+            // warm prefix (2) + two live decodes (3 each) overflow by 2:
+            // exactly the index's share
+            arena_blocks: 6,
+            ..EngineConfig::default()
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+
+    // the warm generation finishes and its 8-token prefix (2 whole
+    // blocks) stays resident in the index
+    let warm =
+        client.generate(warm_prompt.clone(), SamplingParams::greedy(1)).unwrap().wait().unwrap();
+    assert_eq!(warm.tokens, want_warm.0);
+    assert_eq!(arena.blocks_in_use(), 2, "finished prefix should stay index-resident");
+
+    // two cold generations need 3 blocks each by their final step: the
+    // index must give its 2 blocks back, and nobody gets preempted
+    let pa = client.generate(cold_a.clone(), SamplingParams::greedy(max_new)).unwrap();
+    let pb = client.generate(cold_b.clone(), SamplingParams::greedy(max_new)).unwrap();
+    let ga = pa.wait().unwrap();
+    let gb = pb.wait().unwrap();
+    assert_eq!(ga.tokens, want_a.0);
+    assert_eq!(gb.tokens, want_b.0);
+    for (got, want) in [(&ga, &want_a), (&gb, &want_b)] {
+        for (x, y) in got.logps.iter().zip(&want.1) {
+            assert_eq!(x.to_bits(), y.to_bits(), "cold decode logps drifted from greedy");
+        }
+    }
+
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(
+        summary.prefix_evictions >= 1.0,
+        "the index never released blocks under pressure: {summary}"
+    );
+    assert_eq!(summary.preemptions, 0.0, "index LRU must absorb pressure before preemption");
+    assert_eq!(summary.errors, 0.0);
+    assert_eq!(summary.kv_blocks_pinned, 0.0, "index pins survived shutdown");
+    assert_eq!(arena.blocks_in_use(), 0, "arena blocks leaked through shutdown");
+}

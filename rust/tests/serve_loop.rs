@@ -1126,6 +1126,100 @@ fn shutdown_under_load_resolves_every_pending_across_backends() {
     }
 }
 
+/// Tentpole acceptance (cross-request prefix cache): a mixed wave of
+/// requests sharing an 8-token system prompt plus cold requests drains
+/// with the shared requests hitting the radix index — `prefix_hits` and
+/// `prefix_tokens_saved` fire, forwarded prefill rows shrink by exactly
+/// the saved tokens, every answer is bitwise identical to the
+/// uninterrupted single-stream decode, and shutdown leaves zero arena
+/// blocks in use (the index's pins included — no refcount leaks).
+#[test]
+fn shared_prefix_traffic_hits_cache_and_drains_bitwise() {
+    let scorer = packed_scorer(70);
+    let d = scorer.dims().clone();
+    let mut rng = Rng::seed(71);
+    // 8 shared tokens = 2 whole blocks of 4; per-request 2-token suffixes
+    let sys: Vec<u32> = (0..8).map(|_| rng.below(d.vocab) as u32).collect();
+    let shared_prompts: Vec<Vec<u32>> = (0..3)
+        .map(|_| {
+            let mut p = sys.clone();
+            p.extend((0..2).map(|_| rng.below(d.vocab) as u32));
+            p
+        })
+        .collect();
+    let cold_prompts: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..6).map(|_| rng.below(d.vocab) as u32).collect())
+        .collect();
+    let max_new = 4usize;
+    let all_prompts: Vec<Vec<u32>> =
+        shared_prompts.iter().chain(&cold_prompts).cloned().collect();
+    let want: Vec<_> = all_prompts
+        .iter()
+        .map(|p| greedy_decode(scorer.as_ref(), p, max_new).unwrap())
+        .collect();
+
+    let engine = Engine::start_shared(
+        scorer.clone(),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 4,
+            prefill_chunk: 4,
+            kv_block: 4,
+            ..EngineConfig::default() // arena auto-sized: nothing preempts
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+    // the warm request prefills the shared prompt cold; completing its
+    // prefill publishes the committed blocks, so it is awaited before
+    // the mixed shared/cold wave goes in
+    let warm = client
+        .generate(all_prompts[0].clone(), SamplingParams::greedy(max_new))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let wave: Vec<_> = all_prompts[1..]
+        .iter()
+        .map(|p| client.generate(p.clone(), SamplingParams::greedy(max_new)).unwrap())
+        .collect();
+    let mut answers = vec![warm];
+    answers.extend(wave.into_iter().map(|p| p.wait().unwrap()));
+    drop(client);
+    let summary = engine.shutdown();
+
+    for (k, (got, (toks, lps))) in answers.iter().zip(&want).enumerate() {
+        assert_eq!(&got.tokens, toks, "request {k}: cached-prefix decode diverged");
+        assert_eq!(got.logps.len(), lps.len());
+        for (a, b) in got.logps.iter().zip(lps) {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "request {k}: logp not bitwise identical ({a} vs {b})"
+            );
+        }
+    }
+    // the two later shared requests each attach the 2-block (8-token)
+    // system prompt; the cold requests miss
+    assert!(summary.prefix_hits >= 2.0, "prefix hits: {}", summary.prefix_hits);
+    assert!(
+        summary.prefix_tokens_saved >= 16.0,
+        "tokens saved: {}",
+        summary.prefix_tokens_saved
+    );
+    // saved rows were never forwarded: prefill counters account exactly
+    let total_prompt: usize = all_prompts.iter().map(Vec::len).sum();
+    assert_eq!(
+        summary.prefill_tokens + summary.prefix_tokens_saved,
+        total_prompt as f64,
+        "forwarded prefill rows + saved rows must cover every prompt token once"
+    );
+    assert_eq!(summary.preemptions, 0.0);
+    assert_eq!(summary.errors, 0.0);
+    // the drain releases every pin: no refcount leaks
+    assert_eq!(summary.kv_blocks_pinned, 0.0, "index pins survived shutdown");
+    assert_eq!(arena.blocks_in_use(), 0, "arena blocks leaked through shutdown");
+}
+
 /// A dispatch policy that always returns the same hint — out of range or
 /// pointing at an unhealthy replica — exercising the client's re-route
 /// path (the fix for the old `route(..) % txs.len()` silent clamp).

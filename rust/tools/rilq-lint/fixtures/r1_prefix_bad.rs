@@ -1,0 +1,12 @@
+// Known-bad R1 fixture shaped like the cross-request prefix index
+// (PR 9): the radix walk unwraps a child lookup, expects a block
+// handle, and indexes the refcount table directly. The unit test
+// labels this file `engine/prefix.rs` — the index is on the no-panic
+// serving surface like the rest of `engine/`. Lexed by the linter,
+// never compiled.
+pub fn attach(ix: &mut Index, tokens: &[u32]) -> usize {
+    let child = ix.children.first_mut().unwrap();
+    let block = child.blocks.last().expect("leaf holds blocks");
+    ix.refs[block.id] += 1;
+    child.tokens.len().min(tokens.len())
+}

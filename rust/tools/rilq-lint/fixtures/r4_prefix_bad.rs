@@ -1,0 +1,13 @@
+// Known-bad R4 fixture shaped like the cross-request prefix index
+// (PR 9): the arena refcount guard is still live when the cache-hit
+// suffix is forwarded — compute under the scheduler lock. Kept R1-clean
+// on purpose (`.lock().unwrap()` is exempt, no direct indexing) so the
+// unit test can pin that the `engine/prefix.rs` label trips R4 alone.
+// Lexed by the linter, never compiled.
+pub fn attach_and_prefill(ix: &Index, scorer: &S, suffix: &[u32], cache: &mut KvCache) -> Mat {
+    let mut g = ix.arena.inner.lock().unwrap();
+    g.pin_blocks(cache);
+    let lg = scorer.cache_forward(suffix, cache);
+    drop(g);
+    lg
+}

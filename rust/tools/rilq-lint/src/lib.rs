@@ -7,7 +7,8 @@
 //! crate's `lib.rs` for the human-facing write-up):
 //!
 //! * **R1 — no-panic serving surface.** `unwrap`/`expect`/`panic!`/`assert!`/
-//!   `unreachable!`/direct slice indexing are forbidden in `engine/`,
+//!   `unreachable!`/direct slice indexing are forbidden in `engine/`
+//!   (including the PR 9 cross-request prefix index, `engine/prefix.rs`),
 //!   `coordinator/serve.rs`, `model/forward.rs`, `model/kv.rs`, and
 //!   `model/backend.rs`. `.lock().unwrap()` is exempt by design: a poisoned
 //!   mutex means a sibling thread already panicked mid-mutation, and
@@ -28,7 +29,10 @@
 //!   not call `Vec::new`/`vec!`/`.to_vec(`/`.clone(`/`from_fn(`.
 //! * **R4 — lock discipline.** A mutex guard binding (`let g = ...lock()`)
 //!   may not span a call into forward/backend/scorer functions — a textual
-//!   scope check that keeps the `KvArena` mutex out of compute.
+//!   scope check that keeps the `KvArena` mutex out of compute. The prefix
+//!   index is the sharpest client: attaching a cached prefix touches the
+//!   arena refcount lock right next to the suffix forward, and R4 pins
+//!   that the guard drops before the forward starts.
 //! * **R5 — unsafe audit.** Every `unsafe` occurrence needs a `SAFETY:`
 //!   comment on the same line or within the six preceding lines.
 //!
@@ -973,6 +977,26 @@ mod tests {
     fn r4_allowed_fixture_is_clean() {
         let d = lint("quant/fixture.rs", include_str!("../fixtures/r4_allowed.rs"), &[]);
         assert!(d.is_empty(), "{}", render(&d));
+    }
+
+    #[test]
+    fn r1_covers_the_prefix_index() {
+        // the cross-request prefix index (PR 9) is on the serving
+        // surface: trie-shaped unwrap/expect/indexing all trip R1
+        let d = lint("engine/prefix.rs", include_str!("../fixtures/r1_prefix_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected R1 findings");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R1]), "{}", render(&d));
+        assert!(d.len() >= 3, "unwrap + expect + indexing all reported: {}", render(&d));
+    }
+
+    #[test]
+    fn r4_covers_the_prefix_index() {
+        // holding the arena refcount guard across a cache-hit suffix
+        // forward is exactly the deadlock shape R4 exists to catch —
+        // and the fixture is R1-clean, so the label trips R4 alone
+        let d = lint("engine/prefix.rs", include_str!("../fixtures/r4_prefix_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected an R4 finding");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R4]), "{}", render(&d));
     }
 
     #[test]
