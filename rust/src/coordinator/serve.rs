@@ -189,6 +189,35 @@ pub struct ServeSummary {
     /// routable replicas at the last health change (fleet size while
     /// everything is healthy)
     pub replicas_healthy: f64,
+    /// median time-to-first-token of generations, seconds (the SLO
+    /// series; `None` until a generation sampled its first token)
+    pub ttft_p50_secs: Option<f64>,
+    /// 99th-percentile time-to-first-token, seconds
+    pub ttft_p99_secs: Option<f64>,
+    /// 99th-percentile TTFT of the high-priority class alone — the
+    /// number overload must not move more than 2× (`None` while no
+    /// high-priority generation ran)
+    pub ttft_high_p99_secs: Option<f64>,
+    /// 99th-percentile per-token decode latency, seconds (fused-step
+    /// wall time amortized over tokens committed that step)
+    pub tok_latency_p99_secs: Option<f64>,
+    /// requests answered `Ok` *within their deadline* — goodput, vs the
+    /// raw token throughput that also counts work nobody waited for
+    pub goodput_requests: f64,
+    /// admissions rejected by the queue high-watermark (typed
+    /// `Overloaded` answers, all priorities)
+    pub overload_sheds: f64,
+    /// the high-priority slice of `overload_sheds` — the serve-bench
+    /// overload run asserts this stays 0 while the low class sheds
+    pub overload_sheds_high: f64,
+    /// admissions rejected by a tenant's empty token bucket
+    pub rate_limited: f64,
+    /// low-priority generations admitted with a brownout-capped
+    /// `max_new`
+    pub brownouts: f64,
+    /// timed forwards over `EngineConfig::slow_forward_threshold` (the
+    /// slow-replica watchdog's trigger count)
+    pub slow_forwards: f64,
 }
 
 impl ServeSummary {
@@ -237,6 +266,16 @@ impl ServeSummary {
             retries: m.counter("serve.retries"),
             deadline_aborts: m.counter("serve.deadline_aborts"),
             replicas_healthy: m.gauge("serve.replicas_healthy"),
+            ttft_p50_secs: m.percentile("serve.ttft_secs", 0.5),
+            ttft_p99_secs: m.percentile("serve.ttft_secs", 0.99),
+            ttft_high_p99_secs: m.percentile("serve.ttft_high_secs", 0.99),
+            tok_latency_p99_secs: m.percentile("serve.tok_latency_secs", 0.99),
+            goodput_requests: m.counter("serve.goodput_requests"),
+            overload_sheds: m.counter("serve.overload_sheds"),
+            overload_sheds_high: m.counter("serve.overload_sheds_high"),
+            rate_limited: m.counter("serve.rate_limited"),
+            brownouts: m.counter("serve.brownouts"),
+            slow_forwards: m.counter("serve.slow_forwards"),
         }
     }
 }
@@ -305,6 +344,33 @@ impl std::fmt::Display for ServeSummary {
                 f,
                 "; faults: {} shed, {} cancelled, {} retries, {} deadline aborts",
                 self.shed, self.cancelled, self.retries, self.deadline_aborts
+            )?;
+        }
+        // SLO clause: appears once a generation produced a first token
+        if self.ttft_p50_secs.is_some() {
+            write!(
+                f,
+                "; slo: ttft p50 {} / p99 {} ms (high p99 {}), tok p99 {} ms, \
+                 {} goodput",
+                fmt_ms(self.ttft_p50_secs),
+                fmt_ms(self.ttft_p99_secs),
+                fmt_ms(self.ttft_high_p99_secs),
+                fmt_ms(self.tok_latency_p99_secs),
+                self.goodput_requests
+            )?;
+        }
+        // overload clause: appears once admission control rejected or
+        // dimmed anything, so uncontended runs read as before
+        if self.overload_sheds + self.rate_limited + self.brownouts + self.slow_forwards > 0.0 {
+            write!(
+                f,
+                "; overload: {} sheds ({} high), {} rate-limited, {} brownouts, \
+                 {} slow forwards",
+                self.overload_sheds,
+                self.overload_sheds_high,
+                self.rate_limited,
+                self.brownouts,
+                self.slow_forwards
             )?;
         }
         if self.replicas_healthy > 0.0 {
@@ -625,6 +691,47 @@ mod tests {
             ),
             "{text}"
         );
+    }
+
+    #[test]
+    fn summary_slo_and_overload_clauses_appear_only_with_traffic() {
+        // a run with no generations and no admission-control rejections
+        // renders exactly as it did before the overload layer existed
+        let m = Metrics::new();
+        let quiet = format!("{}", ServeSummary::from_metrics(&m));
+        assert!(!quiet.contains("slo:"), "{quiet}");
+        assert!(!quiet.contains("overload:"), "{quiet}");
+        m.observe("serve.ttft_secs", 0.010);
+        m.observe("serve.ttft_high_secs", 0.008);
+        m.observe("serve.tok_latency_secs", 0.002);
+        m.add("serve.goodput_requests", 7.0);
+        m.add("serve.overload_sheds", 4.0);
+        m.add("serve.overload_sheds_low", 4.0);
+        m.add("serve.rate_limited", 2.0);
+        m.incr("serve.brownouts");
+        m.add("serve.slow_forwards", 3.0);
+        let s = ServeSummary::from_metrics(&m);
+        assert_eq!(s.ttft_p50_secs, Some(0.010));
+        assert_eq!(s.ttft_p99_secs, Some(0.010));
+        assert_eq!(s.ttft_high_p99_secs, Some(0.008));
+        assert_eq!(s.tok_latency_p99_secs, Some(0.002));
+        assert_eq!(s.goodput_requests, 7.0);
+        assert_eq!(s.overload_sheds, 4.0);
+        assert_eq!(s.overload_sheds_high, 0.0, "only the low class shed");
+        assert_eq!(s.rate_limited, 2.0);
+        assert_eq!(s.brownouts, 1.0);
+        assert_eq!(s.slow_forwards, 3.0);
+        let text = format!("{s}");
+        assert!(
+            text.contains("slo: ttft p50 10.00 / p99 10.00 ms (high p99 8.00)"),
+            "{text}"
+        );
+        assert!(text.contains("7 goodput"), "{text}");
+        assert!(
+            text.contains("overload: 4 sheds (0 high), 2 rate-limited, 1 brownouts"),
+            "{text}"
+        );
+        assert!(text.contains("3 slow forwards"), "{text}");
     }
 
     #[test]

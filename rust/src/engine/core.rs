@@ -67,7 +67,7 @@
 //! request's [`Pending`].
 
 use std::cmp::Reverse;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
@@ -86,11 +86,12 @@ use crate::model::kv::{KvArena, KvCache, DEFAULT_BLOCK_POSITIONS};
 use crate::model::ModelDims;
 use crate::tensor::Rng;
 
-use super::dispatch::{Dispatch, RoundRobin};
+use super::dispatch::{Dispatch, LoadAware, LoadView, PrefixAffinity, RoundRobin};
 use super::health::HealthView;
 use super::prefix::PrefixIndex;
 use super::request::{
-    CancelCell, Generated, Pending, Request, Response, SubmitOptions, TokenEvent, TokenStream,
+    CancelCell, Generated, OverloadKind, Overloaded, Pending, Priority, Request, Response,
+    SubmitOptions, TokenEvent, TokenStream,
 };
 use super::sampling::{sample_token, SamplingParams};
 
@@ -151,6 +152,55 @@ pub struct EngineConfig {
     /// identical to a cold prefill). Costs nothing when no prefix ever
     /// repeats; disable to reserve every arena block for live sequences.
     pub prefix_cache: bool,
+    /// Queue high-watermark as a fraction of each waiting queue's
+    /// capacity (`0.0` disables shedding — arrivals beyond the cap block
+    /// in the bounded channel, the pre-PR-10 backpressure behavior).
+    /// When a queue sits at or above `shed_watermark × capacity`, an
+    /// arrival sheds the **lowest-priority** work instead of blocking:
+    /// a queued entry of strictly lower [`Priority`] than the arrival
+    /// is displaced (answered with a typed [`Overloaded`] error), ties
+    /// shed the arrival itself so admitted work is never reordered
+    /// within a class. A displaced request past its deadline counts in
+    /// `serve.shed`, not `serve.overload_sheds` — deadline wins, each
+    /// request is counted exactly once.
+    pub shed_watermark: f64,
+    /// Per-tenant token-bucket refill rate in requests/second (`0.0`
+    /// disables tenant rate limiting). Each named
+    /// [`SubmitOptions::tenant`] is charged one token at admission; an
+    /// empty bucket answers a typed [`Overloaded`] error
+    /// (`serve.rate_limited`). Buckets are **per replica** — the fleet-
+    /// wide rate a tenant can sustain is `tenant_rate × healthy
+    /// replicas`. Tenantless submissions are exempt (still subject to
+    /// watermark shedding).
+    pub tenant_rate: f64,
+    /// Token-bucket capacity (burst allowance) per tenant. `0.0`
+    /// defaults to one second of refill (`max(tenant_rate, 1)`).
+    pub tenant_burst: f64,
+    /// Brownout trigger: a generation backlog (waiting + preempted) at
+    /// or above this for [`EngineConfig::brownout_after`] consecutive
+    /// scheduler rounds enters brownout — [`Priority::Low`] generations
+    /// are admitted with `max_new` capped at
+    /// [`EngineConfig::brownout_max_new`] instead of being shed
+    /// outright (`serve.brownouts` counts each capped admission). `0`
+    /// disables brownout. The mode exits as soon as the backlog drops
+    /// below the trigger.
+    pub brownout_backlog: usize,
+    /// Consecutive over-backlog rounds before brownout engages (values
+    /// below 1 behave as 1) — a one-round spike never browns out.
+    pub brownout_after: usize,
+    /// `max_new` cap applied to low-priority generations admitted
+    /// during brownout (values below 1 behave as 1).
+    pub brownout_max_new: usize,
+    /// Slow-replica watchdog: a timed forward longer than this counts
+    /// in `serve.slow_forwards` and extends the replica's slow streak
+    /// ([`HealthView::slow_streak`] — load-aware dispatch deprioritizes
+    /// streaking replicas). `Duration::ZERO` disables the watchdog.
+    pub slow_forward_threshold: Duration,
+    /// Consecutive slow forwards before the replica is marked
+    /// unhealthy — sticky, mirroring
+    /// [`EngineConfig::unhealthy_after`]. `0` never trips (the streak
+    /// still feeds dispatch penalties).
+    pub slow_streak_limit: usize,
 }
 
 impl Default for EngineConfig {
@@ -167,6 +217,14 @@ impl Default for EngineConfig {
             unhealthy_after: 3,
             retry_backoff: Duration::from_millis(1),
             prefix_cache: true,
+            shed_watermark: 0.0,
+            tenant_rate: 0.0,
+            tenant_burst: 0.0,
+            brownout_backlog: 0,
+            brownout_after: 2,
+            brownout_max_new: 4,
+            slow_forward_threshold: Duration::ZERO,
+            slow_streak_limit: 3,
         }
     }
 }
@@ -178,6 +236,12 @@ struct JobMeta {
     enqueued: Instant,
     deadline: Option<Instant>,
     retries: usize,
+    /// Scheduling class: watermark shedding displaces the lowest
+    /// priority first, brownout caps [`Priority::Low`] generations.
+    priority: Priority,
+    /// Billing identity for per-tenant token buckets (and the typed
+    /// [`Overloaded`] error a shed answers with).
+    tenant: Option<String>,
     cancel: Arc<CancelCell>,
     resp: Sender<Result<Response>>,
 }
@@ -253,8 +317,15 @@ impl EngineClient {
         let deadline =
             opts.deadline.or(self.default_deadline).and_then(|d| now.checked_add(d));
         let cancel = Arc::new(CancelCell::default());
-        let meta =
-            JobMeta { enqueued: now, deadline, retries: 0, cancel: cancel.clone(), resp };
+        let meta = JobMeta {
+            enqueued: now,
+            deadline,
+            retries: 0,
+            priority: opts.priority,
+            tenant: opts.tenant.clone(),
+            cancel: cancel.clone(),
+            resp,
+        };
         self.metrics.gauge_add("serve.queue_depth", 1.0);
         let sent = match self.txs.get(replica) {
             Some(tx) => tx.send(Msg::Sub(Submission { req, meta, stream })),
@@ -375,6 +446,8 @@ pub struct Engine {
     dispatch: Arc<dyn Dispatch>,
     metrics: Arc<Metrics>,
     health: Arc<HealthView>,
+    load: Arc<LoadView>,
+    affinity: Arc<PrefixAffinity>,
     arenas: Vec<Arc<KvArena>>,
     cfg: EngineConfig,
 }
@@ -402,10 +475,38 @@ impl Engine {
         cfg: EngineConfig,
         dispatch: Arc<dyn Dispatch>,
     ) -> Engine {
+        Engine::start_inner(scorers, cfg, move |_, _| dispatch)
+    }
+
+    /// [`Engine::start_sharded`] with the built-in load-aware policy:
+    /// routing reads the fleet's shared [`LoadView`] (queue depth,
+    /// active decodes, free KV blocks — published by every engine loop
+    /// once per round) and the [`PrefixAffinity`] map (a prompt whose
+    /// prefix some replica's [`PrefixIndex`] caches routes there), so
+    /// bursty traffic spreads by actual load instead of blind rotation.
+    pub fn start_balanced(
+        scorers: Vec<Arc<dyn Scorer + Send + Sync>>,
+        cfg: EngineConfig,
+    ) -> Engine {
+        Engine::start_inner(scorers, cfg, |load, affinity| {
+            Arc::new(LoadAware::new(load.clone(), affinity.clone()))
+        })
+    }
+
+    /// Shared constructor body: the load/affinity views exist before the
+    /// dispatch policy is built, so a policy can capture them.
+    fn start_inner(
+        scorers: Vec<Arc<dyn Scorer + Send + Sync>>,
+        cfg: EngineConfig,
+        make_dispatch: impl FnOnce(&Arc<LoadView>, &Arc<PrefixAffinity>) -> Arc<dyn Dispatch>,
+    ) -> Engine {
         // lint: allow(panic) — construction-time contract, before any request exists
         assert!(!scorers.is_empty(), "engine needs at least one scorer replica");
         let metrics = Arc::new(Metrics::new());
         let health = Arc::new(HealthView::new(scorers.len()));
+        let load = Arc::new(LoadView::new(scorers.len()));
+        let affinity = Arc::new(PrefixAffinity::new());
+        let dispatch = make_dispatch(&load, &affinity);
         metrics.gauge_set("serve.replicas_healthy", scorers.len() as f64);
         // all channels exist before any loop spawns, so every replica
         // holds a sender to every peer (its failover targets)
@@ -427,6 +528,8 @@ impl Engine {
                 metrics: metrics.clone(),
                 arena,
                 health: health.clone(),
+                load: load.clone(),
+                affinity: affinity.clone(),
                 peers: txs.clone(),
                 index: i,
             };
@@ -439,7 +542,7 @@ impl Engine {
                     .expect("spawn engine loop"),
             );
         }
-        Engine { txs: Some(txs), workers, dispatch, metrics, health, arenas, cfg }
+        Engine { txs: Some(txs), workers, dispatch, metrics, health, load, affinity, arenas, cfg }
     }
 
     pub fn client(&self) -> EngineClient {
@@ -470,6 +573,20 @@ impl Engine {
     /// tests can assert post-drain replica state).
     pub fn health(&self) -> Arc<HealthView> {
         self.health.clone()
+    }
+
+    /// The fleet's shared load registry — each engine loop publishes its
+    /// queue depth / active decodes / free KV blocks here once per round,
+    /// and [`LoadAware`] dispatch reads it on every submission.
+    pub fn load_view(&self) -> Arc<LoadView> {
+        self.load.clone()
+    }
+
+    /// The fleet's shared prefix-affinity map — each loop publishes the
+    /// prefixes its [`super::PrefixIndex`] caches, so dispatch can route
+    /// a prompt to the replica that already holds its KV prefix.
+    pub fn affinity(&self) -> Arc<PrefixAffinity> {
+        self.affinity.clone()
     }
 
     /// The per-replica KV arenas, indexed like the scorer replicas.
@@ -534,6 +651,10 @@ struct ReplicaCtx {
     metrics: Arc<Metrics>,
     arena: Arc<KvArena>,
     health: Arc<HealthView>,
+    /// fleet load registry this loop publishes its own row into
+    load: Arc<LoadView>,
+    /// fleet prefix-affinity map this loop publishes cached prefixes into
+    affinity: Arc<PrefixAffinity>,
     /// senders to every replica (self included): the failover targets
     peers: Vec<SyncSender<Msg>>,
     index: usize,
@@ -740,7 +861,13 @@ fn observe_gflops(metrics: &Metrics, rows: usize, flops_per_row: f64, secs: f64)
 /// the prefix index for cross-request reuse. Publication retains the
 /// blocks *before* the cache drops, so the handoff never releases a
 /// block another request is about to attach.
-fn finish_gen(a: ActiveGen, metrics: &Metrics, prefix: &mut Option<PrefixIndex>) {
+fn finish_gen(
+    a: ActiveGen,
+    metrics: &Metrics,
+    prefix: &mut Option<PrefixIndex>,
+    affinity: &PrefixAffinity,
+    index: usize,
+) {
     if let Some(ix) = prefix.as_mut() {
         // cache position i holds the K/V of (prompt ++ tokens)[i]; the
         // final sampled token was never fed back, so it is not cached
@@ -749,10 +876,12 @@ fn finish_gen(a: ActiveGen, metrics: &Metrics, prefix: &mut Option<PrefixIndex>)
         seq.extend_from_slice(&a.tokens);
         seq.truncate(committed);
         ix.insert(&seq, &a.cache);
+        affinity.publish(&seq, index);
     }
     metrics.add("serve.gen_requests", 1.0);
     metrics.add("serve.gen_tokens", a.tokens.len() as f64);
     metrics.observe("serve.latency_secs", a.meta.enqueued.elapsed().as_secs_f64());
+    observe_goodput(metrics, &a.meta);
     let _ = a
         .meta
         .resp
@@ -1044,11 +1173,142 @@ fn abort_gen(a: ActiveGen, verdict: Verdict, metrics: &Metrics) {
     }
 }
 
+/// Queue length at which the high-watermark shed policy engages:
+/// `frac` of the queue's capacity `cap`, at least 1. `frac <= 0`
+/// disables shedding (`usize::MAX` — the stash/backpressure path of
+/// PR 8 handles full queues instead, exactly as before this knob).
+fn watermark_level(frac: f64, cap: usize) -> usize {
+    if frac <= 0.0 {
+        return usize::MAX;
+    }
+    ((cap as f64 * frac).ceil() as usize).clamp(1, cap)
+}
+
+/// Per-tenant token buckets for admission-time rate limiting. One set
+/// lives in each replica loop (loop-local by design — no lock), so a
+/// tenant's *fleet-wide* effective rate is `tenant_rate × healthy
+/// replicas`; see [`EngineConfig::tenant_rate`].
+struct TenantBuckets {
+    rate: f64,
+    burst: f64,
+    /// tenant → (current token level, last refill instant)
+    buckets: HashMap<String, (f64, Instant)>,
+}
+
+impl TenantBuckets {
+    fn new(rate: f64, burst: f64) -> TenantBuckets {
+        TenantBuckets {
+            rate,
+            // an unset burst admits one-second bursts (and at least one
+            // request, or a sub-1.0 rate could never admit anything)
+            burst: if burst > 0.0 { burst } else { rate.max(1.0) },
+            buckets: HashMap::new(),
+        }
+    }
+
+    /// Take one token from `tenant`'s bucket, refilling by wall time
+    /// elapsed since the last take. `true` admits. Rate limiting off
+    /// (`rate <= 0`) and tenant-less submissions always admit.
+    fn try_take(&mut self, tenant: Option<&str>, now: Instant) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let Some(t) = tenant else { return true };
+        let (level, last) = self
+            .buckets
+            .entry(t.to_string())
+            .or_insert((self.burst, now));
+        *level = (*level + now.duration_since(*last).as_secs_f64() * self.rate).min(self.burst);
+        *last = now;
+        if *level >= 1.0 {
+            *level -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Resolve a submission rejected by admission control (token bucket or
+/// queue watermark) with a typed [`Overloaded`] error. A request that
+/// is *also* cancelled or past its deadline counts there instead
+/// (cancel > deadline > overload), so every rejection lands in exactly
+/// one counter family and
+/// `cancelled + shed + rate_limited + overload_sheds` partitions them.
+fn shed_overloaded(meta: JobMeta, kind: OverloadKind, metrics: &Metrics) {
+    if meta.cancel.abandoned() {
+        metrics.incr("serve.cancelled");
+        let _ = meta.resp.send(Err(anyhow!("request cancelled before admission")));
+        return;
+    }
+    if meta.expired(Instant::now()) {
+        metrics.incr("serve.shed");
+        let e = deadline_err(&meta);
+        let _ = meta.resp.send(Err(e));
+        return;
+    }
+    match kind {
+        OverloadKind::RateLimited => metrics.incr("serve.rate_limited"),
+        OverloadKind::QueueFull => {
+            metrics.incr("serve.overload_sheds");
+            // per-class counters back the "shedding hits low-priority
+            // first" assertion in serve-bench and the chaos tests
+            metrics.incr(&format!("serve.overload_sheds_{}", meta.priority.name()));
+        }
+    }
+    let err = Overloaded { kind, priority: meta.priority, tenant: meta.tenant.clone() };
+    let _ = meta.resp.send(Err(anyhow::Error::new(err)));
+}
+
+/// First sampled token of a generation: record time-to-first-token,
+/// overall and for the high-priority class (the SLO series
+/// [`crate::coordinator::ServeSummary`] reads p50/p99 from).
+fn observe_ttft(metrics: &Metrics, meta: &JobMeta) {
+    let ttft = meta.enqueued.elapsed().as_secs_f64();
+    metrics.observe("serve.ttft_secs", ttft);
+    if meta.priority == Priority::High {
+        metrics.observe("serve.ttft_high_secs", ttft);
+    }
+}
+
+/// Count an `Ok` answer toward goodput when it beat its deadline: raw
+/// throughput counts every request, goodput only the ones whose caller
+/// was still inside its SLO when the answer landed.
+fn observe_goodput(metrics: &Metrics, meta: &JobMeta) {
+    if !meta.expired(Instant::now()) {
+        metrics.incr("serve.goodput_requests");
+    }
+}
+
+/// Slow-replica watchdog: compare one timed scorer call against
+/// [`EngineConfig::slow_forward_threshold`] (zero disables). A slow
+/// forward counts into `serve.slow_forwards` and extends the replica's
+/// slow streak; sustained streaks trip sticky-unhealthy via
+/// [`HealthView::record_slow`] (mirroring `unhealthy_after`), and
+/// load-aware dispatch penalizes nonzero streaks before the trip. A
+/// `ChaosScorer` `Delay` fault can no longer stall a replica the fleet
+/// still routes to.
+fn observe_pace(fleet: &FleetCtx, secs: f64) {
+    if fleet.cfg.slow_forward_threshold.is_zero() {
+        return;
+    }
+    if secs > fleet.cfg.slow_forward_threshold.as_secs_f64() {
+        fleet.metrics.incr("serve.slow_forwards");
+        if !fleet.health.record_slow(fleet.index, fleet.cfg.slow_streak_limit) {
+            fleet
+                .metrics
+                .gauge_set("serve.replicas_healthy", fleet.health.healthy_count() as f64);
+        }
+    } else {
+        fleet.health.record_fast(fleet.index);
+    }
+}
+
 // lint: allow(indexing) — every subscript in the loop is bounded by `active`
 // (`news`/`lgs`/`refs` are rebuilt 1:1 from it each step, so `[i]` shares its
 // range) or is a prefill range clamped with `.min(prefill.len())`
 fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
-    let ReplicaCtx { scorer, cfg, metrics, arena, health, peers, index } = ctx;
+    let ReplicaCtx { scorer, cfg, metrics, arena, health, load, affinity, peers, index } = ctx;
     let max_batch = cfg.max_batch.max(1);
     let max_active = cfg.max_active.max(1);
     // the scoring queue must hold at least a full batch, or a small
@@ -1067,6 +1327,12 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
     // `engine::prefix`), holding refcounted pins on committed arena blocks
     let mut prefix: Option<PrefixIndex> =
         if cfg.prefix_cache { Some(PrefixIndex::new(arena.clone())) } else { None };
+    // ---- admission-control state (all off by default — see EngineConfig)
+    let shed_score_at = watermark_level(cfg.shed_watermark, score_cap);
+    let shed_gen_at = watermark_level(cfg.shed_watermark, gen_cap);
+    let mut buckets = TenantBuckets::new(cfg.tenant_rate, cfg.tenant_burst);
+    // consecutive rounds the gen backlog sat at/over brownout_backlog
+    let mut brownout_rounds: usize = 0;
 
     let mut score_q: VecDeque<ScoreJob> = VecDeque::new();
     let mut gen_wait: VecDeque<GenJob> = VecDeque::new();
@@ -1093,7 +1359,8 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
     let admit = |msg: Msg,
                  score_q: &mut VecDeque<ScoreJob>,
                  gen_wait: &mut VecDeque<GenJob>,
-                 preempted: &mut VecDeque<ActiveGen>|
+                 preempted: &mut VecDeque<ActiveGen>,
+                 buckets: &mut TenantBuckets|
      -> bool {
         let sub = match msg {
             Msg::Shutdown => return false,
@@ -1118,6 +1385,12 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
             metrics.incr("serve.shed");
             let e = deadline_err(&meta);
             let _ = meta.resp.send(Err(e));
+            return true;
+        }
+        // per-tenant token bucket — after the cancel/deadline checks so
+        // each rejection lands in exactly one counter family
+        if !buckets.try_take(meta.tenant.as_deref(), Instant::now()) {
+            shed_overloaded(meta, OverloadKind::RateLimited, &metrics);
             return true;
         }
         match req {
@@ -1185,6 +1458,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                         metrics.add("serve.gen_requests", 1.0);
                         metrics
                             .observe("serve.latency_secs", meta.enqueued.elapsed().as_secs_f64());
+                        observe_goodput(&metrics, &meta);
                         let _ = meta.resp.send(Ok(Response::Generated(Generated {
                             tokens: Vec::new(),
                             logps: Vec::new(),
@@ -1208,8 +1482,66 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                  score_q: &mut VecDeque<ScoreJob>,
                  gen_wait: &mut VecDeque<GenJob>,
                  preempted: &mut VecDeque<ActiveGen>,
-                 stash: &mut Option<Msg>|
+                 stash: &mut Option<Msg>,
+                 buckets: &mut TenantBuckets|
      -> bool {
+        // ---- high-watermark shedding (admission control) ------------
+        // Over the watermark an arrival must displace a strictly
+        // lower-priority queued job — the victim is the *youngest* of
+        // the lowest-priority class, so FIFO order within a class is
+        // preserved — or be shed itself with a typed `Overloaded`.
+        // Either way the answer is immediate: over the watermark
+        // nothing stashes, so a flood can never push higher-priority
+        // traffic into the backpressure path (and never hangs it).
+        if let Msg::Sub(_) = &msg {
+            let is_gen = wants_gen(&msg);
+            let over = if is_gen {
+                gen_wait.len() >= shed_gen_at
+            } else {
+                score_q.len() >= shed_score_at
+            };
+            if over {
+                let arrival = match &msg {
+                    Msg::Sub(s) => s.meta.priority,
+                    _ => Priority::Normal,
+                };
+                let victim = if is_gen {
+                    gen_wait
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(i, g)| (g.meta.priority, Reverse(*i)))
+                        .filter(|(_, g)| g.meta.priority < arrival)
+                        .map(|(i, _)| i)
+                } else {
+                    score_q
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(i, j)| (j.meta().priority, Reverse(*i)))
+                        .filter(|(_, j)| j.meta().priority < arrival)
+                        .map(|(i, _)| i)
+                };
+                match victim {
+                    Some(vi) if is_gen => {
+                        if let Some(g) = gen_wait.remove(vi) {
+                            shed_overloaded(g.meta, OverloadKind::QueueFull, &metrics);
+                        }
+                    }
+                    Some(vi) => {
+                        if let Some(j) = score_q.remove(vi) {
+                            shed_overloaded(j.into_meta(), OverloadKind::QueueFull, &metrics);
+                        }
+                    }
+                    None => {
+                        // nobody cheaper is queued: shed the arrival
+                        if let Msg::Sub(sub) = msg {
+                            metrics.gauge_add("serve.queue_depth", -1.0);
+                            shed_overloaded(sub.meta, OverloadKind::QueueFull, &metrics);
+                        }
+                        return true;
+                    }
+                }
+            }
+        }
         let full = match &msg {
             Msg::Shutdown | Msg::Resume(_) => false,
             m if wants_gen(m) => gen_wait.len() >= gen_cap,
@@ -1219,7 +1551,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
             *stash = Some(msg);
             true
         } else {
-            admit(msg, score_q, gen_wait, preempted)
+            admit(msg, score_q, gen_wait, preempted, buckets)
         }
     };
 
@@ -1229,7 +1561,8 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
         // room (this runs even while shutting down: the stashed request
         // was submitted before the sentinel and must still be answered)
         if let Some(msg) = stash.take() {
-            if !offer(msg, &mut score_q, &mut gen_wait, &mut preempted, &mut stash) {
+            if !offer(msg, &mut score_q, &mut gen_wait, &mut preempted, &mut stash, &mut buckets)
+            {
                 shutting_down = true;
             }
         }
@@ -1243,7 +1576,8 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                 // completely idle: block for the next message
                 match rx.recv() {
                     Ok(msg) => {
-                        if !admit(msg, &mut score_q, &mut gen_wait, &mut preempted) {
+                        if !admit(msg, &mut score_q, &mut gen_wait, &mut preempted, &mut buckets)
+                        {
                             shutting_down = true;
                         }
                     }
@@ -1260,7 +1594,14 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
             while !shutting_down && stash.is_none() {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        if !offer(msg, &mut score_q, &mut gen_wait, &mut preempted, &mut stash) {
+                        if !offer(
+                            msg,
+                            &mut score_q,
+                            &mut gen_wait,
+                            &mut preempted,
+                            &mut stash,
+                            &mut buckets,
+                        ) {
                             shutting_down = true;
                         }
                     }
@@ -1343,6 +1684,23 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
         // capacity), so only the suffix chunk charges against the free
         // pool. When a candidate still doesn't fit, LRU unpinned index
         // entries are evicted and the gate re-evaluated before giving up.
+        // ---- brownout: sustained backlog pressure dims low priority ----
+        // Once the gen backlog has sat at/over `brownout_backlog` for
+        // `brownout_after` consecutive rounds, low-priority generations
+        // promote with `max_new` capped to `brownout_max_new` — they
+        // still get an answer (unlike a watermark shed), just a shorter
+        // one, shrinking their decode residency until pressure clears.
+        if cfg.brownout_backlog > 0
+            && gen_wait.len() + preempted.len() >= cfg.brownout_backlog
+        {
+            brownout_rounds = brownout_rounds.saturating_add(1);
+        } else {
+            brownout_rounds = 0;
+        }
+        let brownout = cfg.brownout_backlog > 0
+            && cfg.brownout_max_new > 0
+            && brownout_rounds >= cfg.brownout_after.max(1);
+
         while active.len() < max_active {
             let reserved = step_block_need(&arena, &active, chunk);
             if let Some(p) = preempted.front() {
@@ -1371,8 +1729,19 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                 }
                 continue;
             }
-            match gen_wait.front() {
-                Some(g) => {
+            // fresh admissions promote priority-then-FIFO: the oldest of
+            // the highest waiting class goes first (plain FIFO when
+            // everything is Normal, so single-class traffic is
+            // unchanged). This is what keeps high-priority TTFT bounded
+            // under a low-priority flood — the paid request skips the
+            // backlog instead of draining it.
+            let best = gen_wait
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, g)| (g.meta.priority, Reverse(*i)))
+                .map(|(i, _)| i);
+            match best.and_then(|bi| gen_wait.get(bi).map(|g| (bi, g))) {
+                Some((bi, g)) => {
                     let matched = prefix
                         .as_ref()
                         .map_or(0, |ix| ix.peek(&g.prompt, g.prompt.len().saturating_sub(1)));
@@ -1385,7 +1754,14 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                         }
                         break;
                     }
-                    if let Some(g) = gen_wait.pop_front() {
+                    if let Some(mut g) = gen_wait.remove(bi) {
+                        if brownout
+                            && g.meta.priority == Priority::Low
+                            && g.params.max_new > cfg.brownout_max_new
+                        {
+                            g.params.max_new = cfg.brownout_max_new;
+                            metrics.incr("serve.brownouts");
+                        }
                         let mut a = ActiveGen::admit(g, &arena);
                         attach_cached_prefix(&mut prefix, &mut a, true, &metrics);
                         active.push(a);
@@ -1396,6 +1772,14 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
         }
         metrics.gauge_set("serve.gen_backlog", (gen_wait.len() + preempted.len()) as f64);
         metrics.gauge_set("serve.active_decodes", active.len() as f64);
+        // publish this replica's load row for load-aware dispatch (the
+        // same once-per-round cadence as the gauges above)
+        load.publish(
+            index,
+            score_q.len() + gen_wait.len() + preempted.len(),
+            active.len(),
+            arena.blocks_free(),
+        );
         metrics.gauge_set(
             "serve.kv_bytes",
             active.iter().map(|a| a.cache.bytes()).sum::<usize>() as f64,
@@ -1437,6 +1821,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                 });
                 let fsecs = t0.elapsed().as_secs_f64();
                 metrics.timer_add("serve.forward", fsecs);
+                observe_pace(&fleet, fsecs);
                 // kernel_gflops measures the native micro-kernels only:
                 // the fixed-geometry path runs padded batches through
                 // PJRT, where real-token FLOPs over wall time would
@@ -1462,6 +1847,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                         for ((_, meta), out) in plain.into_iter().zip(outs) {
                             let waited = meta.enqueued.elapsed().as_secs_f64();
                             metrics.observe("serve.latency_secs", waited);
+                            observe_goodput(&metrics, &meta);
                             let _ = meta.resp.send(Ok(Response::Scored(out)));
                         }
                     }
@@ -1498,6 +1884,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                 let (scored, panicked) = catch_fault(|| scorer.score_choices(&prompt, &choices));
                 let csecs = t0.elapsed().as_secs_f64();
                 metrics.timer_add("serve.choice_forward", csecs);
+                observe_pace(&fleet, csecs);
                 if !caps.fixed_geometry {
                     observe_gflops(&metrics, fwd_rows, flops_per_row, csecs);
                 }
@@ -1511,6 +1898,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                         metrics.add("serve.choice_tokens", choice_tokens as f64);
                         let waited = meta.enqueued.elapsed().as_secs_f64();
                         metrics.observe("serve.latency_secs", waited);
+                        observe_goodput(&metrics, &meta);
                         let _ = meta.resp.send(Ok(Response::Choices(out)));
                     }
                     Err(e) => {
@@ -1607,6 +1995,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
             };
             let dsecs = t0.elapsed().as_secs_f64();
             metrics.timer_add("serve.decode_step", dsecs);
+            observe_pace(&fleet, dsecs);
             observe_gflops(&metrics, prefill_rows + decode_rows, flops_per_row, dsecs);
             match scored {
                 Ok(lgs) => {
@@ -1614,6 +2003,7 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                     metrics.incr("serve.decode_steps");
                     metrics.add("serve.prefill_tokens", prefill_rows as f64);
                     metrics.add("serve.decode_tokens", decode_rows as f64);
+                    let mut committed = 0usize;
                     for (i, a) in active.iter_mut().enumerate() {
                         let n = news[i].len();
                         if a.done < a.prefill.len() {
@@ -1623,9 +2013,12 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                                 // blocks become fleet-visible for
                                 // cross-request reuse right away (not only
                                 // at finish), so a concurrent shared-prompt
-                                // request can already attach them
+                                // request can already attach them — and
+                                // dispatch learns this replica is the
+                                // prefix's affinity home
                                 if let Some(ix) = prefix.as_mut() {
                                     ix.insert(&a.prefill, &a.cache);
+                                    affinity.publish(&a.prefill, index);
                                 }
                             }
                             if a.done == a.prefill.len() && a.sample_after_prefill {
@@ -1637,16 +2030,33 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                                 let (tok, lp) =
                                     sample_token(lgs[i].row(n - 1), &a.params, &mut a.rng);
                                 a.push(tok, lp);
+                                committed += 1;
+                                if a.tokens.len() == 1 {
+                                    observe_ttft(&metrics, &a.meta);
+                                }
                             }
                         } else {
                             let (tok, lp) = sample_token(lgs[i].row(0), &a.params, &mut a.rng);
                             a.push(tok, lp);
+                            committed += 1;
                         }
+                    }
+                    // per-token decode latency: this fused step's wall
+                    // time amortized over the tokens it committed (the
+                    // SLO series behind `tok_latency_p99`)
+                    if committed > 0 && dsecs > 0.0 {
+                        metrics.observe("serve.tok_latency_secs", dsecs / committed as f64);
                     }
                     let mut i = 0;
                     while i < active.len() {
                         if active[i].finished() {
-                            finish_gen(active.swap_remove(i), &metrics, &mut prefix);
+                            finish_gen(
+                                active.swap_remove(i),
+                                &metrics,
+                                &mut prefix,
+                                &affinity,
+                                index,
+                            );
                         } else {
                             i += 1;
                         }
@@ -1678,6 +2088,12 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
                 prefix.as_ref().map_or(0, PrefixIndex::blocks_held) as f64,
             );
             metrics.gauge_set("serve.gen_backlog", (gen_wait.len() + preempted.len()) as f64);
+            load.publish(
+                index,
+                score_q.len() + gen_wait.len() + preempted.len(),
+                active.len(),
+                arena.blocks_free(),
+            );
         }
 
         if shutting_down
@@ -1702,4 +2118,112 @@ fn engine_loop(ctx: ReplicaCtx, rx: Receiver<Msg>) {
     metrics.gauge_set("serve.kv_blocks_pinned", 0.0);
     metrics.gauge_set("serve.kv_blocks_used", arena.blocks_in_use() as f64);
     metrics.gauge_set("serve.kv_blocks_free", arena.blocks_free() as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(priority: Priority, tenant: Option<&str>, deadline: Option<Duration>) -> (JobMeta, Receiver<Result<Response>>) {
+        let (resp, rx) = channel();
+        let now = Instant::now();
+        let m = JobMeta {
+            enqueued: now,
+            deadline: deadline.and_then(|d| now.checked_add(d)),
+            retries: 0,
+            priority,
+            tenant: tenant.map(str::to_string),
+            cancel: Arc::new(CancelCell::default()),
+            resp,
+        };
+        (m, rx)
+    }
+
+    #[test]
+    fn watermark_levels_scale_with_capacity_and_zero_disables() {
+        assert_eq!(watermark_level(0.0, 32), usize::MAX);
+        assert_eq!(watermark_level(-1.0, 32), usize::MAX);
+        assert_eq!(watermark_level(0.5, 32), 16);
+        assert_eq!(watermark_level(0.9, 10), 9);
+        assert_eq!(watermark_level(2.0, 10), 10, "over-1 fractions clamp to the cap");
+        assert_eq!(watermark_level(0.01, 4), 1, "a tiny fraction still sheds from 1");
+    }
+
+    #[test]
+    fn token_buckets_refill_over_time_and_exempt_the_tenantless() {
+        let t0 = Instant::now();
+        let mut b = TenantBuckets::new(10.0, 2.0);
+        // burst of 2, then empty
+        assert!(b.try_take(Some("acme"), t0));
+        assert!(b.try_take(Some("acme"), t0));
+        assert!(!b.try_take(Some("acme"), t0));
+        // 100ms at 10 rps refills one token
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.try_take(Some("acme"), t1));
+        assert!(!b.try_take(Some("acme"), t1));
+        // an independent tenant has its own bucket
+        assert!(b.try_take(Some("umbrella"), t1));
+        // tenantless and rate-0 submissions always admit
+        assert!(b.try_take(None, t1));
+        let mut off = TenantBuckets::new(0.0, 0.0);
+        for _ in 0..100 {
+            assert!(off.try_take(Some("acme"), t0));
+        }
+        // level caps at burst: a long idle gap does not bank extra burst
+        let t2 = t1 + Duration::from_secs(60);
+        assert!(b.try_take(Some("acme"), t2));
+        assert!(b.try_take(Some("acme"), t2));
+        assert!(!b.try_take(Some("acme"), t2));
+    }
+
+    #[test]
+    fn unset_burst_still_admits_sub_unit_rates() {
+        let t0 = Instant::now();
+        let mut b = TenantBuckets::new(0.5, 0.0);
+        assert!(b.try_take(Some("slow"), t0), "burst floor of 1 admits the first request");
+        assert!(!b.try_take(Some("slow"), t0));
+    }
+
+    #[test]
+    fn shed_overloaded_answers_typed_and_counts_once() {
+        let metrics = Metrics::new();
+        let (m, rx) = meta(Priority::Low, Some("acme"), None);
+        shed_overloaded(m, OverloadKind::QueueFull, &metrics);
+        let err = rx.recv().expect("answered").expect_err("shed is an error");
+        let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+        assert_eq!(o.kind, OverloadKind::QueueFull);
+        assert_eq!(o.priority, Priority::Low);
+        assert_eq!(o.tenant.as_deref(), Some("acme"));
+        assert_eq!(metrics.counter("serve.overload_sheds"), 1.0);
+        assert_eq!(metrics.counter("serve.overload_sheds_low"), 1.0);
+        assert_eq!(metrics.counter("serve.shed"), 0.0);
+        let (m, rx) = meta(Priority::High, None, None);
+        shed_overloaded(m, OverloadKind::RateLimited, &metrics);
+        let err = rx.recv().expect("answered").expect_err("rate limit is an error");
+        assert!(err.downcast_ref::<Overloaded>().is_some());
+        assert_eq!(metrics.counter("serve.rate_limited"), 1.0);
+        assert_eq!(metrics.counter("serve.overload_sheds"), 1.0, "rate limit is its own family");
+    }
+
+    #[test]
+    fn shed_overloaded_deadline_wins_the_double_count() {
+        // a request both past deadline AND watermark-shed lands in
+        // serve.shed only — the satellite regression this PR pins
+        let metrics = Metrics::new();
+        let (m, rx) = meta(Priority::Normal, None, Some(Duration::ZERO));
+        std::thread::sleep(Duration::from_millis(2));
+        shed_overloaded(m, OverloadKind::QueueFull, &metrics);
+        let err = rx.recv().expect("answered").expect_err("still an error");
+        assert!(err.downcast_ref::<Overloaded>().is_none(), "deadline err, not Overloaded");
+        assert_eq!(metrics.counter("serve.shed"), 1.0);
+        assert_eq!(metrics.counter("serve.overload_sheds"), 0.0);
+        assert_eq!(metrics.counter("serve.overload_sheds_normal"), 0.0);
+        // cancellation outranks both
+        let (m, rx) = meta(Priority::Normal, None, Some(Duration::ZERO));
+        m.cancel.cancel();
+        shed_overloaded(m, OverloadKind::QueueFull, &metrics);
+        assert!(rx.recv().expect("answered").is_err());
+        assert_eq!(metrics.counter("serve.cancelled"), 1.0);
+        assert_eq!(metrics.counter("serve.shed"), 1.0, "unchanged");
+    }
 }

@@ -4,9 +4,6 @@
 //! worker means running several loops and deciding, per request, which
 //! replica admits it. [`Dispatch`] is that decision point —
 //! [`super::Engine::start_sharded`] routes every submission through it.
-//! Per-replica KV residency (blocks actually held in the replica's
-//! `KvArena`) is the placement constraint a smarter policy would
-//! balance; [`RoundRobin`] is the baseline that ignores it.
 //!
 //! Routing is health-aware: policies see the fleet's [`HealthView`] and
 //! should avoid unhealthy replicas themselves, but the return value is
@@ -14,8 +11,24 @@
 //! to the next healthy replica (it never silently `%`-clamps, which
 //! could land a request on a dead loop), and refuses the submission
 //! when no replica is healthy.
+//!
+//! Two policies ship:
+//!
+//! * [`RoundRobin`] — the load-blind baseline.
+//! * [`LoadAware`] — reads the shared [`LoadView`] each engine loop
+//!   publishes (queue depth, active decodes, free KV blocks — the same
+//!   publish-atomics pattern as [`HealthView`]) and routes to the least
+//!   loaded healthy replica, after first consulting the
+//!   [`PrefixAffinity`] map: a prompt whose prefix some replica's
+//!   `PrefixIndex` already caches goes *there*, because a cache hit
+//!   saves more prefill work than any queue-depth delta (the PR-9
+//!   follow-up). Replicas with a live slow-forward streak
+//!   ([`HealthView::slow_streak`]) are penalized before the watchdog
+//!   retires them.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::health::HealthView;
 use super::request::Request;
@@ -51,6 +64,208 @@ impl Dispatch for RoundRobin {
     }
 }
 
+/// Load snapshot of one replica, published by its engine loop once per
+/// scheduler round (plain atomics — reads are advisory, a torn
+/// cross-field view only misroutes a hint the caller re-validates).
+#[derive(Debug, Default)]
+struct ReplicaLoad {
+    /// Queued submissions + queued score work + waiting generations.
+    queue_depth: AtomicUsize,
+    /// Generations currently holding a decode slot.
+    active_decodes: AtomicUsize,
+    /// Free blocks in the replica's KV arena.
+    free_blocks: AtomicUsize,
+}
+
+/// Fleet-wide load registry: one entry per replica, shared via `Arc`
+/// between the engine loops (writers) and the dispatch policy (reader)
+/// exactly the way [`HealthView`] is.
+#[derive(Debug)]
+pub struct LoadView {
+    replicas: Vec<ReplicaLoad>,
+}
+
+impl LoadView {
+    /// A view over `n` replicas, all initially idle.
+    pub fn new(n: usize) -> LoadView {
+        LoadView { replicas: (0..n).map(|_| ReplicaLoad::default()).collect() }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// One round's snapshot for replica `i` (engine-loop publisher).
+    pub(crate) fn publish(&self, i: usize, queue_depth: usize, active: usize, free_blocks: usize) {
+        if let Some(r) = self.replicas.get(i) {
+            r.queue_depth.store(queue_depth, Ordering::Release);
+            r.active_decodes.store(active, Ordering::Release);
+            r.free_blocks.store(free_blocks, Ordering::Release);
+        }
+    }
+
+    /// Queued work on replica `i` (0 when out of range).
+    pub fn queue_depth(&self, i: usize) -> usize {
+        self.replicas.get(i).map(|r| r.queue_depth.load(Ordering::Acquire)).unwrap_or(0)
+    }
+
+    /// Active decode slots held on replica `i` (0 when out of range).
+    pub fn active_decodes(&self, i: usize) -> usize {
+        self.replicas.get(i).map(|r| r.active_decodes.load(Ordering::Acquire)).unwrap_or(0)
+    }
+
+    /// Free KV arena blocks on replica `i` (0 when out of range).
+    pub fn free_blocks(&self, i: usize) -> usize {
+        self.replicas.get(i).map(|r| r.free_blocks.load(Ordering::Acquire)).unwrap_or(0)
+    }
+}
+
+/// How many leading prompt tokens participate in the affinity hash.
+/// Long enough to separate distinct system prompts, short enough that
+/// one shared preamble with divergent user suffixes still maps to one
+/// key (the shared part is what the `PrefixIndex` caches).
+const AFFINITY_PREFIX_TOKENS: usize = 32;
+
+/// Bound on retained affinity entries; at the cap the map is cleared
+/// (coarse, but affinity is a routing hint — losing it costs one cold
+/// prefill, never correctness).
+const AFFINITY_CAP: usize = 1024;
+
+/// Fleet-wide prefix→replica affinity map. Each engine loop publishes
+/// "replica `i` now caches this prefix" whenever its `PrefixIndex`
+/// inserts committed blocks; [`LoadAware`] consults it so a repeated
+/// prompt routes to the replica that already holds its KV.
+///
+/// Keys are FNV-1a hashes of the first [`AFFINITY_PREFIX_TOKENS`]
+/// prompt tokens — a deterministic hash (std's `RandomState` is seeded
+/// per-process), so identically-seeded runs make identical routing
+/// decisions. A stale or colliding entry is harmless: the hint is
+/// re-validated against [`HealthView`] and a miss just prefills cold.
+#[derive(Debug, Default)]
+pub struct PrefixAffinity {
+    map: Mutex<HashMap<u64, usize>>,
+}
+
+/// FNV-1a over the leading prompt tokens (deterministic across runs).
+fn affinity_key(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in tokens.iter().take(AFFINITY_PREFIX_TOKENS) {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+impl PrefixAffinity {
+    pub fn new() -> PrefixAffinity {
+        PrefixAffinity::default()
+    }
+
+    /// Record that replica `i`'s prefix index now caches `tokens`'
+    /// leading blocks (engine-loop publisher; last writer wins).
+    pub(crate) fn publish(&self, tokens: &[u32], i: usize) {
+        if tokens.is_empty() {
+            return;
+        }
+        let mut g = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        if g.len() >= AFFINITY_CAP {
+            g.clear();
+        }
+        g.insert(affinity_key(tokens), i);
+    }
+
+    /// The replica that last cached a prefix of `tokens`, if any.
+    pub fn lookup(&self, tokens: &[u32]) -> Option<usize> {
+        if tokens.is_empty() {
+            return None;
+        }
+        let g = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        g.get(&affinity_key(tokens)).copied()
+    }
+
+    /// Retained entry count (tests + introspection).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Each slow-forward streak point weighs as this many queued requests
+/// when comparing replicas: a replica two slow forwards into a streak
+/// must look markedly worse than a clean peer with a slightly deeper
+/// queue, or the watchdog retires it while traffic is still arriving.
+const SLOW_STREAK_PENALTY: usize = 4;
+
+/// Load-aware routing over a shared [`LoadView`] + [`PrefixAffinity`].
+///
+/// Policy, in order:
+/// 1. **Prefix affinity** — a `Generate`/`Score`/`Choices` prompt whose
+///    leading tokens some healthy replica's index caches routes there
+///    (a KV cache hit beats any load delta the fleet can express).
+/// 2. **Least load** — otherwise the healthy replica minimizing
+///    `queue_depth + active_decodes + SLOW_STREAK_PENALTY × slow_streak`,
+///    ties broken toward more free KV blocks, then the lowest index
+///    (deterministic for identically-published views).
+pub struct LoadAware {
+    load: std::sync::Arc<LoadView>,
+    affinity: std::sync::Arc<PrefixAffinity>,
+}
+
+impl LoadAware {
+    pub fn new(
+        load: std::sync::Arc<LoadView>,
+        affinity: std::sync::Arc<PrefixAffinity>,
+    ) -> LoadAware {
+        LoadAware { load, affinity }
+    }
+}
+
+/// The prompt tokens routing should key affinity on.
+fn prompt_of(req: &Request) -> &[u32] {
+    match req {
+        Request::Score { tokens } => tokens,
+        Request::Choices { prompt, .. } => prompt,
+        Request::Generate { prompt, .. } => prompt,
+    }
+}
+
+impl Dispatch for LoadAware {
+    fn route(&self, req: &Request, health: &HealthView) -> usize {
+        if let Some(i) = self.affinity.lookup(prompt_of(req)) {
+            if health.is_healthy(i) {
+                return i;
+            }
+        }
+        let n = health.n_replicas();
+        let mut best: Option<(usize, usize, usize)> = None; // (cost, -free via Reverse, idx)
+        for i in 0..n {
+            if !health.is_healthy(i) {
+                continue;
+            }
+            let cost = self
+                .load
+                .queue_depth(i)
+                .saturating_add(self.load.active_decodes(i))
+                .saturating_add(SLOW_STREAK_PENALTY.saturating_mul(health.slow_streak(i)));
+            let free = self.load.free_blocks(i);
+            let better = match best {
+                None => true,
+                // lower cost wins; tie → more free blocks; tie → lower index
+                Some((bc, bf, _)) => cost < bc || (cost == bc && free > bf),
+            };
+            if better {
+                best = Some((cost, free, i));
+            }
+        }
+        best.map(|(_, _, i)| i).unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +291,103 @@ mod tests {
         let got: Vec<usize> = (0..6).map(|_| rr.route(&req, &h)).collect();
         assert_eq!(got, vec![0, 2, 2, 0, 2, 2], "hint 1 advances to the next healthy slot");
         assert!(!got.contains(&1));
+    }
+
+    fn fleet(n: usize) -> (std::sync::Arc<LoadView>, std::sync::Arc<PrefixAffinity>, LoadAware) {
+        let load = std::sync::Arc::new(LoadView::new(n));
+        let aff = std::sync::Arc::new(PrefixAffinity::new());
+        let la = LoadAware::new(load.clone(), aff.clone());
+        (load, aff, la)
+    }
+
+    #[test]
+    fn load_aware_picks_the_least_loaded_replica() {
+        let (load, _aff, la) = fleet(3);
+        let h = HealthView::new(3);
+        let req = Request::Score { tokens: vec![9, 9] };
+        load.publish(0, 5, 2, 10);
+        load.publish(1, 1, 0, 10);
+        load.publish(2, 3, 1, 10);
+        assert_eq!(la.route(&req, &h), 1);
+        // ties break toward more free KV blocks, then the lowest index
+        load.publish(0, 1, 0, 4);
+        load.publish(1, 1, 0, 9);
+        load.publish(2, 1, 0, 9);
+        assert_eq!(la.route(&req, &h), 1, "equal cost: most free blocks wins, lowest index");
+        // degenerate fleets never panic
+        assert_eq!(la.route(&req, &HealthView::new(0)), 0);
+    }
+
+    #[test]
+    fn load_aware_skips_unhealthy_and_penalizes_slow_streaks() {
+        let (load, _aff, la) = fleet(3);
+        let h = HealthView::new(3);
+        let req = Request::Score { tokens: vec![7] };
+        load.publish(0, 0, 0, 10);
+        load.publish(1, 2, 0, 10);
+        load.publish(2, 9, 0, 10);
+        h.mark_unhealthy(0);
+        assert_eq!(la.route(&req, &h), 1, "idle-but-dead replica 0 is skipped");
+        // a slow streak outweighs a small queue-depth advantage
+        for _ in 0..2 {
+            h.record_slow(1, 0);
+        }
+        assert_eq!(
+            la.route(&req, &h),
+            2,
+            "streak of 2 costs {} — more than replica 2's deeper queue",
+            2 * SLOW_STREAK_PENALTY
+        );
+    }
+
+    #[test]
+    fn prefix_affinity_routes_home_unless_the_replica_died() {
+        let (load, aff, la) = fleet(3);
+        let h = HealthView::new(3);
+        let prompt: Vec<u32> = (0..8).collect();
+        let req = Request::Generate {
+            prompt: prompt.clone(),
+            params: crate::engine::SamplingParams::greedy(4),
+        };
+        // replica 2 is the busiest, but it caches the prefix
+        load.publish(0, 0, 0, 10);
+        load.publish(1, 0, 0, 10);
+        load.publish(2, 50, 4, 0);
+        aff.publish(&prompt, 2);
+        assert_eq!(la.route(&req, &h), 2, "cache hit beats load");
+        // a dead home replica falls back to least-load
+        h.mark_unhealthy(2);
+        assert_eq!(la.route(&req, &h), 0);
+        // last writer wins on republish
+        aff.publish(&prompt, 1);
+        assert_eq!(la.route(&req, &h), 1);
+    }
+
+    #[test]
+    fn affinity_keys_are_deterministic_and_prefix_windowed() {
+        let aff = PrefixAffinity::new();
+        let long_a: Vec<u32> = (0..64).collect();
+        // same first AFFINITY_PREFIX_TOKENS tokens, different tail:
+        // one key (the shared preamble is what the index caches)
+        let mut long_b = long_a.clone();
+        long_b[63] = 999;
+        aff.publish(&long_a, 1);
+        assert_eq!(aff.lookup(&long_b), Some(1));
+        assert_eq!(affinity_key(&long_a), affinity_key(&long_b));
+        assert_ne!(affinity_key(&[1, 2, 3]), affinity_key(&[1, 2, 4]));
+        // empty prompts neither publish nor match
+        aff.publish(&[], 0);
+        assert_eq!(aff.lookup(&[]), None);
+        assert_eq!(aff.len(), 1);
+    }
+
+    #[test]
+    fn affinity_map_is_bounded() {
+        let aff = PrefixAffinity::new();
+        for i in 0..(AFFINITY_CAP as u32 + 10) {
+            aff.publish(&[i, i + 1, i + 2], 0);
+        }
+        assert!(aff.len() <= AFFINITY_CAP, "cap overflow: {} entries", aff.len());
+        assert!(!aff.is_empty());
     }
 }

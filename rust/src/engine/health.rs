@@ -21,11 +21,22 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 struct ReplicaHealth {
     healthy: AtomicBool,
     consecutive_errors: AtomicUsize,
+    /// Consecutive timed forwards over
+    /// [`super::EngineConfig::slow_forward_threshold`] — the
+    /// slow-replica watchdog's streak counter. A fast forward resets
+    /// it; a sustained streak trips sticky-unhealthy exactly like
+    /// `consecutive_errors`, and load-aware dispatch penalizes nonzero
+    /// streaks before the trip point.
+    slow_streak: AtomicUsize,
 }
 
 impl ReplicaHealth {
     fn new() -> ReplicaHealth {
-        ReplicaHealth { healthy: AtomicBool::new(true), consecutive_errors: AtomicUsize::new(0) }
+        ReplicaHealth {
+            healthy: AtomicBool::new(true),
+            consecutive_errors: AtomicUsize::new(0),
+            slow_streak: AtomicUsize::new(0),
+        }
     }
 }
 
@@ -86,6 +97,36 @@ impl HealthView {
         r.healthy.load(Ordering::Acquire)
     }
 
+    /// A timed forward on replica `i` exceeded the slow-forward
+    /// threshold. Marks the replica unhealthy (sticky, like
+    /// [`HealthView::record_err`]) once `slow_streak_limit` consecutive
+    /// forwards were slow; returns whether it is still healthy
+    /// afterwards. `slow_streak_limit == 0` disables the trip (the
+    /// streak still accumulates for dispatch penalties).
+    pub(crate) fn record_slow(&self, i: usize, slow_streak_limit: usize) -> bool {
+        let Some(r) = self.replicas.get(i) else { return false };
+        let streak = r.slow_streak.fetch_add(1, Ordering::AcqRel) + 1;
+        if slow_streak_limit > 0 && streak >= slow_streak_limit {
+            r.healthy.store(false, Ordering::Release);
+        }
+        r.healthy.load(Ordering::Acquire)
+    }
+
+    /// A timed forward on replica `i` came in under the threshold:
+    /// the slow streak is broken (never revives an unhealthy replica).
+    pub(crate) fn record_fast(&self, i: usize) {
+        if let Some(r) = self.replicas.get(i) {
+            r.slow_streak.store(0, Ordering::Release);
+        }
+    }
+
+    /// Current consecutive-slow-forward streak of replica `i` (0 when
+    /// out of range). Load-aware dispatch reads this to deprioritize a
+    /// lagging replica before the watchdog retires it.
+    pub fn slow_streak(&self, i: usize) -> usize {
+        self.replicas.get(i).map(|r| r.slow_streak.load(Ordering::Acquire)).unwrap_or(0)
+    }
+
     /// The first healthy replica at or after `from` (wrapping), or
     /// `None` when the whole fleet is down.
     pub fn next_healthy(&self, from: usize) -> Option<usize> {
@@ -135,6 +176,29 @@ mod tests {
         assert!(!h.record_err(0, 3), "third consecutive error trips");
         assert!(!h.is_healthy(0));
         assert_eq!(h.next_healthy(0), None);
+    }
+
+    #[test]
+    fn slow_streaks_trip_sticky_unhealthy_and_fast_forwards_reset() {
+        let h = HealthView::new(2);
+        assert!(h.record_slow(0, 3));
+        assert!(h.record_slow(0, 3));
+        assert_eq!(h.slow_streak(0), 2);
+        h.record_fast(0); // a fast forward breaks the streak
+        assert_eq!(h.slow_streak(0), 0);
+        assert!(h.record_slow(0, 3));
+        assert!(h.record_slow(0, 3));
+        assert!(!h.record_slow(0, 3), "third consecutive slow forward trips");
+        assert!(!h.is_healthy(0), "watchdog trip is sticky");
+        h.record_fast(0);
+        assert!(!h.is_healthy(0), "a later fast forward does not revive");
+        // limit 0 disables the trip but keeps the streak observable
+        for _ in 0..10 {
+            assert!(h.record_slow(1, 0));
+        }
+        assert!(h.is_healthy(1));
+        assert_eq!(h.slow_streak(1), 10);
+        assert_eq!(h.slow_streak(7), 0, "out-of-range streak reads 0");
     }
 
     #[test]

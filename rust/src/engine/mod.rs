@@ -70,6 +70,44 @@
 //! chaos suite that proves no `Pending` ever hangs and the KV arena
 //! always drains.
 //!
+//! **Overload robustness** (PR 10) sits in front of all of that, at
+//! admission:
+//!
+//! * **Tenants and priorities** — [`SubmitOptions`] carries an optional
+//!   tenant name (the billing identity) and a three-level [`Priority`]
+//!   (`Low`/`Normal`/`High`). Decode promotion is priority-then-FIFO —
+//!   the oldest of the highest waiting class goes first — so paid
+//!   traffic's first token never queues behind a free-tier backlog.
+//!   Both default off/`Normal`, so tenantless traffic behaves exactly
+//!   as before.
+//! * **Token buckets** — [`EngineConfig::tenant_rate`] gives each named
+//!   tenant a per-replica token bucket; an empty bucket answers a typed
+//!   [`Overloaded`] error immediately instead of queueing work a flood
+//!   already doomed.
+//! * **Watermark shedding** — past
+//!   [`EngineConfig::shed_watermark`] × queue capacity, an arrival
+//!   displaces the queue's *youngest lowest-priority* entry if it
+//!   strictly outranks it, otherwise it is shed itself. Sheds answer
+//!   `Err(Overloaded)` at once: under overload the engine degrades by
+//!   rejecting cheap work, never by hanging anyone (R1).
+//! * **Brownout** — sustained backlog
+//!   ([`EngineConfig::brownout_backlog`] for `brownout_after` rounds)
+//!   caps `max_new` of [`Priority::Low`] generations at
+//!   [`EngineConfig::brownout_max_new`]: the free tier gets shorter
+//!   answers instead of no answers, shrinking decode residency until
+//!   pressure clears.
+//! * **Load-aware dispatch** — every loop publishes queue depth, active
+//!   decodes and free KV blocks into a shared [`LoadView`] (and its
+//!   cached prefixes into [`PrefixAffinity`]); [`LoadAware`]
+//!   ([`Engine::start_balanced`]) routes to the prefix-affine or
+//!   least-loaded healthy replica instead of blind rotation, and the
+//!   slow-replica watchdog ([`EngineConfig::slow_forward_threshold`])
+//!   deprioritizes — then retires — replicas whose forwards drag.
+//! * **Traces** — [`workload`] generates seeded Poisson/ON-OFF bursty
+//!   multi-tenant traces and mirrors the admission policy in virtual
+//!   time ([`workload::OverloadSim`]), so "same seed ⇒ same decisions"
+//!   is assertable bit-for-bit.
+//!
 //! The legacy [`crate::coordinator::serve::ServeClient`] verbs survive
 //! as deprecated shims over [`EngineClient`].
 
@@ -88,14 +126,20 @@ pub mod health;
 pub mod prefix;
 pub mod request;
 pub mod sampling;
+pub mod workload;
 
 pub use self::caps::EngineCaps;
 pub use self::chaos::{ChaosScorer, Fault};
 pub use self::core::{Engine, EngineClient, EngineConfig};
-pub use self::prefix::PrefixIndex;
-pub use self::dispatch::{Dispatch, RoundRobin};
+pub use self::dispatch::{Dispatch, LoadAware, LoadView, PrefixAffinity, RoundRobin};
 pub use self::health::HealthView;
+pub use self::prefix::PrefixIndex;
 pub use self::request::{
-    Generated, Pending, Request, Response, SubmitOptions, TokenEvent, TokenStream,
+    Generated, OverloadKind, Overloaded, Pending, Priority, Request, Response, SubmitOptions,
+    TokenEvent, TokenStream,
 };
 pub use self::sampling::{argmax_logp, sample_token, SamplingParams, DEFAULT_SAMPLING_SEED};
+pub use self::workload::{
+    generate_trace, replay_trace, Arrivals, BoundedPareto, Decision, OverloadSim, SimConfig,
+    TenantClass, TraceConfig, TraceEvent, TraceOutcome,
+};

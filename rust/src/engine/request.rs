@@ -2,6 +2,7 @@
 //! what comes back ([`Response`] through a [`Pending`] handle), and the
 //! incremental token channel ([`TokenStream`]) for generation.
 
+use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
@@ -10,6 +11,72 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use super::sampling::SamplingParams;
+
+/// Scheduling class of a submission. Under overload the engine sheds
+/// lowest-priority work first (queue high-watermark) and brownouts cap
+/// [`SamplingParams::max_new`] for [`Priority::Low`] generations before
+/// anything is shed at all; dispatch and admission never reorder work
+/// *within* a class, so FIFO fairness holds per priority level.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Best-effort: first to brownout, first to shed.
+    Low = 0,
+    /// The default class for unannotated traffic.
+    #[default]
+    Normal = 1,
+    /// Latency-sensitive: protected from shedding while any
+    /// lower-priority work remains to shed instead.
+    High = 2,
+}
+
+impl Priority {
+    /// Stable short name for metrics keys and summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// Why an [`Overloaded`] rejection fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadKind {
+    /// The submitting tenant's token bucket was empty.
+    RateLimited,
+    /// The replica queue crossed its shed watermark and this request was
+    /// (or displaced) the lowest-priority work in it.
+    QueueFull,
+}
+
+/// Typed admission-control rejection: the engine is shedding load and
+/// this request lost. Always an immediate `Err` — never a hang, never a
+/// panic (R1). Recover the structure from an `anyhow::Error` with
+/// `err.downcast_ref::<Overloaded>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Overloaded {
+    pub kind: OverloadKind,
+    pub priority: Priority,
+    /// The tenant the rejection was charged to, when one was named.
+    pub tenant: Option<String>,
+}
+
+impl fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let what = match self.kind {
+            OverloadKind::RateLimited => "tenant rate limit exceeded",
+            OverloadKind::QueueFull => "queue over shed watermark",
+        };
+        write!(f, "overloaded: {what} ({} priority", self.priority.name())?;
+        match &self.tenant {
+            Some(t) => write!(f, ", tenant {t})"),
+            None => write!(f, ")"),
+        }
+    }
+}
+
+impl std::error::Error for Overloaded {}
 
 /// One unit of work submitted to the engine.
 #[derive(Clone, Debug, PartialEq)]
@@ -81,11 +148,38 @@ pub struct SubmitOptions {
     /// is aborted at the next step boundary and its KV arena blocks
     /// freed.
     pub deadline: Option<Duration>,
+    /// Scheduling class: under overload the engine sheds
+    /// [`Priority::Low`] before [`Priority::Normal`] before
+    /// [`Priority::High`], and brownouts cap low-priority generation
+    /// lengths before shedding anything.
+    pub priority: Priority,
+    /// Billing/fairness identity for per-tenant token-bucket rate
+    /// limits ([`super::EngineConfig::tenant_rate`]). `None` is exempt
+    /// from per-tenant limits (still subject to watermark shedding).
+    pub tenant: Option<String>,
 }
 
 impl SubmitOptions {
     pub fn with_deadline(deadline: Duration) -> SubmitOptions {
-        SubmitOptions { deadline: Some(deadline) }
+        SubmitOptions { deadline: Some(deadline), ..SubmitOptions::default() }
+    }
+
+    /// Builder-style: set the scheduling class.
+    pub fn priority(mut self, priority: Priority) -> SubmitOptions {
+        self.priority = priority;
+        self
+    }
+
+    /// Builder-style: attribute the submission to a tenant.
+    pub fn tenant(mut self, tenant: impl Into<String>) -> SubmitOptions {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Builder-style: set the answer-by budget.
+    pub fn deadline(mut self, deadline: Duration) -> SubmitOptions {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
@@ -288,6 +382,49 @@ mod tests {
         let p2: Pending<Vec<f32>> = Pending::new(rx2, cell2.clone(), Response::into_scored);
         drop(p2);
         assert!(cell2.abandoned() && !cell2.cancelled());
+    }
+
+    #[test]
+    fn priority_orders_low_below_normal_below_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.name(), "high");
+    }
+
+    #[test]
+    fn submit_options_builders_compose() {
+        let o = SubmitOptions::default()
+            .priority(Priority::High)
+            .tenant("paid")
+            .deadline(Duration::from_millis(50));
+        assert_eq!(o.priority, Priority::High);
+        assert_eq!(o.tenant.as_deref(), Some("paid"));
+        assert_eq!(o.deadline, Some(Duration::from_millis(50)));
+        // the PR-8 constructor still defaults the new fields
+        let d = SubmitOptions::with_deadline(Duration::from_millis(5));
+        assert_eq!(d.priority, Priority::Normal);
+        assert_eq!(d.tenant, None);
+    }
+
+    #[test]
+    fn overloaded_downcasts_through_anyhow() {
+        let e = anyhow::Error::new(Overloaded {
+            kind: OverloadKind::QueueFull,
+            priority: Priority::Low,
+            tenant: Some("free".into()),
+        });
+        let o = e.downcast_ref::<Overloaded>().expect("typed overload must survive anyhow");
+        assert_eq!(o.kind, OverloadKind::QueueFull);
+        assert_eq!(o.priority, Priority::Low);
+        let msg = format!("{e}");
+        assert!(msg.contains("overloaded") && msg.contains("watermark"), "{msg}");
+        let rl = Overloaded {
+            kind: OverloadKind::RateLimited,
+            priority: Priority::Normal,
+            tenant: None,
+        };
+        assert!(format!("{rl}").contains("rate limit"), "{rl}");
     }
 
     #[test]

@@ -1,0 +1,702 @@
+//! Seeded, deterministic serving-workload traces.
+//!
+//! `probe_throughput`'s uniform mix is not production traffic. This
+//! module generates the kind that kills schedulers: Poisson or ON-OFF
+//! **bursty** arrivals, heavy-tailed (bounded-Pareto) prompt and
+//! generation lengths, and multiple tenant classes with distinct
+//! [`Priority`] levels — all replayable **bit-for-bit** from a seed, so
+//! every admission/routing policy change is measurable against the
+//! exact same traffic.
+//!
+//! Three layers, pure to impure:
+//!
+//! 1. [`generate_trace`] — a pure function of [`TraceConfig`]: the same
+//!    seed always yields the identical `Vec<TraceEvent>`.
+//! 2. [`OverloadSim`] — a virtual-time mirror of the engine's admission
+//!    policy (token buckets, watermark shedding lowest-priority-first,
+//!    least-loaded routing). Pure function of (sim config, trace):
+//!    identical inputs yield identical [`Decision`] sequences, which is
+//!    what "the same seed replays to identical admission/shed/route
+//!    decisions" pins in tests without depending on wall-clock timing.
+//! 3. [`replay_trace`] — drives a live [`EngineClient`] with the trace
+//!    (scaled inter-arrival sleeps), classifying every answer into a
+//!    per-tenant [`TenantStats`] via the typed [`Overloaded`] error.
+//!
+//! The live engine's decisions depend on real thread timing, so layer 3
+//! asserts *behavioral invariants* (everything resolves, shedding hits
+//! low priority first, arenas drain); bit-exact replay determinism is
+//! layer 1+2's job.
+
+use std::cmp::Reverse;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use super::core::EngineClient;
+use super::request::{OverloadKind, Overloaded, Priority, SubmitOptions};
+use super::sampling::SamplingParams;
+use crate::tensor::Rng;
+
+/// Arrival process of a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arrivals {
+    /// Memoryless arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Alternating ON/OFF phases (the classic bursty model): Poisson at
+    /// `on_rate` for `on_secs`, then at `off_rate` (often 0) for
+    /// `off_secs`, repeating. Bursts are what expose watermark/brownout
+    /// behavior a steady Poisson stream never triggers.
+    OnOff { on_rate: f64, off_rate: f64, on_secs: f64, off_secs: f64 },
+}
+
+/// Bounded-Pareto length distribution over `[lo, hi]` with tail index
+/// `alpha` (smaller `alpha` = heavier tail). Production prompt/output
+/// lengths are heavy-tailed; the bound keeps every sample inside the
+/// model window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoundedPareto {
+    pub alpha: f64,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl BoundedPareto {
+    /// Inverse-CDF sample, clamped into `[lo, hi]` (`lo` floors at 1).
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let lo = self.lo.max(1) as f64;
+        let hi = self.hi.max(self.lo.max(1)) as f64;
+        if hi <= lo {
+            return lo as usize;
+        }
+        let a = if self.alpha > 0.0 { self.alpha } else { 1.0 };
+        let u = rng.next_f64();
+        let la = lo.powf(-a);
+        let ha = hi.powf(-a);
+        let x = (la - u * (la - ha)).powf(-1.0 / a);
+        (x as usize).clamp(lo as usize, hi as usize)
+    }
+}
+
+/// One tenant class of the trace mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantClass {
+    /// Billing identity carried on [`SubmitOptions::tenant`].
+    pub name: String,
+    /// Scheduling class carried on [`SubmitOptions::priority`].
+    pub priority: Priority,
+    /// Relative share of arrivals this class receives.
+    pub weight: f64,
+}
+
+/// Everything [`generate_trace`] needs; equal configs generate equal
+/// traces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// Trace horizon in (virtual) seconds.
+    pub duration_secs: f64,
+    pub arrivals: Arrivals,
+    pub tenants: Vec<TenantClass>,
+    /// Prompt-length distribution (tokens).
+    pub prompt: BoundedPareto,
+    /// Generation-length (`max_new`) distribution (tokens).
+    pub gen: BoundedPareto,
+    /// Vocabulary size prompt tokens are drawn from.
+    pub vocab: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0,
+            duration_secs: 10.0,
+            arrivals: Arrivals::Poisson { rate: 8.0 },
+            tenants: vec![TenantClass {
+                name: "default".to_string(),
+                priority: Priority::Normal,
+                weight: 1.0,
+            }],
+            prompt: BoundedPareto { alpha: 1.5, lo: 4, hi: 64 },
+            gen: BoundedPareto { alpha: 1.5, lo: 2, hi: 32 },
+            vocab: 256,
+        }
+    }
+}
+
+/// One request of a generated trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival offset from trace start, in virtual seconds (ascending).
+    pub at_secs: f64,
+    pub tenant: String,
+    pub priority: Priority,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+/// Exponential inter-arrival gap at `rate` (memoryless). A zero/negative
+/// rate yields `f64::INFINITY` — "no arrivals in this phase".
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    let u = rng.next_f64();
+    -(1.0 - u).ln() / rate
+}
+
+/// Generate the full trace for `cfg` — a pure function: the same config
+/// (seed included) always produces the identical event list.
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceEvent> {
+    let mut rng = Rng::seed(cfg.seed);
+    let weights: Vec<f64> = cfg.tenants.iter().map(|t| t.weight.max(0.0)).collect();
+    let vocab = cfg.vocab.max(2);
+    let mut out = Vec::new();
+    let mut t = 0.0_f64;
+    // ON-OFF phase tracking (ignored for Poisson)
+    let mut phase_on = true;
+    // phase spans floor at 1ms so degenerate configs (0-length phases)
+    // still advance virtual time and the generator always terminates
+    let mut phase_end = match cfg.arrivals {
+        Arrivals::Poisson { .. } => f64::INFINITY,
+        Arrivals::OnOff { on_secs, .. } => on_secs.max(1e-3),
+    };
+    while t < cfg.duration_secs {
+        let rate = match cfg.arrivals {
+            Arrivals::Poisson { rate } => rate,
+            Arrivals::OnOff { on_rate, off_rate, .. } => {
+                if phase_on {
+                    on_rate
+                } else {
+                    off_rate
+                }
+            }
+        };
+        let next = t + exp_gap(&mut rng, rate);
+        if next >= phase_end {
+            // the draw crosses a phase boundary: jump to the boundary
+            // and redraw under the new phase's rate (valid by the
+            // exponential's memorylessness, and far simpler than
+            // thinning)
+            match cfg.arrivals {
+                // a Poisson trace has no boundary: this is `rate <= 0`,
+                // which never arrives — an empty trace, not a spin
+                Arrivals::Poisson { .. } => break,
+                Arrivals::OnOff { on_secs, off_secs, .. } => {
+                    t = phase_end;
+                    phase_on = !phase_on;
+                    let span = if phase_on { on_secs } else { off_secs };
+                    phase_end += span.max(1e-3);
+                }
+            }
+            continue;
+        }
+        t = next;
+        if t >= cfg.duration_secs {
+            break;
+        }
+        let class = cfg
+            .tenants
+            .get(rng.sample_weighted(&weights))
+            .cloned()
+            .unwrap_or_else(|| TenantClass {
+                name: "default".to_string(),
+                priority: Priority::Normal,
+                weight: 1.0,
+            });
+        let plen = cfg.prompt.sample(&mut rng);
+        let prompt: Vec<u32> = (0..plen).map(|_| rng.below(vocab) as u32).collect();
+        let max_new = cfg.gen.sample(&mut rng);
+        out.push(TraceEvent {
+            at_secs: t,
+            tenant: class.name,
+            priority: class.priority,
+            prompt,
+            max_new,
+        });
+    }
+    out
+}
+
+/// Admission-policy knobs of the virtual-time simulator — the same
+/// shape as the corresponding [`super::EngineConfig`] fields.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    pub n_replicas: usize,
+    /// Per-replica queue capacity (the watermark's denominator).
+    pub queue_cap: usize,
+    /// Fraction of `queue_cap` at which shedding engages (`<= 0` off).
+    pub shed_watermark: f64,
+    /// Token-bucket refill in requests/sec per tenant (`<= 0` off).
+    pub tenant_rate: f64,
+    /// Bucket capacity (`<= 0` defaults to `max(tenant_rate, 1)`).
+    pub tenant_burst: f64,
+    /// Requests/second one replica completes (virtual drain rate).
+    pub service_rate: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_replicas: 1,
+            queue_cap: 32,
+            shed_watermark: 0.0,
+            tenant_rate: 0.0,
+            tenant_burst: 0.0,
+            service_rate: 16.0,
+        }
+    }
+}
+
+/// What the simulator decided for one [`TraceEvent`], in trace order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Admitted onto `replica`'s queue.
+    Admit { replica: usize },
+    /// Rejected by `tenant`'s empty token bucket.
+    RateLimited { tenant: String },
+    /// Watermark shed: nothing cheaper was queued, the arrival itself
+    /// was answered [`Overloaded`].
+    ShedArrival { priority: Priority },
+    /// Watermark shed: admitted onto `replica` by displacing its
+    /// youngest queued job of the (strictly lower) `victim` class.
+    Displace { replica: usize, victim: Priority },
+}
+
+/// Virtual-time mirror of the engine's admission control: per-tenant
+/// token buckets, high-watermark shedding (lowest-priority-first,
+/// youngest-of-class victim), and least-loaded routing. Time is the
+/// trace's own `at_secs`, so runs are a pure function of
+/// `(SimConfig, trace)` — no threads, no clocks — which makes the
+/// "same seed, identical decisions" acceptance criterion assertable as
+/// plain `Vec` equality.
+///
+/// The sim intentionally models *queues*, not decode slots: it mirrors
+/// the policy's decision shape, not the engine's token-level schedule.
+pub struct OverloadSim {
+    cfg: SimConfig,
+}
+
+impl OverloadSim {
+    pub fn new(cfg: SimConfig) -> OverloadSim {
+        OverloadSim { cfg }
+    }
+
+    /// Run the trace through the admission mirror, one [`Decision`] per
+    /// event.
+    pub fn run(&self, trace: &[TraceEvent]) -> Vec<Decision> {
+        let n = self.cfg.n_replicas.max(1);
+        let cap = self.cfg.queue_cap.max(1);
+        let shed_at = if self.cfg.shed_watermark <= 0.0 {
+            usize::MAX
+        } else {
+            ((cap as f64 * self.cfg.shed_watermark).ceil() as usize).clamp(1, cap)
+        };
+        let burst = if self.cfg.tenant_burst > 0.0 {
+            self.cfg.tenant_burst
+        } else {
+            self.cfg.tenant_rate.max(1.0)
+        };
+        // per-replica queue of priorities (front = oldest) + drain credit
+        let mut queues: Vec<VecDeque<Priority>> = (0..n).map(|_| VecDeque::new()).collect();
+        let mut credit: Vec<f64> = vec![0.0; n];
+        let mut last = 0.0_f64;
+        // tenant → (bucket level, last refill time)
+        let mut buckets: HashMap<String, (f64, f64)> = HashMap::new();
+        let mut out = Vec::with_capacity(trace.len());
+        for ev in trace {
+            let now = ev.at_secs.max(last);
+            // drain every replica by elapsed virtual time
+            let dt = now - last;
+            for (q, c) in queues.iter_mut().zip(credit.iter_mut()) {
+                *c += dt * self.cfg.service_rate.max(0.0);
+                while *c >= 1.0 && !q.is_empty() {
+                    q.pop_front();
+                    *c -= 1.0;
+                }
+                if q.is_empty() {
+                    // credit does not bank across idle periods
+                    *c = c.min(1.0);
+                }
+            }
+            last = now;
+            // token bucket (mirrors `TenantBuckets::try_take`)
+            if self.cfg.tenant_rate > 0.0 {
+                let (level, at) = buckets
+                    .entry(ev.tenant.clone())
+                    .or_insert((burst, now));
+                *level = (*level + (now - *at) * self.cfg.tenant_rate).min(burst);
+                *at = now;
+                if *level >= 1.0 {
+                    *level -= 1.0;
+                } else {
+                    out.push(Decision::RateLimited { tenant: ev.tenant.clone() });
+                    continue;
+                }
+            }
+            // least-loaded routing (ties → lowest index, like LoadAware)
+            let ri = queues
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, q)| q.len())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let depth = queues.get(ri).map(VecDeque::len).unwrap_or(0);
+            if depth >= shed_at {
+                // watermark: displace the youngest of the lowest class,
+                // only if strictly below the arrival's priority
+                let victim = queues.get(ri).and_then(|q| {
+                    q.iter()
+                        .enumerate()
+                        .min_by_key(|(i, p)| (**p, Reverse(*i)))
+                        .filter(|(_, p)| **p < ev.priority)
+                        .map(|(i, p)| (i, *p))
+                });
+                match victim {
+                    Some((vi, vp)) => {
+                        if let Some(q) = queues.get_mut(ri) {
+                            q.remove(vi);
+                            q.push_back(ev.priority);
+                        }
+                        out.push(Decision::Displace { replica: ri, victim: vp });
+                    }
+                    None => out.push(Decision::ShedArrival { priority: ev.priority }),
+                }
+                continue;
+            }
+            if let Some(q) = queues.get_mut(ri) {
+                q.push_back(ev.priority);
+            }
+            out.push(Decision::Admit { replica: ri });
+        }
+        out
+    }
+}
+
+/// Per-tenant outcome counters of a live [`replay_trace`] run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub submitted: usize,
+    /// Completed `Ok` (token count alongside).
+    pub ok: usize,
+    pub tokens: usize,
+    /// Typed [`Overloaded`] with [`OverloadKind::QueueFull`].
+    pub shed: usize,
+    /// Typed [`Overloaded`] with [`OverloadKind::RateLimited`].
+    pub rate_limited: usize,
+    /// Deadline expiries (queue sheds and mid-generation aborts).
+    pub deadline: usize,
+    /// Everything else (validation, retries exhausted, shutdown).
+    pub other_err: usize,
+}
+
+/// Outcome of replaying a trace against a live engine.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceOutcome {
+    /// Keyed by tenant name (BTreeMap: deterministic iteration).
+    pub tenants: BTreeMap<String, TenantStats>,
+}
+
+impl TraceOutcome {
+    pub fn tenant(&self, name: &str) -> TenantStats {
+        self.tenants.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Sum of a stat across tenants, for whole-run assertions.
+    pub fn total(&self, f: impl Fn(&TenantStats) -> usize) -> usize {
+        self.tenants.values().map(f).sum()
+    }
+
+    /// Every submission resolved into exactly one counter?
+    pub fn fully_resolved(&self) -> bool {
+        self.tenants.values().all(|t| {
+            t.ok + t.shed + t.rate_limited + t.deadline + t.other_err == t.submitted
+        })
+    }
+}
+
+/// Replay `trace` against a live engine through the normal
+/// [`EngineClient`] surface. Inter-arrival gaps are multiplied by
+/// `time_scale` (`0.0` = fire as fast as possible); `deadline`, when
+/// set, rides on every submission. Blocks until every answer lands
+/// (bounded by `wait_timeout`, so a wedged engine fails fast instead
+/// of hanging the harness) and classifies each into [`TenantStats`].
+pub fn replay_trace(
+    client: &EngineClient,
+    trace: &[TraceEvent],
+    time_scale: f64,
+    deadline: Option<Duration>,
+) -> TraceOutcome {
+    let mut outcome = TraceOutcome::default();
+    let mut pending = Vec::with_capacity(trace.len());
+    let mut prev = 0.0_f64;
+    for ev in trace {
+        if time_scale > 0.0 {
+            let gap = (ev.at_secs - prev).max(0.0) * time_scale;
+            if gap > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(gap.min(1.0)));
+            }
+            prev = ev.at_secs;
+        }
+        let mut opts = SubmitOptions::default().priority(ev.priority).tenant(ev.tenant.clone());
+        if let Some(d) = deadline {
+            opts = opts.deadline(d);
+        }
+        let stats = outcome.tenants.entry(ev.tenant.clone()).or_default();
+        stats.submitted += 1;
+        match client.generate_with(
+            ev.prompt.clone(),
+            SamplingParams::greedy(ev.max_new.max(1)),
+            &opts,
+        ) {
+            Ok(p) => pending.push((ev.tenant.clone(), p)),
+            Err(_) => stats.other_err += 1,
+        }
+    }
+    for (tenant, p) in pending {
+        let stats = outcome.tenants.entry(tenant).or_default();
+        match p.wait_timeout(Duration::from_secs(60)) {
+            Ok(g) => {
+                stats.ok += 1;
+                stats.tokens += g.tokens.len();
+            }
+            Err(e) => match e.downcast_ref::<Overloaded>() {
+                Some(o) if o.kind == OverloadKind::RateLimited => stats.rate_limited += 1,
+                Some(_) => stats.shed += 1,
+                None if format!("{e}").contains("deadline") => stats.deadline += 1,
+                None => stats.other_err += 1,
+            },
+        }
+    }
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_class_cfg(seed: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            duration_secs: 20.0,
+            arrivals: Arrivals::OnOff {
+                on_rate: 40.0,
+                off_rate: 2.0,
+                on_secs: 2.0,
+                off_secs: 3.0,
+            },
+            tenants: vec![
+                TenantClass { name: "paid".into(), priority: Priority::High, weight: 0.2 },
+                TenantClass { name: "free".into(), priority: Priority::Low, weight: 0.8 },
+            ],
+            prompt: BoundedPareto { alpha: 1.2, lo: 4, hi: 48 },
+            gen: BoundedPareto { alpha: 1.5, lo: 2, hi: 16 },
+            vocab: 128,
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_bit_for_bit() {
+        let cfg = two_class_cfg(42);
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a, b, "trace generation must be a pure function of the config");
+        assert!(!a.is_empty());
+        let sim = OverloadSim::new(SimConfig {
+            n_replicas: 2,
+            queue_cap: 8,
+            shed_watermark: 0.75,
+            tenant_rate: 10.0,
+            tenant_burst: 4.0,
+            service_rate: 10.0,
+        });
+        assert_eq!(sim.run(&a), sim.run(&b), "identical admission/shed/route decisions");
+        // a different seed produces a different trace
+        let c = generate_trace(&two_class_cfg(43));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn traces_are_ordered_bounded_and_mixed() {
+        let cfg = two_class_cfg(7);
+        let trace = generate_trace(&cfg);
+        let mut prev = 0.0;
+        for ev in &trace {
+            assert!(ev.at_secs >= prev && ev.at_secs < cfg.duration_secs);
+            prev = ev.at_secs;
+            assert!((cfg.prompt.lo..=cfg.prompt.hi).contains(&ev.prompt.len()));
+            assert!((cfg.gen.lo..=cfg.gen.hi).contains(&ev.max_new));
+            assert!(ev.prompt.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+        let paid = trace.iter().filter(|e| e.tenant == "paid").count();
+        let free = trace.iter().filter(|e| e.tenant == "free").count();
+        assert!(paid > 0 && free > 0, "both classes appear (paid={paid} free={free})");
+        assert!(free > paid, "weights steer the mix");
+        assert!(
+            trace.iter().all(|e| (e.tenant == "paid") == (e.priority == Priority::High)),
+            "priority rides with the class"
+        );
+    }
+
+    #[test]
+    fn poisson_arrival_count_tracks_the_rate() {
+        let cfg = TraceConfig {
+            seed: 11,
+            duration_secs: 50.0,
+            arrivals: Arrivals::Poisson { rate: 10.0 },
+            ..TraceConfig::default()
+        };
+        let n = generate_trace(&cfg).len() as f64;
+        let expect = 10.0 * 50.0;
+        assert!(
+            (n - expect).abs() < expect * 0.2,
+            "got {n} arrivals, expected ~{expect}"
+        );
+    }
+
+    #[test]
+    fn onoff_bursts_cluster_in_on_phases() {
+        let cfg = TraceConfig {
+            seed: 5,
+            duration_secs: 30.0,
+            arrivals: Arrivals::OnOff {
+                on_rate: 30.0,
+                off_rate: 0.0,
+                on_secs: 1.0,
+                off_secs: 4.0,
+            },
+            ..TraceConfig::default()
+        };
+        let trace = generate_trace(&cfg);
+        assert!(!trace.is_empty());
+        // with off_rate 0 every arrival must land inside an ON window
+        for ev in &trace {
+            let phase = ev.at_secs % 5.0;
+            assert!(phase < 1.0, "arrival at {:.3}s is outside every ON phase", ev.at_secs);
+        }
+    }
+
+    #[test]
+    fn bounded_pareto_is_heavy_tailed_within_bounds() {
+        let mut rng = Rng::seed(3);
+        let d = BoundedPareto { alpha: 1.1, lo: 4, hi: 512 };
+        let xs: Vec<usize> = (0..4000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (4..=512).contains(&x)));
+        let small = xs.iter().filter(|&&x| x <= 16).count();
+        let big = xs.iter().filter(|&&x| x >= 128).count();
+        assert!(small > xs.len() / 2, "most mass near lo (small={small})");
+        assert!(big > 0, "but the tail reaches far (big={big})");
+        // degenerate bounds collapse to a point
+        let point = BoundedPareto { alpha: 1.5, lo: 8, hi: 8 };
+        assert_eq!(point.sample(&mut rng), 8);
+    }
+
+    #[test]
+    fn sim_sheds_low_priority_first_under_overload() {
+        let cfg = two_class_cfg(21);
+        let trace = generate_trace(&cfg);
+        // The queue is sized so the watermark strictly exceeds the high
+        // class's TOTAL event count — then a queue at the shed mark can
+        // never be all-High (even if every paid event sat in it), so an
+        // over-watermark High arrival always finds a Low victim and the
+        // "never shed the high class" assertion is structural, not a
+        // timing accident. (An undersized queue genuinely can fill with
+        // displaced-into Highs and shed a High arrival — the policy is
+        // working as specified there; it is the config that has already
+        // spent its entire priority budget.) serve-bench sizes its
+        // overload fleet with the same rule.
+        let paid = trace.iter().filter(|e| e.priority == Priority::High).count();
+        let sim = OverloadSim::new(SimConfig {
+            n_replicas: 2,
+            queue_cap: (paid + 4) * 4 / 3 + 1,
+            shed_watermark: 0.75,
+            tenant_rate: 0.0,
+            tenant_burst: 0.0,
+            // far below the 40 rps ON-phase rate: a genuine deep overload
+            service_rate: 1.0,
+        });
+        let decisions = sim.run(&trace);
+        let sheds = decisions
+            .iter()
+            .filter(|d| matches!(d, Decision::ShedArrival { .. } | Decision::Displace { .. }))
+            .count();
+        assert!(sheds > 0, "the overload trace must actually shed");
+        for d in &decisions {
+            match d {
+                Decision::Displace { victim, .. } => {
+                    assert_eq!(*victim, Priority::Low, "only the low class is displaced")
+                }
+                Decision::ShedArrival { priority } => {
+                    assert_eq!(*priority, Priority::Low, "high arrivals displace, never shed")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn sim_rate_limits_only_the_flooding_tenant() {
+        let cfg = two_class_cfg(31);
+        let trace = generate_trace(&cfg);
+        let sim = OverloadSim::new(SimConfig {
+            n_replicas: 2,
+            queue_cap: 64,
+            shed_watermark: 0.0,
+            tenant_rate: 2.0,
+            tenant_burst: 2.0,
+            service_rate: 1000.0,
+        });
+        let limited: Vec<&str> = sim
+            .run(&trace)
+            .iter()
+            .filter_map(|d| match d {
+                Decision::RateLimited { tenant } => Some(tenant.as_str()),
+                _ => None,
+            })
+            .map(|t| if t == "free" { "free" } else { "paid" })
+            .collect();
+        assert!(!limited.is_empty(), "2 rps cannot carry an ON-phase burst");
+        let free = limited.iter().filter(|t| **t == "free").count();
+        assert!(
+            free * 2 > limited.len(),
+            "the heavier class eats most rate-limit rejections ({free}/{})",
+            limited.len()
+        );
+    }
+
+    #[test]
+    fn sim_admits_everything_when_no_limits_are_set() {
+        let cfg = two_class_cfg(9);
+        let trace = generate_trace(&cfg);
+        let sim = OverloadSim::new(SimConfig {
+            n_replicas: 3,
+            queue_cap: 1_000_000,
+            shed_watermark: 0.0,
+            tenant_rate: 0.0,
+            tenant_burst: 0.0,
+            service_rate: 0.0,
+        });
+        let decisions = sim.run(&trace);
+        assert_eq!(decisions.len(), trace.len());
+        assert!(decisions.iter().all(|d| matches!(d, Decision::Admit { .. })));
+    }
+
+    #[test]
+    fn trace_outcome_partition_accounting() {
+        let mut o = TraceOutcome::default();
+        let s = o.tenants.entry("t".to_string()).or_default();
+        s.submitted = 5;
+        s.ok = 2;
+        s.shed = 1;
+        s.rate_limited = 1;
+        s.deadline = 1;
+        assert!(o.fully_resolved());
+        assert_eq!(o.tenant("t").ok, 2);
+        assert_eq!(o.tenant("missing"), TenantStats::default());
+        assert_eq!(o.total(|t| t.submitted), 5);
+        if let Some(s) = o.tenants.get_mut("t") {
+            s.other_err = 3;
+        }
+        assert!(!o.fully_resolved(), "over-counting is caught");
+    }
+}

@@ -128,6 +128,45 @@
 //! `serve.cancelled`, `serve.retries`, `serve.deadline_aborts` and the
 //! `serve.replicas_healthy` gauge in the serve summaries.
 //!
+//! Since PR 10 the lifecycle is **overload-robust**: an admission layer
+//! sits between the client and the round loop, and dispatch routes on
+//! live load instead of round-robin position:
+//!
+//! ```text
+//!   EngineClient::submit(Request + SubmitOptions{tenant, priority})
+//!        │
+//!        ▼
+//!   admission (per replica, before intake)        engine::Dispatch
+//!     1 token bucket per tenant                   ──────────────────
+//!       (EngineConfig::tenant_rate/burst)         LoadAware routing:
+//!       over budget ⇒ Err(Overloaded::RateLimited)  each loop publishes
+//!     2 queue watermark                             queue depth + KV
+//!       (EngineConfig::shed_watermark)              residency to a shared
+//!       over the mark ⇒ shed the *lowest-priority*  LoadView; submits go
+//!       youngest queued request — the arrival       to the least-loaded
+//!       itself only when nothing lower is queued    healthy replica,
+//!       ⇒ Err(Overloaded::QueueFull)                prefix-affinity
+//!     3 brownout under sustained backlog            steers shared-prompt
+//!       (EngineConfig::brownout_backlog/after)      waves to the replica
+//!       low-priority max_new capped, High exempt    holding the cached
+//!   decode promotion: priority-then-FIFO            prefix blocks
+//! ```
+//!
+//! Rejections are typed ([`engine::Overloaded`] with an
+//! [`engine::OverloadKind`]) and always an `Err` answer — never a hang,
+//! never a panic (invariant R1). The seeded workload harness
+//! ([`engine::workload`]) generates multi-tenant bursty traces (Poisson
+//! and ON-OFF arrivals, bounded-Pareto lengths) that replay bit-for-bit,
+//! and `rilq serve-bench --trace=burst` self-asserts the acceptance bar:
+//! shedding hits low-priority first, high-priority TTFT p99 stays within
+//! 2x the uncontended baseline, and the same seed replays identical
+//! admission decisions. SLO accounting lands in the serve summaries:
+//! `serve.ttft_*` percentiles, `serve.goodput_requests` (completions
+//! that beat their deadline) vs raw tok/s, `serve.overload_sheds{,_high}`,
+//! `serve.rate_limited`, `serve.brownouts`, and `serve.slow_forwards`
+//! from the slow-replica watchdog (`EngineConfig::slow_forward_threshold`
+//! — streaks trip the same sticky [`engine::HealthView`] as crashes).
+//!
 //! ## Micro-kernel layer (the FLOP path)
 //!
 //! Below the backends sits one vectorized primitive set,

@@ -8,10 +8,13 @@
 //!                    [--backend={dense|packed|merged}]
 //!                                   quantize+compensate+evaluate one cell
 //! rilq serve-bench [--backend=packed --batch=8 --requests=64 --seq=64
-//!                   --gen=N --sample --stream --shared-prefix=N --smoke]
+//!                   --gen=N --sample --stream --shared-prefix=N
+//!                   --trace={burst|poisson} --smoke]
 //!                                   request-lifecycle engine benchmark:
 //!                                   continuous batching, KV-cache decode,
-//!                                   sampling + streaming (native, PJRT-free)
+//!                                   sampling + streaming, and seeded
+//!                                   multi-tenant overload traces
+//!                                   (native, PJRT-free)
 //! rilq inspect                      print manifest / artifact inventory
 //! ```
 
@@ -422,6 +425,13 @@ fn serve_bench(args: &Args) -> Result<()> {
             shared_prefix_bench(args, &scorer, &dims, shared, gen)?;
         }
     }
+
+    // trace section: seeded bursty multi-tenant overload through the
+    // admission-control + load-aware-dispatch stack, self-asserting the
+    // overload-robustness invariants (see trace_bench)
+    if let Some(kind) = args.opt("trace") {
+        trace_bench(args, &scorer, &dims, kind)?;
+    }
     Ok(())
 }
 
@@ -570,6 +580,214 @@ fn shared_prefix_bench(
     Ok(())
 }
 
+/// The `--trace={burst|poisson}` serve-bench section: a seeded
+/// two-tenant workload (paid/High at ~15% of arrivals, free/Low the
+/// rest) driven through the typed engine API — once strictly
+/// sequentially for an uncontended SLO baseline, then as a 2×-rate
+/// flood against a deliberately tight two-replica fleet with watermark
+/// shedding, brownout, and load-aware dispatch enabled. Self-asserts
+/// the overload-robustness acceptance bar:
+///
+/// * the same seed regenerates the identical trace and the identical
+///   virtual-time admission decisions, bit-for-bit;
+/// * every submission resolves into exactly one outcome counter (no
+///   hangs, no double counts);
+/// * shedding never touches the high-priority class — structurally:
+///   the queue is sized so the watermark strictly exceeds the paid
+///   class's total event count, so an over-watermark paid arrival
+///   always finds a free-tier victim to displace;
+/// * high-priority p99 TTFT stays within 2× the uncontended baseline
+///   (floored at 50 ms: at CI's smoke geometry the absolute numbers
+///   sit at scheduler-jitter scale — the relative bound is what binds
+///   at real geometry);
+/// * both replicas' KV arenas drain to zero after shutdown.
+///
+/// `--expect-shedding` additionally fails the run if the overload never
+/// shed anything — a silently oversized queue would stop covering the
+/// admission-control path at all.
+fn trace_bench(
+    args: &Args,
+    scorer: &std::sync::Arc<BackendScorer>,
+    dims: &ModelDims,
+    kind: &str,
+) -> Result<()> {
+    use rilq::engine::{
+        generate_trace, replay_trace, Arrivals, BoundedPareto, Decision, OverloadSim, Priority,
+        SimConfig, SubmitOptions, TenantClass, TraceConfig,
+    };
+
+    let seq = dims.seq;
+    let max_batch = args.opt_usize("batch")?.unwrap_or(8).max(1);
+    let cfg_for = |mult: f64| -> Result<TraceConfig> {
+        let arrivals = match kind {
+            "poisson" => Arrivals::Poisson { rate: 24.0 * mult },
+            "burst" => Arrivals::OnOff {
+                on_rate: 30.0 * mult,
+                off_rate: 2.0 * mult,
+                on_secs: 1.5,
+                off_secs: 1.5,
+            },
+            other => return Err(anyhow!("--trace={other}: expected 'burst' or 'poisson'")),
+        };
+        Ok(TraceConfig {
+            seed: 0x7ace,
+            duration_secs: 6.0,
+            arrivals,
+            tenants: vec![
+                TenantClass { name: "paid".into(), priority: Priority::High, weight: 0.15 },
+                TenantClass { name: "free".into(), priority: Priority::Low, weight: 0.85 },
+            ],
+            // prompt.hi + gen.hi stays inside the model window, so no
+            // trace event can fail request validation
+            prompt: BoundedPareto { alpha: 1.3, lo: 3, hi: (seq / 2).max(3) },
+            gen: BoundedPareto { alpha: 1.5, lo: 1, hi: (seq - seq / 2 - 1).max(1) },
+            vocab: dims.vocab,
+        })
+    };
+
+    // layers 1+2: "the same seed replays to identical admission/shed/
+    // route decisions" — pure functions of (config, trace), so the
+    // acceptance criterion is assertable as plain Vec equality before
+    // any thread is involved
+    let trace = generate_trace(&cfg_for(2.0)?);
+    if trace != generate_trace(&cfg_for(2.0)?) {
+        return Err(anyhow!("--trace: generate_trace is not a pure function of its config"));
+    }
+    let sim = OverloadSim::new(SimConfig {
+        n_replicas: 2,
+        queue_cap: 16,
+        shed_watermark: 0.75,
+        tenant_rate: 6.0,
+        tenant_burst: 4.0,
+        service_rate: 12.0,
+    });
+    let decisions = sim.run(&trace);
+    if decisions != sim.run(&trace) {
+        return Err(anyhow!("--trace: OverloadSim decisions are not deterministic"));
+    }
+    let paid_total = trace.iter().filter(|e| e.priority == Priority::High).count();
+    let sheds_sim = decisions
+        .iter()
+        .filter(|d| matches!(d, Decision::ShedArrival { .. } | Decision::Displace { .. }))
+        .count();
+    let limited_sim =
+        decisions.iter().filter(|d| matches!(d, Decision::RateLimited { .. })).count();
+    println!(
+        "trace [{kind}] 2x overload: {} events ({paid_total} paid/high); sim mirror \
+         {sheds_sim} watermark sheds, {limited_sim} rate-limited — bit-for-bit replayable",
+        trace.len()
+    );
+
+    let replicas: Vec<std::sync::Arc<dyn Scorer + Send + Sync>> =
+        vec![scorer.clone(), scorer.clone()];
+    // uncontended baseline: the 1x trace served strictly sequentially —
+    // every TTFT is pure prefill against an empty queue
+    let base_engine = Engine::start_balanced(
+        replicas.clone(),
+        EngineConfig {
+            max_batch,
+            queue_capacity: 64,
+            prefill_chunk: (seq / 4).max(1),
+            ..EngineConfig::default()
+        },
+    );
+    let client = base_engine.client();
+    for ev in generate_trace(&cfg_for(1.0)?).iter().take(24) {
+        client
+            .generate_with(
+                ev.prompt.clone(),
+                SamplingParams::greedy(ev.max_new.max(1)),
+                &SubmitOptions::default().priority(ev.priority).tenant(ev.tenant.clone()),
+            )?
+            .wait()?;
+    }
+    let base = base_engine.shutdown();
+    let base_ttft = base.ttft_p99_secs.unwrap_or(0.0);
+
+    // the overload fleet: watermark + brownout on, and the queue sized
+    // so the watermark strictly exceeds the paid class's total event
+    // count — an over-watermark paid arrival then always finds a
+    // free-tier victim to displace, making "the high class is never
+    // shed" a structural guarantee rather than a timing accident
+    let queue_cap = ((paid_total + 4) * 4 / 3 + 1).max(16);
+    let engine = Engine::start_balanced(
+        replicas,
+        EngineConfig {
+            max_batch,
+            queue_capacity: queue_cap,
+            prefill_chunk: (seq / 4).max(1),
+            shed_watermark: 0.75,
+            brownout_backlog: (queue_cap / 2).max(1),
+            brownout_after: 2,
+            brownout_max_new: 2,
+            ..EngineConfig::default()
+        },
+    );
+    let client = engine.client();
+    let outcome = replay_trace(&client, &trace, 0.0, None);
+    let arenas: Vec<_> = engine.arenas().to_vec();
+    let over = engine.shutdown();
+
+    let paid = outcome.tenant("paid");
+    let free = outcome.tenant("free");
+    let over_ttft = over.ttft_high_p99_secs.unwrap_or(0.0);
+    println!(
+        "trace overload: paid {}/{} ok ({} shed), free {}/{} ok ({} shed), \
+         {} goodput tokens; high p99 TTFT {:.1}ms vs {:.1}ms uncontended",
+        paid.ok,
+        paid.submitted,
+        paid.shed,
+        free.ok,
+        free.submitted,
+        free.shed,
+        outcome.total(|t| t.tokens),
+        over_ttft * 1e3,
+        base_ttft * 1e3
+    );
+    println!("  {over}");
+
+    if !outcome.fully_resolved() {
+        return Err(anyhow!("--trace: a submission resolved into zero or two outcome counters"));
+    }
+    if paid.shed != 0 || paid.rate_limited != 0 || over.overload_sheds_high != 0.0 {
+        return Err(anyhow!(
+            "--trace: the overload rejected {} high-priority request(s) \
+             (counter {}); shedding must hit the low class first",
+            paid.shed + paid.rate_limited,
+            over.overload_sheds_high
+        ));
+    }
+    if paid.ok == 0 {
+        return Err(anyhow!("--trace: no high-priority request completed under overload"));
+    }
+    for (i, a) in arenas.iter().enumerate() {
+        if a.blocks_in_use() != 0 {
+            return Err(anyhow!(
+                "--trace: replica {i} leaked {} KV arena block(s) through the overload",
+                a.blocks_in_use()
+            ));
+        }
+    }
+    let limit = (2.0 * base_ttft).max(0.05);
+    if over_ttft > limit {
+        return Err(anyhow!(
+            "--trace: high-priority p99 TTFT degraded {:.1}ms -> {:.1}ms under \
+             2x overload (limit {:.1}ms)",
+            base_ttft * 1e3,
+            over_ttft * 1e3,
+            limit * 1e3
+        ));
+    }
+    if args.flag("expect-shedding") && over.overload_sheds < 1.0 {
+        return Err(anyhow!(
+            "--trace --expect-shedding: the 2x overload never shed \
+             (queue_capacity={queue_cap}, watermark=0.75 — the admission \
+             path went uncovered)"
+        ));
+    }
+    Ok(())
+}
+
 const HELP: &str = "\
 rilq — RILQ (AAAI 2025) reproduction: rank-insensitive LoRA-based
 quantization error compensation for 2-bit LLMs, on a Rust + JAX + Pallas
@@ -589,6 +807,7 @@ USAGE:
                     --max-active=N --arena-blocks=N --kv-block=N
                     --sample --stream --expect-preemption
                     --shared-prefix=N
+                    --trace={burst|poisson} --expect-shedding
                     --chaos --expect-retries --smoke]
                                       native engine serving benchmark:
                                       per-sequence vs coalesced ragged
@@ -616,6 +835,19 @@ USAGE:
                                       full recompute; fails unless hits
                                       fired, tokens were saved, and no
                                       pinned block survives shutdown);
+                                      --trace={burst|poisson} replays a
+                                      seeded two-tenant workload (Poisson
+                                      or ON-OFF bursty arrivals, bounded-
+                                      Pareto lengths) at 2x overload
+                                      through tenant-aware admission
+                                      control and load-aware dispatch:
+                                      asserts bit-for-bit trace/decision
+                                      replay, every submission resolves,
+                                      shedding hits the low class only,
+                                      high-priority p99 TTFT within 2x
+                                      the uncontended baseline, and the
+                                      arenas drain; --expect-shedding
+                                      fails the run if nothing was shed;
                                       --chaos re-runs the engine under
                                       seeded fault injection (scheduled
                                       Errs/delays) and verifies every

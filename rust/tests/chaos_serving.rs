@@ -13,13 +13,20 @@
 //!    score that survived a retry, or a generation that failed over to a
 //!    peer replica mid-decode, returns exactly the tokens/logps of the
 //!    clean scorer.
+//!
+//! PR 10 extends the suite with overload robustness: seeded bursty
+//! multi-tenant traces flood the admission-control path while faults
+//! fire, shedding must hit the low-priority class only, the slow-replica
+//! watchdog retires dragging replicas, and the rejection counters
+//! partition the Err answers exactly.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use rilq::engine::{
-    ChaosScorer, Dispatch, Engine, EngineConfig, Fault, HealthView, Request, RoundRobin,
-    SamplingParams, SubmitOptions,
+    generate_trace, Arrivals, BoundedPareto, ChaosScorer, Dispatch, Engine, EngineConfig, Fault,
+    HealthView, OverloadKind, Overloaded, Priority, Request, RoundRobin, SamplingParams,
+    SubmitOptions, TenantClass, TraceConfig,
 };
 use rilq::eval::{greedy_decode, BackendScorer, Scorer};
 use rilq::model::backend::BackendKind;
@@ -41,7 +48,7 @@ fn dims() -> ModelDims {
     }
 }
 
-fn packed_scorer(seed: u64) -> Arc<BackendScorer> {
+fn scorer_for(seed: u64, kind: BackendKind) -> Arc<BackendScorer> {
     let d = dims();
     let mut rng = Rng::seed(seed);
     let teacher = TeacherParams::init(&d, &mut rng);
@@ -49,7 +56,11 @@ fn packed_scorer(seed: u64) -> Arc<BackendScorer> {
     let student = StudentWeights::quantize(&d, &teacher, quant.as_ref(), &|_, _| {
         CalibCtx::default()
     });
-    Arc::new(BackendScorer::new(&d, &teacher, &student, None, BackendKind::Packed).unwrap())
+    Arc::new(BackendScorer::new(&d, &teacher, &student, None, kind).unwrap())
+}
+
+fn packed_scorer(seed: u64) -> Arc<BackendScorer> {
+    scorer_for(seed, BackendKind::Packed)
 }
 
 /// Route every submission to one fixed replica (lets the panic test aim
@@ -413,4 +424,341 @@ fn seeded_chaos_runs_reproduce_bitwise() {
     // RoundRobin is irrelevant to this test but keeps the import honest
     // across cfg combinations
     let _ = RoundRobin::new();
+}
+
+/// PR-10 tentpole under faults, across every native backend: a seeded
+/// bursty two-tenant trace floods an engine running admission control
+/// while `ChaosScorer` injects Err faults. The trace regenerates
+/// bit-for-bit, every `Pending` resolves, every surviving answer is
+/// bitwise-identical to the fault-free decode, and the arena drains.
+#[test]
+fn bursty_trace_under_faults_resolves_drains_and_matches() {
+    for kind in [BackendKind::Dense, BackendKind::Packed, BackendKind::Merged] {
+        let clean = scorer_for(81, kind);
+        let d = clean.dims().clone();
+        let cfg = TraceConfig {
+            seed: 0xb125,
+            duration_secs: 1.5,
+            arrivals: Arrivals::OnOff {
+                on_rate: 30.0,
+                off_rate: 2.0,
+                on_secs: 0.5,
+                off_secs: 0.5,
+            },
+            tenants: vec![
+                TenantClass { name: "paid".into(), priority: Priority::High, weight: 0.25 },
+                TenantClass { name: "free".into(), priority: Priority::Low, weight: 0.75 },
+            ],
+            // prompt.hi + gen.hi stays inside the 16-token model window
+            prompt: BoundedPareto { alpha: 1.3, lo: 2, hi: 8 },
+            gen: BoundedPareto { alpha: 1.5, lo: 1, hi: 4 },
+            vocab: d.vocab,
+        };
+        let trace = generate_trace(&cfg);
+        assert_eq!(trace, generate_trace(&cfg), "[{kind}] trace must regenerate bit-for-bit");
+        assert!(trace.len() >= 8, "[{kind}] degenerate trace ({} events)", trace.len());
+        let want: Vec<_> = trace
+            .iter()
+            .map(|ev| greedy_decode(clean.as_ref(), &ev.prompt, ev.max_new.max(1)).unwrap())
+            .collect();
+
+        let chaos = ChaosScorer::new(clean.clone())
+            .with_fault(1, Fault::Err)
+            .seeded(0xfa57, 6, 24, false);
+        let engine = Engine::start_shared(
+            Arc::new(chaos),
+            EngineConfig {
+                max_batch: 4,
+                queue_capacity: 16,
+                max_active: 2,
+                prefill_chunk: 4,
+                shed_watermark: 0.75,
+                max_retries: 12,
+                unhealthy_after: usize::MAX,
+                retry_backoff: Duration::from_millis(1),
+                ..EngineConfig::default()
+            },
+        );
+        let arena = engine.arenas()[0].clone();
+        let client = engine.client();
+        // the whole burst floods in without pacing — worst case for the
+        // admission path
+        let pendings: Vec<_> = trace
+            .iter()
+            .map(|ev| {
+                client
+                    .generate_with(
+                        ev.prompt.clone(),
+                        SamplingParams::greedy(ev.max_new.max(1)),
+                        &SubmitOptions::default()
+                            .priority(ev.priority)
+                            .tenant(ev.tenant.clone()),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        let mut okd = 0usize;
+        for (k, (p, (toks, lps))) in pendings.into_iter().zip(&want).enumerate() {
+            // invariant 1: every Pending resolves — Ok or typed Err,
+            // never a hang (the timeout error contains "within")
+            match p.wait_timeout(Duration::from_secs(60)) {
+                Ok(got) => {
+                    okd += 1;
+                    // invariant 3: survivors are bitwise-identical to
+                    // the fault-free decode
+                    assert_eq!(&got.tokens, toks, "[{kind}] event {k} tokens diverged");
+                    for (a, b) in got.logps.iter().zip(lps) {
+                        assert!(
+                            a.to_bits() == b.to_bits(),
+                            "[{kind}] event {k}: logp not bitwise identical"
+                        );
+                    }
+                }
+                Err(e) => {
+                    assert!(
+                        !format!("{e}").contains("within"),
+                        "[{kind}] event {k} never resolved: {e}"
+                    );
+                }
+            }
+        }
+        assert!(okd > 0, "[{kind}] the burst answered nothing at all");
+        drop(client);
+        let summary = engine.shutdown();
+        assert!(summary.retries >= 1.0, "[{kind}] the scheduled call-1 fault never retried");
+        // invariant 2: the arena drains
+        assert_eq!(arena.blocks_in_use(), 0, "[{kind}] bursty faulted traffic leaked blocks");
+    }
+}
+
+/// PR-10 tentpole: a low-priority flood over the watermark must not
+/// touch paid traffic. Every high-priority request completes, low
+/// rejections answer the typed `Overloaded` (QueueFull, Low) and the
+/// `serve.overload_sheds` counter mirrors them exactly, sustained
+/// backlog brownout fires, and the arena drains.
+#[test]
+fn high_priority_goodput_survives_a_low_priority_flood() {
+    let clean = packed_scorer(83);
+    let d = clean.dims().clone();
+    // slow every forward slightly so the flood genuinely backs up the
+    // queue (the tiny model would otherwise drain as fast as we submit)
+    let mut chaos = ChaosScorer::new(clean.clone());
+    for call in 1..=200 {
+        chaos = chaos.with_fault(call, Fault::Delay(Duration::from_millis(2)));
+    }
+    let engine = Engine::start_shared(
+        Arc::new(chaos),
+        EngineConfig {
+            max_batch: 4,
+            // watermark at ceil(0.75 × 16) = 12 — above the 5 paid
+            // requests, so a paid arrival over the watermark always
+            // finds a free-tier victim to displace and is never shed
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            shed_watermark: 0.75,
+            brownout_backlog: 6,
+            brownout_after: 1,
+            brownout_max_new: 1,
+            unhealthy_after: usize::MAX,
+            ..EngineConfig::default()
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+    let mut rng = Rng::seed(84);
+    let mut prompt =
+        |n: usize| -> Vec<u32> { (0..n).map(|_| rng.below(d.vocab) as u32).collect() };
+    // 40 free/Low generations flood in first, then 5 paid/High arrive
+    // into the saturated queue
+    let lows: Vec<_> = (0..40)
+        .map(|_| {
+            client
+                .generate_with(
+                    prompt(4),
+                    SamplingParams::greedy(6),
+                    &SubmitOptions::default().priority(Priority::Low).tenant("free"),
+                )
+                .unwrap()
+        })
+        .collect();
+    let highs: Vec<_> = (0..5)
+        .map(|_| {
+            client
+                .generate_with(
+                    prompt(4),
+                    SamplingParams::greedy(4),
+                    &SubmitOptions::default().priority(Priority::High).tenant("paid"),
+                )
+                .unwrap()
+        })
+        .collect();
+    for (k, h) in highs.into_iter().enumerate() {
+        h.wait_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("high-priority request {k} was not protected: {e}"));
+    }
+    let mut low_ok = 0usize;
+    let mut low_shed = 0usize;
+    for (k, l) in lows.into_iter().enumerate() {
+        match l.wait_timeout(Duration::from_secs(60)) {
+            Ok(_) => low_ok += 1,
+            Err(e) => {
+                let o = e
+                    .downcast_ref::<Overloaded>()
+                    .unwrap_or_else(|| panic!("low {k} failed with a non-shed error: {e}"));
+                assert_eq!(o.kind, OverloadKind::QueueFull, "low {k}: wrong rejection kind");
+                assert_eq!(o.priority, Priority::Low);
+                low_shed += 1;
+            }
+        }
+    }
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(low_shed >= 1, "a 40-deep flood over a 12-entry watermark never shed");
+    assert!(low_ok >= 1, "shedding degraded into rejecting everything");
+    assert_eq!(
+        summary.overload_sheds,
+        low_shed as f64,
+        "the shed counter must mirror the typed answers exactly"
+    );
+    assert_eq!(summary.overload_sheds_high, 0.0, "a high-priority request was shed");
+    assert!(summary.goodput_requests >= 5.0, "paid goodput lost: {}", summary.goodput_requests);
+    assert!(
+        summary.ttft_high_p99_secs.is_some(),
+        "the high-priority TTFT series was never observed"
+    );
+    assert!(summary.brownouts >= 1.0, "sustained backlog never browned out the free tier");
+    assert_eq!(arena.blocks_in_use(), 0, "the flood leaked arena blocks");
+}
+
+/// Satellite: the slow-replica watchdog. Persistent injected `Delay`
+/// faults push one replica's forwards over `slow_forward_threshold`;
+/// after `slow_streak_limit` consecutive slow forwards the watchdog
+/// marks it sticky-unhealthy and routing moves to the peer. Everything
+/// resolves, `serve.slow_forwards` moved, and the arenas drain.
+#[test]
+fn slow_replica_watchdog_trips_sticky_and_traffic_fails_over() {
+    let clean = packed_scorer(85);
+    let d = clean.dims().clone();
+    let mut slow = ChaosScorer::new(clean.clone());
+    for call in 1..=8 {
+        slow = slow.with_fault(call, Fault::Delay(Duration::from_millis(5)));
+    }
+    let replicas: Vec<Arc<dyn Scorer + Send + Sync>> = vec![Arc::new(slow), clean.clone()];
+    let engine = Engine::start_sharded(
+        replicas,
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 16,
+            max_active: 2,
+            prefill_chunk: 4,
+            slow_forward_threshold: Duration::from_millis(1),
+            slow_streak_limit: 3,
+            ..EngineConfig::default()
+        },
+        // everything aims at the replica that will drag
+        Arc::new(Sticky(0)),
+    );
+    let arenas: Vec<_> = engine.arenas().to_vec();
+    let health = engine.health();
+    let client = engine.client();
+    let mut rng = Rng::seed(86);
+    // sequential scores: each is one forward on replica 0, so the 5ms
+    // delays accumulate an unbroken slow streak
+    for k in 0..4 {
+        let s: Vec<u32> = (0..6).map(|_| rng.below(d.vocab) as u32).collect();
+        let want = clean.score_all(std::slice::from_ref(&s)).unwrap();
+        let got = client
+            .score(s)
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("slow-replica score {k} did not resolve: {e}"));
+        assert_eq!(got.len(), want[0].len(), "score {k} wrong length");
+    }
+    assert!(!health.is_healthy(0), "three 5ms forwards over a 1ms threshold must trip");
+    assert_eq!(health.healthy_count(), 1);
+    // the fleet keeps serving — routing skips the sticky-unhealthy hint
+    let s: Vec<u32> = (0..6).map(|_| rng.below(d.vocab) as u32).collect();
+    client
+        .score(s)
+        .unwrap()
+        .wait_timeout(Duration::from_secs(60))
+        .expect("post-watchdog traffic starved");
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(
+        summary.slow_forwards >= 3.0,
+        "slow forwards undercounted: {}",
+        summary.slow_forwards
+    );
+    for (i, a) in arenas.iter().enumerate() {
+        assert_eq!(a.blocks_in_use(), 0, "replica {i} leaked blocks through the watchdog trip");
+    }
+}
+
+/// Satellite regression: rejection accounting is a partition. A request
+/// both past its deadline AND over the watermark counts once — deadline
+/// wins — so the rejection counters sum to exactly the number of Err
+/// answers, never more.
+#[test]
+fn rejection_counters_partition_the_err_answers() {
+    let clean = packed_scorer(87);
+    let d = clean.dims().clone();
+    let mut chaos = ChaosScorer::new(clean);
+    for call in 1..=60 {
+        chaos = chaos.with_fault(call, Fault::Delay(Duration::from_millis(3)));
+    }
+    let engine = Engine::start_shared(
+        Arc::new(chaos),
+        EngineConfig {
+            max_batch: 4,
+            queue_capacity: 8, // watermark at 6
+            max_active: 2,
+            prefill_chunk: 4,
+            shed_watermark: 0.75,
+            unhealthy_after: usize::MAX,
+            ..EngineConfig::default()
+        },
+    );
+    let arena = engine.arenas()[0].clone();
+    let client = engine.client();
+    let mut rng = Rng::seed(88);
+    let mut pendings = Vec::new();
+    for k in 0..24 {
+        let p: Vec<u32> = (0..4).map(|_| rng.below(d.vocab) as u32).collect();
+        // every third request arrives already expired — over the
+        // watermark it is also sheddable, and must count once, in
+        // `shed`, not `overload_sheds`
+        let opts = if k % 3 == 0 {
+            SubmitOptions::with_deadline(Duration::ZERO)
+        } else {
+            SubmitOptions::default().priority(Priority::Low)
+        };
+        pendings.push(client.generate_with(p, SamplingParams::greedy(4), &opts).unwrap());
+    }
+    let mut n_ok = 0usize;
+    let mut n_err = 0usize;
+    for (k, p) in pendings.into_iter().enumerate() {
+        match p.wait_timeout(Duration::from_secs(60)) {
+            Ok(_) => n_ok += 1,
+            Err(e) => {
+                assert!(!format!("{e}").contains("within"), "request {k} hung: {e}");
+                n_err += 1;
+            }
+        }
+    }
+    drop(client);
+    let summary = engine.shutdown();
+    assert!(n_err >= 1, "no request was rejected — the partition was never exercised");
+    let partitioned = summary.shed
+        + summary.deadline_aborts
+        + summary.cancelled
+        + summary.rate_limited
+        + summary.overload_sheds
+        + summary.errors;
+    assert_eq!(
+        partitioned, n_err as f64,
+        "rejections double- or under-counted ({n_ok} ok / {n_err} err)"
+    );
+    assert_eq!(arena.blocks_in_use(), 0, "rejected traffic leaked arena blocks");
 }

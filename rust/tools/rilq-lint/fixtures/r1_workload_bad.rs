@@ -1,0 +1,16 @@
+// Known-bad R1 fixture shaped like the workload trace generator
+// (PR 10): the tenant draw unwraps the weighted pick, the arrival loop
+// asserts on the phase clock, and the event sink indexes the tenant
+// table directly. The unit test labels this file `engine/workload.rs` —
+// trace generation runs on the serving surface (serve-bench and the
+// chaos harness call it inline), so it inherits the no-panic rule like
+// the rest of `engine/`. Lexed by the linter, never compiled.
+pub fn generate(cfg: &TraceConfig, rng: &mut Rng) -> Vec<TraceEvent> {
+    let mut out = Vec::new();
+    let class = cfg.tenants.first().unwrap();
+    let weight = cfg.weights[rng.sample_weighted(&cfg.weights)];
+    assert!(weight > 0.0, "a tenant class must carry weight");
+    let max_new = cfg.gen.sample(rng).expect("bounded sample");
+    out.push(TraceEvent { tenant: class.name.clone(), max_new });
+    out
+}

@@ -1,0 +1,16 @@
+// Known-bad R4 fixture shaped like load-aware dispatch (PR 10): the
+// routing decision takes a lock on the shared load registry and then
+// drives the replica's forward while still holding it — the exact shape
+// that serializes the whole fleet behind one router. The real LoadView
+// uses plain atomics precisely to make this impossible. Kept R1-clean
+// on purpose (`.lock().unwrap()` is exempt, no direct indexing) so the
+// unit test can pin that the `engine/dispatch.rs` label trips R4 alone.
+// Lexed by the linter, never compiled.
+pub fn route_and_score(view: &LoadView, scorer: &S, batch: &[Vec<u32>]) -> Mat {
+    let mut g = view.inner.lock().unwrap();
+    let replica = g.least_loaded();
+    g.bump_queue_depth(replica);
+    let out = scorer.score_batch(batch);
+    drop(g);
+    out
+}

@@ -990,6 +990,29 @@ mod tests {
     }
 
     #[test]
+    fn r1_covers_the_workload_generator() {
+        // trace generation (PR 10) runs inline on the serving surface
+        // (serve-bench and the chaos harness call it), so unwrap/expect/
+        // assert/indexing in `engine/workload.rs` all trip R1
+        let d = lint("engine/workload.rs", include_str!("../fixtures/r1_workload_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected R1 findings");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R1]), "{}", render(&d));
+        assert!(d.len() >= 4, "unwrap + expect + assert + indexing all reported: {}", render(&d));
+    }
+
+    #[test]
+    fn r4_covers_load_aware_dispatch() {
+        // routing that holds a lock on the shared load registry across a
+        // forward serializes the fleet behind the router — the R4 shape
+        // the atomics-only LoadView (PR 10) exists to rule out. The
+        // fixture is R1-clean so the `engine/dispatch.rs` label trips R4
+        // alone.
+        let d = lint("engine/dispatch.rs", include_str!("../fixtures/r4_dispatch_bad.rs"), &[]);
+        assert!(!d.is_empty(), "expected an R4 finding");
+        assert_eq!(rules(&d), BTreeSet::from([Rule::R4]), "{}", render(&d));
+    }
+
+    #[test]
     fn r4_covers_the_prefix_index() {
         // holding the arena refcount guard across a cache-hit suffix
         // forward is exactly the deadlock shape R4 exists to catch —
